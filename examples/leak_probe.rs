@@ -1,0 +1,42 @@
+// RSS growth probe: Literal-execute vs buffer-execute paths
+use seedflood::model::{Manifest, ParamStore};
+use seedflood::runtime::{loss_args, Runtime};
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    for l in s.lines() {
+        if let Some(v) = l.strip_prefix("VmRSS:") {
+            return v.trim().trim_end_matches(" kB").trim().parse::<f64>().unwrap() / 1024.0;
+        }
+    }
+    0.0
+}
+
+fn main() -> anyhow::Result<()> {
+    let m = Manifest::load("artifacts/tiny_manifest.json")?;
+    let rt = Runtime::cpu("artifacts")?;
+    let exe = rt.load(&m, "loss")?;
+    let params = ParamStore::init(&m, 0);
+    let ids: Vec<i32> = (0..m.config.batch * m.config.seq).map(|i| (i % 200 + 4) as i32).collect();
+    let labels: Vec<i32> = (0..m.config.batch).map(|i| (i % 2) as i32).collect();
+    let ct = vec![2, 3];
+
+    println!("start RSS {:.0} MB", rss_mb());
+    for it in 0..400 {
+        let args = loss_args(&params, &ids, vec![m.config.batch, m.config.seq], &labels, &ct);
+        let _ = exe.run(&args)?;
+        if it % 100 == 99 { println!("literal path it {}: RSS {:.0} MB", it + 1, rss_mb()); }
+    }
+    // buffer path
+    for it in 0..400 {
+        let mut bufs = vec![];
+        for t in &params.tensors { bufs.push(rt.upload_f32(&t.data, &t.shape)?); }
+        bufs.push(rt.upload_i32(&ids, &[m.config.batch, m.config.seq])?);
+        bufs.push(rt.upload_i32(&labels, &[m.config.batch])?);
+        bufs.push(rt.upload_i32(&ct, &[2])?);
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let _ = exe.run_b(&refs)?;
+        if it % 100 == 99 { println!("buffer path it {}: RSS {:.0} MB", it + 1, rss_mb()); }
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: the SeedFlood public API in ~40 lines.
+//!
+//! Loads the AOT artifacts, builds a 8-client ring, runs a short SeedFlood
+//! fine-tune on the sst2 analogue and prints GMP + communication cost.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use seedflood::config::{ExperimentConfig, Method};
+use seedflood::sim;
+use seedflood::topology::Kind;
+use seedflood::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExperimentConfig {
+        method: Method::SeedFlood,
+        model: "tiny".into(),
+        task: "sst2".into(),
+        clients: 8,
+        topology: Kind::Ring,
+        steps: 120,
+        lr: 1e-3,
+        eval_every: 40,
+        // shared pretrained θ⁰ if available (see `seedflood pretrain`)
+        init_from: if std::path::Path::new("checkpoints/tiny_pretrained.sfck").exists() {
+            "checkpoints/tiny_pretrained.sfck".into()
+        } else {
+            String::new()
+        },
+        ..Default::default()
+    };
+
+    let record = sim::run_experiment(cfg)?;
+
+    println!("\n== quickstart result ==");
+    println!("method      {}", record.method);
+    println!("GMP         {:.2}% (test accuracy of the averaged model)", 100.0 * record.gmp);
+    println!("final loss  {:.4}", record.final_loss);
+    println!("comm total  {}", human_bytes(record.total_bytes));
+    println!("comm / edge {}", human_bytes(record.per_edge_bytes as u64));
+    println!("wall        {:.1}s", record.wall_secs);
+    for e in &record.evals {
+        println!("  step {:>4}: loss {:.4} acc {:.3} consensus_err {:.2e}",
+                 e.step, e.loss, e.accuracy, e.consensus_error);
+    }
+    Ok(())
+}

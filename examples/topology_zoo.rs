@@ -1,0 +1,53 @@
+//! Topology zoo: the graph quantities that drive consensus behaviour —
+//! diameter (flooding rounds needed), spectral gap (gossip mixing rate) —
+//! across every topology the library ships, plus a flooding-coverage
+//! demonstration on each (the paper's "topology-invariant consensus").
+//!
+//!   cargo run --release --example topology_zoo -- [--clients 32]
+
+use seedflood::flood::{flood_rounds, FloodState};
+use seedflood::net::{MsgId, Network, SeedUpdate};
+use seedflood::topology::{Kind, Topology};
+use seedflood::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let n: usize = args.get_parse("clients", 32)?;
+
+    println!(
+        "{:<14} {:>6} {:>8} {:>10} {:>12} {:>14} {:>12}",
+        "topology", "edges", "diam D", "spec gap", "cover@D?", "msgs flooded", "dup ratio"
+    );
+    for kind in [Kind::Ring, Kind::Meshgrid, Kind::Torus, Kind::SmallWorld,
+                 Kind::ErdosRenyi, Kind::Star, Kind::Complete] {
+        let topo = Topology::build(kind, n, 7);
+        let (edges, d, gap) = (topo.num_edges(), topo.diameter(), topo.spectral_gap());
+        let kindname = topo.kind.clone();
+
+        // flood one message from every client; check full coverage at D
+        let mut net = Network::new(topo);
+        let mut states: Vec<FloodState> = (0..n).map(|_| FloodState::new()).collect();
+        for (i, st) in states.iter_mut().enumerate() {
+            st.inject(SeedUpdate {
+                id: MsgId { origin: i as u32, step: 0 },
+                seed: i as u64,
+                coeff: 1.0,
+            });
+        }
+        flood_rounds(&mut states, &mut net, d, |_, _| {});
+        let covered = states.iter().all(|s| s.seen.len() == n);
+        let dups: u64 = states.iter().map(|s| s.duplicates).sum();
+        let total = net.acct.total_messages;
+        println!(
+            "{:<14} {:>6} {:>8} {:>10.4} {:>12} {:>14} {:>11.2}x",
+            kindname, edges, d, gap,
+            if covered { "yes" } else { "NO" },
+            total,
+            dups as f64 / (n * (n - 1)) as f64
+        );
+    }
+    println!("\nperfect coverage after D rounds on every graph = the paper's");
+    println!("topology-invariant consensus; gossip's mixing rate (spectral gap)");
+    println!("varies by orders of magnitude across the same graphs.");
+    Ok(())
+}

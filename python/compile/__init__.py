@@ -1,0 +1,5 @@
+"""Build-time python package: L2 jax model + L1 pallas kernels + AOT export.
+
+Never imported at runtime — the rust coordinator only consumes the HLO text
+artifacts and JSON manifest emitted by ``python -m compile.aot``.
+"""

@@ -1,0 +1,220 @@
+"""AOT export: lower the L2 jax graphs (containing the L1 pallas kernels)
+to HLO *text* artifacts + a JSON manifest the rust runtime consumes.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the published ``xla``
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Artifacts per model config (shapes are baked in; B = cfg.batch):
+
+  <cfg>_loss          params.., ids(B,S)i32, label(B)i32, cls(C)i32
+                      -> (loss f32[], correct f32[])
+  <cfg>_grad          same inputs -> (loss, d_param0, d_param1, ...)
+  <cfg>_loss_lora     params.., loraA/B.., ids, label, cls -> (loss, correct)
+  <cfg>_grad_lora     same -> (loss, d_loraA0, d_loraB0, ...)  [LoRA grads only]
+  <cfg>_subcge        params2d.., U.., V.., A..  -> (updated params2d..)
+                      [the L1 pallas SubCGE kernel, paper Eq. 10]
+  <cfg>_loss_pallas   loss with every linear routed through the L1 pallas
+                      matmul kernel (tiny config only: proves composition)
+
+Usage: cd python && python -m compile.aot --config tiny --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+NUM_CLASSES = 2
+LORA_RANK = 8
+SUBCGE_RANK = 64  # max rank; smaller effective ranks restrict coordinates
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io(name, shape, dtype):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def _batch_specs(cfg):
+    return [
+        _spec((cfg.batch, cfg.seq), jnp.int32),
+        _spec((cfg.batch,), jnp.int32),
+        _spec((NUM_CLASSES,), jnp.int32),
+    ]
+
+
+def _batch_io(cfg):
+    return [
+        _io("input_ids", (cfg.batch, cfg.seq), "i32"),
+        _io("label_class", (cfg.batch,), "i32"),
+        _io("class_tokens", (NUM_CLASSES,), "i32"),
+    ]
+
+
+def build_artifacts(cfg_name: str, out_dir: str, *, with_pallas_loss: bool):
+    cfg = configs.get(cfg_name)
+    pspecs = model.param_specs(cfg)
+    lspecs = model.lora_specs(cfg, LORA_RANK)
+    np_, nl = len(pspecs), len(lspecs)
+    p2d = [(n, s) for n, s in pspecs if len(s) == 2]
+
+    param_in = [_spec(s) for _, s in pspecs]
+    lora_in = [_spec(s) for _, s in lspecs]
+
+    manifest = {
+        "config": {
+            "name": cfg.name, "vocab": cfg.vocab, "seq": cfg.seq,
+            "dim": cfg.dim, "layers": cfg.layers, "heads": cfg.heads,
+            "mlp_ratio": cfg.mlp_ratio, "batch": cfg.batch,
+            "num_classes": NUM_CLASSES, "lora_rank": LORA_RANK,
+            "subcge_rank": SUBCGE_RANK,
+            "num_params": int(sum(int(jnp.prod(jnp.array(s))) for _, s in pspecs)),
+        },
+        "params": [{"name": n, "shape": list(s)} for n, s in pspecs],
+        "lora_params": [{"name": n, "shape": list(s)} for n, s in lspecs],
+        "params2d": [n for n, _ in p2d],
+        "artifacts": {},
+    }
+
+    def emit(tag, fn, in_specs, in_io, out_io):
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}_{tag}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][tag] = {
+            "file": fname, "inputs": in_io, "outputs": out_io,
+        }
+        print(f"  {fname}: {len(text)} chars, {len(in_io)} inputs")
+
+    params_io = [_io(n, s, "f32") for n, s in pspecs]
+    lora_io = [_io(n, s, "f32") for n, s in lspecs]
+
+    # ---- loss -------------------------------------------------------------
+    def loss_flat(*args):
+        params = list(args[:np_])
+        ids, label, cls = args[np_:]
+        return model.loss_fn(cfg, params, ids, label, cls)
+
+    emit("loss", loss_flat, param_in + _batch_specs(cfg),
+         params_io + _batch_io(cfg),
+         [_io("loss", (), "f32"), _io("correct", (), "f32")])
+
+    # ---- grad (FO baselines: DSGD / ChocoSGD) ------------------------------
+    def grad_flat(*args):
+        params = list(args[:np_])
+        ids, label, cls = args[np_:]
+
+        def scalar_loss(ps):
+            return model.loss_fn(cfg, ps, ids, label, cls)[0]
+
+        loss, grads = jax.value_and_grad(scalar_loss)(params)
+        return (loss, *grads)
+
+    emit("grad", grad_flat, param_in + _batch_specs(cfg),
+         params_io + _batch_io(cfg),
+         [_io("loss", (), "f32")] + [_io(f"d_{n}", s, "f32") for n, s in pspecs])
+
+    # ---- loss_lora / grad_lora (LoRA baseline variants) ---------------------
+    def loss_lora_flat(*args):
+        params = list(args[:np_])
+        lora = list(args[np_:np_ + nl])
+        ids, label, cls = args[np_ + nl:]
+        return model.loss_fn(cfg, params, ids, label, cls, lora=lora)
+
+    emit("loss_lora", loss_lora_flat, param_in + lora_in + _batch_specs(cfg),
+         params_io + lora_io + _batch_io(cfg),
+         [_io("loss", (), "f32"), _io("correct", (), "f32")])
+
+    def grad_lora_flat(*args):
+        params = list(args[:np_])
+        lora = list(args[np_:np_ + nl])
+        ids, label, cls = args[np_ + nl:]
+
+        def scalar_loss(lo):
+            return model.loss_fn(cfg, params, ids, label, cls, lora=lo)[0]
+
+        loss, grads = jax.value_and_grad(scalar_loss)(lora)
+        return (loss, *grads)
+
+    emit("grad_lora", grad_lora_flat, param_in + lora_in + _batch_specs(cfg),
+         params_io + lora_io + _batch_io(cfg),
+         [_io("loss", (), "f32")] + [_io(f"d_{n}", s, "f32") for n, s in lspecs])
+
+    # ---- subcge apply (L1 pallas kernel, paper Eq. 10) ----------------------
+    n2d = len(p2d)
+    r = SUBCGE_RANK
+
+    def subcge_flat(*args):
+        thetas = list(args[:n2d])
+        us = list(args[n2d:2 * n2d])
+        vs = list(args[2 * n2d:3 * n2d])
+        amats = list(args[3 * n2d:4 * n2d])
+        return tuple(model.subcge_apply_all(thetas, us, vs, amats))
+
+    sub_in = ([_spec(s) for _, s in p2d]
+              + [_spec((s[0], r)) for _, s in p2d]
+              + [_spec((s[1], r)) for _, s in p2d]
+              + [_spec((r, r)) for _ in p2d])
+    sub_io = ([_io(n, s, "f32") for n, s in p2d]
+              + [_io(f"U_{n}", (s[0], r), "f32") for n, s in p2d]
+              + [_io(f"V_{n}", (s[1], r), "f32") for n, s in p2d]
+              + [_io(f"A_{n}", (r, r), "f32") for n, s in p2d])
+    emit("subcge", subcge_flat, sub_in, sub_io,
+         [_io(f"new_{n}", s, "f32") for n, s in p2d])
+
+    # ---- loss through the pallas matmul kernel (composition proof) ----------
+    if with_pallas_loss:
+        def loss_pallas_flat(*args):
+            params = list(args[:np_])
+            ids, label, cls = args[np_:]
+            return model.loss_fn(cfg, params, ids, label, cls, use_pallas=True)
+
+        emit("loss_pallas", loss_pallas_flat, param_in + _batch_specs(cfg),
+             params_io + _batch_io(cfg),
+             [_io("loss", (), "f32"), _io("correct", (), "f32")])
+
+    mpath = os.path.join(out_dir, f"{cfg.name}_manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {os.path.basename(mpath)} written")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="tiny,small",
+                    help="comma-separated model config names")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file marker")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name in args.config.split(","):
+        print(f"[aot] lowering config {name!r}")
+        build_artifacts(name, args.out_dir,
+                        with_pallas_loss=(name == "tiny"))
+    # marker file so `make` can treat the whole set as one target
+    with open(os.path.join(args.out_dir, "STAMP"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Model size configurations for the SeedFlood reproduction.
+
+Each config describes a decoder-only, pre-LN transformer LM (OPT-style
+block layout).  The paper fine-tunes pretrained OPT checkpoints; we train
+the same architecture from scratch at configurable scale (see
+DESIGN.md#Substitutions).  The ``opt125m`` entry mirrors the real OPT-125M
+shape and is used for shape/byte accounting only (too slow to train on the
+CPU-PJRT substrate).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    seq: int
+    dim: int
+    layers: int
+    heads: int
+    mlp_ratio: int = 4
+    batch: int = 8  # fixed batch shape baked into each AOT artifact
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+    @property
+    def mlp_dim(self) -> int:
+        return self.dim * self.mlp_ratio
+
+
+CONFIGS = {
+    # test-scale: fast enough for pytest + rust integration tests
+    "tiny": ModelConfig("tiny", vocab=256, seq=32, dim=64, layers=2, heads=4, batch=8),
+    # default experiment scale (paper tables/figures run at this size)
+    "small": ModelConfig("small", vocab=512, seq=64, dim=128, layers=4, heads=8, batch=8),
+    # e2e example scale
+    "base": ModelConfig("base", vocab=1024, seq=64, dim=256, layers=6, heads=8, batch=8),
+    # ~27M params, used by examples/train_decentralized at --model medium
+    "medium": ModelConfig("medium", vocab=2048, seq=128, dim=512, layers=8, heads=8, batch=8),
+    # shape mirror of OPT-125M (accounting only; never trained here)
+    "opt125m": ModelConfig("opt125m", vocab=50272, seq=2048, dim=768, layers=12, heads=12, batch=1),
+}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown model config {name!r}; have {sorted(CONFIGS)}")
+    return CONFIGS[name]

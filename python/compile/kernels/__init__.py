@@ -1,0 +1,7 @@
+"""L1 pallas kernels (build-time only; lowered into the L2 HLO artifacts)."""
+
+from .matmul import matmul
+from .subcge import subcge_apply
+from .ref import matmul_ref, subcge_apply_ref
+
+__all__ = ["matmul", "subcge_apply", "matmul_ref", "subcge_apply_ref"]

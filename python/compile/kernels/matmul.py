@@ -1,0 +1,59 @@
+"""L1 pallas kernel: blocked matmul used by the transformer's linear layers.
+
+TPU mapping (DESIGN.md#Hardware-Adaptation): the BlockSpec grid expresses
+the HBM->VMEM schedule — an (bm, K) panel of ``x`` and a (K, bn) panel of
+``y`` are staged into VMEM per program instance and contracted on the MXU.
+K is kept whole per block because every contraction in our models has
+K <= mlp_dim <= 2048, i.e. the K-panels fit VMEM comfortably
+(bm*K + K*bn + bm*bn floats < 16 MiB for the default 128x128 blocks).
+
+``interpret=True`` is mandatory on this CPU-PJRT image: real TPU lowering
+emits a Mosaic custom-call the CPU plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    # One (bm, K) x (K, bn) contraction per program instance; f32 accumulate.
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (>=1)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128) -> jax.Array:
+    """Blocked pallas matmul ``x @ y`` for 2D f32 operands.
+
+    Block sizes adapt downward to divide the operand dims so the kernel is
+    usable across every layer shape in the model family.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {y.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)

@@ -1,0 +1,18 @@
+"""Pure-jnp correctness oracles for the pallas kernels (L1).
+
+These are the ground truth the pytest + hypothesis suites check the pallas
+implementations against (assert_allclose), and double as the slow-path
+implementations inside model.py when ``use_pallas=False``.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Oracle for kernels.matmul.matmul."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def subcge_apply_ref(theta, u, a, v):
+    """Oracle for kernels.subcge.subcge_apply: theta - u @ a @ v^T."""
+    return theta - (u @ a @ v.T).astype(theta.dtype)

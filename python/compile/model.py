@@ -1,0 +1,206 @@
+"""L2: the jax transformer LM used by every SeedFlood experiment.
+
+Decoder-only, pre-LN (OPT-style block layout), LM head tied to the token
+embedding.  Classification follows the MeZO prompt convention: the model
+scores the C task verbalizer tokens at the last sequence position and the
+loss is cross-entropy over those C candidate scores (Malladi et al. 2023).
+
+Parameters travel as a *flat ordered list* of arrays; ``param_specs``
+defines the canonical order which ``aot.py`` records in the artifact
+manifest and the rust ``model::ParamStore`` mirrors exactly.
+
+``use_pallas=True`` routes every linear layer through the L1 pallas matmul
+kernel so the lowered HLO contains the kernel (the ``loss_pallas``
+artifact proves the three-layer composition end to end); the default path
+uses XLA-native dots, which is what the training experiments run (see
+DESIGN.md#Perf — interpret-mode pallas is a correctness vehicle on this
+CPU image, not a speed one).
+"""
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.matmul import matmul as pallas_matmul
+from .kernels.subcge import subcge_apply as pallas_subcge_apply
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical (name, shape) list. Order is the ABI between python & rust."""
+    d, md = cfg.dim, cfg.mlp_dim
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed.tok", (cfg.vocab, d)),
+        ("embed.pos", (cfg.seq, d)),
+    ]
+    for l in range(cfg.layers):
+        p = f"block{l}"
+        specs += [
+            (f"{p}.ln1.scale", (d,)),
+            (f"{p}.ln1.bias", (d,)),
+            (f"{p}.attn.wq", (d, d)),
+            (f"{p}.attn.bq", (d,)),
+            (f"{p}.attn.wk", (d, d)),
+            (f"{p}.attn.bk", (d,)),
+            (f"{p}.attn.wv", (d, d)),
+            (f"{p}.attn.bv", (d,)),
+            (f"{p}.attn.wo", (d, d)),
+            (f"{p}.attn.bo", (d,)),
+            (f"{p}.ln2.scale", (d,)),
+            (f"{p}.ln2.bias", (d,)),
+            (f"{p}.mlp.fc1", (d, md)),
+            (f"{p}.mlp.b1", (md,)),
+            (f"{p}.mlp.fc2", (md, d)),
+            (f"{p}.mlp.b2", (d,)),
+        ]
+    specs += [
+        ("final.ln.scale", (d,)),
+        ("final.ln.bias", (d,)),
+    ]
+    return specs
+
+
+def lora_specs(cfg: ModelConfig, rank: int) -> List[Tuple[str, Tuple[int, ...]]]:
+    """LoRA adapters on q_proj and v_proj (paper Appendix B.3)."""
+    d = cfg.dim
+    specs: List[Tuple[str, Tuple[int, ...]]] = []
+    for l in range(cfg.layers):
+        for proj in ("wq", "wv"):
+            specs.append((f"block{l}.attn.{proj}.lora_a", (d, rank)))
+            specs.append((f"block{l}.attn.{proj}.lora_b", (rank, d)))
+    return specs
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> List[jax.Array]:
+    """Random init matching the canonical order (scaled-normal / zeros)."""
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".scale"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".bias", ".bq", ".bk", ".bv", ".bo", ".b1", ".b2")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) == 2 else shape[-1]
+            std = 0.02 if name.startswith("embed") else fan_in ** -0.5
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _linear(x, w, b, use_pallas: bool):
+    """x: (..., k) @ w: (k, n) + b."""
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    y = pallas_matmul(x2, w) if use_pallas else jnp.dot(
+        x2, w, preferred_element_type=jnp.float32)
+    return y.reshape(lead + (w.shape[1],)) + b
+
+
+def forward_logits(cfg: ModelConfig, params: List[jax.Array],
+                   input_ids: jax.Array, *, use_pallas: bool = False,
+                   lora: List[jax.Array] = None,
+                   lora_scale: float = 2.0) -> jax.Array:
+    """Return logits at the LAST position only: (B, vocab).
+
+    ``lora``: optional flat list in lora_specs order; adapters on wq/wv.
+    """
+    p = {name: arr for (name, _), arr in zip(param_specs(cfg), params)}
+    la = {}
+    if lora is not None:
+        la = {name: arr for (name, _), arr in
+              zip(lora_specs(cfg, lora[0].shape[1]), lora)}
+
+    B, S = input_ids.shape
+    h = p["embed.tok"][input_ids] + p["embed.pos"][None, :S, :]
+
+    mask = jnp.tril(jnp.ones((S, S), jnp.float32))
+    neg = jnp.float32(-1e9)
+
+    def attn_proj(x, l, which):
+        w = p[f"block{l}.attn.{which}"]
+        b = p[f"block{l}.attn.b{which[-1]}"]
+        y = _linear(x, w, b, use_pallas)
+        ka, kb = f"block{l}.attn.{which}.lora_a", f"block{l}.attn.{which}.lora_b"
+        if ka in la:
+            y = y + lora_scale * _linear(_linear(x, la[ka], 0.0, use_pallas),
+                                         la[kb], 0.0, use_pallas)
+        return y
+
+    for l in range(cfg.layers):
+        x = _layer_norm(h, p[f"block{l}.ln1.scale"], p[f"block{l}.ln1.bias"])
+        q = attn_proj(x, l, "wq").reshape(B, S, cfg.heads, cfg.head_dim)
+        k = attn_proj(x, l, "wk").reshape(B, S, cfg.heads, cfg.head_dim)
+        v = attn_proj(x, l, "wv").reshape(B, S, cfg.heads, cfg.head_dim)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (cfg.head_dim ** 0.5)
+        scores = jnp.where(mask[None, None] > 0, scores, neg)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(B, S, cfg.dim)
+        h = h + _linear(o, p[f"block{l}.attn.wo"], p[f"block{l}.attn.bo"],
+                        use_pallas)
+        x = _layer_norm(h, p[f"block{l}.ln2.scale"], p[f"block{l}.ln2.bias"])
+        x = _linear(x, p[f"block{l}.mlp.fc1"], p[f"block{l}.mlp.b1"], use_pallas)
+        x = jax.nn.gelu(x)
+        h = h + _linear(x, p[f"block{l}.mlp.fc2"], p[f"block{l}.mlp.b2"],
+                        use_pallas)
+
+    h = _layer_norm(h, p["final.ln.scale"], p["final.ln.bias"])
+    last = h[:, -1, :]                                   # (B, d)
+    # tied LM head
+    if use_pallas:
+        logits = pallas_matmul(last, p["embed.tok"].T)
+    else:
+        logits = jnp.dot(last, p["embed.tok"].T,
+                         preferred_element_type=jnp.float32)
+    return logits                                        # (B, vocab)
+
+
+# --------------------------------------------------------------------------
+# Loss / metrics (MeZO-style candidate scoring)
+# --------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params: List[jax.Array], input_ids: jax.Array,
+            label_class: jax.Array, class_tokens: jax.Array,
+            *, use_pallas: bool = False, lora: List[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy over the C verbalizer-token scores at the last position.
+
+    Returns (mean loss, #correct as f32) so eval can sum accuracy counts.
+    """
+    logits = forward_logits(cfg, params, input_ids, use_pallas=use_pallas,
+                            lora=lora)
+    cls = logits[:, class_tokens]                        # (B, C)
+    logp = jax.nn.log_softmax(cls, axis=-1)
+    nll = -jnp.take_along_axis(logp, label_class[:, None], axis=-1)[:, 0]
+    correct = (jnp.argmax(cls, axis=-1) == label_class).astype(jnp.float32)
+    return jnp.mean(nll), jnp.sum(correct)
+
+
+def subcge_apply_all(params2d: List[jax.Array], us: List[jax.Array],
+                     vs: List[jax.Array], amats: List[jax.Array]
+                     ) -> List[jax.Array]:
+    """Apply the SubCGE aggregated update to every 2D parameter.
+
+    Each layer goes through the L1 pallas kernel (paper Eq. 10):
+    theta_l <- theta_l - U_l A_l V_l^T.
+    """
+    return [pallas_subcge_apply(t, u, a, v)
+            for t, u, a, v in zip(params2d, us, amats, vs)]

@@ -1,0 +1,112 @@
+"""AOT pipeline tests: HLO-text lowering, manifest consistency, and the
+artifact signature contract that the rust runtime relies on."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs, model
+
+
+def test_to_hlo_text_produces_parseable_module():
+    lowered = jax.jit(lambda x, y: (x @ y + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:50]
+    assert "ROOT" in text
+    # text (not serialized proto) is the interchange format — must be ASCII
+    text.encode("ascii")
+
+
+def test_pallas_kernel_lowers_into_hlo_text():
+    from compile.kernels import matmul
+
+    lowered = jax.jit(lambda x, y: (matmul(x, y),)).lower(
+        jax.ShapeDtypeStruct((8, 8), jnp.float32),
+        jax.ShapeDtypeStruct((8, 8), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "dot(" in text or "dot " in text  # interpret-mode lowers to HLO dots
+
+
+def test_param_specs_cover_all_artifact_inputs():
+    cfg = configs.get("tiny")
+    specs = model.param_specs(cfg)
+    names = [n for n, _ in specs]
+    assert len(names) == len(set(names)), "duplicate param names"
+    # 2D params (SubCGE scope) must include every weight matrix
+    two_d = [n for n, s in specs if len(s) == 2]
+    assert "embed.tok" in two_d
+    assert all(f"block{l}.attn.wq" in two_d for l in range(cfg.layers))
+
+
+def test_lora_specs_shapes(for_rank=4):
+    cfg = configs.get("tiny")
+    specs = model.lora_specs(cfg, for_rank)
+    assert len(specs) == 4 * cfg.layers  # A+B for wq and wv per layer
+    for name, shape in specs:
+        if name.endswith("lora_a"):
+            assert shape == (cfg.dim, for_rank)
+        else:
+            assert shape == (for_rank, cfg.dim)
+
+
+@pytest.mark.skipif(
+    not os.path.exists("../artifacts/tiny_manifest.json"),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open("../artifacts/tiny_manifest.json") as f:
+            return json.load(f)
+
+    def test_params_match_model(self, manifest):
+        cfg = configs.get("tiny")
+        specs = model.param_specs(cfg)
+        assert [p["name"] for p in manifest["params"]] == [n for n, _ in specs]
+        assert [tuple(p["shape"]) for p in manifest["params"]] == [s for _, s in specs]
+
+    def test_num_params_correct(self, manifest):
+        cfg = configs.get("tiny")
+        assert manifest["config"]["num_params"] == model.num_params(cfg)
+
+    def test_artifact_files_exist_and_are_hlo(self, manifest):
+        for tag, art in manifest["artifacts"].items():
+            path = os.path.join("../artifacts", art["file"])
+            assert os.path.exists(path), f"{tag}: {path} missing"
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), f"{tag} is not HLO text"
+
+    def test_loss_signature(self, manifest):
+        cfg = configs.get("tiny")
+        loss = manifest["artifacts"]["loss"]
+        n_params = len(manifest["params"])
+        assert len(loss["inputs"]) == n_params + 3
+        assert loss["inputs"][-3]["shape"] == [cfg.batch, cfg.seq]
+        assert loss["inputs"][-1]["shape"] == [aot.NUM_CLASSES]
+        assert [o["name"] for o in loss["outputs"]] == ["loss", "correct"]
+
+    def test_grad_outputs_mirror_params(self, manifest):
+        grad = manifest["artifacts"]["grad"]
+        n_params = len(manifest["params"])
+        assert len(grad["outputs"]) == 1 + n_params
+        for o, p in zip(grad["outputs"][1:], manifest["params"]):
+            assert o["shape"] == p["shape"], o["name"]
+
+    def test_subcge_signature(self, manifest):
+        sub = manifest["artifacts"]["subcge"]
+        n2d = len(manifest["params2d"])
+        r = manifest["config"]["subcge_rank"]
+        assert len(sub["inputs"]) == 4 * n2d
+        assert len(sub["outputs"]) == n2d
+        # A matrices are the last n2d inputs, all (r, r)
+        for a in sub["inputs"][3 * n2d:]:
+            assert a["shape"] == [r, r]

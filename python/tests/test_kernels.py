@@ -1,0 +1,112 @@
+"""L1 kernel correctness: pallas vs pure-jnp oracle (the CORE signal).
+
+hypothesis sweeps shapes/dtypes per the repro brief; deadline disabled
+because interpret-mode pallas first-call compilation is slow.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, matmul_ref, subcge_apply, subcge_apply_ref
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestMatmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (8, 8, 8), (16, 32, 16), (128, 64, 128), (256, 128, 512),
+        (1, 64, 64), (7, 13, 5), (130, 70, 34),  # non-power-of-two / ragged
+    ])
+    def test_matches_ref(self, m, k, n):
+        x, y = rand(0, m, k), rand(1, k, n)
+        np.testing.assert_allclose(
+            np.asarray(matmul(x, y)), np.asarray(matmul_ref(x, y)),
+            rtol=1e-5, atol=1e-5)
+
+    def test_block_adaptation(self):
+        # bm/bn larger than dims must adapt down to divisors
+        x, y = rand(2, 3, 5), rand(3, 5, 9)
+        np.testing.assert_allclose(
+            np.asarray(matmul(x, y, bm=512, bn=512)),
+            np.asarray(matmul_ref(x, y)), rtol=1e-5, atol=1e-5)
+
+    def test_identity(self):
+        x = rand(4, 32, 32)
+        eye = jnp.eye(32, dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(matmul(x, eye)),
+                                   np.asarray(x), rtol=1e-6, atol=1e-6)
+
+    @settings(deadline=None, max_examples=20)
+    @given(m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (m, k), jnp.float32)
+        y = jax.random.normal(ky, (k, n), jnp.float32)
+        np.testing.assert_allclose(np.asarray(matmul(x, y)),
+                                   np.asarray(matmul_ref(x, y)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestSubCGE:
+    @pytest.mark.parametrize("m,n,r", [
+        (16, 16, 4), (64, 128, 32), (256, 64, 64), (33, 17, 8),
+    ])
+    def test_matches_ref(self, m, n, r):
+        theta, u, v = rand(0, m, n), rand(1, m, r), rand(2, n, r)
+        a = rand(3, r, r)
+        np.testing.assert_allclose(
+            np.asarray(subcge_apply(theta, u, a, v)),
+            np.asarray(subcge_apply_ref(theta, u, a, v)),
+            rtol=1e-4, atol=1e-4)
+
+    def test_zero_coefficients_noop(self):
+        theta, u, v = rand(0, 32, 48), rand(1, 32, 8), rand(2, 48, 8)
+        a = jnp.zeros((8, 8), jnp.float32)
+        np.testing.assert_allclose(np.asarray(subcge_apply(theta, u, a, v)),
+                                   np.asarray(theta), rtol=0, atol=0)
+
+    def test_single_coordinate_is_rank1_axpy(self):
+        """A with one entry == the paper's single seed-scalar message:
+        theta - c * U[:,i] V[:,j]^T (Eq. 9/10 consistency)."""
+        m, n, r, i, j, c = 24, 40, 16, 3, 11, 0.37
+        theta, u, v = rand(0, m, n), rand(1, m, r), rand(2, n, r)
+        a = jnp.zeros((r, r), jnp.float32).at[i, j].set(c)
+        want = theta - c * jnp.outer(u[:, i], v[:, j])
+        np.testing.assert_allclose(np.asarray(subcge_apply(theta, u, a, v)),
+                                   np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_additivity(self):
+        """Aggregating k messages at once == applying them one by one —
+        the invariant that lets SeedFlood batch flooded updates."""
+        m, n, r = 32, 32, 8
+        theta, u, v = rand(0, m, n), rand(1, m, r), rand(2, n, r)
+        msgs = [(0, 1, 0.5), (3, 3, -0.2), (0, 1, 0.1), (7, 2, 1.5)]
+        a = jnp.zeros((r, r), jnp.float32)
+        seq = theta
+        for i, j, c in msgs:
+            a = a.at[i, j].add(c)
+            one = jnp.zeros((r, r), jnp.float32).at[i, j].set(c)
+            seq = subcge_apply(seq, u, one, v)
+        batched = subcge_apply(theta, u, a, v)
+        np.testing.assert_allclose(np.asarray(batched), np.asarray(seq),
+                                   rtol=1e-4, atol=1e-5)
+
+    @settings(deadline=None, max_examples=15)
+    @given(m=st.integers(2, 80), n=st.integers(2, 80), r=st.integers(1, 32),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_shapes(self, m, n, r, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        theta = jax.random.normal(ks[0], (m, n), jnp.float32)
+        u = jax.random.normal(ks[1], (m, r), jnp.float32)
+        v = jax.random.normal(ks[2], (n, r), jnp.float32)
+        a = jax.random.normal(ks[3], (r, r), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(subcge_apply(theta, u, a, v)),
+            np.asarray(subcge_apply_ref(theta, u, a, v)),
+            rtol=1e-3, atol=1e-3)

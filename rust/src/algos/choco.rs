@@ -1,0 +1,191 @@
+//! ChocoSGD (Koloskova et al., 2019) and Choco-LoRA — gossip with top-K
+//! compressed communication and error feedback through surrogate copies.
+//!
+//! Per client i the state is the model `x_i`, its own public surrogate
+//! `x̂_i`, and surrogates `x̂_j` for every neighbor. A communication round:
+//!
+//! 1. `q_i = topK(x_i − x̂_i)`               (compression, paper: keep 1%)
+//! 2. send `q_i` to all neighbors; everyone updates their copy of `x̂_i`
+//! 3. `x_i ← x_i + γ Σ_j w_ij (x̂_j − x̂_i)`   (consensus step, γ = 1)
+//!
+//! Surrogates are initialized to θ⁰ (paper Appendix B.2: "initialize
+//! surrogate model parameters with pretrained weights").
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{Algorithm, Space};
+use crate::data::BatchSampler;
+use crate::net::{Network, Payload};
+use crate::sim::{consensus_error, Env};
+use crate::tensor::ParamVec;
+use crate::topology::Topology;
+
+pub struct Choco {
+    space: Space,
+    /// x_i
+    clients: Vec<ParamVec>,
+    /// x̂_i (own public surrogate)
+    hat_self: Vec<ParamVec>,
+    /// x̂_j as locally tracked by i: hat_nbr[i][j]
+    hat_nbr: Vec<HashMap<usize, ParamVec>>,
+    samplers: Vec<BatchSampler>,
+    weights: Vec<Vec<(usize, f32)>>,
+    local_steps: usize,
+    lr: f32,
+    gamma: f32,
+    topk_ratio: f32,
+}
+
+impl Choco {
+    pub fn new(env: &Env, topo: &Topology) -> Choco {
+        let space = Space::for_method(env);
+        let clients: Vec<ParamVec> =
+            (0..env.n_clients()).map(|_| space.init_client(env)).collect();
+        let hat_self = clients.clone();
+        let hat_nbr = (0..env.n_clients())
+            .map(|i| {
+                topo.neighbors(i)
+                    .iter()
+                    .map(|&j| (j, clients[j].clone()))
+                    .collect()
+            })
+            .collect();
+        Choco {
+            space,
+            clients,
+            hat_self,
+            hat_nbr,
+            samplers: env.make_samplers(),
+            weights: topo.mixing_weights(),
+            local_steps: env.cfg.local_steps,
+            lr: env.cfg.lr,
+            gamma: env.cfg.consensus_lr,
+            topk_ratio: env.cfg.topk_ratio,
+        }
+    }
+
+    /// Global top-K of |x_i − x̂_i| over the whole parameter vector,
+    /// returned per-tensor as (index, value) lists.
+    fn compress(&self, i: usize) -> Vec<Vec<(u32, f32)>> {
+        let x = &self.clients[i];
+        let hat = &self.hat_self[i];
+        let d: usize = x.num_elements();
+        let k = ((self.topk_ratio as f64 * d as f64).ceil() as usize).max(1);
+        // collect (|delta|, tensor, idx, val) and select top k globally
+        let mut entries: Vec<(f32, u32, u32)> = Vec::with_capacity(d);
+        for (ti, (xt, ht)) in x.tensors.iter().zip(hat.tensors.iter()).enumerate() {
+            for (ei, (&a, &b)) in xt.data.iter().zip(ht.data.iter()).enumerate() {
+                let delta = a - b;
+                if delta != 0.0 {
+                    entries.push((delta.abs(), ti as u32, ei as u32));
+                }
+            }
+        }
+        let k = k.min(entries.len());
+        let mut out = vec![vec![]; x.tensors.len()];
+        if k == 0 {
+            return out;
+        }
+        entries.select_nth_unstable_by(k - 1, |a, b| b.0.partial_cmp(&a.0).unwrap());
+        for &(_, ti, ei) in entries[..k].iter() {
+            let delta = x.tensors[ti as usize].data[ei as usize]
+                - hat.tensors[ti as usize].data[ei as usize];
+            out[ti as usize].push((ei, delta));
+        }
+        out
+    }
+}
+
+/// Apply a sparse delta to a surrogate.
+fn apply_sparse(target: &mut ParamVec, q: &[Vec<(u32, f32)>]) {
+    for (t, qs) in target.tensors.iter_mut().zip(q.iter()) {
+        for &(idx, val) in qs {
+            t.data[idx as usize] += val;
+        }
+    }
+}
+
+impl Algorithm for Choco {
+    fn local_step(&mut self, client: usize, _step: usize, env: &Env) -> Result<f32> {
+        let (b, _) = env.batch_shape();
+        let (ids, labels) = self.samplers[client].next_batch(b);
+        let (loss, grads) = self.space.grad(env, &self.clients[client], &ids, &labels)?;
+        self.clients[client].axpy(-self.lr, &grads);
+        Ok(loss)
+    }
+
+    fn communicate(&mut self, step: usize, _env: &Env, net: &mut Network) -> Result<()> {
+        if (step + 1) % self.local_steps != 0 {
+            return Ok(());
+        }
+        let n = self.clients.len();
+        // 1+2: compress, broadcast, update own surrogate
+        let qs: Vec<Arc<Vec<Vec<(u32, f32)>>>> =
+            (0..n).map(|i| Arc::new(self.compress(i))).collect();
+        for i in 0..n {
+            net.broadcast(i, &Payload::Sparse(qs[i].clone()));
+            apply_sparse(&mut self.hat_self[i], &qs[i]);
+        }
+        // receive: update tracked neighbor surrogates
+        for i in 0..n {
+            for m in net.recv_all(i) {
+                let Payload::Sparse(q) = m.payload else {
+                    panic!("choco received non-sparse payload");
+                };
+                if let Some(hat) = self.hat_nbr[i].get_mut(&m.from) {
+                    apply_sparse(hat, &q);
+                }
+            }
+        }
+        // 3: consensus step x_i += γ Σ_j w_ij (x̂_j − x̂_i)
+        for i in 0..n {
+            let wrow = &self.weights[i];
+            let mut delta = self.clients[i].zeros_like();
+            for (&j, hat_j) in &self.hat_nbr[i] {
+                let w = wrow.iter().find(|&&(k, _)| k == j).map(|&(_, w)| w).unwrap_or(0.0);
+                delta.axpy(w, hat_j);
+                delta.axpy(-w, &self.hat_self[i]);
+            }
+            self.clients[i].axpy(self.gamma, &delta);
+        }
+        Ok(())
+    }
+
+    fn eval_gmp(&self, env: &Env, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<(f64, f64)> {
+        let refs: Vec<&ParamVec> = self.clients.iter().collect();
+        let avg = ParamVec::average(&refs);
+        self.space.eval(env, &avg, batches)
+    }
+
+    fn snapshot(&self) -> Vec<ParamVec> {
+        self.clients.clone()
+    }
+
+    fn restore(&mut self, snap: Vec<ParamVec>) {
+        assert_eq!(snap.len(), self.clients.len());
+        self.clients = snap;
+    }
+
+    fn consensus_error(&self) -> f64 {
+        consensus_error(&self.clients)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn apply_sparse_updates_selected_entries() {
+        let mut p = ParamVec::new(
+            vec!["w".into()],
+            vec![Tensor::from_vec(&[4], vec![0.0; 4])],
+        );
+        apply_sparse(&mut p, &[vec![(1, 2.0), (3, -1.0)]]);
+        assert_eq!(p.tensors[0].data, vec![0.0, 2.0, 0.0, -1.0]);
+    }
+}

@@ -1,0 +1,101 @@
+//! DZSGD (Tang et al., 2020) and DZSGD-LoRA — the zeroth-order gossip
+//! baselines: the local first-order step of DSGD is replaced by a dense
+//! SPSA estimate (MeZO-style in-place probing), while consensus still uses
+//! full-model gossip averaging — which is why its communication cost stays
+//! O(d) per round (the paper's 5.26 TB row in Table 8).
+
+use anyhow::Result;
+
+use super::{gossip_mix, probe_seed, Algorithm, Space};
+use crate::data::BatchSampler;
+use crate::net::Network;
+use crate::sim::{consensus_error, Env};
+use crate::tensor::ParamVec;
+use crate::topology::Topology;
+use crate::zo;
+
+pub struct Dzsgd {
+    space: Space,
+    clients: Vec<ParamVec>,
+    samplers: Vec<BatchSampler>,
+    weights: Vec<Vec<(usize, f32)>>,
+    local_steps: usize,
+    lr: f32,
+    eps: f32,
+    seed: u64,
+}
+
+impl Dzsgd {
+    pub fn new(env: &Env, topo: &Topology) -> Dzsgd {
+        let space = Space::for_method(env);
+        let clients = (0..env.n_clients()).map(|_| space.init_client(env)).collect();
+        Dzsgd {
+            space,
+            clients,
+            samplers: env.make_samplers(),
+            weights: topo.mixing_weights(),
+            local_steps: env.cfg.local_steps,
+            lr: env.cfg.lr,
+            eps: env.cfg.eps,
+            seed: env.cfg.seed,
+        }
+    }
+}
+
+impl Algorithm for Dzsgd {
+    fn local_step(&mut self, client: usize, step: usize, env: &Env) -> Result<f32> {
+        let (b, _) = env.batch_shape();
+        let (ids, labels) = self.samplers[client].next_batch(b);
+        let seed = probe_seed(self.seed, client, step);
+        let space = &self.space;
+        let mut probe_err = None;
+        let mut first_loss = None;
+        let alpha = zo::spsa_alpha(
+            &mut self.clients[client],
+            self.eps,
+            |p| match space.loss(env, p, &ids, &labels) {
+                Ok((l, _)) => {
+                    first_loss.get_or_insert(l);
+                    l
+                }
+                Err(e) => {
+                    probe_err = Some(e);
+                    0.0
+                }
+            },
+            |p, s| zo::perturb_dense(p, seed, s),
+        );
+        if let Some(e) = probe_err {
+            return Err(e);
+        }
+        // ZO-SGD descent along the reconstructed direction (Eq. 4)
+        zo::apply_dense_update(&mut self.clients[client], seed, self.lr * alpha);
+        Ok(first_loss.unwrap_or(0.0))
+    }
+
+    fn communicate(&mut self, step: usize, _env: &Env, net: &mut Network) -> Result<()> {
+        if (step + 1) % self.local_steps == 0 {
+            gossip_mix(&mut self.clients, &self.weights, net);
+        }
+        Ok(())
+    }
+
+    fn eval_gmp(&self, env: &Env, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<(f64, f64)> {
+        let refs: Vec<&ParamVec> = self.clients.iter().collect();
+        let avg = ParamVec::average(&refs);
+        self.space.eval(env, &avg, batches)
+    }
+
+    fn snapshot(&self) -> Vec<ParamVec> {
+        self.clients.clone()
+    }
+
+    fn restore(&mut self, snap: Vec<ParamVec>) {
+        assert_eq!(snap.len(), self.clients.len());
+        self.clients = snap;
+    }
+
+    fn consensus_error(&self) -> f64 {
+        consensus_error(&self.clients)
+    }
+}

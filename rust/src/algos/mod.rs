@@ -1,0 +1,182 @@
+//! Decentralized training algorithms — the paper's full comparison grid
+//! behind one trait: DSGD, ChocoSGD, DZSGD, their LoRA variants, SeedFlood,
+//! and the single-client MeZO/SubCGE baselines (Table 3).
+//!
+//! The simulator drives the paper's protocol: `local_step` once per client
+//! per iteration, then `communicate` once per iteration — each algorithm
+//! decides internally whether to act (gossip methods exchange every
+//! `local_steps` iterations; SeedFlood floods every iteration, per Alg. 1).
+
+pub mod choco;
+pub mod dsgd;
+pub mod dzsgd;
+pub mod seedflood;
+pub mod single;
+
+use anyhow::Result;
+
+use crate::config::Method;
+use crate::model::ParamStore;
+use crate::net::Network;
+use crate::sim::Env;
+use crate::tensor::ParamVec;
+use crate::topology::Topology;
+
+/// One decentralized training method.
+pub trait Algorithm {
+    /// One local optimization step for `client` at iteration `step`;
+    /// returns the training loss observed.
+    fn local_step(&mut self, client: usize, step: usize, env: &Env) -> Result<f32>;
+
+    /// One communication opportunity after iteration `step` (the algorithm
+    /// applies its own schedule).
+    fn communicate(&mut self, step: usize, env: &Env, net: &mut Network) -> Result<()>;
+
+    /// Global Model Performance: evaluate the *average* of client models
+    /// (paper §4.1 metric) on the given batches → (loss, accuracy).
+    fn eval_gmp(&self, env: &Env, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<(f64, f64)>;
+
+    /// Mean squared distance of client models from their average.
+    fn consensus_error(&self) -> f64;
+
+    /// Optional per-phase wall-clock breakdown (Table 4).
+    fn phase_ms(&self) -> Vec<(String, f64)> {
+        vec![]
+    }
+
+    /// Snapshot of the trainable state (per-client param vectors) for the
+    /// paper's best-validation checkpoint selection (Table 5 note).
+    fn snapshot(&self) -> Vec<ParamVec>;
+
+    /// Restore a snapshot taken by [`Self::snapshot`].
+    fn restore(&mut self, snap: Vec<ParamVec>);
+}
+
+/// Whether a method trains the full parameter vector or LoRA adapters over
+/// a frozen shared base — unifies the *-LoRA variants.
+pub enum Space {
+    Full,
+    Lora { base: ParamVec },
+}
+
+impl Space {
+    pub fn for_method(env: &Env) -> Space {
+        if env.cfg.method.is_lora() {
+            Space::Lora { base: env.init_params.clone() }
+        } else {
+            Space::Full
+        }
+    }
+
+    /// θ⁰ for one client — identical across clients (shared pretrained
+    /// checkpoint or seeded init; see Env::init_params).
+    pub fn init_client(&self, env: &Env) -> ParamVec {
+        match self {
+            Space::Full => env.init_params.clone(),
+            Space::Lora { .. } => ParamStore::init_lora(&env.manifest, env.cfg.seed),
+        }
+    }
+
+    pub fn loss(&self, env: &Env, p: &ParamVec, ids: &[i32], labels: &[i32]) -> Result<(f32, f32)> {
+        match self {
+            Space::Full => env.loss_acc(p, ids, labels),
+            Space::Lora { base } => env.loss_acc_lora(base, p, ids, labels),
+        }
+    }
+
+    pub fn grad(&self, env: &Env, p: &ParamVec, ids: &[i32], labels: &[i32]) -> Result<(f32, ParamVec)> {
+        match self {
+            Space::Full => env.grad(p, ids, labels),
+            Space::Lora { base } => env.grad_lora(base, p, ids, labels),
+        }
+    }
+
+    pub fn eval(
+        &self,
+        env: &Env,
+        p: &ParamVec,
+        batches: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<(f64, f64)> {
+        match self {
+            Space::Full => env.eval_full(p, batches),
+            Space::Lora { base } => env.eval_lora(base, p, batches),
+        }
+    }
+}
+
+/// Probe seed for client i at step t — unique, deterministic, and shared
+/// knowledge once communicated (the `s_{i,t}` of §3.1).
+pub fn probe_seed(global: u64, client: usize, step: usize) -> u64 {
+    // splitmix-style avalanche over (global, client, step)
+    let mut z = global
+        ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (step as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Synchronous gossip-averaging round over dense payloads (Eq. 2's mixing
+/// step, Metropolis–Hastings weights). Shared by DSGD and DZSGD (+LoRA).
+pub fn gossip_mix(
+    clients: &mut [ParamVec],
+    weights: &[Vec<(usize, f32)>],
+    net: &mut Network,
+) {
+    use std::sync::Arc;
+
+    use crate::net::Payload;
+
+    let n = clients.len();
+    let snaps: Vec<Arc<ParamVec>> = clients.iter().map(|c| Arc::new(c.clone())).collect();
+    for (i, snap) in snaps.iter().enumerate() {
+        net.broadcast(i, &Payload::Dense(snap.clone()));
+    }
+    for i in 0..n {
+        let msgs = net.recv_all(i);
+        let wrow = &weights[i];
+        let w_of = |j: usize| wrow.iter().find(|&&(k, _)| k == j).map(|&(_, w)| w);
+        let mut mixed = clients[i].zeros_like();
+        let mut used = 0.0f32;
+        for m in msgs {
+            if let (Some(w), Payload::Dense(p)) = (w_of(m.from), m.payload) {
+                mixed.axpy(w, &p);
+                used += w;
+            }
+        }
+        // own weight plus any weight from undelivered neighbors (failure
+        // injection) falls back to self — keeps the row stochastic.
+        mixed.axpy(1.0 - used, &snaps[i]);
+        clients[i] = mixed;
+    }
+}
+
+/// Construct the configured algorithm.
+pub fn build(env: &Env, topo: &Topology) -> Result<Box<dyn Algorithm>> {
+    Ok(match env.cfg.method {
+        Method::Dsgd | Method::DsgdLora => Box::new(dsgd::Dsgd::new(env, topo)),
+        Method::ChocoSgd | Method::ChocoLora => Box::new(choco::Choco::new(env, topo)),
+        Method::Dzsgd | Method::DzsgdLora => Box::new(dzsgd::Dzsgd::new(env, topo)),
+        Method::SeedFlood => Box::new(seedflood::SeedFlood::new(env, topo)),
+        Method::Mezo => Box::new(single::SingleZo::new(env, false)),
+        Method::SubCge => Box::new(single::SingleZo::new(env, true)),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_seeds_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for c in 0..64 {
+            for t in 0..200 {
+                assert!(seen.insert(probe_seed(7, c, t)), "collision at ({c},{t})");
+            }
+        }
+        // deterministic
+        assert_eq!(probe_seed(7, 3, 5), probe_seed(7, 3, 5));
+        assert_ne!(probe_seed(7, 3, 5), probe_seed(8, 3, 5));
+    }
+}

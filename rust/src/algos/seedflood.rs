@@ -1,0 +1,218 @@
+//! SeedFlood (paper Alg. 1) — the paper's contribution.
+//!
+//! Per iteration, each client:
+//!  (A) refreshes the globally shared SubCGE basis every τ steps;
+//!  (B) estimates a zeroth-order update in the shared subspace (SPSA with
+//!      the canonical-coordinate perturbation), packaging it as a
+//!      seed–scalar pair with coefficient `η·α/n`;
+//!  (C) injects it into the flooding protocol, runs `k` flooding rounds
+//!      (k = network diameter by default ⇒ all-gather-equivalent
+//!      consensus; k < D is the delayed-flooding ablation of §4.5), folds
+//!      every newly received message into the O(1)-per-message coefficient
+//!      accumulator, and flushes the batched update `θ − U A Vᵀ` through
+//!      the AOT pallas kernel.
+//!
+//! Phase wall-clock is tracked as "GE" (gradient estimation) and "MA"
+//! (message applying) to regenerate Table 4.
+
+use anyhow::Result;
+
+use super::{probe_seed, Algorithm};
+use crate::data::BatchSampler;
+use crate::flood::{FloodState, WireFormat};
+use crate::net::{MsgId, Network, SeedUpdate};
+use crate::sim::{consensus_error, Env};
+use crate::subcge::{CoeffAccum, DeviceBasisCache, SubspaceBasis};
+use crate::tensor::ParamVec;
+use crate::topology::Topology;
+use crate::util::timer::PhaseClock;
+use crate::zo;
+
+pub struct SeedFlood {
+    clients: Vec<ParamVec>,
+    basis: SubspaceBasis,
+    accums: Vec<CoeffAccum>,
+    floods: Vec<FloodState>,
+    samplers: Vec<BatchSampler>,
+    flood_steps: usize,
+    lr: f32,
+    eps: f32,
+    seed: u64,
+    n: usize,
+    clock: PhaseClock,
+    /// use the AOT pallas artifact for the flush (true on the hot path;
+    /// false falls back to the pure-rust kernel — used by tests/benches)
+    pub use_artifact: bool,
+    /// device-resident basis factors (rebuilt on subspace refresh)
+    device_cache: Option<DeviceBasisCache>,
+}
+
+impl SeedFlood {
+    pub fn new(env: &Env, topo: &Topology) -> SeedFlood {
+        let n = env.n_clients();
+        let basis = SubspaceBasis::new(
+            &env.manifest,
+            env.cfg.rank,
+            env.cfg.refresh,
+            env.cfg.seed ^ 0x5EED_F100D,
+        );
+        let accums = (0..n).map(|_| CoeffAccum::new(&basis)).collect();
+        let clients = (0..n).map(|_| env.init_params.clone()).collect();
+        let flood_steps = if env.cfg.flood_steps == 0 {
+            topo.diameter().max(1)
+        } else {
+            env.cfg.flood_steps
+        };
+        SeedFlood {
+            clients,
+            basis,
+            accums,
+            floods: (0..n)
+                .map(|_| FloodState {
+                    wire: if env.cfg.quantize_msgs {
+                        WireFormat::Quantized(env.cfg.lr)
+                    } else {
+                        WireFormat::Full
+                    },
+                    ..FloodState::new()
+                })
+                .collect(),
+            samplers: env.make_samplers(),
+            flood_steps,
+            lr: env.cfg.lr,
+            eps: env.cfg.eps,
+            seed: env.cfg.seed,
+            n,
+            clock: PhaseClock::new(),
+            use_artifact: true,
+            device_cache: None,
+        }
+    }
+
+    fn flush(&mut self, client: usize, env: &Env) -> Result<()> {
+        if self.use_artifact {
+            if self.device_cache.is_none() {
+                self.device_cache = Some(DeviceBasisCache::new(&self.basis, &env.rt)?);
+            }
+            self.accums[client].flush_with_artifact_cached(
+                &self.basis,
+                self.device_cache.as_mut().unwrap(),
+                &mut self.clients[client],
+                &env.exe_subcge,
+                &env.rt,
+            )
+        } else {
+            self.accums[client].flush_rust(&self.basis, &mut self.clients[client]);
+            Ok(())
+        }
+    }
+}
+
+impl Algorithm for SeedFlood {
+    fn local_step(&mut self, client: usize, step: usize, env: &Env) -> Result<f32> {
+        // (A) subspace refresh — once per iteration, driven by client 0 so
+        // the shared basis flips exactly once (all clients see the same
+        // basis because it is stored once; determinism is unit-tested).
+        if client == 0 && step > 0 {
+            // pending accumulators must be empty across a basis change;
+            // they are — communicate() flushes every iteration.
+            self.basis.maybe_refresh(step);
+        }
+
+        // (B) local gradient estimation in the shared subspace
+        let (b, _) = env.batch_shape();
+        let (ids, labels) = self.samplers[client].next_batch(b);
+        let seed = probe_seed(self.seed, client, step);
+        let basis = &self.basis;
+        let mut probe_err = None;
+        let mut first_loss = None;
+        let t0 = std::time::Instant::now();
+        let alpha = zo::spsa_alpha(
+            &mut self.clients[client],
+            self.eps,
+            |p| match env.loss_acc(p, &ids, &labels) {
+                Ok((l, _)) => {
+                    first_loss.get_or_insert(l);
+                    l
+                }
+                Err(e) => {
+                    probe_err = Some(e);
+                    0.0
+                }
+            },
+            |p, s| zo::perturb_subcge(p, basis, seed, s),
+        );
+        self.clock.add("GE", t0.elapsed());
+        if let Some(e) = probe_err {
+            return Err(e);
+        }
+
+        // package as seed–scalar message with coefficient η·α/n (Alg. 1)
+        let msg = SeedUpdate {
+            id: MsgId { origin: client as u32, step: step as u32 },
+            seed,
+            coeff: self.lr * alpha / self.n as f32,
+        };
+        // inject first: under the quantized wire format the origin must
+        // apply the same rounded coefficient every other client will see
+        let msg = self.floods[client].inject(msg);
+        let t1 = std::time::Instant::now();
+        self.accums[client].accumulate(&self.basis, &msg); // own update
+        self.clock.add("MA", t1.elapsed());
+        Ok(first_loss.unwrap_or(0.0))
+    }
+
+    fn communicate(&mut self, _step: usize, env: &Env, net: &mut Network) -> Result<()> {
+        // (C) k synchronous flooding rounds; fold fresh messages as they
+        // arrive (coordinate update is O(1) per message per layer)
+        for _ in 0..self.flood_steps {
+            for (i, st) in self.floods.iter_mut().enumerate() {
+                st.send_round(i, net);
+            }
+            for i in 0..self.n {
+                let fresh = self.floods[i].collect(i, net);
+                if fresh.is_empty() {
+                    continue;
+                }
+                let t0 = std::time::Instant::now();
+                for m in &fresh {
+                    self.accums[i].accumulate(&self.basis, m);
+                }
+                self.clock.add("MA", t0.elapsed());
+            }
+        }
+        // apply the batched update through the pallas artifact (Eq. 10)
+        for i in 0..self.n {
+            let t0 = std::time::Instant::now();
+            self.flush(i, env)?;
+            self.clock.add("MA", t0.elapsed());
+        }
+        Ok(())
+    }
+
+    fn eval_gmp(&self, env: &Env, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<(f64, f64)> {
+        let refs: Vec<&ParamVec> = self.clients.iter().collect();
+        let avg = ParamVec::average(&refs);
+        env.eval_full(&avg, batches)
+    }
+
+    fn snapshot(&self) -> Vec<ParamVec> {
+        self.clients.clone()
+    }
+
+    fn restore(&mut self, snap: Vec<ParamVec>) {
+        assert_eq!(snap.len(), self.clients.len());
+        self.clients = snap;
+    }
+
+    fn consensus_error(&self) -> f64 {
+        consensus_error(&self.clients)
+    }
+
+    fn phase_ms(&self) -> Vec<(String, f64)> {
+        vec![
+            ("GE".into(), self.clock.total_ms("GE")),
+            ("MA".into(), self.clock.total_ms("MA")),
+        ]
+    }
+}

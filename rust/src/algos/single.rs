@@ -1,0 +1,130 @@
+//! Single-client zeroth-order baselines for Table 3: MeZO (dense
+//! perturbations, Malladi et al. 2023) vs SubCGE (shared-subspace
+//! canonical-coordinate perturbations) — the sanity check that restricting
+//! the perturbation pool does not hurt final quality.
+
+use anyhow::Result;
+
+use super::{probe_seed, Algorithm};
+use crate::data::BatchSampler;
+use crate::net::{MsgId, Network, SeedUpdate};
+use crate::sim::Env;
+use crate::subcge::{CoeffAccum, SubspaceBasis};
+use crate::tensor::ParamVec;
+use crate::util::timer::PhaseClock;
+use crate::zo;
+
+pub struct SingleZo {
+    params: ParamVec,
+    basis: Option<SubspaceBasis>,
+    accum: Option<CoeffAccum>,
+    sampler: BatchSampler,
+    lr: f32,
+    eps: f32,
+    seed: u64,
+    clock: PhaseClock,
+}
+
+impl SingleZo {
+    pub fn new(env: &Env, subcge: bool) -> SingleZo {
+        assert_eq!(env.n_clients(), 1, "single-client methods need --clients 1");
+        let basis = subcge.then(|| {
+            SubspaceBasis::new(&env.manifest, env.cfg.rank, env.cfg.refresh,
+                               env.cfg.seed ^ 0x5EED_F100D)
+        });
+        let accum = basis.as_ref().map(CoeffAccum::new);
+        SingleZo {
+            params: env.init_params.clone(),
+            basis,
+            accum,
+            sampler: env.make_samplers().remove(0),
+            lr: env.cfg.lr,
+            eps: env.cfg.eps,
+            seed: env.cfg.seed,
+            clock: PhaseClock::new(),
+        }
+    }
+}
+
+impl Algorithm for SingleZo {
+    fn local_step(&mut self, _client: usize, step: usize, env: &Env) -> Result<f32> {
+        if let Some(b) = &mut self.basis {
+            if step > 0 {
+                b.maybe_refresh(step);
+            }
+        }
+        let (bsz, _) = env.batch_shape();
+        let (ids, labels) = self.sampler.next_batch(bsz);
+        let seed = probe_seed(self.seed, 0, step);
+        let mut probe_err = None;
+        let mut first_loss = None;
+        let basis = &self.basis;
+        let t0 = std::time::Instant::now();
+        let alpha = zo::spsa_alpha(
+            &mut self.params,
+            self.eps,
+            |p| match env.loss_acc(p, &ids, &labels) {
+                Ok((l, _)) => {
+                    first_loss.get_or_insert(l);
+                    l
+                }
+                Err(e) => {
+                    probe_err = Some(e);
+                    0.0
+                }
+            },
+            |p, s| match basis {
+                Some(b) => zo::perturb_subcge(p, b, seed, s),
+                None => zo::perturb_dense(p, seed, s),
+            },
+        );
+        self.clock.add("GE", t0.elapsed());
+        if let Some(e) = probe_err {
+            return Err(e);
+        }
+        let t1 = std::time::Instant::now();
+        match (&self.basis, &mut self.accum) {
+            (Some(basis), Some(accum)) => {
+                accum.accumulate(
+                    basis,
+                    &SeedUpdate {
+                        id: MsgId { origin: 0, step: step as u32 },
+                        seed,
+                        coeff: self.lr * alpha,
+                    },
+                );
+                accum.flush_with_artifact(basis, &mut self.params, &env.exe_subcge, &env.rt)?;
+            }
+            _ => zo::apply_dense_update(&mut self.params, seed, self.lr * alpha),
+        }
+        self.clock.add("MA", t1.elapsed());
+        Ok(first_loss.unwrap_or(0.0))
+    }
+
+    fn communicate(&mut self, _step: usize, _env: &Env, _net: &mut Network) -> Result<()> {
+        Ok(())
+    }
+
+    fn eval_gmp(&self, env: &Env, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<(f64, f64)> {
+        env.eval_full(&self.params, batches)
+    }
+
+    fn snapshot(&self) -> Vec<ParamVec> {
+        vec![self.params.clone()]
+    }
+
+    fn restore(&mut self, snap: Vec<ParamVec>) {
+        self.params = snap.into_iter().next().unwrap();
+    }
+
+    fn consensus_error(&self) -> f64 {
+        0.0
+    }
+
+    fn phase_ms(&self) -> Vec<(String, f64)> {
+        vec![
+            ("GE".into(), self.clock.total_ms("GE")),
+            ("MA".into(), self.clock.total_ms("MA")),
+        ]
+    }
+}

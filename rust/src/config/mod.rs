@@ -1,0 +1,271 @@
+//! Experiment configuration: a TOML-subset parser (no `serde` facade in
+//! this offline image) + the typed [`ExperimentConfig`] consumed by the
+//! simulator. Defaults mirror the paper's Table 5 hyperparameters, scaled
+//! to the substitute substrate where noted.
+
+pub mod toml;
+
+use anyhow::{bail, Result};
+
+use crate::topology::Kind;
+use crate::util::cli::Args;
+
+/// Which training algorithm to run (every method in the paper's grids).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Dsgd,
+    ChocoSgd,
+    DsgdLora,
+    ChocoLora,
+    Dzsgd,
+    DzsgdLora,
+    SeedFlood,
+    /// single-client MeZO (Table 3 baseline)
+    Mezo,
+    /// single-client SubCGE (Table 3)
+    SubCge,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "dsgd" => Method::Dsgd,
+            "chocosgd" | "choco" => Method::ChocoSgd,
+            "dsgd-lora" | "dsgdlora" => Method::DsgdLora,
+            "choco-lora" | "chocolora" => Method::ChocoLora,
+            "dzsgd" => Method::Dzsgd,
+            "dzsgd-lora" | "dzsgdlora" => Method::DzsgdLora,
+            "seedflood" => Method::SeedFlood,
+            "mezo" => Method::Mezo,
+            "subcge" => Method::SubCge,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Dsgd => "DSGD",
+            Method::ChocoSgd => "ChocoSGD",
+            Method::DsgdLora => "DSGD-LoRA",
+            Method::ChocoLora => "Choco-LoRA",
+            Method::Dzsgd => "DZSGD",
+            Method::DzsgdLora => "DZSGD-LoRA",
+            Method::SeedFlood => "SeedFlood",
+            Method::Mezo => "MeZO",
+            Method::SubCge => "SubCGE",
+        }
+    }
+
+    pub fn is_zeroth_order(&self) -> bool {
+        matches!(self, Method::Dzsgd | Method::DzsgdLora | Method::SeedFlood
+                       | Method::Mezo | Method::SubCge)
+    }
+
+    pub fn is_lora(&self) -> bool {
+        matches!(self, Method::DsgdLora | Method::ChocoLora | Method::DzsgdLora)
+    }
+}
+
+/// Full experiment description. Paper Table 5 defaults, with iteration
+/// counts scaled by `--steps` for the CPU substrate.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub method: Method,
+    pub model: String,
+    pub task: String,
+    pub clients: usize,
+    pub topology: Kind,
+    pub topology_seed: u64,
+    /// total local optimization steps (paper: 5000 ZO / 500 FO)
+    pub steps: usize,
+    /// local steps per communication round (paper: 5)
+    pub local_steps: usize,
+    pub lr: f32,
+    pub batch: usize,
+    /// ZO perturbation scale ε (paper: 1e-3)
+    pub eps: f32,
+    /// SubCGE subspace rank r (paper: 32 / 64)
+    pub rank: usize,
+    /// SubCGE refresh period τ (paper: 1000 / 5000)
+    pub refresh: usize,
+    /// flooding steps per iteration; 0 = network diameter (paper default)
+    pub flood_steps: usize,
+    /// ChocoSGD top-K keep ratio (paper: 0.01 == 99% sparsification)
+    pub topk_ratio: f32,
+    /// ChocoSGD consensus step size (paper: 1)
+    pub consensus_lr: f32,
+    pub lora_rank: usize,
+    pub seed: u64,
+    /// evaluate GMP every `eval_every` steps (0 = only at end)
+    pub eval_every: usize,
+    pub artifacts_dir: String,
+    /// shared θ⁰ checkpoint (stands in for the paper's pretrained OPT);
+    /// empty = random init
+    pub init_from: String,
+    /// SeedFlood: use the 9-byte µ-law-quantized message wire format
+    /// (Zelikman et al. 2023 ablation)
+    pub quantize_msgs: bool,
+    /// label-skew heterogeneity: Dirichlet α for the client partition
+    /// (0 = the paper's uniform split)
+    pub dirichlet_alpha: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            method: Method::SeedFlood,
+            model: "tiny".into(),
+            task: "sst2".into(),
+            clients: 16,
+            topology: Kind::Ring,
+            topology_seed: 0,
+            steps: 400,
+            local_steps: 5,
+            lr: 1e-3,
+            batch: 8,
+            eps: 1e-3,
+            rank: 32,
+            refresh: 1000,
+            flood_steps: 0,
+            topk_ratio: 0.01,
+            consensus_lr: 1.0,
+            lora_rank: 8,
+            seed: 0,
+            eval_every: 0,
+            artifacts_dir: "artifacts".into(),
+            init_from: String::new(),
+            quantize_msgs: false,
+            dirichlet_alpha: 0.0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Build from CLI args (every field overridable).
+    pub fn from_args(args: &Args) -> Result<ExperimentConfig> {
+        let mut c = ExperimentConfig::default();
+        if let Some(m) = args.get("method") {
+            c.method = match Method::parse(m) {
+                Some(m) => m,
+                None => bail!("unknown method {m:?}"),
+            };
+        }
+        c.model = args.get_or("model", &c.model).to_string();
+        c.task = args.get_or("task", &c.task).to_string();
+        c.clients = args.get_parse("clients", c.clients)?;
+        if let Some(t) = args.get("topology") {
+            c.topology = match Kind::parse(t) {
+                Some(k) => k,
+                None => bail!("unknown topology {t:?}"),
+            };
+        }
+        c.steps = args.get_parse("steps", c.steps)?;
+        c.local_steps = args.get_parse("local-steps", c.local_steps)?;
+        c.lr = args.get_parse("lr", c.lr)?;
+        c.batch = args.get_parse("batch", c.batch)?;
+        c.eps = args.get_parse("eps", c.eps)?;
+        c.rank = args.get_parse("rank", c.rank)?;
+        c.refresh = args.get_parse("refresh", c.refresh)?;
+        c.flood_steps = args.get_parse("flood-steps", c.flood_steps)?;
+        c.topk_ratio = args.get_parse("topk-ratio", c.topk_ratio)?;
+        c.seed = args.get_parse("seed", c.seed)?;
+        c.eval_every = args.get_parse("eval-every", c.eval_every)?;
+        c.artifacts_dir = args.get_or("artifacts", &c.artifacts_dir).to_string();
+        c.init_from = args.get_or("init-from", &c.init_from).to_string();
+        c.quantize_msgs = args.has("quantize") || c.quantize_msgs;
+        c.dirichlet_alpha = args.get_parse("dirichlet-alpha", c.dirichlet_alpha)?;
+        Ok(c)
+    }
+
+    /// Apply a parsed TOML table section (`key = value` pairs).
+    pub fn apply_toml(&mut self, tbl: &toml::Table) -> Result<()> {
+        for (k, v) in tbl.iter() {
+            match k.as_str() {
+                "method" => {
+                    self.method = Method::parse(v.as_str()?)
+                        .ok_or_else(|| anyhow::anyhow!("unknown method"))?
+                }
+                "model" => self.model = v.as_str()?.to_string(),
+                "task" => self.task = v.as_str()?.to_string(),
+                "clients" => self.clients = v.as_int()? as usize,
+                "topology" => {
+                    self.topology = Kind::parse(v.as_str()?)
+                        .ok_or_else(|| anyhow::anyhow!("unknown topology"))?
+                }
+                "steps" => self.steps = v.as_int()? as usize,
+                "local_steps" => self.local_steps = v.as_int()? as usize,
+                "lr" => self.lr = v.as_float()? as f32,
+                "batch" => self.batch = v.as_int()? as usize,
+                "eps" => self.eps = v.as_float()? as f32,
+                "rank" => self.rank = v.as_int()? as usize,
+                "refresh" => self.refresh = v.as_int()? as usize,
+                "flood_steps" => self.flood_steps = v.as_int()? as usize,
+                "topk_ratio" => self.topk_ratio = v.as_float()? as f32,
+                "consensus_lr" => self.consensus_lr = v.as_float()? as f32,
+                "lora_rank" => self.lora_rank = v.as_int()? as usize,
+                "seed" => self.seed = v.as_int()? as u64,
+                "eval_every" => self.eval_every = v.as_int()? as usize,
+                "artifacts_dir" => self.artifacts_dir = v.as_str()?.to_string(),
+                "init_from" => self.init_from = v.as_str()?.to_string(),
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in ["dsgd", "choco", "dsgd-lora", "choco-lora", "dzsgd",
+                  "dzsgd-lora", "seedflood", "mezo", "subcge"] {
+            assert!(Method::parse(m).is_some(), "{m}");
+        }
+        assert!(Method::parse("sgd").is_none());
+        assert!(Method::SeedFlood.is_zeroth_order());
+        assert!(!Method::Dsgd.is_zeroth_order());
+        assert!(Method::ChocoLora.is_lora());
+    }
+
+    #[test]
+    fn from_args_overrides() {
+        let args = Args::parse(
+            ["--method", "dsgd", "--clients", "32", "--topology", "mesh",
+             "--lr", "0.0001", "--steps", "50"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let c = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(c.method, Method::Dsgd);
+        assert_eq!(c.clients, 32);
+        assert_eq!(c.topology, Kind::Meshgrid);
+        assert_eq!(c.lr, 1e-4);
+        assert_eq!(c.steps, 50);
+    }
+
+    #[test]
+    fn from_args_rejects_bad() {
+        let args = Args::parse(
+            ["--method", "nope"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        assert!(ExperimentConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn apply_toml_section() {
+        let parsed = toml::parse(
+            "method = \"seedflood\"\nrank = 64\nrefresh = 5000\nlr = 1e-5\n",
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_toml(&parsed.root).unwrap();
+        assert_eq!(c.rank, 64);
+        assert_eq!(c.refresh, 5000);
+        assert_eq!(c.lr, 1e-5);
+    }
+}

@@ -1,0 +1,184 @@
+//! TOML-subset parser: `[section]` headers and `key = value` pairs where
+//! value is a string, integer, float or boolean. Comments with `#`.
+//! Covers everything `configs/*.toml` needs; arrays/tables-of-tables are
+//! intentionally out of scope.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+pub type Table = BTreeMap<String, Value>;
+
+#[derive(Clone, Debug, Default)]
+pub struct Document {
+    /// keys before any [section]
+    pub root: Table,
+    pub sections: BTreeMap<String, Table>,
+}
+
+impl Document {
+    pub fn section(&self, name: &str) -> Option<&Table> {
+        self.sections.get(name)
+    }
+}
+
+pub fn parse(src: &str) -> Result<Document> {
+    let mut doc = Document::default();
+    let mut current: Option<String> = None;
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            let name = name.trim().to_string();
+            doc.sections.entry(name.clone()).or_default();
+            current = Some(name);
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected key = value, got {line:?}", lineno + 1);
+        };
+        let key = k.trim().to_string();
+        let value = parse_value(v.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let tbl = match &current {
+            Some(s) => doc.sections.get_mut(s).unwrap(),
+            None => &mut doc.root,
+        };
+        tbl.insert(key, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: no '#' inside our config strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(inner) = inner.strip_suffix('"') else {
+            bail!("unterminated string {s:?}");
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+pub fn parse_file(path: &str) -> Result<Document> {
+    parse(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = parse(
+            r#"
+# paper Table 5 defaults
+title = "seedflood"
+steps = 5000
+
+[seedflood]
+lr = 1e-5          # swept
+rank = 32
+flood_full = true
+
+[dsgd]
+lr = 1e-4
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.root["title"], Value::Str("seedflood".into()));
+        assert_eq!(doc.root["steps"], Value::Int(5000));
+        let sf = doc.section("seedflood").unwrap();
+        assert_eq!(sf["lr"].as_float().unwrap(), 1e-5);
+        assert_eq!(sf["rank"].as_int().unwrap(), 32);
+        assert!(sf["flood_full"].as_bool().unwrap());
+        assert!(doc.section("dsgd").is_some());
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = parse("x = 3\n").unwrap();
+        assert_eq!(doc.root["x"].as_float().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[oops\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("x = \"unterminated\n").is_err());
+        assert!(parse("x = 1.2.3\n").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = parse("x = \"a#b\"\n").unwrap();
+        assert_eq!(doc.root["x"].as_str().unwrap(), "a#b");
+    }
+}

@@ -1,0 +1,411 @@
+//! Synthetic task family + client partitioning (paper §4.1 substitution).
+//!
+//! The paper fine-tunes OPT on SuperGLUE/SST-2 with 1,024 training samples
+//! uniformly partitioned across clients, 500 validation, 1,000 test.  We
+//! keep the exact split sizes and partitioning but substitute a *planted
+//! token-motif* classification family (DESIGN.md#Substitutions): a task
+//! plants disjoint positive/negative lexicons; each example is a fixed-
+//! length token sequence containing lexicon tokens amid filler, rendered
+//! MeZO-prompt style — the final position is a task "query" token and the
+//! model scores C verbalizer tokens there.  The label is which lexicon
+//! dominates, flipped with a per-task noise rate (task difficulty knob).
+//!
+//! Six named instances mirror the paper's task list (sst2, rte, boolq,
+//! wic, multirc, record) with increasing difficulty.
+
+use crate::rng::Rng;
+
+/// Reserved token ids (must stay below every config's vocab of >= 256).
+pub const PAD: i32 = 0;
+pub const QUERY: i32 = 1;
+pub const CLASS_TOKENS: [i32; 2] = [2, 3];
+const RESERVED: i32 = 4;
+/// Each task owns a disjoint block of `LEX_BLOCK` token ids for its two
+/// lexicons (so tasks never assign conflicting labels to the same token —
+/// words keep stable meanings across the corpus, like real text); ids from
+/// `FILLER_BASE` up are the shared neutral filler pool.
+pub const LEX_BLOCK: i32 = 20;
+pub const MAX_TASKS: i32 = 6;
+pub const FILLER_BASE: i32 = RESERVED + MAX_TASKS * LEX_BLOCK; // = 124
+
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: String,
+    /// per-side lexicon size (<= LEX_BLOCK/2)
+    pub lexicon: usize,
+    /// how many lexicon tokens are planted per sequence
+    pub planted: usize,
+    /// label-noise rate (difficulty)
+    pub noise: f64,
+    /// task seed (determines example sampling)
+    pub seed: u64,
+    /// base token id of this task's lexicon block (disjoint across tasks)
+    pub lex_base: i32,
+}
+
+impl TaskSpec {
+    /// The six SuperGLUE/SST-2 analogues, ordered easy → hard like the
+    /// paper's observed accuracy spread.
+    pub fn named(name: &str) -> Option<TaskSpec> {
+        let (idx, lexicon, planted, noise, seed) = match name {
+            "sst2" => (0, 8, 6, 0.02, 101),
+            "rte" => (1, 6, 4, 0.12, 102),
+            "boolq" => (2, 6, 4, 0.10, 103),
+            "wic" => (3, 4, 4, 0.16, 104),
+            "multirc" => (4, 6, 4, 0.08, 105),
+            "record" => (5, 10, 6, 0.05, 106),
+            _ => return None,
+        };
+        Some(TaskSpec {
+            name: name.to_string(),
+            lexicon,
+            planted,
+            noise,
+            seed,
+            lex_base: RESERVED + idx * LEX_BLOCK,
+        })
+    }
+
+    /// This task's positive / negative lexicons (disjoint id ranges).
+    pub fn lexicons(&self) -> (Vec<i32>, Vec<i32>) {
+        assert!(2 * self.lexicon as i32 <= LEX_BLOCK);
+        let pos = (self.lex_base..self.lex_base + self.lexicon as i32).collect();
+        let neg = (self.lex_base + self.lexicon as i32
+            ..self.lex_base + 2 * self.lexicon as i32)
+            .collect();
+        (pos, neg)
+    }
+
+    pub fn all_names() -> [&'static str; 6] {
+        ["sst2", "rte", "boolq", "wic", "multirc", "record"]
+    }
+}
+
+/// One classification example: fixed-length token sequence + binary label.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub tokens: Vec<i32>,
+    pub label: i32, // 0 or 1
+}
+
+/// A fully materialized task: train/val/test splits (paper sizes).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub spec: TaskSpec,
+    pub train: Vec<Example>,
+    pub val: Vec<Example>,
+    pub test: Vec<Example>,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl Dataset {
+    /// Paper split sizes: 1,024 / 500 / 1,000.
+    pub fn generate(spec: &TaskSpec, vocab: usize, seq: usize) -> Dataset {
+        Self::generate_sized(spec, vocab, seq, 1024, 500, 1000)
+    }
+
+    pub fn generate_sized(
+        spec: &TaskSpec,
+        vocab: usize,
+        seq: usize,
+        n_train: usize,
+        n_val: usize,
+        n_test: usize,
+    ) -> Dataset {
+        assert!(vocab as i32 > FILLER_BASE + 16,
+                "vocab {vocab} too small (need > {})", FILLER_BASE + 16);
+        let (pos, neg) = spec.lexicons();
+        let filler: Vec<i32> = (FILLER_BASE..vocab as i32).collect();
+
+        let gen_split = |n: usize, stream: u64| -> Vec<Example> {
+            let mut r = Rng::fold_in(spec.seed, stream);
+            (0..n).map(|_| Self::gen_example(spec, &pos, &neg, &filler, seq, &mut r)).collect()
+        };
+        Dataset {
+            spec: spec.clone(),
+            train: gen_split(n_train, 1),
+            val: gen_split(n_val, 2),
+            test: gen_split(n_test, 3),
+            seq,
+            vocab,
+        }
+    }
+
+    fn gen_example(
+        spec: &TaskSpec,
+        pos: &[i32],
+        neg: &[i32],
+        filler: &[i32],
+        seq: usize,
+        rng: &mut Rng,
+    ) -> Example {
+        let mut tokens: Vec<i32> = (0..seq - 1)
+            .map(|_| filler[rng.next_below(filler.len() as u64) as usize])
+            .collect();
+        // plant `planted` lexicon tokens with a majority from one side
+        let label = (rng.next_u64() & 1) as i32;
+        let majority = spec.planted / 2 + 1;
+        let minority = spec.planted - majority;
+        let (maj_lex, min_lex) = if label == 1 { (pos, neg) } else { (neg, pos) };
+        let positions = rng.permutation(seq - 1);
+        for (k, &p) in positions.iter().take(spec.planted).enumerate() {
+            let lex = if k < majority { maj_lex } else { min_lex };
+            let _ = minority;
+            tokens[p as usize] = lex[rng.next_below(lex.len() as u64) as usize];
+        }
+        tokens.push(QUERY); // prediction position
+        let label = if rng.next_f64() < spec.noise { 1 - label } else { label };
+        Example { tokens, label }
+    }
+
+    /// Extra examples from the same task distribution on a stream disjoint
+    /// from train/val/test — used by the pretraining corpus (the paper's
+    /// OPT pretraining makes SuperGLUE zero-shot feasible; this split plays
+    /// that role, see DESIGN.md#Substitutions).
+    pub fn pretrain_split(spec: &TaskSpec, vocab: usize, seq: usize, n: usize) -> Vec<Example> {
+        let (pos, neg) = spec.lexicons();
+        let filler: Vec<i32> = (FILLER_BASE..vocab as i32).collect();
+        let mut r = Rng::fold_in(spec.seed, 4);
+        (0..n).map(|_| Self::gen_example(spec, &pos, &neg, &filler, seq, &mut r)).collect()
+    }
+
+    /// Uniform partition of the training split across `n` clients
+    /// (paper §4.1: "1,024 training samples uniformly partitioned").
+    pub fn partition(&self, n: usize) -> Vec<Vec<Example>> {
+        let per = self.train.len() / n;
+        assert!(per > 0, "more clients ({n}) than examples ({})", self.train.len());
+        (0..n).map(|i| self.train[i * per..(i + 1) * per].to_vec()).collect()
+    }
+
+    /// Label-skewed (non-IID) partition: each client draws its label
+    /// proportions from a symmetric Dirichlet(α). Small α ⇒ clients see
+    /// mostly one class — the standard heterogeneity stressor for
+    /// decentralized methods (the paper's uniform split is α → ∞). Every
+    /// client is guaranteed at least one example of some class.
+    pub fn partition_dirichlet(&self, n: usize, alpha: f64, seed: u64) -> Vec<Vec<Example>> {
+        assert!(n <= self.train.len());
+        let mut rng = Rng::new(seed ^ 0xD1B1);
+        // split train pool by label
+        let mut by_label: [Vec<&Example>; 2] = [vec![], vec![]];
+        for ex in &self.train {
+            by_label[ex.label as usize].push(ex);
+        }
+        // per-client Dirichlet(α, α) over the two labels via Gamma draws
+        let gamma = |rng: &mut Rng| -> f64 {
+            // Marsaglia–Tsang for shape α (<1 handled by boost)
+            let boost = if alpha < 1.0 { rng.next_f64().powf(1.0 / alpha) } else { 1.0 };
+            let d = alpha.max(1.0) - 1.0 / 3.0;
+            let c = 1.0 / (9.0 * d).sqrt();
+            loop {
+                let x = {
+                    // one normal draw
+                    let u1 = rng.next_f64().max(1e-300);
+                    let u2 = rng.next_f64();
+                    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+                };
+                let v = (1.0 + c * x).powi(3);
+                if v <= 0.0 {
+                    continue;
+                }
+                let u = rng.next_f64();
+                if u < 1.0 - 0.0331 * x.powi(4)
+                    || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+                {
+                    return d * v * boost;
+                }
+            }
+        };
+        let props: Vec<[f64; 2]> = (0..n)
+            .map(|_| {
+                let (a, b) = (gamma(&mut rng).max(1e-9), gamma(&mut rng).max(1e-9));
+                [a / (a + b), b / (a + b)]
+            })
+            .collect();
+        // deal examples: walk each label pool, assigning to clients in
+        // proportion to their normalized share of that label
+        let mut out: Vec<Vec<Example>> = vec![vec![]; n];
+        for label in 0..2 {
+            let pool = &by_label[label];
+            let total: f64 = props.iter().map(|p| p[label]).sum();
+            let mut cursor = 0usize;
+            for (i, p) in props.iter().enumerate() {
+                let want = ((p[label] / total) * pool.len() as f64).round() as usize;
+                let end = (cursor + want).min(pool.len());
+                for ex in &pool[cursor..end] {
+                    out[i].push((*ex).clone());
+                }
+                cursor = end;
+            }
+            // leftovers to the last clients round-robin
+            let mut i = 0;
+            while cursor < pool.len() {
+                out[i % n].push(pool[cursor].clone());
+                cursor += 1;
+                i += 1;
+            }
+        }
+        // nobody may be empty (samplers need >= 1 example)
+        for i in 0..n {
+            if out[i].is_empty() {
+                let donor = (0..n).max_by_key(|&j| out[j].len()).unwrap();
+                let ex = out[donor].pop().unwrap();
+                out[i].push(ex);
+            }
+        }
+        out
+    }
+}
+
+/// Mini-batch iterator over a client's local shard: shuffled, wrapping.
+pub struct BatchSampler {
+    examples: Vec<Example>,
+    order: Vec<u32>,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl BatchSampler {
+    pub fn new(examples: Vec<Example>, seed: u64) -> BatchSampler {
+        assert!(!examples.is_empty());
+        let mut rng = Rng::new(seed);
+        let order = rng.permutation(examples.len());
+        BatchSampler { examples, order, cursor: 0, rng }
+    }
+
+    /// Next batch of (input_ids flat, labels), re-shuffling per epoch.
+    pub fn next_batch(&mut self, batch: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut ids = Vec::with_capacity(batch * self.examples[0].tokens.len());
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            if self.cursor >= self.order.len() {
+                self.order = self.rng.permutation(self.examples.len());
+                self.cursor = 0;
+            }
+            let ex = &self.examples[self.order[self.cursor] as usize];
+            self.cursor += 1;
+            ids.extend_from_slice(&ex.tokens);
+            labels.push(ex.label);
+        }
+        (ids, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexicon_blocks_disjoint_across_tasks() {
+        let mut seen = std::collections::HashSet::new();
+        for name in TaskSpec::all_names() {
+            let (pos, neg) = TaskSpec::named(name).unwrap().lexicons();
+            for t in pos.iter().chain(neg.iter()) {
+                assert!(*t >= RESERVED && *t < FILLER_BASE);
+                assert!(seen.insert(*t), "token {t} reused across tasks");
+            }
+        }
+    }
+
+    fn ds() -> Dataset {
+        Dataset::generate_sized(&TaskSpec::named("sst2").unwrap(), 256, 32, 128, 50, 100)
+    }
+
+    #[test]
+    fn split_sizes_and_shapes() {
+        let d = ds();
+        assert_eq!(d.train.len(), 128);
+        assert_eq!(d.val.len(), 50);
+        assert_eq!(d.test.len(), 100);
+        for ex in d.train.iter().chain(&d.val).chain(&d.test) {
+            assert_eq!(ex.tokens.len(), 32);
+            assert_eq!(*ex.tokens.last().unwrap(), QUERY);
+            assert!(ex.label == 0 || ex.label == 1);
+            assert!(ex.tokens.iter().all(|&t| t >= 0 && (t as usize) < 256));
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = ds();
+        let b = ds();
+        assert_eq!(a.train[0].tokens, b.train[0].tokens);
+        assert_eq!(a.test[9].label, b.test[9].label);
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let d = ds();
+        let ones: usize = d.train.iter().filter(|e| e.label == 1).count();
+        assert!(ones > 128 / 4 && ones < 128 * 3 / 4, "ones={ones}");
+    }
+
+    #[test]
+    fn tasks_all_construct() {
+        for name in TaskSpec::all_names() {
+            let spec = TaskSpec::named(name).unwrap();
+            let d = Dataset::generate_sized(&spec, 256, 16, 32, 8, 8);
+            assert_eq!(d.train.len(), 32, "{name}");
+        }
+        assert!(TaskSpec::named("nope").is_none());
+    }
+
+    #[test]
+    fn dirichlet_partition_covers_all_and_skews() {
+        let d = Dataset::generate_sized(&TaskSpec::named("sst2").unwrap(), 256, 16, 512, 8, 8);
+        let parts = d.partition_dirichlet(8, 0.3, 7);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 512);
+        assert!(parts.iter().all(|p| !p.is_empty()));
+        // at α=0.3 at least one client should be heavily label-skewed
+        let max_skew = parts
+            .iter()
+            .map(|p| {
+                let ones = p.iter().filter(|e| e.label == 1).count() as f64;
+                (ones / p.len() as f64 - 0.5).abs()
+            })
+            .fold(0.0, f64::max);
+        assert!(max_skew > 0.2, "no skew at alpha=0.3: {max_skew}");
+        // determinism
+        let parts2 = d.partition_dirichlet(8, 0.3, 7);
+        assert_eq!(parts[0].len(), parts2[0].len());
+    }
+
+    #[test]
+    fn partition_uniform_disjoint() {
+        let d = ds();
+        let parts = d.partition(8);
+        assert_eq!(parts.len(), 8);
+        assert!(parts.iter().all(|p| p.len() == 16));
+    }
+
+    #[test]
+    fn sampler_wraps_and_shuffles() {
+        let d = ds();
+        let mut s = BatchSampler::new(d.partition(8)[0].clone(), 7);
+        let seq = d.seq;
+        for _ in 0..10 {
+            let (ids, labels) = s.next_batch(8);
+            assert_eq!(ids.len(), 8 * seq);
+            assert_eq!(labels.len(), 8);
+        }
+    }
+
+    #[test]
+    fn majority_signal_exists() {
+        // count pos-lexicon occurrences correlate with label (pre-noise)
+        let spec = TaskSpec { noise: 0.0, ..TaskSpec::named("sst2").unwrap() };
+        let d = Dataset::generate_sized(&spec, 256, 32, 256, 8, 8);
+        // a simple count-based classifier must beat chance comfortably
+        let (pos, neg) = spec.lexicons();
+        let mut correct = 0;
+        for ex in &d.train {
+            let p = ex.tokens.iter().filter(|t| pos.contains(t)).count();
+            let n = ex.tokens.iter().filter(|t| neg.contains(t)).count();
+            let pred = (p > n) as i32;
+            correct += (pred == ex.label) as usize;
+        }
+        assert!(correct as f64 / d.train.len() as f64 > 0.95,
+                "planted rule not recoverable: {correct}/256");
+    }
+}

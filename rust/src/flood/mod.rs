@@ -1,0 +1,275 @@
+//! Flooding — the consensus primitive that replaces gossip (paper §3.3).
+//!
+//! Upon first receipt of a message, a client forwards it to all neighbors;
+//! repeated for `D` (network diameter) steps, every update generated in an
+//! iteration reaches every client — an all-gather-equivalent consensus
+//! with cost independent of model dimension.
+//!
+//! *Delayed flooding* (paper §4.5): run only `k` flood steps per local
+//! iteration; the outbox persists across iterations so messages keep
+//! propagating with a bounded delay of ≤ ⌈D/k⌉ iterations.
+
+use std::collections::HashSet;
+
+use crate::net::{Message, MsgId, Network, Payload, SeedUpdate};
+
+/// On-wire encoding for flooded messages.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum WireFormat {
+    /// 20 B per message: id + seed + f32 coefficient.
+    #[default]
+    Full,
+    /// 9 B per message (Zelikman et al. 2023): 1-byte µ-law coefficient
+    /// around the given scale; values are quantized at injection so every
+    /// client applies identical (dequantized) coefficients — consensus is
+    /// preserved exactly.
+    Quantized(f32),
+}
+
+/// Per-client flooding protocol state (Alg. 1: S_i = seen, R_i = outbox).
+#[derive(Debug, Default)]
+pub struct FloodState {
+    /// S_i — every message id ever received (dedup filter)
+    pub seen: HashSet<MsgId>,
+    /// R_i — messages received last step, to forward this step
+    pub outbox: Vec<SeedUpdate>,
+    /// duplicate receptions filtered (metrics: flooding overhead)
+    pub duplicates: u64,
+    /// wire encoding used by send_round
+    pub wire: WireFormat,
+}
+
+impl FloodState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Inject this client's own freshly generated update (start of Alg. 1
+    /// step C): goes into both the seen-set and the outbox. Under the
+    /// quantized wire format the coefficient is rounded here so the origin
+    /// applies exactly what the network will carry. Returns the message as
+    /// it will circulate.
+    pub fn inject(&mut self, msg: SeedUpdate) -> SeedUpdate {
+        let msg = match self.wire {
+            WireFormat::Full => msg,
+            WireFormat::Quantized(scale) => msg.quantized(scale),
+        };
+        self.seen.insert(msg.id);
+        self.outbox.push(msg);
+        msg
+    }
+
+    /// One flooding step for client `me`: send R_i to all neighbors.
+    /// Call [`Self::collect`] after *all* clients have sent (synchronous
+    /// round semantics — matches Alg. 1's lockstep `for d = 0..D-1`).
+    pub fn send_round(&mut self, me: usize, net: &mut Network) {
+        if self.outbox.is_empty() {
+            return;
+        }
+        let batch = std::mem::take(&mut self.outbox);
+        let payload = match self.wire {
+            WireFormat::Full => Payload::Seeds(batch),
+            WireFormat::Quantized(_) => Payload::SeedsQuantized(batch),
+        };
+        net.broadcast(me, &payload);
+    }
+
+    /// Receive + dedup; newly seen messages become the next outbox and are
+    /// returned for the caller to apply (Alg. 1: R_i ← received \ S_i).
+    pub fn collect(&mut self, me: usize, net: &mut Network) -> Vec<SeedUpdate> {
+        let mut fresh = vec![];
+        for Message { payload, .. } in net.recv_all(me) {
+            let batch = match payload {
+                Payload::Seeds(b) | Payload::SeedsQuantized(b) => b,
+                _ => panic!("flooding received non-seed payload"),
+            };
+            for msg in batch {
+                if self.seen.insert(msg.id) {
+                    fresh.push(msg);
+                } else {
+                    self.duplicates += 1;
+                }
+            }
+        }
+        self.outbox.extend_from_slice(&fresh);
+        fresh
+    }
+}
+
+/// Run `k` synchronous flooding rounds over all clients; calls `apply`
+/// with (client, &fresh messages) after each round. This is the lockstep
+/// driver used by SeedFlood and the flooding tests.
+pub fn flood_rounds<F>(
+    states: &mut [FloodState],
+    net: &mut Network,
+    k: usize,
+    mut apply: F,
+) where
+    F: FnMut(usize, &[SeedUpdate]),
+{
+    let n = states.len();
+    for _ in 0..k {
+        for (i, st) in states.iter_mut().enumerate() {
+            st.send_round(i, net);
+        }
+        for i in 0..n {
+            let fresh = states[i].collect(i, net);
+            if !fresh.is_empty() {
+                apply(i, &fresh);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    #[test]
+    fn quantized_wire_floods_identically_and_costs_less() {
+        let run = |wire: WireFormat| {
+            let topo = Topology::ring(8);
+            let d = topo.diameter();
+            let mut net = Network::new(topo);
+            let mut states: Vec<FloodState> = (0..8)
+                .map(|_| FloodState { wire, ..FloodState::new() })
+                .collect();
+            for (i, st) in states.iter_mut().enumerate() {
+                st.inject(SeedUpdate {
+                    id: MsgId { origin: i as u32, step: 0 },
+                    seed: i as u64,
+                    coeff: 1.7e-4 * (i as f32 - 3.5),
+                });
+            }
+            flood_rounds(&mut states, &mut net, d + 1, |_, _| {});
+            (states.iter().map(|s| s.seen.len()).min().unwrap(), net.acct.total_bytes)
+        };
+        let (cov_full, bytes_full) = run(WireFormat::Full);
+        let (cov_q, bytes_q) = run(WireFormat::Quantized(1e-3));
+        assert_eq!(cov_full, 8);
+        assert_eq!(cov_q, 8);
+        assert!(bytes_q * 2 < bytes_full, "{bytes_q} vs {bytes_full}");
+    }
+
+    fn msg(origin: u32, step: u32) -> SeedUpdate {
+        SeedUpdate {
+            id: MsgId { origin, step },
+            seed: origin as u64 * 1000 + step as u64,
+            coeff: 1.0,
+        }
+    }
+
+    /// Everyone receives everything after D rounds — the paper's perfect-
+    /// consensus claim, checked on every topology we ship.
+    #[test]
+    fn full_flooding_reaches_all_clients() {
+        for topo in [
+            Topology::ring(9),
+            Topology::meshgrid(16),
+            Topology::star(7),
+            Topology::complete(5),
+            Topology::erdos_renyi(12, 3),
+        ] {
+            let n = topo.n;
+            let d = topo.diameter();
+            let mut net = Network::new(topo);
+            let mut states: Vec<FloodState> = (0..n).map(|_| FloodState::new()).collect();
+            for (i, st) in states.iter_mut().enumerate() {
+                st.inject(msg(i as u32, 0));
+            }
+            let mut received = vec![0usize; n];
+            flood_rounds(&mut states, &mut net, d, |i, fresh| {
+                received[i] += fresh.len();
+            });
+            for (i, st) in states.iter().enumerate() {
+                assert_eq!(st.seen.len(), n, "client {i} missing messages");
+                assert_eq!(received[i], n - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn each_message_applied_exactly_once() {
+        let topo = Topology::meshgrid(16);
+        let d = topo.diameter();
+        let mut net = Network::new(topo);
+        let mut states: Vec<FloodState> = (0..16).map(|_| FloodState::new()).collect();
+        for (i, st) in states.iter_mut().enumerate() {
+            st.inject(msg(i as u32, 0));
+        }
+        let mut apply_counts = vec![std::collections::HashMap::new(); 16];
+        flood_rounds(&mut states, &mut net, d, |i, fresh| {
+            for m in fresh {
+                *apply_counts[i].entry(m.id).or_insert(0) += 1;
+            }
+        });
+        for counts in &apply_counts {
+            assert!(counts.values().all(|&c| c == 1), "message applied twice");
+        }
+    }
+
+    #[test]
+    fn delayed_flooding_bounded_staleness() {
+        // k=1 on a ring of 8 (D=4): message from client 0 reaches the
+        // antipodal client 4 after exactly 4 iterations, not before.
+        let topo = Topology::ring(8);
+        let mut net = Network::new(topo);
+        let mut states: Vec<FloodState> = (0..8).map(|_| FloodState::new()).collect();
+        states[0].inject(msg(0, 0));
+        for iter in 1..=4 {
+            flood_rounds(&mut states, &mut net, 1, |_, _| {});
+            let reached = states[4].seen.contains(&MsgId { origin: 0, step: 0 });
+            assert_eq!(reached, iter >= 4, "iter {iter}");
+        }
+    }
+
+    #[test]
+    fn flooding_cost_independent_of_extra_rounds() {
+        // once everyone has seen everything, further rounds send nothing
+        let topo = Topology::ring(6);
+        let d = topo.diameter();
+        let mut net = Network::new(topo);
+        let mut states: Vec<FloodState> = (0..6).map(|_| FloodState::new()).collect();
+        for (i, st) in states.iter_mut().enumerate() {
+            st.inject(msg(i as u32, 0));
+        }
+        // D rounds deliver everything; one extra round drains the final
+        // outboxes (messages first seen in round D are forwarded once more)
+        flood_rounds(&mut states, &mut net, d + 1, |_, _| {});
+        let bytes_after_drain = net.acct.total_bytes;
+        flood_rounds(&mut states, &mut net, 10, |_, _| {});
+        assert_eq!(net.acct.total_bytes, bytes_after_drain);
+    }
+
+    #[test]
+    fn per_iteration_message_volume_is_o_n() {
+        // Table 1: SeedFlood communicated bytes per edge per iteration is
+        // O(n), independent of model size by construction.
+        let n = 16;
+        let topo = Topology::ring(n);
+        let d = topo.diameter();
+        let mut net = Network::new(topo);
+        let mut states: Vec<FloodState> = (0..n).map(|_| FloodState::new()).collect();
+        for (i, st) in states.iter_mut().enumerate() {
+            st.inject(msg(i as u32, 0));
+        }
+        flood_rounds(&mut states, &mut net, d, |_, _| {});
+        // each message traverses each directed edge at most twice
+        let max_bytes = (2 * n) as u64 * SeedUpdate::WIRE_BYTES * 2 * n as u64;
+        assert!(net.acct.total_bytes <= max_bytes);
+    }
+
+    #[test]
+    fn duplicates_are_counted_not_applied() {
+        let topo = Topology::complete(4); // lots of redundant paths
+        let mut net = Network::new(topo);
+        let mut states: Vec<FloodState> = (0..4).map(|_| FloodState::new()).collect();
+        for (i, st) in states.iter_mut().enumerate() {
+            st.inject(msg(i as u32, 0));
+        }
+        flood_rounds(&mut states, &mut net, 2, |_, _| {});
+        let dup_total: u64 = states.iter().map(|s| s.duplicates).sum();
+        assert!(dup_total > 0, "complete graph must produce duplicate receipts");
+    }
+}

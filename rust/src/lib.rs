@@ -1,0 +1,40 @@
+//! # SeedFlood — scalable decentralized training via flooded seed-reconstructible updates
+//!
+//! Reproduction of *“SeedFlood: A Step Toward Scalable Decentralized Training
+//! of LLMs”* (Kim & Lee, 2026). The library is the L3 layer of a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the decentralized-training coordinator: network
+//!   topologies, a simulated reliable message-passing network with exact
+//!   per-edge byte accounting, the flooding consensus primitive, the SubCGE
+//!   subspace state, zeroth-order estimation, and all paper baselines
+//!   (DSGD, ChocoSGD, DZSGD, LoRA variants) behind one [`algos::Algorithm`]
+//!   trait, driven by the [`sim`] experiment runner.
+//! * **L2** — a jax transformer LM (`python/compile/model.py`), AOT-lowered
+//!   to HLO text artifacts loaded by [`runtime`] through PJRT.
+//! * **L1** — pallas kernels (`python/compile/kernels/`): the SubCGE
+//!   aggregation `θ ← θ − U A Vᵀ` and a blocked matmul, lowered into the L2
+//!   HLO.
+//!
+//! Python never runs at request time: `make artifacts` is the only python
+//! step; afterwards the `seedflood` binary is self-contained.
+
+pub mod algos;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod flood;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod subcge;
+pub mod tensor;
+pub mod topology;
+pub mod util;
+pub mod zo;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,166 @@
+//! `seedflood` — CLI for the SeedFlood decentralized-training framework.
+//!
+//! Subcommands:
+//!   train        run one experiment configuration and report GMP + cost
+//!   experiment   regenerate a paper table/figure (fig1, fig3/table8,
+//!                scaling/fig4/table2, table3, fig6, fig7)
+//!   topo         inspect a topology (diameter, spectral gap, edges)
+//!   info         print manifest / artifact info
+//!
+//! Examples:
+//!   seedflood train --method seedflood --clients 16 --topology ring \
+//!       --task sst2 --steps 400 --model tiny
+//!   seedflood experiment fig7 --tasks sst2 --clients 8 --steps 200
+//!   seedflood topo --topology meshgrid --clients 64
+
+use anyhow::Result;
+use seedflood::config::ExperimentConfig;
+use seedflood::model::Manifest;
+use seedflood::topology::{Kind, Topology};
+use seedflood::util::cli::Args;
+use seedflood::util::human_bytes;
+use seedflood::{experiments, sim};
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::Level::Info
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{}] {}", record.level(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+fn main() -> Result<()> {
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(log::LevelFilter::Info);
+
+    let args = Args::from_env(&["quiet", "json", "quantize"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "experiment" => {
+            let id = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: seedflood experiment <id>"))?;
+            let base = ExperimentConfig::from_args(&args)?;
+            experiments::dispatch(id, base, &args)
+        }
+        "pretrain" => {
+            let model = args.get_or("model", "tiny").to_string();
+            experiments::pretrain(
+                &model,
+                args.get_or("artifacts", "artifacts"),
+                args.get_or("out", &format!("checkpoints/{model}_pretrained.sfck")),
+                args.get_parse("mix-tasks", 8)?,
+                args.get_parse("steps", 600)?,
+                args.get_parse("lr", 5e-3)?,
+                args.get_parse("seed", 0)?,
+                args.get_parse("target-acc", 0.66)?,
+            )
+        }
+        "report" => {
+            let paths: Vec<String> = if args.positional.len() > 1 {
+                args.positional[1..].to_vec()
+            } else {
+                let mut v: Vec<String> = std::fs::read_dir("results")?
+                    .filter_map(|e| e.ok())
+                    .map(|e| e.path().display().to_string())
+                    .filter(|p| p.ends_with(".json"))
+                    .collect();
+                v.sort();
+                v
+            };
+            experiments::report(&paths)
+        }
+        "topo" => cmd_topo(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    let record = sim::run_experiment(cfg)?;
+    println!(
+        "\n{} on {} ({} clients, {}): GMP {:.2}%  loss {:.4}",
+        record.method, record.task, record.clients, record.topology,
+        100.0 * record.gmp, record.final_loss
+    );
+    println!(
+        "communication: total {} | per-edge {} | wall {:.1}s",
+        human_bytes(record.total_bytes),
+        human_bytes(record.per_edge_bytes as u64),
+        record.wall_secs
+    );
+    for (phase, ms) in &record.phase_ms {
+        println!("phase {phase}: {ms:.1} ms total");
+    }
+    if let Some(out) = args.get("out") {
+        record.save(out)?;
+        println!("saved {out}");
+    }
+    Ok(())
+}
+
+fn cmd_topo(args: &Args) -> Result<()> {
+    let kind = Kind::parse(args.get_or("topology", "ring"))
+        .ok_or_else(|| anyhow::anyhow!("unknown topology"))?;
+    let n: usize = args.get_parse("clients", 16)?;
+    let seed: u64 = args.get_parse("seed", 0)?;
+    let t = Topology::build(kind, n, seed);
+    println!("topology {} n={}", t.kind, t.n);
+    println!("edges          {}", t.num_edges());
+    println!("max degree     {}", t.max_degree());
+    println!("diameter       {}", t.diameter());
+    println!("spectral gap   {:.4}", t.spectral_gap());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let model = args.get_or("model", "tiny");
+    let m = Manifest::load(&format!("{dir}/{model}_manifest.json"))?;
+    println!("model config {}: d={} params, vocab={}, seq={}, dim={}, layers={}",
+             m.config.name, m.config.num_params, m.config.vocab, m.config.seq,
+             m.config.dim, m.config.layers);
+    println!("2D params under SubCGE: {} (artifact rank {})",
+             m.params2d.len(), m.config.subcge_rank);
+    println!("artifacts:");
+    for a in &m.artifacts {
+        println!("  {:<12} {} ({} inputs, {} outputs)", a.tag, a.file,
+                 a.inputs.len(), a.outputs.len());
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "seedflood — decentralized training via flooded seed-reconstructible ZO updates
+
+USAGE: seedflood <train|experiment|topo|info> [--options]
+
+train        --method <dsgd|choco|dsgd-lora|choco-lora|dzsgd|dzsgd-lora|seedflood|mezo|subcge>
+             --model <tiny|small|base> --task <sst2|rte|boolq|wic|multirc|record>
+             --clients N --topology <ring|mesh|torus|complete|star|er|ws>
+             --steps N --lr F --eps F --rank N --refresh N --flood-steps N
+             [--out results/run.json]
+experiment   <fig1|fig3|table8|scaling|fig4|table2|table3|fig6|fig7> [--tasks a,b]
+pretrain     --model tiny [--steps N --lr F --target-acc F] -> checkpoints/
+report       [results/foo.json ...]   re-render tables from saved records
+topo         --topology K --clients N
+info         --model tiny [--artifacts DIR]"
+    );
+}

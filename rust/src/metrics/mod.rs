@@ -1,0 +1,133 @@
+//! Training metrics: loss curves, GMP, communication cost, consensus
+//! error, per-phase wall-clock — everything the paper's tables/figures
+//! report, serialized to `results/*.json`.
+
+use crate::util::json::Json;
+
+/// One evaluation point during / after training.
+#[derive(Clone, Debug)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub loss: f64,
+    pub accuracy: f64,
+    /// total bytes transmitted network-wide up to this step
+    pub total_bytes: u64,
+    /// bytes per directed edge (paper's per-edge cost convention)
+    pub per_edge_bytes: f64,
+    /// mean squared distance of client models from their average
+    pub consensus_error: f64,
+}
+
+/// Full record of one experiment run.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecord {
+    pub method: String,
+    pub task: String,
+    pub model: String,
+    pub topology: String,
+    pub clients: usize,
+    pub steps: usize,
+    pub train_losses: Vec<f64>,
+    pub evals: Vec<EvalPoint>,
+    /// final Global Model Performance (accuracy of averaged model on test)
+    pub gmp: f64,
+    pub final_loss: f64,
+    pub total_bytes: u64,
+    pub per_edge_bytes: f64,
+    pub wall_secs: f64,
+    /// phase name -> total ms (Table 4 breakdown)
+    pub phase_ms: Vec<(String, f64)>,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(&self.method)),
+            ("task", Json::str(&self.task)),
+            ("model", Json::str(&self.model)),
+            ("topology", Json::str(&self.topology)),
+            ("clients", Json::num(self.clients as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("gmp", Json::num(self.gmp)),
+            ("final_loss", Json::num(self.final_loss)),
+            ("total_bytes", Json::num(self.total_bytes as f64)),
+            ("per_edge_bytes", Json::num(self.per_edge_bytes)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("train_losses", Json::arr_f64(&self.train_losses)),
+            (
+                "evals",
+                Json::Arr(
+                    self.evals
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("step", Json::num(e.step as f64)),
+                                ("loss", Json::num(e.loss)),
+                                ("accuracy", Json::num(e.accuracy)),
+                                ("total_bytes", Json::num(e.total_bytes as f64)),
+                                ("per_edge_bytes", Json::num(e.per_edge_bytes)),
+                                ("consensus_error", Json::num(e.consensus_error)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "phase_ms",
+                Json::Arr(
+                    self.phase_ms
+                        .iter()
+                        .map(|(k, v)| {
+                            Json::obj(vec![("phase", Json::str(k)), ("ms", Json::num(*v))])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_roundtrips_through_json() {
+        let mut r = RunRecord {
+            method: "SeedFlood".into(),
+            task: "sst2".into(),
+            gmp: 0.84,
+            total_bytes: 400_000,
+            ..Default::default()
+        };
+        r.evals.push(EvalPoint {
+            step: 100,
+            loss: 0.5,
+            accuracy: 0.8,
+            total_bytes: 1000,
+            per_edge_bytes: 125.0,
+            consensus_error: 0.0,
+        });
+        r.phase_ms.push(("ge".into(), 914.0));
+        let j = r.to_json();
+        let txt = j.to_string_pretty();
+        let back = Json::parse(&txt).unwrap();
+        assert_eq!(back.get("gmp").unwrap().as_f64().unwrap(), 0.84);
+        assert_eq!(
+            back.get("evals").unwrap().as_arr().unwrap()[0]
+                .get("accuracy")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            0.8
+        );
+    }
+}

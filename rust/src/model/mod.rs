@@ -1,0 +1,375 @@
+//! Rust-side model description: the AOT manifest and the parameter store.
+//!
+//! `python -m compile.aot` emits `<cfg>_manifest.json` describing the model
+//! config, the canonical parameter order (the python↔rust ABI) and every
+//! artifact's input/output signature. This module parses it and provides
+//! [`ParamStore`]: initialization, LoRA adapter vectors, and the 2D-subset
+//! view SubCGE operates on.
+
+use anyhow::{bail, Context, Result};
+
+use crate::rng::Rng;
+use crate::tensor::{ParamVec, Tensor};
+use crate::util::json::Json;
+
+/// One named tensor signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Input/output signature entry of one artifact.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+/// One HLO artifact as described by the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub tag: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The model configuration the artifacts were lowered for.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub seq: usize,
+    pub dim: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub batch: usize,
+    pub num_classes: usize,
+    pub lora_rank: usize,
+    pub subcge_rank: usize,
+    pub num_params: usize,
+}
+
+/// Parsed `<cfg>_manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub params: Vec<TensorSpec>,
+    pub lora_params: Vec<TensorSpec>,
+    /// names of 2D params, in subcge-artifact order
+    pub params2d: Vec<String>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &str) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path}"))?;
+        Self::parse(&text).with_context(|| format!("parsing manifest {path}"))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let c = j.get("config")?;
+        let config = ModelConfig {
+            name: c.get("name")?.as_str()?.to_string(),
+            vocab: c.get("vocab")?.as_usize()?,
+            seq: c.get("seq")?.as_usize()?,
+            dim: c.get("dim")?.as_usize()?,
+            layers: c.get("layers")?.as_usize()?,
+            heads: c.get("heads")?.as_usize()?,
+            batch: c.get("batch")?.as_usize()?,
+            num_classes: c.get("num_classes")?.as_usize()?,
+            lora_rank: c.get("lora_rank")?.as_usize()?,
+            subcge_rank: c.get("subcge_rank")?.as_usize()?,
+            num_params: c.get("num_params")?.as_usize()?,
+        };
+        let tensor_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok(TensorSpec {
+                        name: e.get("name")?.as_str()?.to_string(),
+                        shape: e
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<_>>()?,
+                    })
+                })
+                .collect()
+        };
+        let params = tensor_specs("params")?;
+        let lora_params = tensor_specs("lora_params")?;
+        let params2d = j
+            .get("params2d")?
+            .as_arr()?
+            .iter()
+            .map(|e| Ok(e.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let io = |e: &Json| -> Result<IoSpec> {
+            Ok(IoSpec {
+                name: e.get("name")?.as_str()?.to_string(),
+                dtype: e.get("dtype")?.as_str()?.to_string(),
+                shape: e
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+            })
+        };
+        let mut artifacts = vec![];
+        for (tag, a) in j.get("artifacts")?.as_obj()? {
+            artifacts.push(ArtifactSpec {
+                tag: tag.clone(),
+                file: a.get("file")?.as_str()?.to_string(),
+                inputs: a.get("inputs")?.as_arr()?.iter().map(io).collect::<Result<_>>()?,
+                outputs: a.get("outputs")?.as_arr()?.iter().map(io).collect::<Result<_>>()?,
+            });
+        }
+        // sanity: params2d must all exist and be 2D
+        for n in &params2d {
+            let Some(spec) = params.iter().find(|s| &s.name == n) else {
+                bail!("params2d entry {n:?} not in params");
+            };
+            if spec.shape.len() != 2 {
+                bail!("params2d entry {n:?} has shape {:?}", spec.shape);
+            }
+        }
+        Ok(Manifest { config, params, lora_params, params2d, artifacts })
+    }
+
+    pub fn artifact(&self, tag: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.tag == tag)
+            .ok_or_else(|| anyhow::anyhow!("artifact {tag:?} not in manifest"))
+    }
+
+    /// Indices (into `params`) of the 2D parameters, in params2d order.
+    pub fn param2d_indices(&self) -> Vec<usize> {
+        self.params2d
+            .iter()
+            .map(|n| self.params.iter().position(|s| &s.name == n).unwrap())
+            .collect()
+    }
+}
+
+/// Parameter initialization + views, mirroring python `model.init_params`
+/// conventions (ones for LN scales, zeros for biases, scaled normals for
+/// weight matrices). The exact values need not match python — only the
+/// *order and shapes* are the ABI — but all clients must share θ⁰, which
+/// this guarantees via the seed.
+pub struct ParamStore;
+
+impl ParamStore {
+    pub fn init(manifest: &Manifest, seed: u64) -> ParamVec {
+        let mut tensors = Vec::with_capacity(manifest.params.len());
+        let mut names = Vec::with_capacity(manifest.params.len());
+        for (i, spec) in manifest.params.iter().enumerate() {
+            let mut t = Tensor::zeros(&spec.shape);
+            if spec.name.ends_with(".scale") {
+                t.data.fill(1.0);
+            } else if is_bias(&spec.name) {
+                // zeros
+            } else {
+                let fan_in = if spec.shape.len() == 2 { spec.shape[0] } else { spec.shape[0] };
+                let std = if spec.name.starts_with("embed") {
+                    0.02
+                } else {
+                    (fan_in as f32).powf(-0.5)
+                };
+                let mut rng = Rng::fold_in(seed, i as u64);
+                rng.fill_normal(&mut t.data);
+                t.scale(std);
+            }
+            names.push(spec.name.clone());
+            tensors.push(t);
+        }
+        ParamVec::new(names, tensors)
+    }
+
+    /// LoRA adapters: A ~ small normal, B = 0 (standard init — adapter
+    /// starts as identity; verified against python in test_model.py).
+    pub fn init_lora(manifest: &Manifest, seed: u64) -> ParamVec {
+        let mut tensors = vec![];
+        let mut names = vec![];
+        for (i, spec) in manifest.lora_params.iter().enumerate() {
+            let mut t = Tensor::zeros(&spec.shape);
+            if spec.name.ends_with("lora_a") {
+                let mut rng = Rng::fold_in(seed ^ 0x10AA, i as u64);
+                rng.fill_normal(&mut t.data);
+                t.scale(0.02);
+            }
+            names.push(spec.name.clone());
+            tensors.push(t);
+        }
+        ParamVec::new(names, tensors)
+    }
+}
+
+/// Checkpoint I/O: a minimal self-describing binary format
+/// (`SFCK` magic, u32 tensor count, then per tensor: name len/bytes,
+/// u32 ndim, u64 dims, raw f32 LE data). Used to persist the shared
+/// "pretrained" θ⁰ that stands in for the paper's OPT checkpoints.
+pub mod checkpoint {
+    use anyhow::{bail, Context, Result};
+
+    use crate::tensor::{ParamVec, Tensor};
+
+    const MAGIC: &[u8; 4] = b"SFCK";
+
+    pub fn save(params: &ParamVec, path: &str) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(params.tensors.len() as u32).to_le_bytes());
+        for (name, t) in params.names.iter().zip(params.tensors.iter()) {
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for &x in &t.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, buf).with_context(|| format!("writing checkpoint {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<ParamVec> {
+        let buf = std::fs::read(path).with_context(|| format!("reading checkpoint {path}"))?;
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("checkpoint truncated at byte {pos}", pos = *pos);
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 4)? != MAGIC {
+            bail!("not a SFCK checkpoint: {path}");
+        }
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        let mut names = Vec::with_capacity(count);
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let nlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+            names.push(String::from_utf8(take(&mut pos, nlen)?.to_vec())?);
+            let ndim = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let raw = take(&mut pos, 4 * numel)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.push(Tensor::from_vec(&shape, data));
+        }
+        Ok(ParamVec::new(names, tensors))
+    }
+
+    /// Verify a checkpoint matches a manifest's parameter signature.
+    pub fn check_compatible(p: &ParamVec, m: &super::Manifest) -> Result<()> {
+        if p.names.len() != m.params.len() {
+            bail!("checkpoint has {} tensors, manifest {}", p.names.len(), m.params.len());
+        }
+        for ((n, t), spec) in p.names.iter().zip(p.tensors.iter()).zip(m.params.iter()) {
+            if n != &spec.name || t.shape != spec.shape {
+                bail!("checkpoint tensor {n} {:?} != manifest {} {:?}",
+                      t.shape, spec.name, spec.shape);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn is_bias(name: &str) -> bool {
+    name.ends_with(".bias")
+        || name.ends_with(".bq")
+        || name.ends_with(".bk")
+        || name.ends_with(".bv")
+        || name.ends_with(".bo")
+        || name.ends_with(".b1")
+        || name.ends_with(".b2")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "config": {"name":"t","vocab":16,"seq":4,"dim":8,"layers":1,"heads":2,
+                 "mlp_ratio":4,"batch":2,"num_classes":2,"lora_rank":2,
+                 "subcge_rank":4,"num_params":200},
+      "params": [{"name":"embed.tok","shape":[16,8]},
+                 {"name":"block0.ln1.scale","shape":[8]},
+                 {"name":"block0.ln1.bias","shape":[8]},
+                 {"name":"block0.attn.wq","shape":[8,8]}],
+      "lora_params": [{"name":"block0.attn.wq.lora_a","shape":[8,2]},
+                      {"name":"block0.attn.wq.lora_b","shape":[2,8]}],
+      "params2d": ["embed.tok","block0.attn.wq"],
+      "artifacts": {"loss": {"file":"t_loss.hlo.txt",
+        "inputs":[{"name":"embed.tok","dtype":"f32","shape":[16,8]}],
+        "outputs":[{"name":"loss","dtype":"f32","shape":[]}]}}
+    }"#;
+
+    #[test]
+    fn parse_mini_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.config.vocab, 16);
+        assert_eq!(m.params.len(), 4);
+        assert_eq!(m.params2d, vec!["embed.tok", "block0.attn.wq"]);
+        assert_eq!(m.param2d_indices(), vec![0, 3]);
+        let a = m.artifact("loss").unwrap();
+        assert_eq!(a.file, "t_loss.hlo.txt");
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn init_params_shapes_and_conventions() {
+        let m = Manifest::parse(MINI).unwrap();
+        let p = ParamStore::init(&m, 0);
+        assert_eq!(p.tensors[0].shape, vec![16, 8]);
+        assert!(p.tensors[1].data.iter().all(|&x| x == 1.0)); // ln scale
+        assert!(p.tensors[2].data.iter().all(|&x| x == 0.0)); // ln bias
+        assert!(p.tensors[3].l2_norm() > 0.0); // weight is random
+        // deterministic
+        let p2 = ParamStore::init(&m, 0);
+        assert_eq!(p.tensors[3].data, p2.tensors[3].data);
+        let p3 = ParamStore::init(&m, 1);
+        assert_ne!(p.tensors[3].data, p3.tensors[3].data);
+    }
+
+    #[test]
+    fn init_lora_b_zero() {
+        let m = Manifest::parse(MINI).unwrap();
+        let l = ParamStore::init_lora(&m, 0);
+        assert!(l.tensors[0].l2_norm() > 0.0);
+        assert!(l.tensors[1].data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn rejects_bad_params2d() {
+        let bad = MINI.replace("\"embed.tok\",\"block0.attn.wq\"", "\"missing\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

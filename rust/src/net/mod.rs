@@ -1,0 +1,367 @@
+//! Simulated reliable message-passing network with exact byte accounting.
+//!
+//! The paper (§2.1) assumes a connected, static, reliable graph; clients
+//! exchange messages only with neighbors. This module provides that
+//! substrate in-process: per-directed-edge FIFO queues, typed payloads with
+//! a defined wire size, and per-edge byte/message counters — the counters
+//! are the measurement behind every "Cost" column we reproduce (Fig 1/3,
+//! Table 8).
+//!
+//! Wire-size conventions (documented in EXPERIMENTS.md):
+//! * seed–scalar update: origin+step id (8 B) + seed (8 B) + coeff (4 B) = 20 B
+//! * dense tensor traffic: 4 B per f32 element (+16 B header)
+//! * sparse top-K traffic: 8 B per (index, value) pair (+16 B header)
+//!
+//! Failure injection (drop probability, crashed clients) is supported for
+//! robustness tests; all paper experiments run with a lossless network.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::rng::Rng;
+use crate::tensor::ParamVec;
+use crate::topology::Topology;
+
+/// Globally unique id of a zeroth-order update: (origin client, step,
+/// local probe index). This is what the flooding dedup set stores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MsgId {
+    pub origin: u32,
+    pub step: u32,
+}
+
+/// A seed-reconstructible zeroth-order update (paper §3.1):
+/// `m = (s, η·α/n)` — the entire payload of a SeedFlood message.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SeedUpdate {
+    pub id: MsgId,
+    pub seed: u64,
+    pub coeff: f32,
+}
+
+impl SeedUpdate {
+    pub const WIRE_BYTES: u64 = 20;
+    /// Quantized wire format (Zelikman et al. 2023, "just one byte per
+    /// gradient", cited in §3.1): origin+step id (8 B) + implicit seed
+    /// (derived from id via the shared probe_seed function, 0 B) + 1-byte
+    /// µ-law coefficient.
+    pub const WIRE_BYTES_QUANTIZED: u64 = 9;
+
+    /// µ-law quantize the coefficient to 8 bits around `scale` (callers
+    /// use the learning rate — coefficients are η·α/n, so |c|/scale is
+    /// O(α) and well covered by µ-law's dynamic range).
+    pub fn quantize_coeff(c: f32, scale: f32) -> u8 {
+        let x = (c / (scale * 64.0)).clamp(-1.0, 1.0);
+        const MU: f32 = 255.0;
+        let y = x.signum() * (1.0 + MU * x.abs()).ln() / (1.0 + MU).ln();
+        (((y + 1.0) * 127.5).round() as i32).clamp(0, 255) as u8
+    }
+
+    pub fn dequantize_coeff(q: u8, scale: f32) -> f32 {
+        const MU: f32 = 255.0;
+        let y = q as f32 / 127.5 - 1.0;
+        let x = y.signum() * ((1.0 + MU).powf(y.abs()) - 1.0) / MU;
+        x * scale * 64.0
+    }
+
+    /// Round-trip through the 1-byte wire format.
+    pub fn quantized(self, scale: f32) -> SeedUpdate {
+        SeedUpdate {
+            coeff: Self::dequantize_coeff(Self::quantize_coeff(self.coeff, scale), scale),
+            ..self
+        }
+    }
+}
+
+/// Typed network payloads covering every method in the paper's comparison.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Flooded batch of seed-scalar updates (SeedFlood / DZSGD-seeded).
+    Seeds(Vec<SeedUpdate>),
+    /// Same but counted at the 1-byte-quantized wire size (the Zelikman
+    /// et al. format; values are already dequantized at this layer).
+    SeedsQuantized(Vec<SeedUpdate>),
+    /// Full dense model / model-delta (DSGD, DZSGD; Arc: zero-copy fan-out).
+    Dense(Arc<ParamVec>),
+    /// Sparse top-K compressed delta (ChocoSGD): per-tensor (index, value).
+    Sparse(Arc<Vec<Vec<(u32, f32)>>>),
+}
+
+impl Payload {
+    /// Logical bytes on the wire (the paper's communication-cost metric).
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Payload::Seeds(v) => v.len() as u64 * SeedUpdate::WIRE_BYTES,
+            Payload::SeedsQuantized(v) => {
+                v.len() as u64 * SeedUpdate::WIRE_BYTES_QUANTIZED
+            }
+            Payload::Dense(p) => 16 + 4 * p.num_elements() as u64,
+            Payload::Sparse(t) => {
+                16 + 8 * t.iter().map(|v| v.len() as u64).sum::<u64>()
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub from: usize,
+    pub payload: Payload,
+}
+
+/// Per-network traffic counters.
+#[derive(Clone, Debug, Default)]
+pub struct Accounting {
+    /// bytes sent over each directed edge, indexed by flat edge id
+    pub edge_bytes: Vec<u64>,
+    pub total_bytes: u64,
+    pub total_messages: u64,
+}
+
+/// The simulated network: directed-edge queues over a [`Topology`].
+pub struct Network {
+    topo: Topology,
+    queues: Vec<VecDeque<Message>>, // one per directed edge
+    edge_index: Vec<Vec<(usize, usize)>>, // [src] -> (dst, flat edge id)
+    pub acct: Accounting,
+    /// iid drop probability (failure injection; 0.0 in paper experiments)
+    pub drop_prob: f64,
+    /// clients that silently drop all traffic (crash-stop injection)
+    pub crashed: Vec<bool>,
+    drop_rng: Rng,
+}
+
+impl Network {
+    pub fn new(topo: Topology) -> Network {
+        let mut edge_index = vec![vec![]; topo.n];
+        let mut count = 0;
+        for src in 0..topo.n {
+            for &dst in topo.neighbors(src) {
+                edge_index[src].push((dst, count));
+                count += 1;
+            }
+        }
+        Network {
+            queues: (0..count).map(|_| VecDeque::new()).collect(),
+            edge_index,
+            acct: Accounting {
+                edge_bytes: vec![0; count],
+                ..Default::default()
+            },
+            drop_prob: 0.0,
+            crashed: vec![false; topo.n],
+            drop_rng: Rng::new(0xD20B),
+            topo,
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn n(&self) -> usize {
+        self.topo.n
+    }
+
+    fn edge_id(&self, src: usize, dst: usize) -> Option<usize> {
+        self.edge_index[src].iter().find(|&&(d, _)| d == dst).map(|&(_, e)| e)
+    }
+
+    /// Send to one neighbor. Panics if (src,dst) is not an edge — the
+    /// decentralized constraint is enforced structurally.
+    pub fn send(&mut self, src: usize, dst: usize, payload: Payload) {
+        let eid = self
+            .edge_id(src, dst)
+            .unwrap_or_else(|| panic!("({src},{dst}) is not an edge of {}", self.topo.kind));
+        let bytes = payload.wire_bytes();
+        self.acct.edge_bytes[eid] += bytes;
+        self.acct.total_bytes += bytes;
+        self.acct.total_messages += 1;
+        if self.crashed[src] || self.crashed[dst] {
+            return; // counted as sent, never delivered
+        }
+        if self.drop_prob > 0.0 && self.drop_rng.next_f64() < self.drop_prob {
+            return;
+        }
+        self.queues[eid].push_back(Message { from: src, payload });
+    }
+
+    /// Send the same payload to every neighbor of `src` (clone-per-edge is
+    /// cheap: payloads are Arc or small vectors).
+    pub fn broadcast(&mut self, src: usize, payload: &Payload) {
+        let neighbors: Vec<usize> = self.topo.neighbors(src).to_vec();
+        for dst in neighbors {
+            self.send(src, dst, payload.clone());
+        }
+    }
+
+    /// Drain every queued message destined for `dst`.
+    pub fn recv_all(&mut self, dst: usize) -> Vec<Message> {
+        let mut out = vec![];
+        let incoming: Vec<usize> = (0..self.topo.n)
+            .filter(|&s| self.topo.neighbors(s).contains(&dst))
+            .collect();
+        for src in incoming {
+            let eid = self.edge_id(src, dst).unwrap();
+            while let Some(m) = self.queues[eid].pop_front() {
+                out.push(m);
+            }
+        }
+        out
+    }
+
+    /// Paper convention: "total transmitted volume over the training per
+    /// edge", counted one-directionally — total bytes / directed edges.
+    pub fn per_edge_bytes(&self) -> f64 {
+        let edges = self.acct.edge_bytes.len().max(1);
+        self.acct.total_bytes as f64 / edges as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn seed_payload(n: usize) -> Payload {
+        Payload::Seeds(
+            (0..n)
+                .map(|i| SeedUpdate {
+                    id: MsgId { origin: 0, step: i as u32 },
+                    seed: i as u64,
+                    coeff: 1.0,
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let mut net = Network::new(Topology::ring(4));
+        net.send(0, 1, seed_payload(3));
+        let msgs = net.recv_all(1);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].from, 0);
+        match &msgs[0].payload {
+            Payload::Seeds(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+        // queue drained
+        assert!(net.recv_all(1).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "not an edge")]
+    fn non_edge_send_panics() {
+        let mut net = Network::new(Topology::ring(6));
+        net.send(0, 3, seed_payload(1)); // 0-3 not adjacent on a 6-ring
+    }
+
+    #[test]
+    fn byte_accounting_seed() {
+        let mut net = Network::new(Topology::ring(4));
+        net.send(0, 1, seed_payload(5));
+        assert_eq!(net.acct.total_bytes, 5 * SeedUpdate::WIRE_BYTES);
+        assert_eq!(net.acct.total_messages, 1);
+    }
+
+    #[test]
+    fn quantized_coeff_roundtrip_accuracy() {
+        // 1-byte µ-law must preserve sign and ~1% relative accuracy over
+        // the dynamic range the flooding coefficients actually occupy
+        let scale = 1e-3f32;
+        for &c in &[0.0f32, 1e-5, -1e-5, 3e-4, -3e-4, 2e-3, -2e-3, 0.05, -0.05] {
+            let q = SeedUpdate::quantize_coeff(c, scale);
+            let back = SeedUpdate::dequantize_coeff(q, scale);
+            assert_eq!(back.signum(), if c == 0.0 { back.signum() } else { c.signum() });
+            if c.abs() > 1e-5 && c.abs() < scale * 64.0 {
+                assert!((back - c).abs() < 0.1 * c.abs() + 2e-4 * scale * 64.0,
+                        "c={c} back={back}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_wire_size_smaller() {
+        let msgs: Vec<SeedUpdate> = (0..10)
+            .map(|i| SeedUpdate {
+                id: MsgId { origin: 0, step: i },
+                seed: i as u64,
+                coeff: 1e-4,
+            })
+            .collect();
+        let full = Payload::Seeds(msgs.clone()).wire_bytes();
+        let quant = Payload::SeedsQuantized(msgs).wire_bytes();
+        assert_eq!(full, 200);
+        assert_eq!(quant, 90);
+    }
+
+    #[test]
+    fn byte_accounting_dense_and_sparse() {
+        let mut net = Network::new(Topology::ring(4));
+        let p = Arc::new(ParamVec::new(
+            vec!["w".into()],
+            vec![Tensor::zeros(&[10, 10])],
+        ));
+        net.send(0, 1, Payload::Dense(p));
+        assert_eq!(net.acct.total_bytes, 16 + 400);
+        let sparse = Arc::new(vec![vec![(0u32, 1.0f32); 7]]);
+        net.send(1, 2, Payload::Sparse(sparse));
+        assert_eq!(net.acct.total_bytes, 16 + 400 + 16 + 56);
+    }
+
+    #[test]
+    fn broadcast_hits_all_neighbors() {
+        let mut net = Network::new(Topology::star(5));
+        net.broadcast(0, &seed_payload(1));
+        for i in 1..5 {
+            assert_eq!(net.recv_all(i).len(), 1);
+        }
+        assert_eq!(net.acct.total_messages, 4);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut net = Network::new(Topology::ring(3));
+        for k in 0..5 {
+            net.send(0, 1, seed_payload(k + 1));
+        }
+        let msgs = net.recv_all(1);
+        let lens: Vec<usize> = msgs
+            .iter()
+            .map(|m| match &m.payload {
+                Payload::Seeds(v) => v.len(),
+                _ => 0,
+            })
+            .collect();
+        assert_eq!(lens, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn crashed_client_blackholes() {
+        let mut net = Network::new(Topology::ring(4));
+        net.crashed[1] = true;
+        net.send(0, 1, seed_payload(1));
+        assert!(net.recv_all(1).is_empty());
+        // still counted as transmitted
+        assert_eq!(net.acct.total_messages, 1);
+    }
+
+    #[test]
+    fn drop_prob_loses_some() {
+        let mut net = Network::new(Topology::ring(4));
+        net.drop_prob = 0.5;
+        for _ in 0..200 {
+            net.send(0, 1, seed_payload(1));
+        }
+        let got = net.recv_all(1).len();
+        assert!(got > 50 && got < 150, "got {got}");
+    }
+
+    #[test]
+    fn per_edge_bytes_convention() {
+        let mut net = Network::new(Topology::ring(4)); // 8 directed edges
+        net.send(0, 1, seed_payload(2)); // 40 bytes
+        assert_eq!(net.per_edge_bytes(), 40.0 / 8.0);
+    }
+}

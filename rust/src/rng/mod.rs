@@ -1,0 +1,190 @@
+//! Shared deterministic randomness — the paper's communication primitive.
+//!
+//! §3.1: *“all clients have access to the same random number generator,
+//! which enables any client to deterministically reconstruct the same
+//! perturbation vector from a given random seed.”*  This module is that
+//! RNG: a single splitmix64-based generator with Box–Muller normals.  Every
+//! client in the process uses this one implementation, so a `(seed, scalar)`
+//! message reconstructs bit-identically everywhere — the shared-randomness
+//! assumption holds by construction.
+
+/// Splitmix64 PRNG. Small state, splittable by construction (`fold_in`),
+/// passes BigCrush on its output function; exactly reproducible across
+/// clients/platforms (pure integer arithmetic).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create from a seed. Equal seeds ⇒ identical streams (the paper's
+    /// seed-reconstructibility contract).
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    /// Derive an independent stream from this seed and an index
+    /// (jax-style `fold_in`; used for per-layer / per-step substreams).
+    pub fn fold_in(seed: u64, index: u64) -> Self {
+        let mut r = Rng::new(seed ^ index.wrapping_mul(0xA076_1D64_78BD_642F));
+        r.next_u64(); // decorrelate nearby indices
+        r
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        // multiply-shift; bias < 2^-64, irrelevant at our ranges
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (one value per call; second draw is
+    /// discarded to keep the stream position independent of call parity).
+    #[inline]
+    pub fn next_normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+            }
+        }
+    }
+
+    /// Fill a slice with iid standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        // Box–Muller pairwise: both outputs used (2× fewer u64 draws than
+        // next_normal in the bulk path).
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let u1 = self.next_f64().max(1e-300);
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            out[i] = (r * c) as f32;
+            out[i + 1] = (r * s) as f32;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.next_normal();
+        }
+    }
+
+    /// Random permutation of 0..n (Fisher–Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            v.swap(i, j);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_seeds_equal_streams() {
+        let (mut a, mut b) = (Rng::new(42), Rng::new(42));
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (mut a, mut b) = (Rng::new(1), Rng::new(2));
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fold_in_streams_independent() {
+        let mut a = Rng::fold_in(7, 0);
+        let mut b = Rng::fold_in(7, 1);
+        assert_ne!(a.next_u64(), b.next_u64());
+        // deterministic given (seed, index)
+        let mut a2 = Rng::fold_in(7, 0);
+        assert_eq!(Rng::fold_in(7, 0).next_u64(), a2.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::new(3);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(9);
+        let mut buf = vec![0.0f32; 200_000];
+        r.fill_normal(&mut buf);
+        let mean: f64 = buf.iter().map(|&x| x as f64).sum::<f64>() / buf.len() as f64;
+        let var: f64 =
+            buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / buf.len() as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn fill_normal_matches_seed_reconstruction() {
+        // the paper's seed-scalar contract: same seed, same z, any client
+        let mut z1 = vec![0.0f32; 1001];
+        let mut z2 = vec![0.0f32; 1001];
+        Rng::new(1234).fill_normal(&mut z1);
+        Rng::new(1234).fill_normal(&mut z2);
+        assert_eq!(z1, z2);
+    }
+
+    #[test]
+    fn next_below_in_range_and_covers() {
+        let mut r = Rng::new(5);
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            let v = r.next_below(8) as usize;
+            assert!(v < 8);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::new(11);
+        let p = r.permutation(257);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..257).collect::<Vec<u32>>());
+    }
+}

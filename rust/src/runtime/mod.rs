@@ -1,0 +1,193 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the L3
+//! hot path (no python at runtime).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifacts are compiled once and cached; all graphs were lowered with
+//! `return_tuple=True`, so every result is a tuple literal we decompose.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{ArtifactSpec, Manifest};
+use crate::tensor::{ParamVec, Tensor};
+
+/// Argument value for one artifact input. I32 carries its (small) shape by
+/// value so call sites can build shapes inline.
+pub enum Arg<'a> {
+    F32(&'a Tensor),
+    I32(&'a [i32], Vec<usize>),
+}
+
+/// A compiled artifact plus its manifest signature.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl Executable {
+    /// Execute with positional args; returns one Tensor per manifest output.
+    /// Scalars come back as shape-[] tensors.
+    ///
+    /// Internally uploads each arg as a device buffer and runs the buffer
+    /// path: the crate's Literal-based `execute` both double-copies inputs
+    /// and leaks the internally-created device buffers (~0.5 MB/call,
+    /// measured in examples/leak_probe.rs) — `execute_b` with Drop-managed
+    /// buffers does neither.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<Tensor>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {}: got {} args, expected {}",
+                self.spec.tag,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let mut owned = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(self.spec.inputs.iter()) {
+            let buf = match arg {
+                Arg::F32(t) => {
+                    if t.shape != spec.shape {
+                        bail!(
+                            "artifact {} input {}: shape {:?} != manifest {:?}",
+                            self.spec.tag, spec.name, t.shape, spec.shape
+                        );
+                    }
+                    self.client.buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?
+                }
+                Arg::I32(data, shape) => {
+                    if shape != &spec.shape {
+                        bail!(
+                            "artifact {} input {}: i32 shape {:?} != manifest {:?}",
+                            self.spec.tag, spec.name, shape, spec.shape
+                        );
+                    }
+                    self.client.buffer_from_host_buffer::<i32>(data, shape, None)?
+                }
+            };
+            owned.push(buf);
+        }
+        let refs: Vec<&xla::PjRtBuffer> = owned.iter().collect();
+        let result = self.exe.execute_b(&refs)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        self.decode_outputs(parts)
+    }
+
+    /// Execute with device-resident buffer arguments (zero host->device
+    /// copies for cached operands — the hot-path variant used by the
+    /// SubCGE flush; see DESIGN.md §Perf).
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {}: got {} buffer args, expected {}",
+                self.spec.tag,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let result = self.exe.execute_b(args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        self.decode_outputs(parts)
+    }
+
+    fn decode_outputs(&self, parts: Vec<xla::Literal>) -> Result<Vec<Tensor>> {
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {}: {} outputs, manifest says {}",
+                self.spec.tag,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.into_iter().zip(self.spec.outputs.iter()) {
+            let data = lit.to_vec::<f32>()?;
+            out.push(Tensor::from_vec(&ospec.shape, data));
+        }
+        Ok(out)
+    }
+}
+
+/// The PJRT client + executable cache. One per process (CPU platform).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: String,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+    /// executions performed (metrics)
+    pub executions: std::sync::atomic::AtomicU64,
+}
+
+impl Runtime {
+    pub fn cpu(artifacts_dir: &str) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.to_string(),
+            cache: Mutex::new(HashMap::new()),
+            executions: Default::default(),
+        })
+    }
+
+    /// Load + compile (cached) the artifact `tag` from the manifest.
+    pub fn load(&self, manifest: &Manifest, tag: &str) -> Result<std::sync::Arc<Executable>> {
+        let key = format!("{}:{}", manifest.config.name, tag);
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let spec = manifest.artifact(tag)?.clone();
+        let path = Path::new(&self.dir).join(&spec.file);
+        let path_str = path.to_str().unwrap();
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path_str}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {tag}"))?;
+        let arc = std::sync::Arc::new(Executable { spec, exe, client: self.client.clone() });
+        self.cache.lock().unwrap().insert(key, arc.clone());
+        Ok(arc)
+    }
+
+    pub fn count_execution(&self) {
+        self.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Upload an f32 tensor to the device (single host->device copy; used
+    /// to pin long-lived operands like the SubCGE basis across calls).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+
+    /// Upload an i32 tensor to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(data, dims, None)?)
+    }
+}
+
+/// Convenience: build the arg list `[params..., ids, labels, class_tokens]`
+/// shared by the loss/grad artifacts.
+pub fn loss_args<'a>(
+    params: &'a ParamVec,
+    ids: &'a [i32],
+    ids_shape: Vec<usize>,
+    labels: &'a [i32],
+    class_tokens: &'a [i32],
+) -> Vec<Arg<'a>> {
+    let n_labels = labels.len();
+    let n_ct = class_tokens.len();
+    let mut args: Vec<Arg> = params.tensors.iter().map(Arg::F32).collect();
+    args.push(Arg::I32(ids, ids_shape));
+    args.push(Arg::I32(labels, vec![n_labels]));
+    args.push(Arg::I32(class_tokens, vec![n_ct]));
+    args
+}

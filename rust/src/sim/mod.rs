@@ -1,0 +1,360 @@
+//! Experiment driver: wires topology + network + runtime + data + algorithm
+//! together, runs the paper's training protocol (local steps + scheduled
+//! communication), evaluates GMP, and records everything in a
+//! [`RunRecord`].
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::algos;
+use crate::config::ExperimentConfig;
+use crate::data::{BatchSampler, Dataset, Example, TaskSpec, CLASS_TOKENS};
+use crate::metrics::{EvalPoint, RunRecord};
+use crate::model::{checkpoint, Manifest, ParamStore};
+use crate::net::Network;
+use crate::runtime::{Arg, Executable, Runtime};
+use crate::tensor::ParamVec;
+use crate::topology::Topology;
+use crate::util::timer::Timer;
+
+/// Everything an algorithm needs from the environment, borrowed immutably
+/// on the hot path (the network is threaded separately as `&mut`).
+pub struct Env {
+    pub cfg: ExperimentConfig,
+    pub manifest: Manifest,
+    pub rt: Runtime,
+    pub exe_loss: Arc<Executable>,
+    pub exe_grad: Arc<Executable>,
+    pub exe_loss_lora: Arc<Executable>,
+    pub exe_grad_lora: Arc<Executable>,
+    pub exe_subcge: Arc<Executable>,
+    pub class_tokens: Vec<i32>,
+    pub dataset: Dataset,
+    pub partitions: Vec<Vec<Example>>,
+    pub test_batches: Vec<(Vec<i32>, Vec<i32>)>,
+    pub val_batches: Vec<(Vec<i32>, Vec<i32>)>,
+    /// shared θ⁰ — the paper's "pretrained" starting point (checkpoint if
+    /// `cfg.init_from` is set, else seeded random init)
+    pub init_params: ParamVec,
+}
+
+impl Env {
+    pub fn new(cfg: ExperimentConfig) -> Result<Env> {
+        let manifest_path =
+            format!("{}/{}_manifest.json", cfg.artifacts_dir, cfg.model);
+        let manifest = Manifest::load(&manifest_path)?;
+        let rt = Runtime::cpu(&cfg.artifacts_dir)?;
+        let exe_loss = rt.load(&manifest, "loss")?;
+        let exe_grad = rt.load(&manifest, "grad")?;
+        let exe_loss_lora = rt.load(&manifest, "loss_lora")?;
+        let exe_grad_lora = rt.load(&manifest, "grad_lora")?;
+        let exe_subcge = rt.load(&manifest, "subcge")?;
+
+        let spec = TaskSpec::named(&cfg.task)
+            .with_context(|| format!("unknown task {:?}", cfg.task))?;
+        let dataset = Dataset::generate(&spec, manifest.config.vocab, manifest.config.seq);
+        let partitions = if cfg.dirichlet_alpha > 0.0 {
+            dataset.partition_dirichlet(cfg.clients, cfg.dirichlet_alpha, cfg.seed)
+        } else {
+            dataset.partition(cfg.clients)
+        };
+        let b = manifest.config.batch;
+        let test_batches = batchify(&dataset.test, b);
+        let val_batches = batchify(&dataset.val, b);
+        let init_params = if cfg.init_from.is_empty() {
+            ParamStore::init(&manifest, cfg.seed)
+        } else {
+            let p = checkpoint::load(&cfg.init_from)?;
+            checkpoint::check_compatible(&p, &manifest)?;
+            p
+        };
+
+        Ok(Env {
+            cfg,
+            class_tokens: CLASS_TOKENS.to_vec(),
+            manifest,
+            rt,
+            exe_loss,
+            exe_grad,
+            exe_loss_lora,
+            exe_grad_lora,
+            exe_subcge,
+            dataset,
+            partitions,
+            test_batches,
+            val_batches,
+            init_params,
+        })
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.cfg.clients
+    }
+
+    pub fn batch_shape(&self) -> (usize, usize) {
+        (self.manifest.config.batch, self.manifest.config.seq)
+    }
+
+    /// Per-client mini-batch samplers over the uniform partition.
+    pub fn make_samplers(&self) -> Vec<BatchSampler> {
+        self.partitions
+            .iter()
+            .enumerate()
+            .map(|(i, p)| BatchSampler::new(p.clone(), self.cfg.seed ^ (0xBA7C << 8) ^ i as u64))
+            .collect()
+    }
+
+    /// (loss, #correct) of `params` on one batch, via the AOT loss graph.
+    pub fn loss_acc(&self, params: &ParamVec, ids: &[i32], labels: &[i32]) -> Result<(f32, f32)> {
+        let (b, s) = self.batch_shape();
+        let args =
+            crate::runtime::loss_args(params, ids, vec![b, s], labels, &self.class_tokens);
+        let out = self.exe_loss.run(&args)?;
+        self.rt.count_execution();
+        Ok((out[0].data[0], out[1].data[0]))
+    }
+
+    /// (loss, grads) — the FO oracle (DSGD/ChocoSGD local step).
+    pub fn grad(&self, params: &ParamVec, ids: &[i32], labels: &[i32]) -> Result<(f32, ParamVec)> {
+        let (b, s) = self.batch_shape();
+        let args =
+            crate::runtime::loss_args(params, ids, vec![b, s], labels, &self.class_tokens);
+        let out = self.exe_grad.run(&args)?;
+        self.rt.count_execution();
+        let loss = out[0].data[0];
+        let grads = ParamVec::new(params.names.clone(), out[1..].to_vec());
+        Ok((loss, grads))
+    }
+
+    fn lora_args<'a>(
+        &'a self,
+        params: &'a ParamVec,
+        lora: &'a ParamVec,
+        ids: &'a [i32],
+        labels: &'a [i32],
+    ) -> Vec<Arg<'a>> {
+        let (b, s) = self.batch_shape();
+        let mut args: Vec<Arg> = params.tensors.iter().map(Arg::F32).collect();
+        args.extend(lora.tensors.iter().map(Arg::F32));
+        args.push(Arg::I32(ids, vec![b, s]));
+        args.push(Arg::I32(labels, vec![b]));
+        args.push(Arg::I32(&self.class_tokens, vec![2]));
+        args
+    }
+
+    pub fn loss_acc_lora(
+        &self,
+        params: &ParamVec,
+        lora: &ParamVec,
+        ids: &[i32],
+        labels: &[i32],
+    ) -> Result<(f32, f32)> {
+        let args = self.lora_args(params, lora, ids, labels);
+        let out = self.exe_loss_lora.run(&args)?;
+        self.rt.count_execution();
+        Ok((out[0].data[0], out[1].data[0]))
+    }
+
+    pub fn grad_lora(
+        &self,
+        params: &ParamVec,
+        lora: &ParamVec,
+        ids: &[i32],
+        labels: &[i32],
+    ) -> Result<(f32, ParamVec)> {
+        let args = self.lora_args(params, lora, ids, labels);
+        let out = self.exe_grad_lora.run(&args)?;
+        self.rt.count_execution();
+        let loss = out[0].data[0];
+        let grads = ParamVec::new(lora.names.clone(), out[1..].to_vec());
+        Ok((loss, grads))
+    }
+
+    /// (mean loss, accuracy) over pre-tokenized eval batches.
+    pub fn eval_full(&self, params: &ParamVec, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<(f64, f64)> {
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut total = 0usize;
+        for (ids, labels) in batches {
+            let (l, c) = self.loss_acc(params, ids, labels)?;
+            loss_sum += l as f64;
+            correct += c as f64;
+            total += labels.len();
+        }
+        Ok((loss_sum / batches.len() as f64, correct / total as f64))
+    }
+
+    pub fn eval_lora(
+        &self,
+        params: &ParamVec,
+        lora: &ParamVec,
+        batches: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<(f64, f64)> {
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut total = 0usize;
+        for (ids, labels) in batches {
+            let (l, c) = self.loss_acc_lora(params, lora, ids, labels)?;
+            loss_sum += l as f64;
+            correct += c as f64;
+            total += labels.len();
+        }
+        Ok((loss_sum / batches.len() as f64, correct / total as f64))
+    }
+
+    /// Cheap eval subset used for periodic (non-final) evaluation points.
+    pub fn quick_batches(&self) -> &[(Vec<i32>, Vec<i32>)] {
+        let k = self.val_batches.len().min(8);
+        &self.val_batches[..k]
+    }
+
+    /// Validation batches used for best-checkpoint selection (paper
+    /// Table 5: best val loss every tenth of training is evaluated on the
+    /// held-out test set).
+    pub fn select_batches(&self) -> &[(Vec<i32>, Vec<i32>)] {
+        let k = self.val_batches.len().min(24);
+        &self.val_batches[..k]
+    }
+}
+
+/// Fixed-size batches; the tail that doesn't fill a batch is dropped
+/// (artifact shapes are static).
+pub fn batchify(examples: &[Example], batch: usize) -> Vec<(Vec<i32>, Vec<i32>)> {
+    examples
+        .chunks(batch)
+        .filter(|c| c.len() == batch)
+        .map(|chunk| {
+            let mut ids = Vec::with_capacity(batch * chunk[0].tokens.len());
+            let mut labels = Vec::with_capacity(batch);
+            for ex in chunk {
+                ids.extend_from_slice(&ex.tokens);
+                labels.push(ex.label);
+            }
+            (ids, labels)
+        })
+        .collect()
+}
+
+/// Mean squared per-coordinate distance of client params from their mean —
+/// the consensus-error diagnostic (zero ⇒ the paper's "perfect consensus").
+pub fn consensus_error(clients: &[ParamVec]) -> f64 {
+    if clients.len() < 2 {
+        return 0.0;
+    }
+    let refs: Vec<&ParamVec> = clients.iter().collect();
+    let mean = ParamVec::average(&refs);
+    let d = mean.num_elements() as f64;
+    clients.iter().map(|c| c.sq_dist(&mean)).sum::<f64>() / (clients.len() as f64 * d)
+}
+
+/// Run one full experiment: the paper's protocol of `steps` local
+/// iterations with communication scheduled by the algorithm itself.
+pub fn run_experiment(cfg: ExperimentConfig) -> Result<RunRecord> {
+    let env = Env::new(cfg.clone())?;
+    run_with_env(&env)
+}
+
+/// Run with a pre-built Env (lets experiment harnesses share the runtime
+/// and dataset across runs).
+pub fn run_with_env(env: &Env) -> Result<RunRecord> {
+    let cfg = &env.cfg;
+    let topo = Topology::build(cfg.topology, cfg.clients, cfg.topology_seed);
+    let mut algo = algos::build(env, &topo)?;
+    let mut net = Network::new(topo);
+    let timer = Timer::start();
+
+    let mut record = RunRecord {
+        method: cfg.method.name().to_string(),
+        task: cfg.task.clone(),
+        model: cfg.model.clone(),
+        topology: net.topology().kind.clone(),
+        clients: cfg.clients,
+        steps: cfg.steps,
+        ..Default::default()
+    };
+
+    // best-validation checkpoint selection (paper Table 5): validate every
+    // tenth of training, keep the snapshot with the lowest val loss
+    let val_every = (cfg.steps / 10).max(1);
+    let mut best: (f64, Option<Vec<crate::tensor::ParamVec>>) = (f64::INFINITY, None);
+
+    for t in 0..cfg.steps {
+        let mut step_loss = 0.0f64;
+        for i in 0..cfg.clients {
+            step_loss += algo.local_step(i, t, env)? as f64;
+        }
+        record.train_losses.push(step_loss / cfg.clients as f64);
+        algo.communicate(t, env, &mut net)?;
+
+        if (t + 1) % val_every == 0 || t + 1 == cfg.steps {
+            let (vl, _) = algo.eval_gmp(env, env.select_batches())?;
+            if vl < best.0 {
+                best = (vl, Some(algo.snapshot()));
+            }
+        }
+
+        if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 && t + 1 < cfg.steps {
+            let (loss, acc) = algo.eval_gmp(env, env.quick_batches())?;
+            record.evals.push(EvalPoint {
+                step: t + 1,
+                loss,
+                accuracy: acc,
+                total_bytes: net.acct.total_bytes,
+                per_edge_bytes: net.per_edge_bytes(),
+                consensus_error: algo.consensus_error(),
+            });
+            log::info!(
+                "[{}] step {} loss {:.4} acc {:.3} bytes {}",
+                record.method, t + 1, loss, acc, net.acct.total_bytes
+            );
+        }
+    }
+
+    if let Some(snap) = best.1.take() {
+        algo.restore(snap);
+    }
+    let (final_loss, gmp) = algo.eval_gmp(env, &env.test_batches)?;
+    record.evals.push(EvalPoint {
+        step: cfg.steps,
+        loss: final_loss,
+        accuracy: gmp,
+        total_bytes: net.acct.total_bytes,
+        per_edge_bytes: net.per_edge_bytes(),
+        consensus_error: algo.consensus_error(),
+    });
+    record.gmp = gmp;
+    record.final_loss = final_loss;
+    record.total_bytes = net.acct.total_bytes;
+    record.per_edge_bytes = net.per_edge_bytes();
+    record.wall_secs = timer.elapsed().as_secs_f64();
+    record.phase_ms = algo.phase_ms();
+    Ok(record)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn batchify_drops_ragged_tail() {
+        let exs: Vec<Example> = (0..10)
+            .map(|i| Example { tokens: vec![i; 4], label: (i % 2) as i32 })
+            .collect();
+        let b = batchify(&exs, 4);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].0.len(), 16);
+        assert_eq!(b[0].1.len(), 4);
+    }
+
+    #[test]
+    fn consensus_error_zero_iff_identical() {
+        let mk = |v: f32| {
+            ParamVec::new(vec!["w".into()], vec![Tensor::from_vec(&[2], vec![v, v])])
+        };
+        assert_eq!(consensus_error(&[mk(1.0), mk(1.0)]), 0.0);
+        assert!(consensus_error(&[mk(1.0), mk(2.0)]) > 0.0);
+        assert_eq!(consensus_error(&[mk(5.0)]), 0.0);
+    }
+}

@@ -1,0 +1,516 @@
+//! SubCGE: Subspace Canonical-basis Gradient Estimation (paper §3.4).
+//!
+//! Two pieces:
+//!
+//! * [`SubspaceBasis`] — the globally shared low-rank factors `U_ℓ (n_ℓ×r)`,
+//!   `V_ℓ (m_ℓ×r)`, regenerated from `RNG(s_glob + t)` every τ steps
+//!   (Alg. 1 step A). All clients derive identical bases from the shared
+//!   seed; the simulator stores the basis once and hands every client a
+//!   reference (the determinism that justifies this is unit-tested).
+//! * [`CoeffAccum`] — per-client coefficient accumulators `A_ℓ (r×r)` into
+//!   which flooded seed-scalar messages fold in O(1) each
+//!   (`A[i_k, j_k] += coeff_k`, Table 4 "coordinate update"). The batched
+//!   update `θ_ℓ ← θ_ℓ − U_ℓ A_ℓ V_ℓᵀ` (Eq. 10) is applied by `flush_*`,
+//!   either through the AOT pallas-kernel artifact (hot path) or the
+//!   pure-rust fallback (tests, microbenches).
+//!
+//! The artifact is lowered at the manifest's fixed `r = subcge_rank`;
+//! smaller *effective* ranks (`rank_eff`, swept in Fig 6) restrict which
+//! coordinates are sampled — mathematically identical to a narrower
+//! subspace because unsampled rows/cols of `A` stay zero.
+
+use anyhow::Result;
+
+use crate::model::Manifest;
+use crate::net::SeedUpdate;
+use crate::rng::Rng;
+use crate::runtime::{Arg, Executable, Runtime};
+use crate::tensor::{ParamVec, Tensor};
+
+/// The globally shared subspace factors (identical on every client).
+pub struct SubspaceBasis {
+    /// indices into the ParamVec of the 2D layers, in params2d order
+    pub param_indices: Vec<usize>,
+    /// U_ℓ: (n_ℓ, r), row-major
+    pub us: Vec<Tensor>,
+    /// V_ℓ: (m_ℓ, r), row-major
+    pub vs: Vec<Tensor>,
+    /// artifact rank (full width of U/V/A)
+    pub rank: usize,
+    /// effective rank — coordinates are sampled from [rank_eff]²
+    pub rank_eff: usize,
+    /// global seed s_glob shared by all clients
+    pub global_seed: u64,
+    /// refresh period τ
+    pub refresh_period: usize,
+    /// bumped on every regenerate — lets device-side caches invalidate
+    pub epoch: u64,
+}
+
+impl SubspaceBasis {
+    pub fn new(
+        manifest: &Manifest,
+        rank_eff: usize,
+        refresh_period: usize,
+        global_seed: u64,
+    ) -> SubspaceBasis {
+        let rank = manifest.config.subcge_rank;
+        assert!(rank_eff >= 1 && rank_eff <= rank,
+                "rank_eff {rank_eff} not in [1, {rank}]");
+        let param_indices = manifest.param2d_indices();
+        let shapes: Vec<(usize, usize)> = param_indices
+            .iter()
+            .map(|&i| (manifest.params[i].shape[0], manifest.params[i].shape[1]))
+            .collect();
+        let mut s = SubspaceBasis {
+            param_indices,
+            us: shapes.iter().map(|&(a, _)| Tensor::zeros(&[a, rank])).collect(),
+            vs: shapes.iter().map(|&(_, b)| Tensor::zeros(&[b, rank])).collect(),
+            rank,
+            rank_eff,
+            global_seed,
+            refresh_period,
+            epoch: 0,
+        };
+        s.regenerate(0);
+        s
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.param_indices.len()
+    }
+
+    /// Alg. 1 step A: every τ steps re-draw U, V from RNG(s_glob + t).
+    /// All clients call this with the same t ⇒ identical subspaces.
+    /// Returns true if a refresh happened (pending A's must be flushed
+    /// *before* calling — coordinates are basis-relative).
+    pub fn maybe_refresh(&mut self, step: usize) -> bool {
+        if step % self.refresh_period == 0 {
+            self.regenerate(step);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn regenerate(&mut self, step: usize) {
+        let mut rng = Rng::new(self.global_seed.wrapping_add(step as u64));
+        for l in 0..self.us.len() {
+            rng.fill_normal(&mut self.us[l].data);
+            rng.fill_normal(&mut self.vs[l].data);
+        }
+        self.epoch += 1;
+    }
+
+    /// Column i of U_ℓ (copied out of the row-major store).
+    pub fn u_col(&self, l: usize, i: usize) -> Vec<f32> {
+        let (n, r) = self.us[l].dims2();
+        (0..n).map(|row| self.us[l].data[row * r + i]).collect()
+    }
+
+    pub fn v_col(&self, l: usize, j: usize) -> Vec<f32> {
+        let (m, r) = self.vs[l].dims2();
+        (0..m).map(|row| self.vs[l].data[row * r + j]).collect()
+    }
+}
+
+/// Per-client coefficient accumulators (A_ℓ) + queued 1D dense components.
+pub struct CoeffAccum {
+    pub amats: Vec<Tensor>,
+    /// dense 1D part of each pending message: (seed, coeff)
+    dense_queue: Vec<(u64, f32)>,
+    pub pending: usize,
+}
+
+impl CoeffAccum {
+    pub fn new(basis: &SubspaceBasis) -> CoeffAccum {
+        CoeffAccum {
+            amats: (0..basis.n_layers())
+                .map(|_| Tensor::zeros(&[basis.rank, basis.rank]))
+                .collect(),
+            dense_queue: vec![],
+            pending: 0,
+        }
+    }
+
+    /// Fold one flooded message in — O(1) per 2D layer.
+    pub fn accumulate(&mut self, basis: &SubspaceBasis, msg: &SeedUpdate) {
+        let coords = crate::zo::subcge_coords(msg.seed, basis.n_layers(), basis.rank_eff);
+        let r = basis.rank;
+        for (l, &(i, j)) in coords.iter().enumerate() {
+            self.amats[l].data[i as usize * r + j as usize] += msg.coeff;
+        }
+        self.dense_queue.push((msg.seed, msg.coeff));
+        self.pending += 1;
+    }
+
+    /// Apply all accumulated updates through the AOT pallas artifact
+    /// (`<cfg>_subcge.hlo.txt`), then clear.
+    pub fn flush_with_artifact(
+        &mut self,
+        basis: &SubspaceBasis,
+        params: &mut ParamVec,
+        exe: &Executable,
+        rt: &Runtime,
+    ) -> Result<()> {
+        if self.pending == 0 {
+            return Ok(());
+        }
+        {
+            let mut args: Vec<Arg> = Vec::with_capacity(4 * basis.n_layers());
+            for &pi in &basis.param_indices {
+                args.push(Arg::F32(&params.tensors[pi]));
+            }
+            for u in &basis.us {
+                args.push(Arg::F32(u));
+            }
+            for v in &basis.vs {
+                args.push(Arg::F32(v));
+            }
+            for a in &self.amats {
+                args.push(Arg::F32(a));
+            }
+            let out = exe.run(&args)?;
+            rt.count_execution();
+            for (k, &pi) in basis.param_indices.iter().enumerate() {
+                params.tensors[pi] = out[k].clone();
+            }
+        }
+        self.apply_dense_tail(basis, params);
+        self.clear();
+        Ok(())
+    }
+
+    /// Pure-rust flush (tests / microbench / no-runtime contexts).
+    pub fn flush_rust(&mut self, basis: &SubspaceBasis, params: &mut ParamVec) {
+        if self.pending == 0 {
+            return;
+        }
+        for (l, &pi) in basis.param_indices.iter().enumerate() {
+            apply_uavt(
+                &mut params.tensors[pi],
+                &basis.us[l],
+                &self.amats[l],
+                &basis.vs[l],
+                basis.rank_eff,
+            );
+        }
+        self.apply_dense_tail(basis, params);
+        self.clear();
+    }
+
+    /// Reconstruct + apply the queued dense 1D components (tiny fraction
+    /// of d; LN scales/biases only).
+    fn apply_dense_tail(&mut self, basis: &SubspaceBasis, params: &mut ParamVec) {
+        let is2d: Vec<bool> = (0..params.tensors.len())
+            .map(|i| basis.param_indices.contains(&i))
+            .collect();
+        let mut buf: Vec<f32> = vec![];
+        for &(seed, coeff) in &self.dense_queue {
+            let mut rng = Rng::new(seed ^ 0x1D1D_1D1D);
+            for (idx, t) in params.tensors.iter_mut().enumerate() {
+                if is2d[idx] {
+                    continue;
+                }
+                buf.resize(t.data.len(), 0.0);
+                rng.fill_normal(&mut buf);
+                for (x, &z) in t.data.iter_mut().zip(buf.iter()) {
+                    *x -= coeff * z;
+                }
+            }
+        }
+    }
+
+    fn clear(&mut self) {
+        for a in &mut self.amats {
+            a.data.fill(0.0);
+        }
+        self.dense_queue.clear();
+        self.pending = 0;
+    }
+}
+
+/// Device-resident copy of the basis factors, re-uploaded only when the
+/// basis epoch changes. Saves the dominant host→device transfer in the
+/// flush (U/V are ~60% of the upload bytes and change only every τ steps;
+/// DESIGN.md §Perf / EXPERIMENTS.md §Perf record the before/after).
+pub struct DeviceBasisCache {
+    epoch: u64,
+    us: Vec<xla::PjRtBuffer>,
+    vs: Vec<xla::PjRtBuffer>,
+}
+
+impl DeviceBasisCache {
+    pub fn new(basis: &SubspaceBasis, rt: &Runtime) -> Result<DeviceBasisCache> {
+        let mut us = Vec::with_capacity(basis.us.len());
+        let mut vs = Vec::with_capacity(basis.vs.len());
+        for u in &basis.us {
+            us.push(rt.upload_f32(&u.data, &u.shape)?);
+        }
+        for v in &basis.vs {
+            vs.push(rt.upload_f32(&v.data, &v.shape)?);
+        }
+        Ok(DeviceBasisCache { epoch: basis.epoch, us, vs })
+    }
+
+    /// Re-upload if the basis refreshed since this cache was built.
+    pub fn sync(&mut self, basis: &SubspaceBasis, rt: &Runtime) -> Result<()> {
+        if self.epoch != basis.epoch {
+            *self = Self::new(basis, rt)?;
+        }
+        Ok(())
+    }
+}
+
+impl CoeffAccum {
+    /// Buffer-path flush: basis factors stay device-resident; only the 2D
+    /// params and the small A matrices cross the PCIe boundary per call.
+    pub fn flush_with_artifact_cached(
+        &mut self,
+        basis: &SubspaceBasis,
+        cache: &mut DeviceBasisCache,
+        params: &mut ParamVec,
+        exe: &Executable,
+        rt: &Runtime,
+    ) -> Result<()> {
+        if self.pending == 0 {
+            return Ok(());
+        }
+        cache.sync(basis, rt)?;
+        {
+            let n2d = basis.n_layers();
+            let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(2 * n2d);
+            for &pi in &basis.param_indices {
+                let t = &params.tensors[pi];
+                owned.push(rt.upload_f32(&t.data, &t.shape)?);
+            }
+            for a in &self.amats {
+                owned.push(rt.upload_f32(&a.data, &a.shape)?);
+            }
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(4 * n2d);
+            args.extend(owned[..n2d].iter());
+            args.extend(cache.us.iter());
+            args.extend(cache.vs.iter());
+            args.extend(owned[n2d..].iter());
+            let out = exe.run_b(&args)?;
+            rt.count_execution();
+            for (k, &pi) in basis.param_indices.iter().enumerate() {
+                params.tensors[pi] = out[k].clone();
+            }
+        }
+        self.apply_dense_tail(basis, params);
+        self.clear();
+        Ok(())
+    }
+}
+
+/// θ ← θ − U A Vᵀ restricted to the top-left rank_eff×rank_eff block of A
+/// (pure-rust; mirrors the pallas kernel semantics; test oracle/fallback).
+pub fn apply_uavt(theta: &mut Tensor, u: &Tensor, a: &Tensor, v: &Tensor, rank_eff: usize) {
+    let (n, r) = u.dims2();
+    let (m, _) = v.dims2();
+    debug_assert_eq!(theta.dims2(), (n, m));
+    // T = U A  (n × rank_eff block)
+    let mut t = vec![0.0f32; n * r];
+    for row in 0..n {
+        for i in 0..rank_eff {
+            let ui = u.data[row * r + i];
+            if ui == 0.0 {
+                continue;
+            }
+            let arow = &a.data[i * r..i * r + rank_eff];
+            let trow = &mut t[row * r..row * r + rank_eff];
+            for (tj, &aij) in trow.iter_mut().zip(arow.iter()) {
+                *tj += ui * aij;
+            }
+        }
+    }
+    // θ -= T Vᵀ
+    for row in 0..n {
+        let trow = &t[row * r..row * r + rank_eff];
+        let dst = &mut theta.data[row * m..(row + 1) * m];
+        for (col, d) in dst.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            let vrow = &v.data[col * r..col * r + rank_eff];
+            for (tj, vj) in trow.iter().zip(vrow.iter()) {
+                acc += tj * vj;
+            }
+            *d -= acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+    use crate::net::{MsgId, SeedUpdate};
+
+    fn mini_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "config": {"name":"t","vocab":16,"seq":4,"dim":8,"layers":1,"heads":2,
+                     "mlp_ratio":4,"batch":2,"num_classes":2,"lora_rank":2,
+                     "subcge_rank":8,"num_params":200},
+          "params": [{"name":"w1","shape":[16,8]},
+                     {"name":"b1","shape":[8]},
+                     {"name":"w2","shape":[8,12]}],
+          "lora_params": [],
+          "params2d": ["w1","w2"],
+          "artifacts": {}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    fn mk_params(m: &Manifest) -> ParamVec {
+        ParamVec::new(
+            m.params.iter().map(|s| s.name.clone()).collect(),
+            m.params
+                .iter()
+                .map(|s| {
+                    let mut t = Tensor::zeros(&s.shape);
+                    let mut rng = Rng::new(s.shape.len() as u64);
+                    rng.fill_normal(&mut t.data);
+                    t
+                })
+                .collect(),
+        )
+    }
+
+    fn msg(origin: u32, step: u32, seed: u64, coeff: f32) -> SeedUpdate {
+        SeedUpdate { id: MsgId { origin, step }, seed, coeff }
+    }
+
+    #[test]
+    fn bases_identical_across_clients() {
+        let m = mini_manifest();
+        let a = SubspaceBasis::new(&m, 4, 10, 42);
+        let b = SubspaceBasis::new(&m, 4, 10, 42);
+        assert_eq!(a.us[0].data, b.us[0].data);
+        assert_eq!(a.vs[1].data, b.vs[1].data);
+        let c = SubspaceBasis::new(&m, 4, 10, 43);
+        assert_ne!(a.us[0].data, c.us[0].data);
+    }
+
+    #[test]
+    fn refresh_changes_basis_on_period_only() {
+        let m = mini_manifest();
+        let mut s = SubspaceBasis::new(&m, 4, 10, 42);
+        let before = s.us[0].data.clone();
+        assert!(!s.maybe_refresh(7));
+        assert_eq!(s.us[0].data, before);
+        assert!(s.maybe_refresh(10));
+        assert_ne!(s.us[0].data, before);
+    }
+
+    #[test]
+    fn accumulate_then_flush_equals_per_message_rank1() {
+        // Eq-10 consistency: batched A-flush == one-by-one rank-1 applies
+        let m = mini_manifest();
+        let basis = SubspaceBasis::new(&m, 8, 100, 1);
+        let mut acc = CoeffAccum::new(&basis);
+        let mut p_batch = mk_params(&m);
+        let mut p_seq = p_batch.clone();
+
+        let msgs: Vec<SeedUpdate> =
+            (0..20).map(|k| msg(0, k, 1000 + k as u64, 0.01 * (k as f32 - 10.0))).collect();
+        for mm in &msgs {
+            acc.accumulate(&basis, mm);
+            crate::zo::perturb_subcge(&mut p_seq, &basis, mm.seed, -mm.coeff);
+        }
+        acc.flush_rust(&basis, &mut p_batch);
+        for (a, b) in p_batch.tensors.iter().zip(p_seq.tensors.iter()) {
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+        assert_eq!(acc.pending, 0);
+    }
+
+    #[test]
+    fn flush_empty_is_noop() {
+        let m = mini_manifest();
+        let basis = SubspaceBasis::new(&m, 4, 100, 1);
+        let mut acc = CoeffAccum::new(&basis);
+        let mut p = mk_params(&m);
+        let orig = p.clone();
+        acc.flush_rust(&basis, &mut p);
+        assert_eq!(p.tensors[0].data, orig.tensors[0].data);
+    }
+
+    #[test]
+    fn rank_eff_restricts_coordinates() {
+        let m = mini_manifest();
+        let basis = SubspaceBasis::new(&m, 2, 100, 1);
+        let mut acc = CoeffAccum::new(&basis);
+        for k in 0..50 {
+            acc.accumulate(&basis, &msg(0, k, k as u64 * 31 + 7, 0.1));
+        }
+        let r = basis.rank;
+        for a in &acc.amats {
+            for i in 0..r {
+                for j in 0..r {
+                    if i >= 2 || j >= 2 {
+                        assert_eq!(a.data[i * r + j], 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn order_of_accumulation_is_irrelevant() {
+        // flooding gives no ordering guarantees; A-folding must commute
+        let m = mini_manifest();
+        let basis = SubspaceBasis::new(&m, 8, 100, 1);
+        let msgs: Vec<SeedUpdate> =
+            (0..12).map(|k| msg(k, 0, 77 + k as u64, 0.05 * k as f32)).collect();
+        let mut fwd = CoeffAccum::new(&basis);
+        let mut rev = CoeffAccum::new(&basis);
+        for mm in &msgs {
+            fwd.accumulate(&basis, mm);
+        }
+        for mm in msgs.iter().rev() {
+            rev.accumulate(&basis, mm);
+        }
+        let (mut pa, mut pb) = (mk_params(&m), mk_params(&m));
+        fwd.flush_rust(&basis, &mut pa);
+        rev.flush_rust(&basis, &mut pb);
+        for (a, b) in pa.tensors.iter().zip(pb.tensors.iter()) {
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn apply_uavt_matches_naive() {
+        let mut rng = Rng::new(3);
+        let (n, mcols, r) = (6, 5, 4);
+        let mut theta = Tensor::zeros(&[n, mcols]);
+        let mut u = Tensor::zeros(&[n, r]);
+        let mut v = Tensor::zeros(&[mcols, r]);
+        let mut a = Tensor::zeros(&[r, r]);
+        rng.fill_normal(&mut theta.data);
+        rng.fill_normal(&mut u.data);
+        rng.fill_normal(&mut v.data);
+        rng.fill_normal(&mut a.data);
+        let mut want = theta.clone();
+        for row in 0..n {
+            for col in 0..mcols {
+                let mut s = 0.0f32;
+                for i in 0..r {
+                    for j in 0..r {
+                        s += u.data[row * r + i] * a.data[i * r + j] * v.data[col * r + j];
+                    }
+                }
+                want.data[row * mcols + col] -= s;
+            }
+        }
+        apply_uavt(&mut theta, &u, &a, &v, r);
+        for (x, y) in theta.data.iter().zip(want.data.iter()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Minimal dense tensor type for the L3 hot path.
+//!
+//! Parameters live as flat `Vec<f32>` with a shape; the heavy dense math
+//! (forward loss, FO grads, SubCGE aggregation) runs inside the AOT XLA
+//! artifacts — this type only needs the cheap coordinator-side ops: axpy,
+//! scal, rank-1 updates, top-k magnitude selection, averaging.
+
+use std::fmt;
+
+/// Dense f32 tensor, row-major.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} el]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {:?} != data len {}", shape, data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// rows/cols for 2D tensors.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "dims2 on {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    /// self += a * other (the dense-ZO update primitive).
+    pub fn axpy(&mut self, a: f32, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (x, &y) in self.data.iter_mut().zip(other.data.iter()) {
+            *x += a * y;
+        }
+    }
+
+    /// self += a * u v^T for 2D self (the SubCGE/LoZO rank-1 primitive).
+    pub fn rank1_update(&mut self, a: f32, u: &[f32], v: &[f32]) {
+        let (r, c) = self.dims2();
+        debug_assert_eq!(u.len(), r);
+        debug_assert_eq!(v.len(), c);
+        for (row, &ui) in u.iter().enumerate() {
+            let s = a * ui;
+            let dst = &mut self.data[row * c..(row + 1) * c];
+            for (d, &vj) in dst.iter_mut().zip(v.iter()) {
+                *d += s * vj;
+            }
+        }
+    }
+
+    pub fn scale(&mut self, a: f32) {
+        for x in &mut self.data {
+            *x *= a;
+        }
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Squared L2 distance to another tensor (consensus-error probe).
+    pub fn sq_dist(&self, other: &Tensor) -> f64 {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum()
+    }
+
+    /// Indices + values of the k largest-magnitude entries (ChocoSGD top-K).
+    pub fn top_k(&self, k: usize) -> Vec<(u32, f32)> {
+        let k = k.min(self.data.len());
+        if k == 0 {
+            return vec![];
+        }
+        // select_nth on magnitude, then keep original order irrelevant
+        let mut idx: Vec<u32> = (0..self.data.len() as u32).collect();
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            self.data[b as usize]
+                .abs()
+                .partial_cmp(&self.data[a as usize].abs())
+                .unwrap()
+        });
+        idx.truncate(k);
+        idx.into_iter().map(|i| (i, self.data[i as usize])).collect()
+    }
+}
+
+/// A named, ordered collection of tensors — the model parameter vector.
+/// The order mirrors the AOT manifest (`model::Manifest::params`) exactly:
+/// it is the ABI between the rust coordinator and the XLA artifacts.
+#[derive(Clone, Debug)]
+pub struct ParamVec {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamVec {
+    pub fn new(names: Vec<String>, tensors: Vec<Tensor>) -> Self {
+        assert_eq!(names.len(), tensors.len());
+        ParamVec { names, tensors }
+    }
+
+    pub fn zeros_like(&self) -> Self {
+        ParamVec {
+            names: self.names.clone(),
+            tensors: self.tensors.iter().map(|t| Tensor::zeros(&t.shape)).collect(),
+        }
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// self += a * other across all tensors.
+    pub fn axpy(&mut self, a: f32, other: &ParamVec) {
+        debug_assert_eq!(self.tensors.len(), other.tensors.len());
+        for (t, o) in self.tensors.iter_mut().zip(other.tensors.iter()) {
+            t.axpy(a, o);
+        }
+    }
+
+    pub fn scale(&mut self, a: f32) {
+        for t in &mut self.tensors {
+            t.scale(a);
+        }
+    }
+
+    /// Mean of many param vectors (GMP evaluation: θ̄ = 1/n Σ θ_i).
+    pub fn average(vecs: &[&ParamVec]) -> ParamVec {
+        assert!(!vecs.is_empty());
+        let mut out = vecs[0].zeros_like();
+        let w = 1.0 / vecs.len() as f32;
+        for v in vecs {
+            out.axpy(w, v);
+        }
+        out
+    }
+
+    /// Global squared distance (Σ over tensors) — consensus error probe.
+    pub fn sq_dist(&self, other: &ParamVec) -> f64 {
+        self.tensors
+            .iter()
+            .zip(other.tensors.iter())
+            .map(|(a, b)| a.sq_dist(b))
+            .sum()
+    }
+
+    /// Indices of 2D tensors (SubCGE / LoZO operate on these only).
+    pub fn indices_2d(&self) -> Vec<usize> {
+        (0..self.tensors.len()).filter(|&i| self.tensors[i].ndim() == 2).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![10.0, 20.0, 30.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data, vec![6.0, 12.0, 18.0]);
+    }
+
+    #[test]
+    fn rank1_matches_manual() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        t.rank1_update(2.0, &[1.0, -1.0], &[1.0, 2.0, 3.0]);
+        assert_eq!(t.data, vec![2.0, 4.0, 6.0, -2.0, -4.0, -6.0]);
+    }
+
+    #[test]
+    fn top_k_picks_largest_magnitude() {
+        let t = Tensor::from_vec(&[5], vec![0.1, -5.0, 3.0, -0.2, 4.0]);
+        let mut got = t.top_k(2);
+        got.sort_by_key(|&(i, _)| i);
+        assert_eq!(got, vec![(1, -5.0), (4, 4.0)]);
+    }
+
+    #[test]
+    fn top_k_edge_cases() {
+        let t = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.top_k(0).len(), 0);
+        assert_eq!(t.top_k(10).len(), 3);
+    }
+
+    #[test]
+    fn param_average() {
+        let mk = |v: f32| {
+            ParamVec::new(vec!["w".into()], vec![Tensor::from_vec(&[2], vec![v, 2.0 * v])])
+        };
+        let (a, b) = (mk(1.0), mk(3.0));
+        let avg = ParamVec::average(&[&a, &b]);
+        assert_eq!(avg.tensors[0].data, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn sq_dist_zero_for_identical() {
+        let a = ParamVec::new(vec!["w".into()], vec![Tensor::from_vec(&[2], vec![1.0, 2.0])]);
+        assert_eq!(a.sq_dist(&a.clone()), 0.0);
+    }
+
+    #[test]
+    fn indices_2d() {
+        let p = ParamVec::new(
+            vec!["a".into(), "b".into(), "c".into()],
+            vec![Tensor::zeros(&[2, 2]), Tensor::zeros(&[4]), Tensor::zeros(&[3, 1])],
+        );
+        assert_eq!(p.indices_2d(), vec![0, 2]);
+    }
+}

@@ -1,0 +1,409 @@
+//! Network topologies for decentralized training (paper §2.1, §4.1).
+//!
+//! The communication structure is an undirected, connected, static graph
+//! `G = (V, E)`; clients talk only to `N(i)`.  The paper evaluates ring and
+//! meshgrid; we additionally provide torus, complete, star, Erdős–Rényi and
+//! Watts–Strogatz small-world graphs for ablations, plus the graph
+//! quantities the algorithms need: BFS diameter, Metropolis–Hastings mixing
+//! weights (doubly-stochastic, the `w_ij` of Eq. 2) and a spectral-gap
+//! estimate (consensus-rate diagnostic).
+
+use crate::rng::Rng;
+
+/// Undirected graph in adjacency-list form. Nodes are `0..n`.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub n: usize,
+    pub adj: Vec<Vec<usize>>,
+    pub kind: String,
+}
+
+/// Named topology kinds accepted by configs / CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Ring,
+    Meshgrid,
+    Torus,
+    Complete,
+    Star,
+    ErdosRenyi,
+    SmallWorld,
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> Option<Kind> {
+        Some(match s {
+            "ring" => Kind::Ring,
+            "meshgrid" | "mesh" | "grid" => Kind::Meshgrid,
+            "torus" => Kind::Torus,
+            "complete" | "full" => Kind::Complete,
+            "star" => Kind::Star,
+            "erdos" | "erdos-renyi" | "er" => Kind::ErdosRenyi,
+            "smallworld" | "small-world" | "ws" => Kind::SmallWorld,
+            _ => return None,
+        })
+    }
+}
+
+impl Topology {
+    pub fn build(kind: Kind, n: usize, seed: u64) -> Topology {
+        if n == 1 {
+            // single-client degenerate graph (Table 3 baselines)
+            return Topology { n: 1, adj: vec![vec![]], kind: "singleton".into() };
+        }
+        match kind {
+            Kind::Ring => Self::ring(n),
+            Kind::Meshgrid => Self::meshgrid(n),
+            Kind::Torus => Self::torus(n),
+            Kind::Complete => Self::complete(n),
+            Kind::Star => Self::star(n),
+            Kind::ErdosRenyi => Self::erdos_renyi(n, seed),
+            Kind::SmallWorld => Self::small_world(n, 4, 0.1, seed),
+        }
+    }
+
+    fn from_edges(n: usize, edges: &[(usize, usize)], kind: &str) -> Topology {
+        let mut adj = vec![vec![]; n];
+        for &(a, b) in edges {
+            assert!(a != b && a < n && b < n, "bad edge ({a},{b}) of {n}");
+            if !adj[a].contains(&b) {
+                adj[a].push(b);
+                adj[b].push(a);
+            }
+        }
+        for l in &mut adj {
+            l.sort_unstable();
+        }
+        Topology { n, adj, kind: kind.to_string() }
+    }
+
+    /// Cycle over n nodes (the paper's sparsest benchmark topology).
+    pub fn ring(n: usize) -> Topology {
+        assert!(n >= 2);
+        let edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        Self::from_edges(n, &edges, "ring")
+    }
+
+    /// √n × √n grid without wraparound (paper's "meshgrid"); n must be a
+    /// perfect square (all paper sizes 16/32/64/128 → we use the most
+    /// square factorization r×c with r·c = n).
+    pub fn meshgrid(n: usize) -> Topology {
+        let (rows, cols) = most_square_factors(n);
+        let mut edges = vec![];
+        for r in 0..rows {
+            for c in 0..cols {
+                let i = r * cols + c;
+                if c + 1 < cols {
+                    edges.push((i, i + 1));
+                }
+                if r + 1 < rows {
+                    edges.push((i, i + cols));
+                }
+            }
+        }
+        Self::from_edges(n, &edges, "meshgrid")
+    }
+
+    /// Grid with wraparound.
+    pub fn torus(n: usize) -> Topology {
+        let (rows, cols) = most_square_factors(n);
+        let mut edges = vec![];
+        for r in 0..rows {
+            for c in 0..cols {
+                let i = r * cols + c;
+                if cols > 2 || c + 1 < cols {
+                    edges.push((i, r * cols + (c + 1) % cols));
+                }
+                if rows > 2 || r + 1 < rows {
+                    edges.push((i, ((r + 1) % rows) * cols + c));
+                }
+            }
+        }
+        Self::from_edges(n, &edges, "torus")
+    }
+
+    pub fn complete(n: usize) -> Topology {
+        let mut edges = vec![];
+        for a in 0..n {
+            for b in a + 1..n {
+                edges.push((a, b));
+            }
+        }
+        Self::from_edges(n, &edges, "complete")
+    }
+
+    pub fn star(n: usize) -> Topology {
+        let edges: Vec<_> = (1..n).map(|i| (0, i)).collect();
+        Self::from_edges(n, &edges, "star")
+    }
+
+    /// G(n, p) with p chosen ≈ 2 ln n / n, re-sampled until connected.
+    pub fn erdos_renyi(n: usize, seed: u64) -> Topology {
+        let p = (2.0 * (n as f64).ln() / n as f64).min(1.0);
+        let mut rng = Rng::new(seed);
+        loop {
+            let mut edges = vec![];
+            for a in 0..n {
+                for b in a + 1..n {
+                    if rng.next_f64() < p {
+                        edges.push((a, b));
+                    }
+                }
+            }
+            let t = Self::from_edges(n, &edges, "erdos-renyi");
+            if t.is_connected() {
+                return t;
+            }
+        }
+    }
+
+    /// Watts–Strogatz: ring lattice with k nearest neighbours, rewired with
+    /// probability beta (kept connected by retrying).
+    pub fn small_world(n: usize, k: usize, beta: f64, seed: u64) -> Topology {
+        let mut rng = Rng::new(seed);
+        loop {
+            let mut edges = vec![];
+            for i in 0..n {
+                for d in 1..=k / 2 {
+                    let j = (i + d) % n;
+                    if rng.next_f64() < beta {
+                        // rewire to a uniform non-self target
+                        let mut t = rng.next_below(n as u64) as usize;
+                        while t == i {
+                            t = rng.next_below(n as u64) as usize;
+                        }
+                        edges.push((i, t));
+                    } else {
+                        edges.push((i, j));
+                    }
+                }
+            }
+            let t = Self::from_edges(n, &edges, "small-world");
+            if t.is_connected() {
+                return t;
+            }
+        }
+    }
+
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adj.iter().map(|l| l.len()).sum::<usize>() / 2
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        self.adj.iter().map(|l| l.len()).max().unwrap_or(0)
+    }
+
+    /// BFS distances from `src`; usize::MAX for unreachable.
+    pub fn bfs(&self, src: usize) -> Vec<usize> {
+        let mut dist = vec![usize::MAX; self.n];
+        let mut q = std::collections::VecDeque::new();
+        dist[src] = 0;
+        q.push_back(src);
+        while let Some(u) = q.pop_front() {
+            for &v in &self.adj[u] {
+                if dist[v] == usize::MAX {
+                    dist[v] = dist[u] + 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    pub fn is_connected(&self) -> bool {
+        self.n == 0 || self.bfs(0).iter().all(|&d| d != usize::MAX)
+    }
+
+    /// Exact diameter (max over all-pairs BFS). Paper: flooding runs for
+    /// `D` steps so every message reaches every client within an iteration.
+    pub fn diameter(&self) -> usize {
+        (0..self.n)
+            .map(|s| self.bfs(s).into_iter().max().unwrap())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Metropolis–Hastings mixing weights: symmetric, doubly stochastic —
+    /// the standard `w_ij` for DSGD/ChocoSGD (Eq. 2). Row i: weight for
+    /// each neighbor j is 1/(1+max(deg_i,deg_j)); self-weight is the rest.
+    pub fn mixing_weights(&self) -> Vec<Vec<(usize, f32)>> {
+        (0..self.n)
+            .map(|i| {
+                let mut row: Vec<(usize, f32)> = self.adj[i]
+                    .iter()
+                    .map(|&j| {
+                        (j, 1.0 / (1 + self.degree(i).max(self.degree(j))) as f32)
+                    })
+                    .collect();
+                let others: f32 = row.iter().map(|&(_, w)| w).sum();
+                row.push((i, 1.0 - others));
+                row.sort_unstable_by_key(|&(j, _)| j);
+                row
+            })
+            .collect()
+    }
+
+    /// Spectral gap `1 - λ₂(W)` of the mixing matrix, estimated by power
+    /// iteration on the space orthogonal to 𝟙. Larger gap ⇒ faster gossip
+    /// consensus; the paper's information-decay argument is about this
+    /// quantity shrinking on large/sparse graphs.
+    pub fn spectral_gap(&self) -> f64 {
+        let w = self.mixing_weights();
+        let n = self.n;
+        if n < 2 {
+            return 1.0;
+        }
+        let mut x: Vec<f64> = (0..n).map(|i| ((i * 2654435761) % 1000) as f64 / 1000.0 - 0.5).collect();
+        let mut lambda = 0.0;
+        for _ in 0..500 {
+            // project out the all-ones direction
+            let mean = x.iter().sum::<f64>() / n as f64;
+            for v in &mut x {
+                *v -= mean;
+            }
+            let norm = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if norm < 1e-12 {
+                return 1.0;
+            }
+            for v in &mut x {
+                *v /= norm;
+            }
+            let mut y = vec![0.0; n];
+            for i in 0..n {
+                for &(j, wij) in &w[i] {
+                    y[i] += wij as f64 * x[j];
+                }
+            }
+            lambda = x.iter().zip(&y).map(|(a, b)| a * b).sum::<f64>();
+            x = y;
+        }
+        1.0 - lambda.abs()
+    }
+}
+
+/// Factor n as r×c with r ≤ c and r as large as possible.
+fn most_square_factors(n: usize) -> (usize, usize) {
+    let mut r = (n as f64).sqrt() as usize;
+    while r > 1 && n % r != 0 {
+        r -= 1;
+    }
+    (r.max(1), n / r.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_structure() {
+        let t = Topology::ring(8);
+        assert_eq!(t.num_edges(), 8);
+        assert!(t.adj.iter().all(|l| l.len() == 2));
+        assert_eq!(t.diameter(), 4);
+        assert!(t.is_connected());
+    }
+
+    #[test]
+    fn ring_n2() {
+        let t = Topology::ring(2);
+        assert_eq!(t.num_edges(), 1);
+        assert_eq!(t.diameter(), 1);
+    }
+
+    #[test]
+    fn meshgrid_16_is_4x4() {
+        let t = Topology::meshgrid(16);
+        assert_eq!(t.num_edges(), 2 * 4 * 3);
+        assert_eq!(t.diameter(), 6);
+    }
+
+    #[test]
+    fn meshgrid_non_square() {
+        // 32 -> 4x8 grid
+        let t = Topology::meshgrid(32);
+        assert!(t.is_connected());
+        assert_eq!(t.diameter(), 3 + 7);
+    }
+
+    #[test]
+    fn torus_diameter_smaller_than_grid() {
+        assert!(Topology::torus(16).diameter() < Topology::meshgrid(16).diameter());
+    }
+
+    #[test]
+    fn complete_diameter_1() {
+        let t = Topology::complete(10);
+        assert_eq!(t.diameter(), 1);
+        assert_eq!(t.num_edges(), 45);
+    }
+
+    #[test]
+    fn star_diameter_2() {
+        assert_eq!(Topology::star(9).diameter(), 2);
+    }
+
+    #[test]
+    fn erdos_connected() {
+        for seed in 0..5 {
+            assert!(Topology::erdos_renyi(24, seed).is_connected());
+        }
+    }
+
+    #[test]
+    fn small_world_connected() {
+        assert!(Topology::small_world(32, 4, 0.1, 1).is_connected());
+    }
+
+    #[test]
+    fn mh_weights_doubly_stochastic() {
+        for t in [Topology::ring(8), Topology::meshgrid(16), Topology::star(6)] {
+            let w = t.mixing_weights();
+            // rows sum to 1
+            for row in &w {
+                let s: f32 = row.iter().map(|&(_, x)| x).sum();
+                assert!((s - 1.0).abs() < 1e-6);
+                assert!(row.iter().all(|&(_, x)| x >= -1e-7));
+            }
+            // symmetry w_ij == w_ji
+            for (i, row) in w.iter().enumerate() {
+                for &(j, wij) in row {
+                    let wji = w[j].iter().find(|&&(k, _)| k == i).unwrap().1;
+                    assert!((wij - wji).abs() < 1e-7);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_gap_ordering() {
+        // complete graph mixes faster than meshgrid, which beats ring
+        let ring = Topology::ring(16).spectral_gap();
+        let mesh = Topology::meshgrid(16).spectral_gap();
+        let full = Topology::complete(16).spectral_gap();
+        assert!(full > mesh && mesh > ring, "{full} {mesh} {ring}");
+    }
+
+    #[test]
+    fn singleton_for_one_client() {
+        let t = Topology::build(Kind::Ring, 1, 0);
+        assert_eq!(t.n, 1);
+        assert_eq!(t.num_edges(), 0);
+        assert_eq!(t.diameter(), 0);
+        assert!(t.is_connected());
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(Kind::parse("ring"), Some(Kind::Ring));
+        assert_eq!(Kind::parse("mesh"), Some(Kind::Meshgrid));
+        assert_eq!(Kind::parse("nope"), None);
+    }
+}

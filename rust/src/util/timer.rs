@@ -1,0 +1,99 @@
+//! Wall-clock timers and named phase breakdowns (paper Table 4 needs a
+//! GE / MA per-phase decomposition of each training iteration).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Accumulates wall-clock per named phase across iterations.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseClock {
+    totals: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl PhaseClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase name.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, phase: &str, d: Duration) {
+        *self.totals.entry(phase.to_string()).or_default() += d;
+        *self.counts.entry(phase.to_string()).or_default() += 1;
+    }
+
+    pub fn total_ms(&self, phase: &str) -> f64 {
+        self.totals.get(phase).map(|d| d.as_secs_f64() * 1e3).unwrap_or(0.0)
+    }
+
+    pub fn mean_ms(&self, phase: &str) -> f64 {
+        let c = self.counts.get(phase).copied().unwrap_or(0);
+        if c == 0 {
+            0.0
+        } else {
+            self.total_ms(phase) / c as f64
+        }
+    }
+
+    pub fn phases(&self) -> Vec<&str> {
+        self.totals.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// "phase: total ms (mean ms over k calls)" lines.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for p in self.phases() {
+            s.push_str(&format!(
+                "{p}: {:.2} ms total ({:.3} ms mean over {} calls)\n",
+                self.total_ms(p),
+                self.mean_ms(p),
+                self.counts[p]
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate() {
+        let mut c = PhaseClock::new();
+        let out = c.time("ge", || 41 + 1);
+        assert_eq!(out, 42);
+        c.add("ge", Duration::from_millis(5));
+        c.add("ma", Duration::from_millis(2));
+        assert!(c.total_ms("ge") >= 5.0);
+        assert!(c.total_ms("ma") >= 2.0);
+        assert_eq!(c.phases(), vec!["ge", "ma"]);
+        assert!(c.report().contains("ge:"));
+    }
+}

@@ -1,0 +1,182 @@
+//! Zeroth-order machinery (paper §2.2, §3.1).
+//!
+//! * the SPSA two-point estimator with MeZO-style in-place perturbation
+//!   (perturb +ε → f⁺ → perturb −2ε → f⁻ → restore), so probing costs no
+//!   extra parameter memory;
+//! * seed-reconstructible perturbations, in two flavours:
+//!   - **dense**: `z ~ N(0, I_d)` regenerated from the seed (MeZO / DZSGD);
+//!   - **SubCGE**: canonical-coordinate `z_ℓ = U_ℓ[:,i] V_ℓ[:,j]ᵀ` for 2D
+//!     layers, dense for 1D layers (paper Alg. 1 `RNG_S`);
+//! * `apply_dense_update` — the reconstruct-and-apply path whose O(k·d)
+//!   scaling is the Figure 5 baseline.
+//!
+//! Every function regenerates randomness *only* from `(seed, param index)`
+//! via [`crate::rng::Rng`], so any client reconstructs identical updates —
+//! the shared-randomness contract.
+
+use crate::rng::Rng;
+use crate::subcge::SubspaceBasis;
+use crate::tensor::ParamVec;
+
+/// Draw the dense perturbation stream for seed and apply θ += scale·z.
+/// One fresh Rng per call ⇒ identical z for identical seed, always.
+pub fn perturb_dense(params: &mut ParamVec, seed: u64, scale: f32) {
+    let mut rng = Rng::new(seed);
+    let mut buf: Vec<f32> = vec![];
+    for t in &mut params.tensors {
+        buf.resize(t.data.len(), 0.0);
+        rng.fill_normal(&mut buf);
+        for (x, &z) in t.data.iter_mut().zip(buf.iter()) {
+            *x += scale * z;
+        }
+    }
+}
+
+/// Reconstruct-and-apply a dense seed-scalar message: θ ← θ − coeff·z(seed).
+/// This is the O(d)-per-message MeZO apply (Fig 5 baseline).
+pub fn apply_dense_update(params: &mut ParamVec, seed: u64, coeff: f32) {
+    perturb_dense(params, seed, -coeff);
+}
+
+/// The SubCGE coordinates drawn from a message seed: one (i, j) per 2D
+/// layer, in `params2d` order — must match [`perturb_subcge`] exactly.
+pub fn subcge_coords(seed: u64, n_layers2d: usize, rank_eff: usize) -> Vec<(u16, u16)> {
+    let mut rng = Rng::new(seed);
+    (0..n_layers2d)
+        .map(|_| {
+            let i = rng.next_below(rank_eff as u64) as u16;
+            let j = rng.next_below(rank_eff as u64) as u16;
+            (i, j)
+        })
+        .collect()
+}
+
+/// Apply θ += scale·z for the SubCGE perturbation of `seed` (Alg. 1 RNG_S):
+/// 2D layers get the canonical-coordinate rank-1 direction, 1D layers a
+/// dense normal (drawn from a seed substream so 1D reconstruction does not
+/// depend on 2D layer count).
+pub fn perturb_subcge(params: &mut ParamVec, sub: &SubspaceBasis, seed: u64, scale: f32) {
+    let coords = subcge_coords(seed, sub.n_layers(), sub.rank_eff);
+    for (l, &pi) in sub.param_indices.iter().enumerate() {
+        let (i, j) = coords[l];
+        let u = sub.u_col(l, i as usize);
+        let v = sub.v_col(l, j as usize);
+        params.tensors[pi].rank1_update(scale, &u, &v);
+    }
+    // dense part for 1D tensors
+    let mut rng = Rng::new(seed ^ 0x1D1D_1D1D);
+    let mut buf: Vec<f32> = vec![];
+    for (idx, t) in params.tensors.iter_mut().enumerate() {
+        if sub.param_indices.contains(&idx) {
+            continue;
+        }
+        buf.resize(t.data.len(), 0.0);
+        rng.fill_normal(&mut buf);
+        for (x, &z) in t.data.iter_mut().zip(buf.iter()) {
+            *x += scale * z;
+        }
+    }
+}
+
+/// SPSA central-difference coefficient α = (f⁺ − f⁻)/(2ε) with MeZO-style
+/// in-place perturbation. `loss` is evaluated twice; `perturb` applies
+/// θ += scale·z for this seed (dense or SubCGE flavour).
+pub fn spsa_alpha<F, P>(params: &mut ParamVec, eps: f32, mut loss: F, mut perturb: P) -> f32
+where
+    F: FnMut(&ParamVec) -> f32,
+    P: FnMut(&mut ParamVec, f32),
+{
+    perturb(params, eps);
+    let lp = loss(params);
+    perturb(params, -2.0 * eps);
+    let lm = loss(params);
+    perturb(params, eps); // restore
+    (lp - lm) / (2.0 * eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn params() -> ParamVec {
+        ParamVec::new(
+            vec!["w".into(), "b".into()],
+            vec![
+                Tensor::from_vec(&[4, 4], (0..16).map(|i| i as f32).collect()),
+                Tensor::from_vec(&[4], vec![1.0; 4]),
+            ],
+        )
+    }
+
+    #[test]
+    fn dense_perturb_restores_exactly_by_seed() {
+        let mut p = params();
+        let orig = p.clone();
+        perturb_dense(&mut p, 77, 0.5);
+        assert_ne!(p.tensors[0].data, orig.tensors[0].data);
+        perturb_dense(&mut p, 77, -0.5);
+        for (a, b) in p.tensors.iter().zip(orig.tensors.iter()) {
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_update_reconstructible_across_clients() {
+        // two independent "clients" apply the same message → identical params
+        let (mut a, mut b) = (params(), params());
+        apply_dense_update(&mut a, 123, 0.25);
+        apply_dense_update(&mut b, 123, 0.25);
+        assert_eq!(a.tensors[0].data, b.tensors[0].data);
+        assert_eq!(a.tensors[1].data, b.tensors[1].data);
+    }
+
+    #[test]
+    fn subcge_coords_deterministic_and_in_range() {
+        let c1 = subcge_coords(5, 10, 8);
+        let c2 = subcge_coords(5, 10, 8);
+        assert_eq!(c1, c2);
+        assert!(c1.iter().all(|&(i, j)| i < 8 && j < 8));
+        assert_ne!(subcge_coords(6, 10, 8), c1);
+    }
+
+    #[test]
+    fn spsa_matches_directional_derivative_on_quadratic() {
+        // f(θ) = Σ θ²; ∇f·z = 2 Σ θ_i z_i. SPSA on a quadratic is exact.
+        let mut p = params();
+        let loss = |p: &ParamVec| -> f32 {
+            p.tensors.iter().map(|t| t.data.iter().map(|x| x * x).sum::<f32>()).sum()
+        };
+        let seed = 99;
+        let alpha = spsa_alpha(&mut p, 1e-3, loss, |pp, s| perturb_dense(pp, seed, s));
+        // compute expected: 2 Σ θ z with z regenerated
+        let mut z = p.zeros_like();
+        perturb_dense(&mut z, seed, 1.0);
+        let expected: f32 = p
+            .tensors
+            .iter()
+            .zip(z.tensors.iter())
+            .map(|(t, zt)| {
+                2.0 * t.data.iter().zip(zt.data.iter()).map(|(a, b)| a * b).sum::<f32>()
+            })
+            .sum();
+        assert!(
+            (alpha - expected).abs() < 0.05 * expected.abs().max(1.0),
+            "alpha {alpha} expected {expected}"
+        );
+    }
+
+    #[test]
+    fn spsa_restores_params() {
+        let mut p = params();
+        let orig = p.clone();
+        let _ = spsa_alpha(&mut p, 1e-3, |_| 0.0, |pp, s| perturb_dense(pp, 42, s));
+        for (a, b) in p.tensors.iter().zip(orig.tensors.iter()) {
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert!((x - y).abs() < 1e-4);
+            }
+        }
+    }
+}

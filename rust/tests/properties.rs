@@ -1,0 +1,310 @@
+//! Property-based tests over the coordinator invariants (routing,
+//! flooding, mixing, aggregation) using the in-repo proptest-lite harness
+//! (`util::prop`; this offline image vendors no proptest crate).
+
+use seedflood::flood::{flood_rounds, FloodState};
+use seedflood::net::{MsgId, Network, SeedUpdate};
+use seedflood::subcge::{apply_uavt, CoeffAccum, SubspaceBasis};
+use seedflood::tensor::{ParamVec, Tensor};
+use seedflood::topology::{Kind, Topology};
+use seedflood::util::json::Json;
+use seedflood::util::prop::{check, Gen};
+use seedflood::zo;
+
+fn random_topology(g: &mut Gen) -> Topology {
+    let kinds = [Kind::Ring, Kind::Meshgrid, Kind::Torus, Kind::Complete,
+                 Kind::Star, Kind::ErdosRenyi, Kind::SmallWorld];
+    let kind = *g.choose(&kinds);
+    let n = g.usize_in(2, 40);
+    Topology::build(kind, n, g.rng.next_u64())
+}
+
+#[test]
+fn prop_every_topology_is_connected_and_flooding_covers_it() {
+    check("flood-coverage", 40, |g| {
+        let topo = random_topology(g);
+        let n = topo.n;
+        let d = topo.diameter();
+        if !topo.is_connected() {
+            return Err(format!("{} n={n} not connected", topo.kind));
+        }
+        let mut net = Network::new(topo);
+        let mut states: Vec<FloodState> = (0..n).map(|_| FloodState::new()).collect();
+        for (i, st) in states.iter_mut().enumerate() {
+            st.inject(SeedUpdate {
+                id: MsgId { origin: i as u32, step: 0 },
+                seed: i as u64,
+                coeff: 1.0,
+            });
+        }
+        flood_rounds(&mut states, &mut net, d.max(1), |_, _| {});
+        for (i, st) in states.iter().enumerate() {
+            if st.seen.len() != n {
+                return Err(format!("client {i} saw {}/{n} messages", st.seen.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mixing_weights_rows_sum_to_one_and_symmetric() {
+    check("mh-weights", 40, |g| {
+        let topo = random_topology(g);
+        let w = topo.mixing_weights();
+        for (i, row) in w.iter().enumerate() {
+            let s: f32 = row.iter().map(|&(_, x)| x).sum();
+            if (s - 1.0).abs() > 1e-5 {
+                return Err(format!("row {i} sums to {s}"));
+            }
+            for &(j, wij) in row {
+                let wji = w[j]
+                    .iter()
+                    .find(|&&(k, _)| k == i)
+                    .map(|&(_, x)| x)
+                    .unwrap_or(0.0);
+                if (wij - wji).abs() > 1e-5 {
+                    return Err(format!("asymmetric w[{i}][{j}]"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gossip_mix_preserves_global_average() {
+    // doubly-stochastic mixing must conserve Σ_i θ_i exactly (the quantity
+    // decentralized SGD optimizes over) — checked on random topologies and
+    // random client states
+    check("gossip-conserves-sum", 25, |g| {
+        let topo = random_topology(g);
+        let n = topo.n;
+        let len = g.usize_in(3, 40);
+        let mut clients: Vec<ParamVec> = (0..n)
+            .map(|_| {
+                ParamVec::new(
+                    vec!["w".into()],
+                    vec![Tensor::from_vec(&[len], g.vec_f32(len, -2.0, 2.0))],
+                )
+            })
+            .collect();
+        let before: f64 = clients
+            .iter()
+            .map(|c| c.tensors[0].data.iter().map(|&x| x as f64).sum::<f64>())
+            .sum();
+        let weights = topo.mixing_weights();
+        let mut net = Network::new(topo);
+        seedflood::algos::gossip_mix(&mut clients, &weights, &mut net);
+        let after: f64 = clients
+            .iter()
+            .map(|c| c.tensors[0].data.iter().map(|&x| x as f64).sum::<f64>())
+            .sum();
+        if (before - after).abs() > 1e-3 * before.abs().max(1.0) {
+            return Err(format!("sum drifted {before} -> {after}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dense_perturb_seed_roundtrip() {
+    check("perturb-roundtrip", 30, |g| {
+        let len = g.usize_in(1, 500);
+        let mut p = ParamVec::new(
+            vec!["w".into()],
+            vec![Tensor::from_vec(&[len], g.vec_f32(len, -1.0, 1.0))],
+        );
+        let orig = p.clone();
+        let seed = g.rng.next_u64();
+        let scale = g.f32_in(0.001, 2.0);
+        zo::perturb_dense(&mut p, seed, scale);
+        zo::perturb_dense(&mut p, seed, -scale);
+        for (a, b) in p.tensors[0].data.iter().zip(orig.tensors[0].data.iter()) {
+            if (a - b).abs() > 1e-3 {
+                return Err(format!("roundtrip residue {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_top_k_selects_largest_magnitudes() {
+    check("top-k", 50, |g| {
+        let len = g.usize_in(1, 200);
+        let t = Tensor::from_vec(&[len], g.vec_f32(len, -5.0, 5.0));
+        let k = g.usize_in(0, len);
+        let sel = t.top_k(k);
+        if sel.len() != k.min(len) {
+            return Err(format!("selected {} of k={k}", sel.len()));
+        }
+        let min_sel = sel.iter().map(|&(_, v)| v.abs()).fold(f32::INFINITY, f32::min);
+        let selected: std::collections::HashSet<u32> = sel.iter().map(|&(i, _)| i).collect();
+        for (i, &v) in t.data.iter().enumerate() {
+            if !selected.contains(&(i as u32)) && v.abs() > min_sel + 1e-6 {
+                return Err(format!("unselected |{v}| > min selected {min_sel}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_subcge_batched_equals_sequential() {
+    let manifest = seedflood::model::Manifest::parse(
+        r#"{
+      "config": {"name":"t","vocab":16,"seq":4,"dim":8,"layers":1,"heads":2,
+                 "mlp_ratio":4,"batch":2,"num_classes":2,"lora_rank":2,
+                 "subcge_rank":8,"num_params":200},
+      "params": [{"name":"w1","shape":[12,8]},
+                 {"name":"b1","shape":[8]},
+                 {"name":"w2","shape":[8,10]}],
+      "lora_params": [],
+      "params2d": ["w1","w2"],
+      "artifacts": {}
+    }"#,
+    )
+    .unwrap();
+    check("subcge-linearity", 20, |g| {
+        let rank_eff = g.usize_in(1, 8);
+        let basis = SubspaceBasis::new(&manifest, rank_eff, 1000, g.rng.next_u64());
+        let mut accum = CoeffAccum::new(&basis);
+        let mk = || {
+            ParamVec::new(
+                vec!["w1".into(), "b1".into(), "w2".into()],
+                vec![Tensor::zeros(&[12, 8]), Tensor::zeros(&[8]), Tensor::zeros(&[8, 10])],
+            )
+        };
+        let mut p_batch = mk();
+        let mut p_seq = mk();
+        let n_msgs = g.usize_in(1, 30);
+        for k in 0..n_msgs {
+            let msg = SeedUpdate {
+                id: MsgId { origin: k as u32, step: 0 },
+                seed: g.rng.next_u64(),
+                coeff: g.f32_in(-0.5, 0.5),
+            };
+            accum.accumulate(&basis, &msg);
+            zo::perturb_subcge(&mut p_seq, &basis, msg.seed, -msg.coeff);
+        }
+        accum.flush_rust(&basis, &mut p_batch);
+        for (a, b) in p_batch.tensors.iter().zip(p_seq.tensors.iter()) {
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                if (x - y).abs() > 1e-3 {
+                    return Err(format!("batched {x} != sequential {y}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_apply_uavt_zero_a_is_identity() {
+    check("uavt-zero", 30, |g| {
+        let (n, m, r) = (g.usize_in(1, 20), g.usize_in(1, 20), g.usize_in(1, 8));
+        let mut theta = Tensor::from_vec(&[n, m], g.vec_f32(n * m, -1.0, 1.0));
+        let before = theta.clone();
+        let u = Tensor::from_vec(&[n, r], g.vec_f32(n * r, -1.0, 1.0));
+        let v = Tensor::from_vec(&[m, r], g.vec_f32(m * r, -1.0, 1.0));
+        let a = Tensor::zeros(&[r, r]);
+        apply_uavt(&mut theta, &u, &a, &v, r);
+        if theta.data != before.data {
+            return Err("zero A changed theta".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f32_in(-1e6, 1e6) as f64 * 100.0).round() / 100.0),
+            3 => Json::Str(format!("s{}-{}", g.usize_in(0, 999), "héllo ✓")),
+            4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| random_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json-roundtrip", 60, |g| {
+        let v = random_json(g, 3);
+        let text = v.to_string_pretty();
+        match Json::parse(&text) {
+            Ok(back) if back == v => Ok(()),
+            Ok(back) => Err(format!("roundtrip changed value: {v:?} -> {back:?}")),
+            Err(e) => Err(format!("reparse failed: {e}")),
+        }
+    });
+}
+
+#[test]
+fn prop_network_byte_accounting_additive() {
+    check("byte-accounting", 30, |g| {
+        let topo = random_topology(g);
+        let n = topo.n;
+        let mut net = Network::new(topo);
+        let mut expected = 0u64;
+        for _ in 0..g.usize_in(1, 50) {
+            let src = g.usize_in(0, n - 1);
+            let nbrs = net.topology().neighbors(src).to_vec();
+            if nbrs.is_empty() {
+                continue;
+            }
+            let dst = *g.choose(&nbrs);
+            let k = g.usize_in(1, 8);
+            let payload = seedflood::net::Payload::Seeds(
+                (0..k)
+                    .map(|i| SeedUpdate {
+                        id: MsgId { origin: src as u32, step: i as u32 },
+                        seed: 0,
+                        coeff: 0.0,
+                    })
+                    .collect(),
+            );
+            expected += payload.wire_bytes();
+            net.send(src, dst, payload);
+        }
+        if net.acct.total_bytes != expected {
+            return Err(format!("{} != {expected}", net.acct.total_bytes));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_delayed_flooding_eventually_covers() {
+    // with any k >= 1, running enough iterations always reaches everyone
+    check("delayed-covers", 20, |g| {
+        let topo = random_topology(g);
+        let n = topo.n;
+        let d = topo.diameter().max(1);
+        let k = g.usize_in(1, 3);
+        let mut net = Network::new(topo);
+        let mut states: Vec<FloodState> = (0..n).map(|_| FloodState::new()).collect();
+        states[0].inject(SeedUpdate {
+            id: MsgId { origin: 0, step: 0 },
+            seed: 1,
+            coeff: 1.0,
+        });
+        // ⌈D/k⌉ "iterations" of k hops each
+        for _ in 0..d.div_ceil(k) {
+            flood_rounds(&mut states, &mut net, k, |_, _| {});
+        }
+        for (i, st) in states.iter().enumerate() {
+            if st.seen.is_empty() {
+                return Err(format!("client {i} never reached"));
+            }
+        }
+        if !states.iter().all(|s| s.seen.len() == 1) {
+            return Err("message count mismatch".into());
+        }
+        Ok(())
+    });
+}
