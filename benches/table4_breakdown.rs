@@ -1,24 +1,89 @@
-//! Table 4: per-iteration wall-clock breakdown of the SeedFlood framework
-//! under MeZO-style dense updates vs SubCGE — gradient estimation (GE:
-//! forward passes + perturbation + local update) and message applying (MA:
-//! RNG regeneration + parameter update vs coordinate update + flush).
+//! Table 4: per-iteration wall-clock breakdown of the SeedFlood framework.
 //!
-//! Paper setup: OPT-2.7B, batch 16, 16 clients (16 messages/iter) on A100.
-//! Ours: the AOT `tiny`/`small` model on CPU-PJRT, 16 messages/iter. The
-//! shape under test: SubCGE shifts MA from dominating (MeZO: MA > GE) to
-//! negligible, and cuts perturbation cost inside GE.
+//! Two sections:
+//!
+//! * **Parallel local-step scaling** (always runs, synthetic backend): one
+//!   iteration's local steps fanned out over the engine's thread pool at
+//!   `clients = 16`, timed for 1/2/4/8 workers — the wall-clock win the
+//!   ISSUE 1 engine refactor exists for. Results are identical across
+//!   thread counts (see tests/engine.rs); only the clock changes.
+//!
+//! * **GE/MA artifact breakdown** (needs real PJRT bindings + artifacts):
+//!   MeZO-style dense updates vs SubCGE — gradient estimation (GE) and
+//!   message applying (MA), the paper's 51x MA claim on our substrate.
 //!
 //! Run: cargo bench --bench table4_breakdown
 
 use std::time::Instant;
 
+use seedflood::algos;
+use seedflood::config::{ExperimentConfig, Method};
 use seedflood::model::{Manifest, ParamStore};
 use seedflood::net::{MsgId, SeedUpdate};
 use seedflood::runtime::Runtime;
+use seedflood::sim::Env;
 use seedflood::subcge::{CoeffAccum, DeviceBasisCache, SubspaceBasis};
+use seedflood::topology::{Kind, Topology};
 use seedflood::zo;
 
-fn main() -> anyhow::Result<()> {
+fn parallel_local_step_scaling() -> anyhow::Result<()> {
+    let clients = 16;
+    let iters = 30;
+    let cfg = ExperimentConfig {
+        method: Method::SeedFlood,
+        clients,
+        topology: Kind::Ring,
+        steps: iters + 1,
+        task: "sst2".into(),
+        ..Default::default()
+    };
+    let env = Env::synthetic(cfg)?;
+    let topo = Topology::build(Kind::Ring, clients, 0);
+
+    println!("== local-step fan-out: {clients} clients, {iters} iterations, synthetic oracle ==");
+    println!("{:>8} {:>12} {:>10}", "threads", "wall (ms)", "speedup");
+    let mut base_ms = 0.0f64;
+    let mut best = (1usize, f64::INFINITY);
+    for &threads in &[1usize, 2, 4, 8] {
+        let (mut algo, mut states) = algos::build(&env, &topo)?;
+        // warmup iteration (thread spawn paths, caches)
+        algo.begin_step(0, &env)?;
+        std::hint::black_box(algos::local_step_all(&*algo, &mut states, 0, &env, threads)?);
+        let t0 = Instant::now();
+        for t in 1..=iters {
+            algo.begin_step(t, &env)?;
+            let losses = algos::local_step_all(&*algo, &mut states, t, &env, threads)?;
+            std::hint::black_box(losses);
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        if threads == 1 {
+            base_ms = ms;
+        }
+        if ms < best.1 {
+            best = (threads, ms);
+        }
+        println!("{threads:>8} {ms:>12.1} {:>9.2}x", base_ms / ms);
+    }
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let speedup = base_ms / best.1;
+    if cores >= 4 && speedup <= 1.15 {
+        // a measurement, not an invariant: a loaded runner can swallow the
+        // win, so warn instead of aborting before the GE/MA section
+        println!(
+            "\nWARNING: expected the local-step phase to speed up with threads \
+             on a {cores}-core machine; best was {speedup:.2}x at {} threads",
+            best.0
+        );
+    } else {
+        println!(
+            "\nbest: {speedup:.2}x at {} threads ({cores} cores) — local-step phase scales",
+            best.0
+        );
+    }
+    Ok(())
+}
+
+fn artifact_ge_ma_breakdown() -> anyhow::Result<()> {
     let dir = if std::path::Path::new("artifacts").exists() { "artifacts" } else { "../artifacts" };
     let name = if Manifest::load(&format!("{dir}/small_manifest.json")).is_ok() {
         "small"
@@ -44,7 +109,7 @@ fn main() -> anyhow::Result<()> {
     let iters = 5; // paper: averaged over 5 steps
     let basis = SubspaceBasis::new(&m, 32, 1_000_000, 7);
 
-    println!("== Table 4: wall-clock per iteration, model={name}, {n_msgs} messages ==");
+    println!("\n== Table 4: wall-clock per iteration, model={name}, {n_msgs} messages ==");
     let mut report: Vec<(&str, f64, f64, f64)> = vec![];
 
     for (method, dense, cached) in [("MeZO", true, false),
@@ -122,6 +187,23 @@ fn main() -> anyhow::Result<()> {
         mezo_ma / sub_ma
     );
     assert!(sub_ma < mezo_ma, "SubCGE MA must beat dense MeZO MA");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    parallel_local_step_scaling()?;
+
+    let have_artifacts = ["artifacts/tiny_manifest.json", "../artifacts/tiny_manifest.json"]
+        .iter()
+        .any(|p| std::path::Path::new(p).exists());
+    // Runtime::cpu errors on the in-repo PJRT stub — probe before diving in
+    if have_artifacts && Runtime::cpu("artifacts").is_ok() {
+        artifact_ge_ma_breakdown()?;
+    } else {
+        println!(
+            "\nskipping GE/MA artifact breakdown (needs real PJRT bindings and `make artifacts`)"
+        );
+    }
     println!("table4 OK");
     Ok(())
 }

@@ -1,6 +1,8 @@
 // RSS growth probe: Literal-execute vs buffer-execute paths
+// (needs --features xla + `make artifacts`; the stub backend errors out)
 use seedflood::model::{Manifest, ParamStore};
 use seedflood::runtime::{loss_args, Runtime};
+use seedflood::xla;
 
 fn rss_mb() -> f64 {
     let s = std::fs::read_to_string("/proc/self/status").unwrap();

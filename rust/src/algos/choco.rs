@@ -10,28 +10,23 @@
 //!
 //! Surrogates are initialized to θ⁰ (paper Appendix B.2: "initialize
 //! surrogate model parameters with pretrained weights").
+//!
+//! Engine shape: x_i and the surrogates are per-client [`ClientState`]
+//! scratch; the struct holds only shared read-only state.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::{Algorithm, Space};
-use crate::data::BatchSampler;
+use super::{init_states, Algorithm, ClientState, Scratch, Space};
 use crate::net::{Network, Payload};
-use crate::sim::{consensus_error, Env};
+use crate::sim::Env;
 use crate::tensor::ParamVec;
 use crate::topology::Topology;
 
 pub struct Choco {
     space: Space,
-    /// x_i
-    clients: Vec<ParamVec>,
-    /// x̂_i (own public surrogate)
-    hat_self: Vec<ParamVec>,
-    /// x̂_j as locally tracked by i: hat_nbr[i][j]
-    hat_nbr: Vec<HashMap<usize, ParamVec>>,
-    samplers: Vec<BatchSampler>,
     weights: Vec<Vec<(usize, f32)>>,
     local_steps: usize,
     lr: f32,
@@ -40,41 +35,35 @@ pub struct Choco {
 }
 
 impl Choco {
-    pub fn new(env: &Env, topo: &Topology) -> Choco {
+    pub fn build(env: &Env, topo: &Topology) -> (Box<dyn Algorithm>, Vec<ClientState>) {
         let space = Space::for_method(env);
-        let clients: Vec<ParamVec> =
-            (0..env.n_clients()).map(|_| space.init_client(env)).collect();
-        let hat_self = clients.clone();
-        let hat_nbr = (0..env.n_clients())
-            .map(|i| {
-                topo.neighbors(i)
-                    .iter()
-                    .map(|&j| (j, clients[j].clone()))
-                    .collect()
-            })
-            .collect();
-        Choco {
+        // every client starts from the same θ⁰, and so do all surrogates
+        let theta0 = space.init_client(env);
+        let states = init_states(env, &space, |i| Scratch::Choco {
+            hat_self: theta0.clone(),
+            hat_nbr: topo
+                .neighbors(i)
+                .iter()
+                .map(|&j| (j, theta0.clone()))
+                .collect::<BTreeMap<usize, ParamVec>>(),
+        });
+        let algo = Choco {
             space,
-            clients,
-            hat_self,
-            hat_nbr,
-            samplers: env.make_samplers(),
             weights: topo.mixing_weights(),
             local_steps: env.cfg.local_steps,
             lr: env.cfg.lr,
             gamma: env.cfg.consensus_lr,
             topk_ratio: env.cfg.topk_ratio,
-        }
+        };
+        (Box::new(algo), states)
     }
 
-    /// Global top-K of |x_i − x̂_i| over the whole parameter vector,
+    /// Global top-K of |x − x̂| over the whole parameter vector,
     /// returned per-tensor as (index, value) lists.
-    fn compress(&self, i: usize) -> Vec<Vec<(u32, f32)>> {
-        let x = &self.clients[i];
-        let hat = &self.hat_self[i];
+    fn compress(&self, x: &ParamVec, hat: &ParamVec) -> Vec<Vec<(u32, f32)>> {
         let d: usize = x.num_elements();
         let k = ((self.topk_ratio as f64 * d as f64).ceil() as usize).max(1);
-        // collect (|delta|, tensor, idx, val) and select top k globally
+        // collect (|delta|, tensor, idx) and select top k globally
         let mut entries: Vec<(f32, u32, u32)> = Vec::with_capacity(d);
         for (ti, (xt, ht)) in x.tensors.iter().zip(hat.tensors.iter()).enumerate() {
             for (ei, (&a, &b)) in xt.data.iter().zip(ht.data.iter()).enumerate() {
@@ -109,68 +98,79 @@ fn apply_sparse(target: &mut ParamVec, q: &[Vec<(u32, f32)>]) {
 }
 
 impl Algorithm for Choco {
-    fn local_step(&mut self, client: usize, _step: usize, env: &Env) -> Result<f32> {
+    fn local_step(
+        &self,
+        state: &mut ClientState,
+        _client: usize,
+        _step: usize,
+        env: &Env,
+    ) -> Result<f32> {
         let (b, _) = env.batch_shape();
-        let (ids, labels) = self.samplers[client].next_batch(b);
-        let (loss, grads) = self.space.grad(env, &self.clients[client], &ids, &labels)?;
-        self.clients[client].axpy(-self.lr, &grads);
+        let (ids, labels) = state.sampler.next_batch(b);
+        let (loss, grads) = self.space.grad(env, &state.params, &ids, &labels)?;
+        state.params.axpy(-self.lr, &grads);
         Ok(loss)
     }
 
-    fn communicate(&mut self, step: usize, _env: &Env, net: &mut Network) -> Result<()> {
+    fn communicate(
+        &mut self,
+        states: &mut [ClientState],
+        step: usize,
+        _env: &Env,
+        net: &mut Network,
+    ) -> Result<()> {
         if (step + 1) % self.local_steps != 0 {
             return Ok(());
         }
-        let n = self.clients.len();
+        let n = states.len();
         // 1+2: compress, broadcast, update own surrogate
-        let qs: Vec<Arc<Vec<Vec<(u32, f32)>>>> =
-            (0..n).map(|i| Arc::new(self.compress(i))).collect();
-        for i in 0..n {
-            net.broadcast(i, &Payload::Sparse(qs[i].clone()));
-            apply_sparse(&mut self.hat_self[i], &qs[i]);
+        let qs: Vec<Arc<Vec<Vec<(u32, f32)>>>> = states
+            .iter()
+            .map(|s| {
+                let (params, hat_self, _) = s.choco_view();
+                Arc::new(self.compress(params, hat_self))
+            })
+            .collect();
+        for (i, q) in qs.iter().enumerate() {
+            net.broadcast(i, &Payload::Sparse(q.clone()));
+            let (_, hat_self, _) = states[i].choco_parts();
+            apply_sparse(hat_self, q);
         }
         // receive: update tracked neighbor surrogates
-        for i in 0..n {
+        for (i, state) in states.iter_mut().enumerate() {
             for m in net.recv_all(i) {
                 let Payload::Sparse(q) = m.payload else {
                     panic!("choco received non-sparse payload");
                 };
-                if let Some(hat) = self.hat_nbr[i].get_mut(&m.from) {
+                let (_, _, hat_nbr) = state.choco_parts();
+                if let Some(hat) = hat_nbr.get_mut(&m.from) {
                     apply_sparse(hat, &q);
                 }
             }
         }
         // 3: consensus step x_i += γ Σ_j w_ij (x̂_j − x̂_i)
-        for i in 0..n {
+        for (i, state) in states.iter_mut().enumerate() {
             let wrow = &self.weights[i];
-            let mut delta = self.clients[i].zeros_like();
-            for (&j, hat_j) in &self.hat_nbr[i] {
+            let (params, hat_self, hat_nbr) = state.choco_parts();
+            let mut delta = params.zeros_like();
+            // BTreeMap iteration: ascending neighbor id, same on every run
+            for (&j, hat_j) in hat_nbr.iter() {
                 let w = wrow.iter().find(|&&(k, _)| k == j).map(|&(_, w)| w).unwrap_or(0.0);
                 delta.axpy(w, hat_j);
-                delta.axpy(-w, &self.hat_self[i]);
+                delta.axpy(-w, hat_self);
             }
-            self.clients[i].axpy(self.gamma, &delta);
+            params.axpy(self.gamma, &delta);
         }
         Ok(())
     }
 
-    fn eval_gmp(&self, env: &Env, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<(f64, f64)> {
-        let refs: Vec<&ParamVec> = self.clients.iter().collect();
-        let avg = ParamVec::average(&refs);
-        self.space.eval(env, &avg, batches)
-    }
-
-    fn snapshot(&self) -> Vec<ParamVec> {
-        self.clients.clone()
-    }
-
-    fn restore(&mut self, snap: Vec<ParamVec>) {
-        assert_eq!(snap.len(), self.clients.len());
-        self.clients = snap;
-    }
-
-    fn consensus_error(&self) -> f64 {
-        consensus_error(&self.clients)
+    fn eval_gmp(
+        &self,
+        states: &[ClientState],
+        env: &Env,
+        batches: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<(f64, f64)> {
+        super::eval_gmp_avg(&self.space, states, env, batches)
     }
 }
 

@@ -1,72 +1,72 @@
 //! DSGD (Lian et al., 2017) and DSGD-LoRA — the first-order gossip
 //! baselines (paper Eq. 2): local SGD steps followed by Metropolis–Hastings
 //! weighted averaging of neighbor models every `local_steps` iterations.
+//!
+//! Engine shape: the struct is the shared read-only state (space, mixing
+//! weights, hyperparameters); params + sampler live in [`ClientState`].
 
 use anyhow::Result;
 
-use super::{gossip_mix, Algorithm, Space};
-use crate::data::BatchSampler;
+use super::{gossip_mix, init_states, with_client_params, Algorithm, ClientState, Scratch, Space};
 use crate::net::Network;
-use crate::sim::{consensus_error, Env};
-use crate::tensor::ParamVec;
+use crate::sim::Env;
 use crate::topology::Topology;
 
 pub struct Dsgd {
     space: Space,
-    clients: Vec<ParamVec>,
-    samplers: Vec<BatchSampler>,
     weights: Vec<Vec<(usize, f32)>>,
     local_steps: usize,
     lr: f32,
 }
 
 impl Dsgd {
-    pub fn new(env: &Env, topo: &Topology) -> Dsgd {
+    pub fn build(env: &Env, topo: &Topology) -> (Box<dyn Algorithm>, Vec<ClientState>) {
         let space = Space::for_method(env);
-        let clients = (0..env.n_clients()).map(|_| space.init_client(env)).collect();
-        Dsgd {
+        let states = init_states(env, &space, |_| Scratch::None);
+        let algo = Dsgd {
             space,
-            clients,
-            samplers: env.make_samplers(),
             weights: topo.mixing_weights(),
             local_steps: env.cfg.local_steps,
             lr: env.cfg.lr,
-        }
+        };
+        (Box::new(algo), states)
     }
 }
 
 impl Algorithm for Dsgd {
-    fn local_step(&mut self, client: usize, _step: usize, env: &Env) -> Result<f32> {
+    fn local_step(
+        &self,
+        state: &mut ClientState,
+        _client: usize,
+        _step: usize,
+        env: &Env,
+    ) -> Result<f32> {
         let (b, _) = env.batch_shape();
-        let (ids, labels) = self.samplers[client].next_batch(b);
-        let (loss, grads) = self.space.grad(env, &self.clients[client], &ids, &labels)?;
-        self.clients[client].axpy(-self.lr, &grads);
+        let (ids, labels) = state.sampler.next_batch(b);
+        let (loss, grads) = self.space.grad(env, &state.params, &ids, &labels)?;
+        state.params.axpy(-self.lr, &grads);
         Ok(loss)
     }
 
-    fn communicate(&mut self, step: usize, _env: &Env, net: &mut Network) -> Result<()> {
+    fn communicate(
+        &mut self,
+        states: &mut [ClientState],
+        step: usize,
+        _env: &Env,
+        net: &mut Network,
+    ) -> Result<()> {
         if (step + 1) % self.local_steps == 0 {
-            gossip_mix(&mut self.clients, &self.weights, net);
+            with_client_params(states, |ps| gossip_mix(ps, &self.weights, net));
         }
         Ok(())
     }
 
-    fn eval_gmp(&self, env: &Env, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<(f64, f64)> {
-        let refs: Vec<&ParamVec> = self.clients.iter().collect();
-        let avg = ParamVec::average(&refs);
-        self.space.eval(env, &avg, batches)
-    }
-
-    fn snapshot(&self) -> Vec<ParamVec> {
-        self.clients.clone()
-    }
-
-    fn restore(&mut self, snap: Vec<ParamVec>) {
-        assert_eq!(snap.len(), self.clients.len());
-        self.clients = snap;
-    }
-
-    fn consensus_error(&self) -> f64 {
-        consensus_error(&self.clients)
+    fn eval_gmp(
+        &self,
+        states: &[ClientState],
+        env: &Env,
+        batches: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<(f64, f64)> {
+        super::eval_gmp_avg(&self.space, states, env, batches)
     }
 }

@@ -6,18 +6,17 @@
 
 use anyhow::Result;
 
-use super::{gossip_mix, probe_seed, Algorithm, Space};
-use crate::data::BatchSampler;
+use super::{
+    gossip_mix, init_states, probe_seed, with_client_params, Algorithm, ClientState, Scratch,
+    Space,
+};
 use crate::net::Network;
-use crate::sim::{consensus_error, Env};
-use crate::tensor::ParamVec;
+use crate::sim::Env;
 use crate::topology::Topology;
 use crate::zo;
 
 pub struct Dzsgd {
     space: Space,
-    clients: Vec<ParamVec>,
-    samplers: Vec<BatchSampler>,
     weights: Vec<Vec<(usize, f32)>>,
     local_steps: usize,
     lr: f32,
@@ -26,32 +25,37 @@ pub struct Dzsgd {
 }
 
 impl Dzsgd {
-    pub fn new(env: &Env, topo: &Topology) -> Dzsgd {
+    pub fn build(env: &Env, topo: &Topology) -> (Box<dyn Algorithm>, Vec<ClientState>) {
         let space = Space::for_method(env);
-        let clients = (0..env.n_clients()).map(|_| space.init_client(env)).collect();
-        Dzsgd {
+        let states = init_states(env, &space, |_| Scratch::None);
+        let algo = Dzsgd {
             space,
-            clients,
-            samplers: env.make_samplers(),
             weights: topo.mixing_weights(),
             local_steps: env.cfg.local_steps,
             lr: env.cfg.lr,
             eps: env.cfg.eps,
             seed: env.cfg.seed,
-        }
+        };
+        (Box::new(algo), states)
     }
 }
 
 impl Algorithm for Dzsgd {
-    fn local_step(&mut self, client: usize, step: usize, env: &Env) -> Result<f32> {
+    fn local_step(
+        &self,
+        state: &mut ClientState,
+        client: usize,
+        step: usize,
+        env: &Env,
+    ) -> Result<f32> {
         let (b, _) = env.batch_shape();
-        let (ids, labels) = self.samplers[client].next_batch(b);
+        let (ids, labels) = state.sampler.next_batch(b);
         let seed = probe_seed(self.seed, client, step);
         let space = &self.space;
         let mut probe_err = None;
         let mut first_loss = None;
         let alpha = zo::spsa_alpha(
-            &mut self.clients[client],
+            &mut state.params,
             self.eps,
             |p| match space.loss(env, p, &ids, &labels) {
                 Ok((l, _)) => {
@@ -69,33 +73,29 @@ impl Algorithm for Dzsgd {
             return Err(e);
         }
         // ZO-SGD descent along the reconstructed direction (Eq. 4)
-        zo::apply_dense_update(&mut self.clients[client], seed, self.lr * alpha);
+        zo::apply_dense_update(&mut state.params, seed, self.lr * alpha);
         Ok(first_loss.unwrap_or(0.0))
     }
 
-    fn communicate(&mut self, step: usize, _env: &Env, net: &mut Network) -> Result<()> {
+    fn communicate(
+        &mut self,
+        states: &mut [ClientState],
+        step: usize,
+        _env: &Env,
+        net: &mut Network,
+    ) -> Result<()> {
         if (step + 1) % self.local_steps == 0 {
-            gossip_mix(&mut self.clients, &self.weights, net);
+            with_client_params(states, |ps| gossip_mix(ps, &self.weights, net));
         }
         Ok(())
     }
 
-    fn eval_gmp(&self, env: &Env, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<(f64, f64)> {
-        let refs: Vec<&ParamVec> = self.clients.iter().collect();
-        let avg = ParamVec::average(&refs);
-        self.space.eval(env, &avg, batches)
-    }
-
-    fn snapshot(&self) -> Vec<ParamVec> {
-        self.clients.clone()
-    }
-
-    fn restore(&mut self, snap: Vec<ParamVec>) {
-        assert_eq!(snap.len(), self.clients.len());
-        self.clients = snap;
-    }
-
-    fn consensus_error(&self) -> f64 {
-        consensus_error(&self.clients)
+    fn eval_gmp(
+        &self,
+        states: &[ClientState],
+        env: &Env,
+        batches: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<(f64, f64)> {
+        super::eval_gmp_avg(&self.space, states, env, batches)
     }
 }

@@ -2,10 +2,23 @@
 //! behind one trait: DSGD, ChocoSGD, DZSGD, their LoRA variants, SeedFlood,
 //! and the single-client MeZO/SubCGE baselines (Table 3).
 //!
-//! The simulator drives the paper's protocol: `local_step` once per client
-//! per iteration, then `communicate` once per iteration — each algorithm
-//! decides internally whether to act (gossip methods exchange every
-//! `local_steps` iterations; SeedFlood floods every iteration, per Alg. 1).
+//! # The parallel client-execution engine (ISSUE 1 tentpole)
+//!
+//! An [`Algorithm`] is now *shared, read-only state* for the local phase
+//! (mixing weights, the SubCGE basis, hyperparameters, the LoRA [`Space`]);
+//! everything a single client mutates during a local step lives in an
+//! explicit [`ClientState`] (params, mini-batch sampler, a private RNG
+//! stream, and algorithm scratch — flooding dedup sets, coefficient
+//! accumulators, Choco surrogates). The engine owns the `Vec<ClientState>`
+//! and drives one iteration as:
+//!
+//! 1. [`Algorithm::begin_step`] — sequential hook for shared-state
+//!    mutation (e.g. the τ-periodic basis refresh);
+//! 2. [`local_step_all`] — fans `local_step` out over a scoped-thread pool
+//!    ([`crate::util::par`]), one client per invocation, merging losses in
+//!    client order so a parallel run reproduces a sequential run exactly;
+//! 3. [`Algorithm::communicate`] — sequential, deterministic network
+//!    rounds (each algorithm applies its own schedule).
 
 pub mod choco;
 pub mod dsgd;
@@ -13,31 +26,135 @@ pub mod dzsgd;
 pub mod seedflood;
 pub mod single;
 
+use std::collections::BTreeMap;
+
 use anyhow::Result;
 
 use crate::config::Method;
+use crate::data::BatchSampler;
+use crate::flood::FloodState;
 use crate::model::ParamStore;
 use crate::net::Network;
+use crate::rng::Rng;
 use crate::sim::Env;
+use crate::subcge::CoeffAccum;
 use crate::tensor::ParamVec;
 use crate::topology::Topology;
+use crate::util::par::par_map_mut;
 
-/// One decentralized training method.
-pub trait Algorithm {
-    /// One local optimization step for `client` at iteration `step`;
-    /// returns the training loss observed.
-    fn local_step(&mut self, client: usize, step: usize, env: &Env) -> Result<f32>;
+/// Per-client mutable state, owned by the engine and handed to exactly one
+/// worker thread at a time during the local phase.
+pub struct ClientState {
+    /// this client's trainable parameters (full θ_i or LoRA adapters)
+    pub params: ParamVec,
+    /// mini-batch iterator over the client's local shard
+    pub sampler: BatchSampler,
+    /// private RNG stream seeded from `cfg.seed` and the client id —
+    /// reserved for client-local randomness (upcoming churn/async work);
+    /// today's probe randomness flows through `probe_seed` and the sampler
+    pub rng: Rng,
+    /// algorithm-specific scratch
+    pub scratch: Scratch,
+}
+
+/// Algorithm-specific per-client scratch.
+pub enum Scratch {
+    None,
+    /// SeedFlood: coefficient accumulator + flooding protocol state
+    Flood { accum: CoeffAccum, flood: FloodState },
+    /// single-client SubCGE: coefficient accumulator only
+    Accum(CoeffAccum),
+    /// ChocoSGD: own public surrogate x̂_i + tracked neighbor surrogates
+    /// (BTreeMap, not HashMap: the consensus step iterates this map and
+    /// float sums must accumulate in the same order on every run for the
+    /// engine's determinism contract)
+    Choco { hat_self: ParamVec, hat_nbr: BTreeMap<usize, ParamVec> },
+}
+
+impl ClientState {
+    /// Split-borrow params + SeedFlood scratch.
+    pub fn flood_parts(&mut self) -> (&mut ParamVec, &mut CoeffAccum, &mut FloodState) {
+        match &mut self.scratch {
+            Scratch::Flood { accum, flood } => (&mut self.params, accum, flood),
+            _ => panic!("client state has no flooding scratch"),
+        }
+    }
+
+    /// Split-borrow params + a coefficient accumulator (SeedFlood or
+    /// single-client SubCGE).
+    pub fn accum_parts(&mut self) -> (&mut ParamVec, &mut CoeffAccum) {
+        match &mut self.scratch {
+            Scratch::Flood { accum, .. } => (&mut self.params, accum),
+            Scratch::Accum(accum) => (&mut self.params, accum),
+            _ => panic!("client state has no coefficient accumulator"),
+        }
+    }
+
+    /// Split-borrow params + Choco surrogates.
+    pub fn choco_parts(
+        &mut self,
+    ) -> (&mut ParamVec, &mut ParamVec, &mut BTreeMap<usize, ParamVec>) {
+        match &mut self.scratch {
+            Scratch::Choco { hat_self, hat_nbr } => (&mut self.params, hat_self, hat_nbr),
+            _ => panic!("client state has no choco scratch"),
+        }
+    }
+
+    /// Immutable view of the Choco surrogates.
+    pub fn choco_view(&self) -> (&ParamVec, &ParamVec, &BTreeMap<usize, ParamVec>) {
+        match &self.scratch {
+            Scratch::Choco { hat_self, hat_nbr } => (&self.params, hat_self, hat_nbr),
+            _ => panic!("client state has no choco scratch"),
+        }
+    }
+}
+
+/// One decentralized training method. Implementations must be
+/// `Send + Sync`: during the local phase the same `&self` is shared by all
+/// worker threads (interior mutability only for thread-safe telemetry like
+/// [`crate::util::timer::SharedClock`]).
+pub trait Algorithm: Send + Sync {
+    /// Sequential pre-iteration hook — the only place shared state may be
+    /// mutated (e.g. SeedFlood's τ-periodic subspace refresh).
+    fn begin_step(&mut self, _step: usize, _env: &Env) -> Result<()> {
+        Ok(())
+    }
+
+    /// One local optimization step for one client at iteration `step`;
+    /// returns the training loss observed. Runs concurrently across
+    /// clients — it must only touch `state` and read-only shared state.
+    fn local_step(
+        &self,
+        state: &mut ClientState,
+        client: usize,
+        step: usize,
+        env: &Env,
+    ) -> Result<f32>;
 
     /// One communication opportunity after iteration `step` (the algorithm
-    /// applies its own schedule).
-    fn communicate(&mut self, step: usize, env: &Env, net: &mut Network) -> Result<()>;
+    /// applies its own schedule). Sequential and deterministic.
+    fn communicate(
+        &mut self,
+        states: &mut [ClientState],
+        step: usize,
+        env: &Env,
+        net: &mut Network,
+    ) -> Result<()>;
 
     /// Global Model Performance: evaluate the *average* of client models
     /// (paper §4.1 metric) on the given batches → (loss, accuracy).
-    fn eval_gmp(&self, env: &Env, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<(f64, f64)>;
+    fn eval_gmp(
+        &self,
+        states: &[ClientState],
+        env: &Env,
+        batches: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<(f64, f64)>;
 
     /// Mean squared distance of client models from their average.
-    fn consensus_error(&self) -> f64;
+    fn consensus_error(&self, states: &[ClientState]) -> f64 {
+        let refs: Vec<&ParamVec> = states.iter().map(|s| &s.params).collect();
+        crate::sim::consensus_error_refs(&refs)
+    }
 
     /// Optional per-phase wall-clock breakdown (Table 4).
     fn phase_ms(&self) -> Vec<(String, f64)> {
@@ -46,10 +163,83 @@ pub trait Algorithm {
 
     /// Snapshot of the trainable state (per-client param vectors) for the
     /// paper's best-validation checkpoint selection (Table 5 note).
-    fn snapshot(&self) -> Vec<ParamVec>;
+    fn snapshot(&self, states: &[ClientState]) -> Vec<ParamVec> {
+        states.iter().map(|s| s.params.clone()).collect()
+    }
 
     /// Restore a snapshot taken by [`Self::snapshot`].
-    fn restore(&mut self, snap: Vec<ParamVec>);
+    fn restore(&self, states: &mut [ClientState], snap: Vec<ParamVec>) {
+        assert_eq!(snap.len(), states.len());
+        for (s, p) in states.iter_mut().zip(snap) {
+            s.params = p;
+        }
+    }
+}
+
+/// Fan one iteration's local steps out across up to `threads` workers
+/// (0 = all cores). Losses come back in client order and the first error
+/// (lowest client id) wins, so the outcome is identical for every thread
+/// count — the engine's determinism contract (tests/engine.rs).
+pub fn local_step_all(
+    algo: &dyn Algorithm,
+    states: &mut [ClientState],
+    step: usize,
+    env: &Env,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    par_map_mut(states, threads, |i, st| algo.local_step(st, i, step, env))
+        .into_iter()
+        .collect()
+}
+
+/// Build the common per-client states: θ⁰ from the method's [`Space`], the
+/// client's shard sampler, a private RNG stream, plus per-algo scratch.
+pub fn init_states(
+    env: &Env,
+    space: &Space,
+    mut scratch: impl FnMut(usize) -> Scratch,
+) -> Vec<ClientState> {
+    env.make_samplers()
+        .into_iter()
+        .enumerate()
+        .map(|(i, sampler)| ClientState {
+            params: space.init_client(env),
+            sampler,
+            rng: Rng::fold_in(env.cfg.seed ^ 0xC11E_57A7E, i as u64),
+            scratch: scratch(i),
+        })
+        .collect()
+}
+
+/// GMP (paper §4.1): evaluate the average of the client models in the
+/// method's trainable space — the shared `eval_gmp` body of every
+/// multi-client algorithm.
+pub fn eval_gmp_avg(
+    space: &Space,
+    states: &[ClientState],
+    env: &Env,
+    batches: &[(Vec<i32>, Vec<i32>)],
+) -> Result<(f64, f64)> {
+    let refs: Vec<&ParamVec> = states.iter().map(|s| &s.params).collect();
+    let avg = ParamVec::average(&refs);
+    space.eval(env, &avg, batches)
+}
+
+/// Temporarily assemble the per-client params into one contiguous slice for
+/// cross-client mixing ops (gossip), putting them back afterwards.
+pub fn with_client_params<R>(
+    states: &mut [ClientState],
+    f: impl FnOnce(&mut [ParamVec]) -> R,
+) -> R {
+    let mut ps: Vec<ParamVec> = states
+        .iter_mut()
+        .map(|s| std::mem::replace(&mut s.params, ParamVec::new(vec![], vec![])))
+        .collect();
+    let out = f(&mut ps);
+    for (s, p) in states.iter_mut().zip(ps) {
+        s.params = p;
+    }
+    out
 }
 
 /// Whether a method trains the full parameter vector or LoRA adapters over
@@ -77,14 +267,26 @@ impl Space {
         }
     }
 
-    pub fn loss(&self, env: &Env, p: &ParamVec, ids: &[i32], labels: &[i32]) -> Result<(f32, f32)> {
+    pub fn loss(
+        &self,
+        env: &Env,
+        p: &ParamVec,
+        ids: &[i32],
+        labels: &[i32],
+    ) -> Result<(f32, f32)> {
         match self {
             Space::Full => env.loss_acc(p, ids, labels),
             Space::Lora { base } => env.loss_acc_lora(base, p, ids, labels),
         }
     }
 
-    pub fn grad(&self, env: &Env, p: &ParamVec, ids: &[i32], labels: &[i32]) -> Result<(f32, ParamVec)> {
+    pub fn grad(
+        &self,
+        env: &Env,
+        p: &ParamVec,
+        ids: &[i32],
+        labels: &[i32],
+    ) -> Result<(f32, ParamVec)> {
         match self {
             Space::Full => env.grad(p, ids, labels),
             Space::Lora { base } => env.grad_lora(base, p, ids, labels),
@@ -151,21 +353,22 @@ pub fn gossip_mix(
     }
 }
 
-/// Construct the configured algorithm.
-pub fn build(env: &Env, topo: &Topology) -> Result<Box<dyn Algorithm>> {
+/// Construct the configured algorithm plus its per-client states.
+pub fn build(env: &Env, topo: &Topology) -> Result<(Box<dyn Algorithm>, Vec<ClientState>)> {
     Ok(match env.cfg.method {
-        Method::Dsgd | Method::DsgdLora => Box::new(dsgd::Dsgd::new(env, topo)),
-        Method::ChocoSgd | Method::ChocoLora => Box::new(choco::Choco::new(env, topo)),
-        Method::Dzsgd | Method::DzsgdLora => Box::new(dzsgd::Dzsgd::new(env, topo)),
-        Method::SeedFlood => Box::new(seedflood::SeedFlood::new(env, topo)),
-        Method::Mezo => Box::new(single::SingleZo::new(env, false)),
-        Method::SubCge => Box::new(single::SingleZo::new(env, true)),
+        Method::Dsgd | Method::DsgdLora => dsgd::Dsgd::build(env, topo),
+        Method::ChocoSgd | Method::ChocoLora => choco::Choco::build(env, topo),
+        Method::Dzsgd | Method::DzsgdLora => dzsgd::Dzsgd::build(env, topo),
+        Method::SeedFlood => seedflood::SeedFlood::build(env, topo),
+        Method::Mezo => single::SingleZo::build(env, false),
+        Method::SubCge => single::SingleZo::build(env, true),
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Tensor;
 
     #[test]
     fn probe_seeds_unique() {
@@ -178,5 +381,28 @@ mod tests {
         // deterministic
         assert_eq!(probe_seed(7, 3, 5), probe_seed(7, 3, 5));
         assert_ne!(probe_seed(7, 3, 5), probe_seed(8, 3, 5));
+    }
+
+    #[test]
+    fn with_client_params_roundtrips() {
+        let mk = |v: f32| ClientState {
+            params: ParamVec::new(vec!["w".into()], vec![Tensor::from_vec(&[2], vec![v, v])]),
+            sampler: BatchSampler::new(
+                vec![crate::data::Example { tokens: vec![0, 1], label: 0 }],
+                0,
+            ),
+            rng: Rng::new(0),
+            scratch: Scratch::None,
+        };
+        let mut states = vec![mk(1.0), mk(2.0)];
+        let sum = with_client_params(&mut states, |ps| {
+            assert_eq!(ps.len(), 2);
+            ps[0].scale(10.0);
+            ps.iter().map(|p| p.tensors[0].data[0]).sum::<f32>()
+        });
+        assert_eq!(sum, 12.0);
+        // mutation inside the closure is visible after the roundtrip
+        assert_eq!(states[0].params.tensors[0].data, vec![10.0, 10.0]);
+        assert_eq!(states[1].params.tensors[0].data, vec![2.0, 2.0]);
     }
 }

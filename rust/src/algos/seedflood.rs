@@ -12,43 +12,47 @@
 //!      accumulator, and flushes the batched update `θ − U A Vᵀ` through
 //!      the AOT pallas kernel.
 //!
+//! Engine shape: the basis and hyperparameters are shared read-only state
+//! (the basis refresh happens in the sequential [`Algorithm::begin_step`]
+//! hook); each client's accumulator and flooding state live in its
+//! [`ClientState`], so step (B) runs concurrently across clients while
+//! step (C) stays sequential and deterministic.
+//!
 //! Phase wall-clock is tracked as "GE" (gradient estimation) and "MA"
 //! (message applying) to regenerate Table 4.
 
+use std::time::Instant;
+
 use anyhow::Result;
 
-use super::{probe_seed, Algorithm};
-use crate::data::BatchSampler;
+use super::{init_states, probe_seed, Algorithm, ClientState, Scratch, Space};
 use crate::flood::{FloodState, WireFormat};
 use crate::net::{MsgId, Network, SeedUpdate};
-use crate::sim::{consensus_error, Env};
+use crate::sim::Env;
 use crate::subcge::{CoeffAccum, DeviceBasisCache, SubspaceBasis};
-use crate::tensor::ParamVec;
 use crate::topology::Topology;
-use crate::util::timer::PhaseClock;
+use crate::util::timer::SharedClock;
 use crate::zo;
 
 pub struct SeedFlood {
-    clients: Vec<ParamVec>,
+    /// globally shared subspace factors — mutated only in `begin_step`
     basis: SubspaceBasis,
-    accums: Vec<CoeffAccum>,
-    floods: Vec<FloodState>,
-    samplers: Vec<BatchSampler>,
     flood_steps: usize,
     lr: f32,
     eps: f32,
     seed: u64,
     n: usize,
-    clock: PhaseClock,
+    clock: SharedClock,
     /// use the AOT pallas artifact for the flush (true on the hot path;
-    /// false falls back to the pure-rust kernel — used by tests/benches)
+    /// false falls back to the pure-rust kernel — used by tests/benches;
+    /// the synthetic backend always takes the pure-rust path)
     pub use_artifact: bool,
     /// device-resident basis factors (rebuilt on subspace refresh)
     device_cache: Option<DeviceBasisCache>,
 }
 
 impl SeedFlood {
-    pub fn new(env: &Env, topo: &Topology) -> SeedFlood {
+    pub fn build(env: &Env, topo: &Topology) -> (Box<dyn Algorithm>, Vec<ClientState>) {
         let n = env.n_clients();
         let basis = SubspaceBasis::new(
             &env.manifest,
@@ -56,79 +60,67 @@ impl SeedFlood {
             env.cfg.refresh,
             env.cfg.seed ^ 0x5EED_F100D,
         );
-        let accums = (0..n).map(|_| CoeffAccum::new(&basis)).collect();
-        let clients = (0..n).map(|_| env.init_params.clone()).collect();
+        let wire = if env.cfg.quantize_msgs {
+            WireFormat::Quantized(env.cfg.lr)
+        } else {
+            WireFormat::Full
+        };
+        let space = Space::Full;
+        let states = init_states(env, &space, |_| Scratch::Flood {
+            accum: CoeffAccum::new(&basis),
+            flood: FloodState { wire, ..FloodState::new() },
+        });
         let flood_steps = if env.cfg.flood_steps == 0 {
             topo.diameter().max(1)
         } else {
             env.cfg.flood_steps
         };
-        SeedFlood {
-            clients,
+        let algo = SeedFlood {
             basis,
-            accums,
-            floods: (0..n)
-                .map(|_| FloodState {
-                    wire: if env.cfg.quantize_msgs {
-                        WireFormat::Quantized(env.cfg.lr)
-                    } else {
-                        WireFormat::Full
-                    },
-                    ..FloodState::new()
-                })
-                .collect(),
-            samplers: env.make_samplers(),
             flood_steps,
             lr: env.cfg.lr,
             eps: env.cfg.eps,
             seed: env.cfg.seed,
             n,
-            clock: PhaseClock::new(),
+            clock: SharedClock::new(),
             use_artifact: true,
             device_cache: None,
-        }
-    }
-
-    fn flush(&mut self, client: usize, env: &Env) -> Result<()> {
-        if self.use_artifact {
-            if self.device_cache.is_none() {
-                self.device_cache = Some(DeviceBasisCache::new(&self.basis, &env.rt)?);
-            }
-            self.accums[client].flush_with_artifact_cached(
-                &self.basis,
-                self.device_cache.as_mut().unwrap(),
-                &mut self.clients[client],
-                &env.exe_subcge,
-                &env.rt,
-            )
-        } else {
-            self.accums[client].flush_rust(&self.basis, &mut self.clients[client]);
-            Ok(())
-        }
+        };
+        (Box::new(algo), states)
     }
 }
 
 impl Algorithm for SeedFlood {
-    fn local_step(&mut self, client: usize, step: usize, env: &Env) -> Result<f32> {
-        // (A) subspace refresh — once per iteration, driven by client 0 so
-        // the shared basis flips exactly once (all clients see the same
-        // basis because it is stored once; determinism is unit-tested).
-        if client == 0 && step > 0 {
-            // pending accumulators must be empty across a basis change;
-            // they are — communicate() flushes every iteration.
-            self.basis.maybe_refresh(step);
+    fn begin_step(&mut self, step: usize, _env: &Env) -> Result<()> {
+        // (A) subspace refresh — sequential, before the local-step fan-out,
+        // so all clients see the same basis this iteration. Pending
+        // accumulators are empty across a basis change; they are —
+        // communicate() flushes every iteration.
+        if step > 0 && self.basis.maybe_refresh(step) {
+            // device copies are stale; DeviceBasisCache::sync would catch
+            // the epoch bump too, dropping keeps the invariant obvious
+            self.device_cache = None;
         }
+        Ok(())
+    }
 
+    fn local_step(
+        &self,
+        state: &mut ClientState,
+        client: usize,
+        step: usize,
+        env: &Env,
+    ) -> Result<f32> {
         // (B) local gradient estimation in the shared subspace
         let (b, _) = env.batch_shape();
-        let (ids, labels) = self.samplers[client].next_batch(b);
+        let (ids, labels) = state.sampler.next_batch(b);
         let seed = probe_seed(self.seed, client, step);
         let basis = &self.basis;
         let mut probe_err = None;
         let mut first_loss = None;
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let alpha = zo::spsa_alpha(
-            &mut self.clients[client],
+            &mut state.params,
             self.eps,
             |p| match env.loss_acc(p, &ids, &labels) {
                 Ok((l, _)) => {
@@ -155,58 +147,65 @@ impl Algorithm for SeedFlood {
         };
         // inject first: under the quantized wire format the origin must
         // apply the same rounded coefficient every other client will see
-        let msg = self.floods[client].inject(msg);
-        let t1 = std::time::Instant::now();
-        self.accums[client].accumulate(&self.basis, &msg); // own update
+        let (_, accum, flood) = state.flood_parts();
+        let msg = flood.inject(msg);
+        let t1 = Instant::now();
+        accum.accumulate(basis, &msg); // own update
         self.clock.add("MA", t1.elapsed());
         Ok(first_loss.unwrap_or(0.0))
     }
 
-    fn communicate(&mut self, _step: usize, env: &Env, net: &mut Network) -> Result<()> {
+    fn communicate(
+        &mut self,
+        states: &mut [ClientState],
+        _step: usize,
+        env: &Env,
+        net: &mut Network,
+    ) -> Result<()> {
         // (C) k synchronous flooding rounds; fold fresh messages as they
         // arrive (coordinate update is O(1) per message per layer)
         for _ in 0..self.flood_steps {
-            for (i, st) in self.floods.iter_mut().enumerate() {
-                st.send_round(i, net);
+            for (i, st) in states.iter_mut().enumerate() {
+                let (_, _, flood) = st.flood_parts();
+                flood.send_round(i, net);
             }
-            for i in 0..self.n {
-                let fresh = self.floods[i].collect(i, net);
+            for (i, st) in states.iter_mut().enumerate() {
+                let (_, accum, flood) = st.flood_parts();
+                let fresh = flood.collect(i, net);
                 if fresh.is_empty() {
                     continue;
                 }
-                let t0 = std::time::Instant::now();
+                let t0 = Instant::now();
                 for m in &fresh {
-                    self.accums[i].accumulate(&self.basis, m);
+                    accum.accumulate(&self.basis, m);
                 }
                 self.clock.add("MA", t0.elapsed());
             }
         }
         // apply the batched update through the pallas artifact (Eq. 10)
-        for i in 0..self.n {
-            let t0 = std::time::Instant::now();
-            self.flush(i, env)?;
+        if self.use_artifact && self.device_cache.is_none() {
+            self.device_cache = env.make_device_cache(&self.basis)?;
+        }
+        for st in states.iter_mut() {
+            let t0 = Instant::now();
+            let (params, accum) = st.accum_parts();
+            if self.use_artifact {
+                env.subcge_flush(&self.basis, accum, params, self.device_cache.as_mut())?;
+            } else {
+                accum.flush_rust(&self.basis, params);
+            }
             self.clock.add("MA", t0.elapsed());
         }
         Ok(())
     }
 
-    fn eval_gmp(&self, env: &Env, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<(f64, f64)> {
-        let refs: Vec<&ParamVec> = self.clients.iter().collect();
-        let avg = ParamVec::average(&refs);
-        env.eval_full(&avg, batches)
-    }
-
-    fn snapshot(&self) -> Vec<ParamVec> {
-        self.clients.clone()
-    }
-
-    fn restore(&mut self, snap: Vec<ParamVec>) {
-        assert_eq!(snap.len(), self.clients.len());
-        self.clients = snap;
-    }
-
-    fn consensus_error(&self) -> f64 {
-        consensus_error(&self.clients)
+    fn eval_gmp(
+        &self,
+        states: &[ClientState],
+        env: &Env,
+        batches: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<(f64, f64)> {
+        super::eval_gmp_avg(&Space::Full, states, env, batches)
     }
 
     fn phase_ms(&self) -> Vec<(String, f64)> {

@@ -2,66 +2,79 @@
 //! perturbations, Malladi et al. 2023) vs SubCGE (shared-subspace
 //! canonical-coordinate perturbations) — the sanity check that restricting
 //! the perturbation pool does not hurt final quality.
+//!
+//! Engine shape: n = 1, so the "fan-out" is a single local step; the basis
+//! still refreshes in `begin_step` and the params/accumulator live in the
+//! one [`ClientState`].
+
+use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{probe_seed, Algorithm};
-use crate::data::BatchSampler;
+use super::{init_states, probe_seed, Algorithm, ClientState, Scratch, Space};
 use crate::net::{MsgId, Network, SeedUpdate};
 use crate::sim::Env;
 use crate::subcge::{CoeffAccum, SubspaceBasis};
-use crate::tensor::ParamVec;
-use crate::util::timer::PhaseClock;
+use crate::util::timer::SharedClock;
 use crate::zo;
 
 pub struct SingleZo {
-    params: ParamVec,
     basis: Option<SubspaceBasis>,
-    accum: Option<CoeffAccum>,
-    sampler: BatchSampler,
     lr: f32,
     eps: f32,
     seed: u64,
-    clock: PhaseClock,
+    clock: SharedClock,
 }
 
 impl SingleZo {
-    pub fn new(env: &Env, subcge: bool) -> SingleZo {
+    pub fn build(env: &Env, subcge: bool) -> (Box<dyn Algorithm>, Vec<ClientState>) {
         assert_eq!(env.n_clients(), 1, "single-client methods need --clients 1");
         let basis = subcge.then(|| {
             SubspaceBasis::new(&env.manifest, env.cfg.rank, env.cfg.refresh,
                                env.cfg.seed ^ 0x5EED_F100D)
         });
-        let accum = basis.as_ref().map(CoeffAccum::new);
-        SingleZo {
-            params: env.init_params.clone(),
+        let space = Space::Full;
+        let states = init_states(env, &space, |_| match &basis {
+            Some(b) => Scratch::Accum(CoeffAccum::new(b)),
+            None => Scratch::None,
+        });
+        let algo = SingleZo {
             basis,
-            accum,
-            sampler: env.make_samplers().remove(0),
             lr: env.cfg.lr,
             eps: env.cfg.eps,
             seed: env.cfg.seed,
-            clock: PhaseClock::new(),
-        }
+            clock: SharedClock::new(),
+        };
+        (Box::new(algo), states)
     }
 }
 
 impl Algorithm for SingleZo {
-    fn local_step(&mut self, _client: usize, step: usize, env: &Env) -> Result<f32> {
+    fn begin_step(&mut self, step: usize, _env: &Env) -> Result<()> {
         if let Some(b) = &mut self.basis {
             if step > 0 {
                 b.maybe_refresh(step);
             }
         }
+        Ok(())
+    }
+
+    fn local_step(
+        &self,
+        state: &mut ClientState,
+        _client: usize,
+        step: usize,
+        env: &Env,
+    ) -> Result<f32> {
         let (bsz, _) = env.batch_shape();
-        let (ids, labels) = self.sampler.next_batch(bsz);
+        let (ids, labels) = state.sampler.next_batch(bsz);
         let seed = probe_seed(self.seed, 0, step);
         let mut probe_err = None;
         let mut first_loss = None;
         let basis = &self.basis;
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let alpha = zo::spsa_alpha(
-            &mut self.params,
+            &mut state.params,
             self.eps,
             |p| match env.loss_acc(p, &ids, &labels) {
                 Ok((l, _)) => {
@@ -82,9 +95,10 @@ impl Algorithm for SingleZo {
         if let Some(e) = probe_err {
             return Err(e);
         }
-        let t1 = std::time::Instant::now();
-        match (&self.basis, &mut self.accum) {
-            (Some(basis), Some(accum)) => {
+        let t1 = Instant::now();
+        match &self.basis {
+            Some(basis) => {
+                let (params, accum) = state.accum_parts();
                 accum.accumulate(
                     basis,
                     &SeedUpdate {
@@ -93,31 +107,34 @@ impl Algorithm for SingleZo {
                         coeff: self.lr * alpha,
                     },
                 );
-                accum.flush_with_artifact(basis, &mut self.params, &env.exe_subcge, &env.rt)?;
+                env.subcge_flush(basis, accum, params, None)?;
             }
-            _ => zo::apply_dense_update(&mut self.params, seed, self.lr * alpha),
+            None => zo::apply_dense_update(&mut state.params, seed, self.lr * alpha),
         }
         self.clock.add("MA", t1.elapsed());
         Ok(first_loss.unwrap_or(0.0))
     }
 
-    fn communicate(&mut self, _step: usize, _env: &Env, _net: &mut Network) -> Result<()> {
+    fn communicate(
+        &mut self,
+        _states: &mut [ClientState],
+        _step: usize,
+        _env: &Env,
+        _net: &mut Network,
+    ) -> Result<()> {
         Ok(())
     }
 
-    fn eval_gmp(&self, env: &Env, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<(f64, f64)> {
-        env.eval_full(&self.params, batches)
+    fn eval_gmp(
+        &self,
+        states: &[ClientState],
+        env: &Env,
+        batches: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<(f64, f64)> {
+        env.eval_full(&states[0].params, batches)
     }
 
-    fn snapshot(&self) -> Vec<ParamVec> {
-        vec![self.params.clone()]
-    }
-
-    fn restore(&mut self, snap: Vec<ParamVec>) {
-        self.params = snap.into_iter().next().unwrap();
-    }
-
-    fn consensus_error(&self) -> f64 {
+    fn consensus_error(&self, _states: &[ClientState]) -> f64 {
         0.0
     }
 

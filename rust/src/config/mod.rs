@@ -108,6 +108,10 @@ pub struct ExperimentConfig {
     /// label-skew heterogeneity: Dirichlet α for the client partition
     /// (0 = the paper's uniform split)
     pub dirichlet_alpha: f64,
+    /// worker threads for the local-step fan-out (1 = sequential,
+    /// 0 = all cores). Never changes results: a parallel run reproduces the
+    /// sequential `RunRecord` exactly (tests/engine.rs).
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -136,6 +140,7 @@ impl Default for ExperimentConfig {
             init_from: String::new(),
             quantize_msgs: false,
             dirichlet_alpha: 0.0,
+            threads: 1,
         }
     }
 }
@@ -174,6 +179,7 @@ impl ExperimentConfig {
         c.init_from = args.get_or("init-from", &c.init_from).to_string();
         c.quantize_msgs = args.has("quantize") || c.quantize_msgs;
         c.dirichlet_alpha = args.get_parse("dirichlet-alpha", c.dirichlet_alpha)?;
+        c.threads = args.get_parse("threads", c.threads)?;
         Ok(c)
     }
 
@@ -207,6 +213,9 @@ impl ExperimentConfig {
                 "eval_every" => self.eval_every = v.as_int()? as usize,
                 "artifacts_dir" => self.artifacts_dir = v.as_str()?.to_string(),
                 "init_from" => self.init_from = v.as_str()?.to_string(),
+                "quantize_msgs" => self.quantize_msgs = v.as_bool()?,
+                "dirichlet_alpha" => self.dirichlet_alpha = v.as_float()?,
+                "threads" => self.threads = v.as_int()? as usize,
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -234,7 +243,7 @@ mod tests {
     fn from_args_overrides() {
         let args = Args::parse(
             ["--method", "dsgd", "--clients", "32", "--topology", "mesh",
-             "--lr", "0.0001", "--steps", "50"]
+             "--lr", "0.0001", "--steps", "50", "--threads", "4"]
                 .iter()
                 .map(|s| s.to_string()),
             &[],
@@ -245,6 +254,12 @@ mod tests {
         assert_eq!(c.topology, Kind::Meshgrid);
         assert_eq!(c.lr, 1e-4);
         assert_eq!(c.steps, 50);
+        assert_eq!(c.threads, 4);
+    }
+
+    #[test]
+    fn threads_defaults_to_sequential() {
+        assert_eq!(ExperimentConfig::default().threads, 1);
     }
 
     #[test]

@@ -153,9 +153,11 @@ fn print_help() {
 USAGE: seedflood <train|experiment|topo|info> [--options]
 
 train        --method <dsgd|choco|dsgd-lora|choco-lora|dzsgd|dzsgd-lora|seedflood|mezo|subcge>
-             --model <tiny|small|base> --task <sst2|rte|boolq|wic|multirc|record>
+             --model <tiny|small|base|synthetic> --task <sst2|rte|boolq|wic|multirc|record>
              --clients N --topology <ring|mesh|torus|complete|star|er|ws>
              --steps N --lr F --eps F --rank N --refresh N --flood-steps N
+             --threads N (local-step worker threads; 1 = sequential, 0 = all
+             cores — results are identical for every value)
              [--out results/run.json]
 experiment   <fig1|fig3|table8|scaling|fig4|table2|table3|fig6|fig7> [--tasks a,b]
 pretrain     --model tiny [--steps N --lr F --target-acc F] -> checkpoints/

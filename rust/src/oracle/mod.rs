@@ -1,0 +1,436 @@
+//! Loss oracles behind [`crate::sim::Env`].
+//!
+//! The engine refactor splits "what the algorithms do" from "who computes
+//! the loss": every algorithm talks to the environment through
+//! `Env::{loss_acc, grad, …}`, and the environment routes to one of two
+//! backends:
+//!
+//! * [`AotBackend`] — the real path: AOT HLO artifacts (with the pallas
+//!   kernels lowered in) executed through PJRT. Needs `make artifacts` and
+//!   the real xla-rs bindings wired in for `crate::xla` (the offline image
+//!   ships a stub — see rust/src/xla/).
+//! * [`SyntheticOracle`] — a pure-rust, artifact-free oracle
+//!   (`--model synthetic`): a deterministic logistic model over hashed
+//!   token features with an analytic gradient. It exists so the whole
+//!   simulator — flooding, byte accounting, SubCGE folding, the parallel
+//!   engine, its determinism tests and benches — runs end-to-end in an
+//!   image with no XLA runtime. Loss values are meaningful (the planted
+//!   lexicon tasks are genuinely learnable by a linear scorer) but are not
+//!   the paper's transformer numbers.
+//!
+//! Both backends are `Send + Sync`: local steps of different clients call
+//! them concurrently from worker threads (tentpole item 2 of ISSUE 1).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::model::{Manifest, ModelConfig, TensorSpec};
+use crate::rng::Rng;
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::ParamVec;
+
+/// Which oracle computes losses/gradients for an experiment.
+pub enum Backend {
+    Aot(AotBackend),
+    Synthetic(SyntheticOracle),
+}
+
+/// The PJRT path: one runtime + the five compiled graphs every method uses.
+pub struct AotBackend {
+    pub rt: Runtime,
+    pub exe_loss: Arc<Executable>,
+    pub exe_grad: Arc<Executable>,
+    pub exe_loss_lora: Arc<Executable>,
+    pub exe_grad_lora: Arc<Executable>,
+    pub exe_subcge: Arc<Executable>,
+}
+
+impl AotBackend {
+    pub fn load(artifacts_dir: &str, manifest: &Manifest) -> Result<AotBackend> {
+        let rt = Runtime::cpu(artifacts_dir).context("starting PJRT runtime")?;
+        let exe_loss = rt.load(manifest, "loss")?;
+        let exe_grad = rt.load(manifest, "grad")?;
+        let exe_loss_lora = rt.load(manifest, "loss_lora")?;
+        let exe_grad_lora = rt.load(manifest, "grad_lora")?;
+        let exe_subcge = rt.load(manifest, "subcge")?;
+        Ok(AotBackend { rt, exe_loss, exe_grad, exe_loss_lora, exe_grad_lora, exe_subcge })
+    }
+}
+
+/// Feature width of the synthetic model's data-dependent head (the first
+/// `FEAT` coordinates of the flattened parameter vector score the batch;
+/// the rest enter through the ridge term, so every coordinate moves the
+/// loss and zeroth-order probing behaves like on the real model).
+pub const FEAT: usize = 1024;
+const GAIN: f32 = 25.0;
+const DECAY: f32 = 1e-4;
+
+/// Deterministic artifact-free loss oracle: logistic classification on
+/// per-token pseudo-random features.
+///
+/// For an example with tokens `t_1..t_s`, the feature vector is
+/// `φ = Σ_j dir(t_j) / √(s·FEAT)` with `dir(tok)` a fixed `FEAT`-dim
+/// normal direction per vocab id (cached at construction — the planted
+/// lexicon tokens shared across examples are what make the task linearly
+/// learnable). The score is `z = GAIN · ⟨head(θ), φ⟩` with `head(θ)` the
+/// first FEAT flattened coordinates, and
+/// `loss = mean_e softplus(−y_e z_e) + DECAY/2 · ‖θ‖²`, `y_e = ±1`.
+pub struct SyntheticOracle {
+    /// per-token feature directions, flat `[vocab × FEAT]`
+    tok_dirs: Vec<f32>,
+    vocab: usize,
+}
+
+impl SyntheticOracle {
+    pub fn new(manifest: &Manifest, seed: u64) -> SyntheticOracle {
+        let vocab = manifest.config.vocab;
+        let mut tok_dirs = vec![0.0f32; vocab * FEAT];
+        for tok in 0..vocab {
+            let mut rng = Rng::fold_in(seed ^ 0x0ACC_1E5E, tok as u64);
+            rng.fill_normal(&mut tok_dirs[tok * FEAT..(tok + 1) * FEAT]);
+        }
+        SyntheticOracle { tok_dirs, vocab }
+    }
+
+    /// φ for every example in the batch, flat `[b × FEAT]`.
+    fn features(&self, ids: &[i32], b: usize, s: usize) -> Vec<f32> {
+        assert_eq!(ids.len(), b * s, "ids length != batch × seq");
+        let norm = 1.0 / ((s * FEAT) as f32).sqrt();
+        let mut phi = vec![0.0f32; b * FEAT];
+        for e in 0..b {
+            let dst = &mut phi[e * FEAT..(e + 1) * FEAT];
+            for &tok in &ids[e * s..(e + 1) * s] {
+                let tok = (tok.max(0) as usize) % self.vocab;
+                let dir = &self.tok_dirs[tok * FEAT..(tok + 1) * FEAT];
+                for (d, &x) in dst.iter_mut().zip(dir.iter()) {
+                    *d += x;
+                }
+            }
+            for d in dst.iter_mut() {
+                *d *= norm;
+            }
+        }
+        phi
+    }
+
+    /// The first `FEAT` flattened coordinates of `p` (fewer if p is small).
+    fn head(p: &ParamVec) -> Vec<f32> {
+        let mut head = Vec::with_capacity(FEAT);
+        'outer: for t in &p.tensors {
+            for &x in &t.data {
+                head.push(x);
+                if head.len() == FEAT {
+                    break 'outer;
+                }
+            }
+        }
+        head
+    }
+
+    fn scores(&self, head: &[f32], ids: &[i32], b: usize, s: usize) -> Vec<f32> {
+        let phi = self.features(ids, b, s);
+        (0..b)
+            .map(|e| {
+                let pe = &phi[e * FEAT..(e + 1) * FEAT];
+                let dot: f32 = head.iter().zip(pe.iter()).map(|(&h, &f)| h * f).sum();
+                GAIN * dot
+            })
+            .collect()
+    }
+
+    fn ridge(p: &ParamVec) -> f32 {
+        let ss: f64 = p
+            .tensors
+            .iter()
+            .map(|t| t.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+            .sum();
+        0.5 * DECAY * ss as f32
+    }
+
+    fn softplus(x: f32) -> f32 {
+        x.max(0.0) + (-x.abs()).exp().ln_1p()
+    }
+
+    fn sigmoid(x: f32) -> f32 {
+        1.0 / (1.0 + (-x).exp())
+    }
+
+    /// (mean loss, #correct) of `params` on one batch — the synthetic
+    /// analogue of the `loss` artifact.
+    pub fn loss_acc(
+        &self,
+        params: &ParamVec,
+        ids: &[i32],
+        labels: &[i32],
+        seq: usize,
+    ) -> (f32, f32) {
+        let b = labels.len();
+        let zs = self.scores(&Self::head(params), ids, b, seq);
+        let mut loss = 0.0f32;
+        let mut correct = 0.0f32;
+        for (&z, &label) in zs.iter().zip(labels.iter()) {
+            let y = if label == 1 { 1.0f32 } else { -1.0 };
+            loss += Self::softplus(-y * z);
+            if (z > 0.0) == (label == 1) {
+                correct += 1.0;
+            }
+        }
+        (loss / b as f32 + Self::ridge(params), correct)
+    }
+
+    /// (mean loss, ∂loss/∂θ) — the synthetic analogue of the `grad`
+    /// artifact (analytic, so FO baselines run artifact-free too).
+    pub fn grad(
+        &self,
+        params: &ParamVec,
+        ids: &[i32],
+        labels: &[i32],
+        seq: usize,
+    ) -> (f32, ParamVec) {
+        let b = labels.len();
+        let head = Self::head(params);
+        let phi = self.features(ids, b, seq);
+        let mut loss = 0.0f32;
+        let mut ghead = vec![0.0f32; head.len()];
+        for (e, &label) in labels.iter().enumerate() {
+            let pe = &phi[e * FEAT..(e + 1) * FEAT];
+            let dot: f32 = head.iter().zip(pe.iter()).map(|(&h, &f)| h * f).sum();
+            let z = GAIN * dot;
+            let y = if label == 1 { 1.0f32 } else { -1.0 };
+            loss += Self::softplus(-y * z);
+            // d softplus(−yz)/dz = −y·σ(−yz)
+            let coef = GAIN * (-y) * Self::sigmoid(-y * z) / b as f32;
+            for (g, &f) in ghead.iter_mut().zip(pe.iter()) {
+                *g += coef * f;
+            }
+        }
+        // ridge gradient over every coordinate + head term on the first FEAT
+        let mut grads = params.zeros_like();
+        let mut k = 0usize;
+        for (gt, pt) in grads.tensors.iter_mut().zip(params.tensors.iter()) {
+            for (g, &x) in gt.data.iter_mut().zip(pt.data.iter()) {
+                *g = DECAY * x;
+                if k < ghead.len() {
+                    *g += ghead[k];
+                    k += 1;
+                }
+            }
+        }
+        (loss / b as f32 + Self::ridge(params), grads)
+    }
+
+    /// LoRA variant: the frozen base contributes a fixed score offset, the
+    /// adapters contribute through their own head — so adapter training
+    /// moves the loss while the base stays untouched.
+    pub fn loss_acc_lora(
+        &self,
+        base: &ParamVec,
+        lora: &ParamVec,
+        ids: &[i32],
+        labels: &[i32],
+        seq: usize,
+    ) -> (f32, f32) {
+        let b = labels.len();
+        let zb = self.scores(&Self::head(base), ids, b, seq);
+        let zl = self.scores(&Self::head(lora), ids, b, seq);
+        let mut loss = 0.0f32;
+        let mut correct = 0.0f32;
+        for ((&z0, &z1), &label) in zb.iter().zip(zl.iter()).zip(labels.iter()) {
+            let z = z0 + z1;
+            let y = if label == 1 { 1.0f32 } else { -1.0 };
+            loss += Self::softplus(-y * z);
+            if (z > 0.0) == (label == 1) {
+                correct += 1.0;
+            }
+        }
+        (loss / b as f32 + Self::ridge(lora), correct)
+    }
+
+    /// (mean loss, ∂loss/∂lora) with the base frozen.
+    pub fn grad_lora(
+        &self,
+        base: &ParamVec,
+        lora: &ParamVec,
+        ids: &[i32],
+        labels: &[i32],
+        seq: usize,
+    ) -> (f32, ParamVec) {
+        let b = labels.len();
+        let base_head = Self::head(base);
+        let lora_head = Self::head(lora);
+        let phi = self.features(ids, b, seq);
+        let mut loss = 0.0f32;
+        let mut ghead = vec![0.0f32; lora_head.len()];
+        for (e, &label) in labels.iter().enumerate() {
+            let pe = &phi[e * FEAT..(e + 1) * FEAT];
+            let dotb: f32 = base_head.iter().zip(pe.iter()).map(|(&h, &f)| h * f).sum();
+            let dotl: f32 = lora_head.iter().zip(pe.iter()).map(|(&h, &f)| h * f).sum();
+            let z = GAIN * (dotb + dotl);
+            let y = if label == 1 { 1.0f32 } else { -1.0 };
+            loss += Self::softplus(-y * z);
+            let coef = GAIN * (-y) * Self::sigmoid(-y * z) / b as f32;
+            for (g, &f) in ghead.iter_mut().zip(pe.iter()) {
+                *g += coef * f;
+            }
+        }
+        let mut grads = lora.zeros_like();
+        let mut k = 0usize;
+        for (gt, pt) in grads.tensors.iter_mut().zip(lora.tensors.iter()) {
+            for (g, &x) in gt.data.iter_mut().zip(pt.data.iter()) {
+                *g = DECAY * x;
+                if k < ghead.len() {
+                    *g += ghead[k];
+                    k += 1;
+                }
+            }
+        }
+        (loss / b as f32 + Self::ridge(lora), grads)
+    }
+}
+
+/// In-code manifest for the synthetic model — transformer-shaped parameter
+/// list (so SubCGE's 2D subset, LoRA adapters and init conventions all
+/// behave like on the AOT models) with no artifact files.
+pub fn synthetic_manifest() -> Manifest {
+    let (vocab, seq, dim) = (256usize, 32usize, 64usize);
+    let (layers, heads, batch) = (2usize, 4usize, 8usize);
+    let lora_rank = 4usize;
+    let mlp = 4 * dim;
+    let mut params: Vec<TensorSpec> = vec![spec("embed.tok", &[vocab, dim])];
+    let mut lora_params: Vec<TensorSpec> = vec![];
+    let mut params2d: Vec<String> = vec!["embed.tok".to_string()];
+    for l in 0..layers {
+        let p = |suffix: &str| format!("block{l}.{suffix}");
+        params.push(spec(&p("ln1.scale"), &[dim]));
+        params.push(spec(&p("ln1.bias"), &[dim]));
+        for w in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"] {
+            params.push(spec(&p(w), &[dim, dim]));
+            params2d.push(p(w));
+        }
+        params.push(spec(&p("ln2.scale"), &[dim]));
+        params.push(spec(&p("ln2.bias"), &[dim]));
+        params.push(spec(&p("mlp.w1"), &[dim, mlp]));
+        params2d.push(p("mlp.w1"));
+        params.push(spec(&p("mlp.b1"), &[mlp]));
+        params.push(spec(&p("mlp.w2"), &[mlp, dim]));
+        params2d.push(p("mlp.w2"));
+        params.push(spec(&p("mlp.b2"), &[dim]));
+        for w in ["attn.wq", "attn.wv"] {
+            lora_params.push(spec(&format!("{}.lora_a", p(w)), &[dim, lora_rank]));
+            lora_params.push(spec(&format!("{}.lora_b", p(w)), &[lora_rank, dim]));
+        }
+    }
+    params.push(spec("final.ln.scale", &[dim]));
+    params.push(spec("final.ln.bias", &[dim]));
+    let num_params = params.iter().map(|s| s.numel()).sum();
+    Manifest {
+        config: ModelConfig {
+            name: "synthetic".to_string(),
+            vocab,
+            seq,
+            dim,
+            layers,
+            heads,
+            batch,
+            num_classes: 2,
+            lora_rank,
+            subcge_rank: 64,
+            num_params,
+        },
+        params,
+        lora_params,
+        params2d,
+        artifacts: vec![],
+    }
+}
+
+fn spec(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamStore;
+
+    fn setup() -> (Manifest, SyntheticOracle, ParamVec, Vec<i32>, Vec<i32>) {
+        let m = synthetic_manifest();
+        let o = SyntheticOracle::new(&m, 7);
+        let p = ParamStore::init(&m, 0);
+        let (b, s) = (m.config.batch, m.config.seq);
+        let ids: Vec<i32> = (0..b * s).map(|i| ((i * 131) % m.config.vocab) as i32).collect();
+        let labels: Vec<i32> = (0..b).map(|i| (i % 2) as i32).collect();
+        (m, o, p, ids, labels)
+    }
+
+    #[test]
+    fn synthetic_manifest_is_well_formed() {
+        let m = synthetic_manifest();
+        assert!(m.config.num_params > 50_000);
+        assert_eq!(m.param2d_indices().len(), m.params2d.len());
+        for &i in &m.param2d_indices() {
+            assert_eq!(m.params[i].shape.len(), 2);
+        }
+        // LoRA adapters exist and are much smaller than the full model
+        let d_lora: usize = m.lora_params.iter().map(|s| s.numel()).sum();
+        assert!(d_lora >= FEAT, "lora dim {d_lora} must cover the feature head");
+        assert!(d_lora * 10 < m.config.num_params);
+    }
+
+    #[test]
+    fn loss_is_deterministic_and_finite() {
+        let (m, o, p, ids, labels) = setup();
+        let (l1, c1) = o.loss_acc(&p, &ids, &labels, m.config.seq);
+        let (l2, c2) = o.loss_acc(&p, &ids, &labels, m.config.seq);
+        assert_eq!(l1, l2);
+        assert_eq!(c1, c2);
+        assert!(l1.is_finite() && l1 > 0.0);
+        assert!((0.0..=labels.len() as f32).contains(&c1));
+    }
+
+    #[test]
+    fn analytic_grad_matches_finite_difference() {
+        let (m, o, mut p, ids, labels) = setup();
+        let (_, g) = o.grad(&p, &ids, &labels, m.config.seq);
+        // finite differences on head coordinates (large enough signal for
+        // f32 central differences)
+        for ei in [0usize, 5, 500, 999] {
+            let eps = 1e-2f32;
+            let orig = p.tensors[0].data[ei];
+            p.tensors[0].data[ei] = orig + eps;
+            let (lp, _) = o.loss_acc(&p, &ids, &labels, m.config.seq);
+            p.tensors[0].data[ei] = orig - eps;
+            let (lm, _) = o.loss_acc(&p, &ids, &labels, m.config.seq);
+            p.tensors[0].data[ei] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = g.tensors[0].data[ei];
+            assert!(
+                (fd - an).abs() < 2e-2 * an.abs().max(1e-2),
+                "head[{ei}]: fd {fd} vs analytic {an}"
+            );
+        }
+        // outside the head only the ridge term acts — exact, no FD needed
+        let an = g.tensors[4].data[3];
+        assert!((an - DECAY * p.tensors[4].data[3]).abs() < 1e-9, "tail grad {an}");
+    }
+
+    #[test]
+    fn gradient_step_descends() {
+        let (m, o, mut p, ids, labels) = setup();
+        let (l0, g) = o.grad(&p, &ids, &labels, m.config.seq);
+        p.axpy(-0.05, &g);
+        let (l1, _) = o.loss_acc(&p, &ids, &labels, m.config.seq);
+        assert!(l1 < l0, "descent failed: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn lora_grad_descends_with_base_frozen() {
+        let (m, o, base, ids, labels) = setup();
+        let mut lora = ParamStore::init_lora(&m, 3);
+        let (l0, g) = o.grad_lora(&base, &lora, &ids, &labels, m.config.seq);
+        lora.axpy(-0.05, &g);
+        let (l1, _) = o.loss_acc_lora(&base, &lora, &ids, &labels, m.config.seq);
+        assert!(l1 < l0, "lora descent failed: {l0} -> {l1}");
+    }
+}

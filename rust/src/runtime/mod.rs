@@ -14,6 +14,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::model::{ArtifactSpec, Manifest};
 use crate::tensor::{ParamVec, Tensor};
+// real bindings with `--features xla`, in-repo stub otherwise (lib.rs)
+use crate::xla;
 
 /// Argument value for one artifact input. I32 carries its (small) shape by
 /// value so call sites can build shapes inline.
@@ -28,6 +30,15 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     client: xla::PjRtClient,
 }
+
+// SAFETY: the PJRT C API contract requires clients, loaded executables and
+// buffers to be callable from multiple threads (the CPU plugin serializes
+// internally where needed), and this crate only ever executes compiled
+// artifacts — pure functions of their argument buffers — through these
+// handles. The engine invokes `Executable::run` concurrently from
+// worker threads during the local-step fan-out (ISSUE 1 tentpole item 2).
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
 
 impl Executable {
     /// Execute with positional args; returns one Tensor per manifest output.
@@ -120,6 +131,11 @@ pub struct Runtime {
     /// executions performed (metrics)
     pub executions: std::sync::atomic::AtomicU64,
 }
+
+// SAFETY: see `Executable` above — the client handle is thread-safe per the
+// PJRT contract; all rust-side mutable state is behind Mutex/atomics.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
 
 impl Runtime {
     pub fn cpu(artifacts_dir: &str) -> Result<Runtime> {

@@ -2,10 +2,16 @@
 //! together, runs the paper's training protocol (local steps + scheduled
 //! communication), evaluates GMP, and records everything in a
 //! [`RunRecord`].
+//!
+//! Since the parallel-engine refactor (ISSUE 1) the iteration loop is:
+//! `begin_step` (sequential shared-state hook) → `local_step_all` (fan-out
+//! over a scoped-thread pool, per-client state isolated in
+//! [`crate::algos::ClientState`]) → `communicate` (sequential,
+//! deterministic network rounds). A run's `RunRecord` is bit-identical for
+//! every `--threads` value: local steps are independent across clients and
+//! results are merged in client order (tested in tests/engine.rs).
 
-use std::sync::Arc;
-
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::algos;
 use crate::config::ExperimentConfig;
@@ -13,22 +19,26 @@ use crate::data::{BatchSampler, Dataset, Example, TaskSpec, CLASS_TOKENS};
 use crate::metrics::{EvalPoint, RunRecord};
 use crate::model::{checkpoint, Manifest, ParamStore};
 use crate::net::Network;
-use crate::runtime::{Arg, Executable, Runtime};
+use crate::oracle::{AotBackend, Backend, SyntheticOracle};
+use crate::runtime::Arg;
+use crate::subcge::{CoeffAccum, DeviceBasisCache, SubspaceBasis};
 use crate::tensor::ParamVec;
 use crate::topology::Topology;
 use crate::util::timer::Timer;
 
+/// Fixed seed for the synthetic oracle's token features: the synthetic
+/// *task* is the same for every run; `cfg.seed` only drives init/probes.
+const SYNTHETIC_ORACLE_SEED: u64 = 0x51_E7_0D_AC;
+
 /// Everything an algorithm needs from the environment, borrowed immutably
-/// on the hot path (the network is threaded separately as `&mut`).
+/// on the hot path (the network is threaded separately as `&mut`). `Env`
+/// is `Send + Sync`: worker threads call the loss oracle concurrently
+/// during the local-step fan-out.
 pub struct Env {
     pub cfg: ExperimentConfig,
     pub manifest: Manifest,
-    pub rt: Runtime,
-    pub exe_loss: Arc<Executable>,
-    pub exe_grad: Arc<Executable>,
-    pub exe_loss_lora: Arc<Executable>,
-    pub exe_grad_lora: Arc<Executable>,
-    pub exe_subcge: Arc<Executable>,
+    /// AOT/PJRT artifacts or the pure-rust synthetic oracle.
+    pub backend: Backend,
     pub class_tokens: Vec<i32>,
     pub dataset: Dataset,
     pub partitions: Vec<Vec<Example>>,
@@ -41,19 +51,32 @@ pub struct Env {
 
 impl Env {
     pub fn new(cfg: ExperimentConfig) -> Result<Env> {
-        let manifest_path =
-            format!("{}/{}_manifest.json", cfg.artifacts_dir, cfg.model);
+        if cfg.model == "synthetic" {
+            let manifest = crate::oracle::synthetic_manifest();
+            let backend =
+                Backend::Synthetic(SyntheticOracle::new(&manifest, SYNTHETIC_ORACLE_SEED));
+            return Self::assemble(cfg, manifest, backend);
+        }
+        let manifest_path = format!("{}/{}_manifest.json", cfg.artifacts_dir, cfg.model);
         let manifest = Manifest::load(&manifest_path)?;
-        let rt = Runtime::cpu(&cfg.artifacts_dir)?;
-        let exe_loss = rt.load(&manifest, "loss")?;
-        let exe_grad = rt.load(&manifest, "grad")?;
-        let exe_loss_lora = rt.load(&manifest, "loss_lora")?;
-        let exe_grad_lora = rt.load(&manifest, "grad_lora")?;
-        let exe_subcge = rt.load(&manifest, "subcge")?;
+        let backend = Backend::Aot(AotBackend::load(&cfg.artifacts_dir, &manifest)?);
+        Self::assemble(cfg, manifest, backend)
+    }
 
+    /// Artifact-free environment on the synthetic oracle (tests, benches,
+    /// images without the `xla` feature).
+    pub fn synthetic(mut cfg: ExperimentConfig) -> Result<Env> {
+        cfg.model = "synthetic".to_string();
+        Self::new(cfg)
+    }
+
+    fn assemble(cfg: ExperimentConfig, manifest: Manifest, backend: Backend) -> Result<Env> {
         let spec = TaskSpec::named(&cfg.task)
             .with_context(|| format!("unknown task {:?}", cfg.task))?;
         let dataset = Dataset::generate(&spec, manifest.config.vocab, manifest.config.seq);
+        if cfg.clients == 0 {
+            bail!("clients must be >= 1");
+        }
         let partitions = if cfg.dirichlet_alpha > 0.0 {
             dataset.partition_dirichlet(cfg.clients, cfg.dirichlet_alpha, cfg.seed)
         } else {
@@ -74,12 +97,7 @@ impl Env {
             cfg,
             class_tokens: CLASS_TOKENS.to_vec(),
             manifest,
-            rt,
-            exe_loss,
-            exe_grad,
-            exe_loss_lora,
-            exe_grad_lora,
-            exe_subcge,
+            backend,
             dataset,
             partitions,
             test_batches,
@@ -105,26 +123,38 @@ impl Env {
             .collect()
     }
 
-    /// (loss, #correct) of `params` on one batch, via the AOT loss graph.
+    /// (loss, #correct) of `params` on one batch.
     pub fn loss_acc(&self, params: &ParamVec, ids: &[i32], labels: &[i32]) -> Result<(f32, f32)> {
-        let (b, s) = self.batch_shape();
-        let args =
-            crate::runtime::loss_args(params, ids, vec![b, s], labels, &self.class_tokens);
-        let out = self.exe_loss.run(&args)?;
-        self.rt.count_execution();
-        Ok((out[0].data[0], out[1].data[0]))
+        match &self.backend {
+            Backend::Aot(be) => {
+                let (b, s) = self.batch_shape();
+                let args =
+                    crate::runtime::loss_args(params, ids, vec![b, s], labels, &self.class_tokens);
+                let out = be.exe_loss.run(&args)?;
+                be.rt.count_execution();
+                Ok((out[0].data[0], out[1].data[0]))
+            }
+            Backend::Synthetic(o) => {
+                Ok(o.loss_acc(params, ids, labels, self.manifest.config.seq))
+            }
+        }
     }
 
     /// (loss, grads) — the FO oracle (DSGD/ChocoSGD local step).
     pub fn grad(&self, params: &ParamVec, ids: &[i32], labels: &[i32]) -> Result<(f32, ParamVec)> {
-        let (b, s) = self.batch_shape();
-        let args =
-            crate::runtime::loss_args(params, ids, vec![b, s], labels, &self.class_tokens);
-        let out = self.exe_grad.run(&args)?;
-        self.rt.count_execution();
-        let loss = out[0].data[0];
-        let grads = ParamVec::new(params.names.clone(), out[1..].to_vec());
-        Ok((loss, grads))
+        match &self.backend {
+            Backend::Aot(be) => {
+                let (b, s) = self.batch_shape();
+                let args =
+                    crate::runtime::loss_args(params, ids, vec![b, s], labels, &self.class_tokens);
+                let out = be.exe_grad.run(&args)?;
+                be.rt.count_execution();
+                let loss = out[0].data[0];
+                let grads = ParamVec::new(params.names.clone(), out[1..].to_vec());
+                Ok((loss, grads))
+            }
+            Backend::Synthetic(o) => Ok(o.grad(params, ids, labels, self.manifest.config.seq)),
+        }
     }
 
     fn lora_args<'a>(
@@ -150,10 +180,17 @@ impl Env {
         ids: &[i32],
         labels: &[i32],
     ) -> Result<(f32, f32)> {
-        let args = self.lora_args(params, lora, ids, labels);
-        let out = self.exe_loss_lora.run(&args)?;
-        self.rt.count_execution();
-        Ok((out[0].data[0], out[1].data[0]))
+        match &self.backend {
+            Backend::Aot(be) => {
+                let args = self.lora_args(params, lora, ids, labels);
+                let out = be.exe_loss_lora.run(&args)?;
+                be.rt.count_execution();
+                Ok((out[0].data[0], out[1].data[0]))
+            }
+            Backend::Synthetic(o) => {
+                Ok(o.loss_acc_lora(params, lora, ids, labels, self.manifest.config.seq))
+            }
+        }
     }
 
     pub fn grad_lora(
@@ -163,16 +200,66 @@ impl Env {
         ids: &[i32],
         labels: &[i32],
     ) -> Result<(f32, ParamVec)> {
-        let args = self.lora_args(params, lora, ids, labels);
-        let out = self.exe_grad_lora.run(&args)?;
-        self.rt.count_execution();
-        let loss = out[0].data[0];
-        let grads = ParamVec::new(lora.names.clone(), out[1..].to_vec());
-        Ok((loss, grads))
+        match &self.backend {
+            Backend::Aot(be) => {
+                let args = self.lora_args(params, lora, ids, labels);
+                let out = be.exe_grad_lora.run(&args)?;
+                be.rt.count_execution();
+                let loss = out[0].data[0];
+                let grads = ParamVec::new(lora.names.clone(), out[1..].to_vec());
+                Ok((loss, grads))
+            }
+            Backend::Synthetic(o) => {
+                Ok(o.grad_lora(params, lora, ids, labels, self.manifest.config.seq))
+            }
+        }
     }
 
-    /// (mean loss, accuracy) over pre-tokenized eval batches.
-    pub fn eval_full(&self, params: &ParamVec, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<(f64, f64)> {
+    /// Apply a client's accumulated SubCGE coefficients to its params —
+    /// batched through the AOT pallas artifact on the real backend, the
+    /// pure-rust kernel otherwise. `cache` (optional) holds device-resident
+    /// basis factors so the dominant host→device upload is skipped.
+    pub fn subcge_flush(
+        &self,
+        basis: &SubspaceBasis,
+        accum: &mut CoeffAccum,
+        params: &mut ParamVec,
+        cache: Option<&mut DeviceBasisCache>,
+    ) -> Result<()> {
+        match &self.backend {
+            Backend::Synthetic(_) => {
+                accum.flush_rust(basis, params);
+                Ok(())
+            }
+            Backend::Aot(be) => match cache {
+                Some(c) => {
+                    accum.flush_with_artifact_cached(basis, c, params, &be.exe_subcge, &be.rt)
+                }
+                None => accum.flush_with_artifact(basis, params, &be.exe_subcge, &be.rt),
+            },
+        }
+    }
+
+    /// Device-resident basis cache for [`Self::subcge_flush`] — `None` on
+    /// the synthetic backend (nothing to upload).
+    pub fn make_device_cache(&self, basis: &SubspaceBasis) -> Result<Option<DeviceBasisCache>> {
+        match &self.backend {
+            Backend::Aot(be) => Ok(Some(DeviceBasisCache::new(basis, &be.rt)?)),
+            Backend::Synthetic(_) => Ok(None),
+        }
+    }
+
+    /// (mean loss, accuracy) over pre-tokenized eval batches. An empty
+    /// batch list yields a zeroed point instead of NaN (datasets smaller
+    /// than one batch).
+    pub fn eval_full(
+        &self,
+        params: &ParamVec,
+        batches: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<(f64, f64)> {
+        if batches.is_empty() {
+            return Ok((0.0, 0.0));
+        }
         let mut loss_sum = 0.0f64;
         let mut correct = 0.0f64;
         let mut total = 0usize;
@@ -182,7 +269,8 @@ impl Env {
             correct += c as f64;
             total += labels.len();
         }
-        Ok((loss_sum / batches.len() as f64, correct / total as f64))
+        let acc = if total == 0 { 0.0 } else { correct / total as f64 };
+        Ok((loss_sum / batches.len() as f64, acc))
     }
 
     pub fn eval_lora(
@@ -191,6 +279,9 @@ impl Env {
         lora: &ParamVec,
         batches: &[(Vec<i32>, Vec<i32>)],
     ) -> Result<(f64, f64)> {
+        if batches.is_empty() {
+            return Ok((0.0, 0.0));
+        }
         let mut loss_sum = 0.0f64;
         let mut correct = 0.0f64;
         let mut total = 0usize;
@@ -200,7 +291,8 @@ impl Env {
             correct += c as f64;
             total += labels.len();
         }
-        Ok((loss_sum / batches.len() as f64, correct / total as f64))
+        let acc = if total == 0 { 0.0 } else { correct / total as f64 };
+        Ok((loss_sum / batches.len() as f64, acc))
     }
 
     /// Cheap eval subset used for periodic (non-final) evaluation points.
@@ -238,14 +330,18 @@ pub fn batchify(examples: &[Example], batch: usize) -> Vec<(Vec<i32>, Vec<i32>)>
 
 /// Mean squared per-coordinate distance of client params from their mean —
 /// the consensus-error diagnostic (zero ⇒ the paper's "perfect consensus").
-pub fn consensus_error(clients: &[ParamVec]) -> f64 {
+pub fn consensus_error_refs(clients: &[&ParamVec]) -> f64 {
     if clients.len() < 2 {
         return 0.0;
     }
-    let refs: Vec<&ParamVec> = clients.iter().collect();
-    let mean = ParamVec::average(&refs);
+    let mean = ParamVec::average(clients);
     let d = mean.num_elements() as f64;
     clients.iter().map(|c| c.sq_dist(&mean)).sum::<f64>() / (clients.len() as f64 * d)
+}
+
+/// Owned-slice convenience wrapper over [`consensus_error_refs`].
+pub fn consensus_error(clients: &[ParamVec]) -> f64 {
+    consensus_error_refs(&clients.iter().collect::<Vec<_>>())
 }
 
 /// Run one full experiment: the paper's protocol of `steps` local
@@ -260,7 +356,7 @@ pub fn run_experiment(cfg: ExperimentConfig) -> Result<RunRecord> {
 pub fn run_with_env(env: &Env) -> Result<RunRecord> {
     let cfg = &env.cfg;
     let topo = Topology::build(cfg.topology, cfg.clients, cfg.topology_seed);
-    let mut algo = algos::build(env, &topo)?;
+    let (mut algo, mut states) = algos::build(env, &topo)?;
     let mut net = Network::new(topo);
     let timer = Timer::start();
 
@@ -277,32 +373,32 @@ pub fn run_with_env(env: &Env) -> Result<RunRecord> {
     // best-validation checkpoint selection (paper Table 5): validate every
     // tenth of training, keep the snapshot with the lowest val loss
     let val_every = (cfg.steps / 10).max(1);
-    let mut best: (f64, Option<Vec<crate::tensor::ParamVec>>) = (f64::INFINITY, None);
+    let mut best: (f64, Option<Vec<ParamVec>>) = (f64::INFINITY, None);
 
     for t in 0..cfg.steps {
-        let mut step_loss = 0.0f64;
-        for i in 0..cfg.clients {
-            step_loss += algo.local_step(i, t, env)? as f64;
-        }
+        algo.begin_step(t, env)?;
+        let losses = algos::local_step_all(&*algo, &mut states, t, env, cfg.threads)?;
+        // merged in client order: the mean is identical for any thread count
+        let step_loss: f64 = losses.iter().map(|&l| l as f64).sum();
         record.train_losses.push(step_loss / cfg.clients as f64);
-        algo.communicate(t, env, &mut net)?;
+        algo.communicate(&mut states, t, env, &mut net)?;
 
         if (t + 1) % val_every == 0 || t + 1 == cfg.steps {
-            let (vl, _) = algo.eval_gmp(env, env.select_batches())?;
+            let (vl, _) = algo.eval_gmp(&states, env, env.select_batches())?;
             if vl < best.0 {
-                best = (vl, Some(algo.snapshot()));
+                best = (vl, Some(algo.snapshot(&states)));
             }
         }
 
         if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 && t + 1 < cfg.steps {
-            let (loss, acc) = algo.eval_gmp(env, env.quick_batches())?;
+            let (loss, acc) = algo.eval_gmp(&states, env, env.quick_batches())?;
             record.evals.push(EvalPoint {
                 step: t + 1,
                 loss,
                 accuracy: acc,
                 total_bytes: net.acct.total_bytes,
                 per_edge_bytes: net.per_edge_bytes(),
-                consensus_error: algo.consensus_error(),
+                consensus_error: algo.consensus_error(&states),
             });
             log::info!(
                 "[{}] step {} loss {:.4} acc {:.3} bytes {}",
@@ -312,16 +408,16 @@ pub fn run_with_env(env: &Env) -> Result<RunRecord> {
     }
 
     if let Some(snap) = best.1.take() {
-        algo.restore(snap);
+        algo.restore(&mut states, snap);
     }
-    let (final_loss, gmp) = algo.eval_gmp(env, &env.test_batches)?;
+    let (final_loss, gmp) = algo.eval_gmp(&states, env, &env.test_batches)?;
     record.evals.push(EvalPoint {
         step: cfg.steps,
         loss: final_loss,
         accuracy: gmp,
         total_bytes: net.acct.total_bytes,
         per_edge_bytes: net.per_edge_bytes(),
-        consensus_error: algo.consensus_error(),
+        consensus_error: algo.consensus_error(&states),
     });
     record.gmp = gmp;
     record.final_loss = final_loss;
@@ -356,5 +452,33 @@ mod tests {
         assert_eq!(consensus_error(&[mk(1.0), mk(1.0)]), 0.0);
         assert!(consensus_error(&[mk(1.0), mk(2.0)]) > 0.0);
         assert_eq!(consensus_error(&[mk(5.0)]), 0.0);
+    }
+
+    #[test]
+    fn eval_full_empty_batches_is_zero_not_nan() {
+        let env = Env::synthetic(ExperimentConfig {
+            clients: 2,
+            steps: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let (loss, acc) = env.eval_full(&env.init_params, &[]).unwrap();
+        assert_eq!(loss, 0.0);
+        assert_eq!(acc, 0.0);
+        assert!(!loss.is_nan() && !acc.is_nan());
+    }
+
+    #[test]
+    fn synthetic_env_builds_and_evaluates() {
+        let env = Env::synthetic(ExperimentConfig {
+            clients: 4,
+            steps: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(env.partitions.len(), 4);
+        let (loss, acc) = env.eval_full(&env.init_params, env.quick_batches()).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=1.0).contains(&acc));
     }
 }

@@ -26,6 +26,8 @@ use crate::net::SeedUpdate;
 use crate::rng::Rng;
 use crate::runtime::{Arg, Executable, Runtime};
 use crate::tensor::{ParamVec, Tensor};
+// real bindings with `--features xla`, in-repo stub otherwise (lib.rs)
+use crate::xla;
 
 /// The globally shared subspace factors (identical on every client).
 pub struct SubspaceBasis {
@@ -239,6 +241,12 @@ pub struct DeviceBasisCache {
     us: Vec<xla::PjRtBuffer>,
     vs: Vec<xla::PjRtBuffer>,
 }
+
+// SAFETY: device buffers are written once at upload and only read by
+// executions afterwards; PJRT buffers may be shared across threads per the
+// PJRT C API contract (see runtime::Executable).
+unsafe impl Send for DeviceBasisCache {}
+unsafe impl Sync for DeviceBasisCache {}
 
 impl DeviceBasisCache {
     pub fn new(basis: &SubspaceBasis, rt: &Runtime) -> Result<DeviceBasisCache> {

@@ -10,6 +10,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod stats;
 pub mod timer;

@@ -1,0 +1,98 @@
+//! Scoped-thread fan-out for the parallel client-execution engine.
+//!
+//! The offline image vendors no `rayon`, so the one primitive the engine
+//! needs is implemented on `std::thread::scope`: run a closure over every
+//! element of a mutable slice, partitioned into contiguous blocks across a
+//! fixed number of workers, and return the per-element results **in element
+//! order** regardless of how the OS schedules the workers. That ordering
+//! guarantee is what lets `sim` merge per-client losses identically for any
+//! thread count (the determinism contract tested in tests/engine.rs).
+
+/// Resolve a `--threads` request: 0 means "all available cores".
+pub fn num_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Apply `f(index, &mut items[index])` to every element, fanning the work
+/// out over up to `threads` scoped workers (contiguous block partition).
+/// Results come back in element order. `threads <= 1` runs inline with no
+/// thread overhead; a panicking worker propagates the panic.
+pub fn par_map_mut<T, R, F>(items: &mut [T], threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = num_threads(threads).min(n.max(1));
+    if workers <= 1 {
+        return items.iter_mut().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let mut out: Vec<Vec<R>> = Vec::with_capacity(workers);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for (ci, block) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            handles.push(s.spawn(move || {
+                block
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(j, it)| f(ci * chunk + j, it))
+                    .collect::<Vec<R>>()
+            }));
+        }
+        // join order == spawn order == block order, so the flattened
+        // result vector is in element order
+        for h in handles {
+            out.push(h.join().expect("par_map_mut worker panicked"));
+        }
+    });
+    out.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_element_order_any_thread_count() {
+        for threads in [1, 2, 3, 7, 16] {
+            let mut items: Vec<u64> = (0..23).collect();
+            let out = par_map_mut(&mut items, threads, |i, x| {
+                *x += 1;
+                (i, *x)
+            });
+            for (i, &(idx, val)) in out.iter().enumerate() {
+                assert_eq!(idx, i);
+                assert_eq!(val, i as u64 + 1);
+            }
+            assert_eq!(items, (1..=23).collect::<Vec<u64>>());
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut none: Vec<u8> = vec![];
+        assert!(par_map_mut(&mut none, 4, |_, _| 0).is_empty());
+        let mut one = vec![5u8];
+        assert_eq!(par_map_mut(&mut one, 4, |i, x| (i, *x)), vec![(0, 5)]);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let mut items = vec![1u32, 2, 3];
+        let out = par_map_mut(&mut items, 64, |_, x| *x * 10);
+        assert_eq!(out, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn num_threads_zero_means_all() {
+        assert!(num_threads(0) >= 1);
+        assert_eq!(num_threads(3), 3);
+    }
+}

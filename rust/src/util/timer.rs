@@ -80,9 +80,46 @@ impl PhaseClock {
     }
 }
 
+/// Thread-safe [`PhaseClock`]: local steps running on worker threads record
+/// GE/MA durations concurrently through a shared reference. Totals are
+/// summed CPU time across workers (so under parallelism they can exceed
+/// wall clock — same convention as the paper's per-phase accounting).
+#[derive(Debug, Default)]
+pub struct SharedClock(std::sync::Mutex<PhaseClock>);
+
+impl SharedClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, phase: &str, d: Duration) {
+        self.0.lock().unwrap().add(phase, d);
+    }
+
+    pub fn total_ms(&self, phase: &str) -> f64 {
+        self.0.lock().unwrap().total_ms(phase)
+    }
+
+    pub fn mean_ms(&self, phase: &str) -> f64 {
+        self.0.lock().unwrap().mean_ms(phase)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shared_clock_accumulates_across_threads() {
+        let c = SharedClock::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| c.add("ge", Duration::from_millis(2)));
+            }
+        });
+        assert!(c.total_ms("ge") >= 8.0);
+        assert!(c.mean_ms("ge") >= 2.0);
+    }
 
     #[test]
     fn phases_accumulate() {

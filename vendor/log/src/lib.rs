@@ -1,0 +1,178 @@
+//! Offline shim of the `log` facade crate — the subset this repo uses:
+//! level/filter enums, the [`Log`] trait, [`set_logger`]/[`set_max_level`],
+//! and the `error!`..`trace!` macros. Semantics match the real crate for
+//! this surface (levels order Error < Warn < Info < Debug < Trace; records
+//! below the max level are dropped before reaching the logger).
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        f.write_str(s)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+#[derive(Clone, Debug)]
+pub struct Metadata {
+    level: Level,
+}
+
+impl Metadata {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+}
+
+pub struct Record<'a> {
+    metadata: Metadata,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger was already set")
+    }
+}
+
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// Macro backend — not part of the public log API surface.
+#[doc(hidden)]
+pub fn __log(level: Level, args: fmt::Arguments) {
+    if level as usize > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let metadata = Metadata { level };
+        if logger.enabled(&metadata) {
+            logger.log(&Record { metadata, args });
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__log($lvl, ::core::format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! error { ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) } }
+#[macro_export]
+macro_rules! warn { ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) } }
+#[macro_export]
+macro_rules! info { ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) } }
+#[macro_export]
+macro_rules! debug { ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) } }
+#[macro_export]
+macro_rules! trace { ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    static HITS: AtomicU64 = AtomicU64::new(0);
+
+    struct Counter;
+    impl Log for Counter {
+        fn enabled(&self, m: &Metadata) -> bool {
+            m.level() <= Level::Info
+        }
+        fn log(&self, _r: &Record) {
+            HITS.fetch_add(1, Ordering::Relaxed);
+        }
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn levels_order_like_real_log() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Info <= Level::Info);
+    }
+
+    #[test]
+    fn filtered_records_are_dropped() {
+        static C: Counter = Counter;
+        let _ = set_logger(&C);
+        set_max_level(LevelFilter::Info);
+        let before = HITS.load(Ordering::Relaxed);
+        info!("hello {}", 1);
+        debug!("dropped by max level");
+        error!("counted");
+        assert_eq!(HITS.load(Ordering::Relaxed), before + 2);
+    }
+}
