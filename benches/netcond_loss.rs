@@ -1,0 +1,91 @@
+//! Robustness bench (ISSUE 2): per-edge bytes and consensus error for all
+//! four methods under increasing packet loss, on the sparsest topology
+//! (ring of 8) where loss bites hardest. Complements table1: the question
+//! here is not how cost scales with d or n, but what *staying robust*
+//! costs — SeedFlood's repair re-floods add duplicate seed traffic, dense
+//! gossip silently mixes with fewer neighbors.
+//!
+//! Run: cargo bench --bench netcond_loss
+
+use seedflood::config::{ExperimentConfig, Method};
+use seedflood::metrics::RunRecord;
+use seedflood::sim;
+
+fn run(method: Method, loss: f64) -> RunRecord {
+    let zo = method.is_zeroth_order();
+    let netcond = if loss > 0.0 {
+        // periodic anti-entropy repair so flooding recovers what loss kills
+        format!("loss={loss};repair=5")
+    } else {
+        String::new()
+    };
+    let cfg = ExperimentConfig {
+        method,
+        model: "synthetic".into(),
+        task: "sst2".into(),
+        clients: 8,
+        steps: if zo { 40 } else { 10 },
+        lr: if zo { 1e-3 } else { 1e-2 },
+        netcond,
+        ..Default::default()
+    };
+    sim::run_experiment(cfg).unwrap()
+}
+
+fn main() {
+    println!("== netcond: four-method robustness to packet loss (ring of 8, synthetic) ==\n");
+    println!(
+        "{:>6} {:<12} {:>8} {:>8} {:>14} {:>14}",
+        "loss", "method", "GMP%", "deliv%", "consensus", "B/edge"
+    );
+    let mut seedflood_lossy = None;
+    let mut dsgd_lossy = None;
+    let mut seedflood_reliable = None;
+    for loss in [0.0, 0.02, 0.1] {
+        for method in [Method::Dsgd, Method::ChocoSgd, Method::Dzsgd, Method::SeedFlood] {
+            let r = run(method, loss);
+            let consensus = r.evals.last().map(|e| e.consensus_error).unwrap_or(0.0);
+            println!(
+                "{:>6} {:<12} {:>8.2} {:>8.1} {:>14.2e} {:>14.0}",
+                loss,
+                r.method,
+                100.0 * r.gmp,
+                100.0 * r.delivery_ratio,
+                consensus,
+                r.per_edge_bytes
+            );
+            if method == Method::SeedFlood && loss == 0.0 {
+                seedflood_reliable = Some(r);
+            } else if method == Method::SeedFlood && loss == 0.1 {
+                seedflood_lossy = Some(r);
+            } else if method == Method::Dsgd && loss == 0.1 {
+                dsgd_lossy = Some(r);
+            }
+        }
+        println!();
+    }
+
+    let sf0 = seedflood_reliable.unwrap();
+    let sf = seedflood_lossy.unwrap();
+    let dsgd = dsgd_lossy.unwrap();
+    // seed messages stay orders of magnitude below dense gossip even with
+    // the repair re-flood overhead folded in (the paper's O(n) vs O(d))
+    assert!(
+        sf.per_edge_bytes * 10.0 < dsgd.per_edge_bytes,
+        "seedflood repair overhead ate its cost advantage: {} vs {}",
+        sf.per_edge_bytes,
+        dsgd.per_edge_bytes
+    );
+    // the fault layer really dropped traffic, and the reliable run didn't
+    assert_eq!(sf0.delivery_ratio, 1.0, "reliable run must deliver everything");
+    assert!(sf.delivery_ratio < 1.0, "10% loss must drop messages");
+    assert!(sf.flood_duplicates > sf0.flood_duplicates, "repairs must re-flood");
+    println!(
+        "netcond_loss OK: seedflood/dsgd per-edge under 10% loss = {:.1}/{:.1} KB, \
+         seedflood delivery {:.1}% with staleness ≤ {} iter",
+        sf.per_edge_bytes / 1024.0,
+        dsgd.per_edge_bytes / 1024.0,
+        100.0 * sf.delivery_ratio,
+        sf.max_staleness
+    );
+}

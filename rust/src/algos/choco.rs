@@ -123,15 +123,26 @@ impl Algorithm for Choco {
             return Ok(());
         }
         let n = states.len();
-        // 1+2: compress, broadcast, update own surrogate
-        let qs: Vec<Arc<Vec<Vec<(u32, f32)>>>> = states
+        net.tick(); // one communication round on the netcond delivery clock
+        // 1+2: compress, broadcast, update own surrogate. An offline
+        // (churned-out) client skips the whole round — including the
+        // O(d log d) top-K, whose result nobody could receive: its
+        // surrogate must only advance when neighbors could have seen the
+        // same delta — under loss the copies desync anyway, which is
+        // exactly the degradation the robustness experiments measure.
+        let qs: Vec<Option<Arc<Vec<Vec<(u32, f32)>>>>> = states
             .iter()
-            .map(|s| {
+            .enumerate()
+            .map(|(i, s)| {
+                if !net.is_online(i) {
+                    return None;
+                }
                 let (params, hat_self, _) = s.choco_view();
-                Arc::new(self.compress(params, hat_self))
+                Some(Arc::new(self.compress(params, hat_self)))
             })
             .collect();
         for (i, q) in qs.iter().enumerate() {
+            let Some(q) = q else { continue };
             net.broadcast(i, &Payload::Sparse(q.clone()));
             let (_, hat_self, _) = states[i].choco_parts();
             apply_sparse(hat_self, q);

@@ -320,6 +320,13 @@ pub fn probe_seed(global: u64, client: usize, step: usize) -> u64 {
 
 /// Synchronous gossip-averaging round over dense payloads (Eq. 2's mixing
 /// step, Metropolis–Hastings weights). Shared by DSGD and DZSGD (+LoRA).
+///
+/// Fault injection (netcond) flows through the network layer: an offline
+/// client's broadcast costs nothing and it receives nothing (mixing with
+/// itself via the stochastic-row fallback below), lost messages simply
+/// drop out of the weighted sum, and delayed models arrive — and get
+/// mixed — in a later gossip round. Each call is one communication round
+/// on the delivery clock.
 pub fn gossip_mix(
     clients: &mut [ParamVec],
     weights: &[Vec<(usize, f32)>],
@@ -330,18 +337,31 @@ pub fn gossip_mix(
     use crate::net::Payload;
 
     let n = clients.len();
+    net.tick();
     let snaps: Vec<Arc<ParamVec>> = clients.iter().map(|c| Arc::new(c.clone())).collect();
     for (i, snap) in snaps.iter().enumerate() {
         net.broadcast(i, &Payload::Dense(snap.clone()));
     }
     for i in 0..n {
-        let msgs = net.recv_all(i);
+        // newest model per source wins: a rejoining client can drain
+        // several buffered (delayed) snapshots from one neighbor in a
+        // single round — mixing them all would double-count that
+        // neighbor's weight and push the self-coefficient negative.
+        // Per-edge FIFO + ascending-source drain order means the last
+        // entry per source is the newest, and BTreeMap iteration keeps
+        // the ascending-source float-sum order of the reliable path.
+        let mut latest: BTreeMap<usize, Arc<ParamVec>> = BTreeMap::new();
+        for m in net.recv_all(i) {
+            if let Payload::Dense(p) = m.payload {
+                latest.insert(m.from, p);
+            }
+        }
         let wrow = &weights[i];
         let w_of = |j: usize| wrow.iter().find(|&&(k, _)| k == j).map(|&(_, w)| w);
         let mut mixed = clients[i].zeros_like();
         let mut used = 0.0f32;
-        for m in msgs {
-            if let (Some(w), Payload::Dense(p)) = (w_of(m.from), m.payload) {
+        for (src, p) in latest {
+            if let Some(w) = w_of(src) {
                 mixed.axpy(w, &p);
                 used += w;
             }

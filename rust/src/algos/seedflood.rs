@@ -20,13 +20,22 @@
 //!
 //! Phase wall-clock is tracked as "GE" (gradient estimation) and "MA"
 //! (message applying) to regenerate Table 4.
+//!
+//! Under a [`crate::netcond::NetCond`] fault model, step (C) additionally
+//! honours the network's churn/repair signals: offline clients keep
+//! computing locally but skip their flood rounds (outboxes persist), and
+//! a recovery or anti-entropy trigger re-floods the full message log so
+//! every update still reaches every live client with bounded staleness.
+//! Caveat: the staleness bound must stay well below the basis-refresh
+//! period τ — a message applied after a refresh reconstructs its probe in
+//! the *new* basis (documented approximation, same as delayed flooding).
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::{init_states, probe_seed, Algorithm, ClientState, Scratch, Space};
-use crate::flood::{FloodState, WireFormat};
+use crate::flood::{self, FloodState, WireFormat};
 use crate::net::{MsgId, Network, SeedUpdate};
 use crate::sim::Env;
 use crate::subcge::{CoeffAccum, DeviceBasisCache, SubspaceBasis};
@@ -158,30 +167,45 @@ impl Algorithm for SeedFlood {
     fn communicate(
         &mut self,
         states: &mut [ClientState],
-        _step: usize,
+        step: usize,
         env: &Env,
         net: &mut Network,
     ) -> Result<()> {
-        // (C) k synchronous flooding rounds; fold fresh messages as they
-        // arrive (coordinate update is O(1) per message per layer)
-        for _ in 0..self.flood_steps {
-            for (i, st) in states.iter_mut().enumerate() {
+        // netcond repair: clients whose connectivity just recovered (or
+        // whose anti-entropy period elapsed) re-flood their full message
+        // log — bounded-staleness delivery instead of silent loss
+        for (i, st) in states.iter_mut().enumerate() {
+            if net.should_repair(i) {
                 let (_, _, flood) = st.flood_parts();
-                flood.send_round(i, net);
-            }
-            for (i, st) in states.iter_mut().enumerate() {
-                let (_, accum, flood) = st.flood_parts();
-                let fresh = flood.collect(i, net);
-                if fresh.is_empty() {
-                    continue;
-                }
-                let t0 = Instant::now();
-                for m in &fresh {
-                    accum.accumulate(&self.basis, m);
-                }
-                self.clock.add("MA", t0.elapsed());
+                flood.repair();
             }
         }
+        // (C) k synchronous flooding rounds via the shared lockstep driver
+        // (offline clients skip both halves — outboxes persist until they
+        // rejoin); fold fresh messages as they arrive (coordinate update
+        // is O(1) per message per layer)
+        // fn item, not a closure: the projection returns a borrow of its
+        // argument, which needs a late-bound lifetime for the for<'a> bound
+        fn flood_of(st: &mut ClientState) -> &mut FloodState {
+            st.flood_parts().2
+        }
+        let basis = &self.basis;
+        let clock = &self.clock;
+        flood::flood_rounds_by(
+            states,
+            net,
+            self.flood_steps,
+            flood_of,
+            |st, _i, fresh| {
+                let (_, accum, flood) = st.flood_parts();
+                flood.note_staleness(step, fresh);
+                let t0 = Instant::now();
+                for m in fresh {
+                    accum.accumulate(basis, m);
+                }
+                clock.add("MA", t0.elapsed());
+            },
+        );
         // apply the batched update through the pallas artifact (Eq. 10)
         if self.use_artifact && self.device_cache.is_none() {
             self.device_cache = env.make_device_cache(&self.basis)?;

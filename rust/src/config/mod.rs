@@ -108,6 +108,11 @@ pub struct ExperimentConfig {
     /// label-skew heterogeneity: Dirichlet α for the client partition
     /// (0 = the paper's uniform split)
     pub dirichlet_alpha: f64,
+    /// unreliable-network & churn scenario: a [`crate::netcond`] spec
+    /// string (`"loss=0.05;node:3@10..20"`) or preset name (`lossy-ring`,
+    /// `flaky-torus`, `churn-er` — presets also pin the topology). Empty =
+    /// the paper's reliable static graph.
+    pub netcond: String,
     /// worker threads for the local-step fan-out (1 = sequential,
     /// 0 = all cores). Never changes results: a parallel run reproduces the
     /// sequential `RunRecord` exactly (tests/engine.rs).
@@ -140,6 +145,7 @@ impl Default for ExperimentConfig {
             init_from: String::new(),
             quantize_msgs: false,
             dirichlet_alpha: 0.0,
+            netcond: String::new(),
             threads: 1,
         }
     }
@@ -179,6 +185,7 @@ impl ExperimentConfig {
         c.init_from = args.get_or("init-from", &c.init_from).to_string();
         c.quantize_msgs = args.has("quantize") || c.quantize_msgs;
         c.dirichlet_alpha = args.get_parse("dirichlet-alpha", c.dirichlet_alpha)?;
+        c.netcond = args.get_or("netcond", &c.netcond).to_string();
         c.threads = args.get_parse("threads", c.threads)?;
         Ok(c)
     }
@@ -215,6 +222,7 @@ impl ExperimentConfig {
                 "init_from" => self.init_from = v.as_str()?.to_string(),
                 "quantize_msgs" => self.quantize_msgs = v.as_bool()?,
                 "dirichlet_alpha" => self.dirichlet_alpha = v.as_float()?,
+                "netcond" => self.netcond = v.as_str()?.to_string(),
                 "threads" => self.threads = v.as_int()? as usize,
                 other => bail!("unknown config key {other:?}"),
             }
@@ -243,7 +251,8 @@ mod tests {
     fn from_args_overrides() {
         let args = Args::parse(
             ["--method", "dsgd", "--clients", "32", "--topology", "mesh",
-             "--lr", "0.0001", "--steps", "50", "--threads", "4"]
+             "--lr", "0.0001", "--steps", "50", "--threads", "4",
+             "--netcond", "loss=0.1;delay=1"]
                 .iter()
                 .map(|s| s.to_string()),
             &[],
@@ -255,6 +264,9 @@ mod tests {
         assert_eq!(c.lr, 1e-4);
         assert_eq!(c.steps, 50);
         assert_eq!(c.threads, 4);
+        assert_eq!(c.netcond, "loss=0.1;delay=1");
+        // default: the reliable network
+        assert!(ExperimentConfig::default().netcond.is_empty());
     }
 
     #[test]
@@ -274,7 +286,8 @@ mod tests {
     #[test]
     fn apply_toml_section() {
         let parsed = toml::parse(
-            "method = \"seedflood\"\nrank = 64\nrefresh = 5000\nlr = 1e-5\n",
+            "method = \"seedflood\"\nrank = 64\nrefresh = 5000\nlr = 1e-5\n\
+             netcond = \"churn-er\"\n",
         )
         .unwrap();
         let mut c = ExperimentConfig::default();
@@ -282,5 +295,6 @@ mod tests {
         assert_eq!(c.rank, 64);
         assert_eq!(c.refresh, 5000);
         assert_eq!(c.lr, 1e-5);
+        assert_eq!(c.netcond, "churn-er");
     }
 }

@@ -216,6 +216,55 @@ pub fn fig7(base: &ExperimentConfig, tasks: &[String], ks: &[usize]) -> Result<V
     Ok(records)
 }
 
+/// Robustness grid (ISSUE 2): the four-method comparison — DSGD, ChocoSGD,
+/// DZSGD, SeedFlood — under unreliable-network & churn scenarios
+/// ([`crate::netcond::preset`] names or raw spec strings). Presets pin the
+/// topology they are named after.
+///
+/// Unlike fig3, every method runs the *same* number of iterations: fault
+/// windows are expressed on the iteration clock, so the usual FO steps/10
+/// scale would expose FO methods to a different (raw specs: possibly
+/// empty) slice of the scenario and make the comparison meaningless. Only
+/// the FO learning rate keeps its Table 5 scale.
+pub fn churn(base: &ExperimentConfig, scenarios: &[String]) -> Result<Vec<RunRecord>> {
+    let mut records = vec![];
+    for scenario in scenarios {
+        for method in [Method::Dsgd, Method::ChocoSgd, Method::Dzsgd, Method::SeedFlood] {
+            let mut cfg = base.clone();
+            cfg.method = method;
+            cfg.netcond = scenario.clone();
+            if !method.is_zeroth_order() {
+                cfg.lr = base.lr * 10.0;
+            }
+            records.push(run_one(cfg)?);
+        }
+    }
+    Ok(records)
+}
+
+/// Churn/loss table: how far does each method drift from consensus, how
+/// much of its traffic survives, and what does staying robust cost.
+pub fn print_churn(records: &[RunRecord]) {
+    println!(
+        "\n{:<12} {:<14} {:>8} {:>12} {:>8} {:>12} {:>10}",
+        "method", "scenario", "GMP%", "consensus", "deliv%", "cost/edge", "staleness"
+    );
+    for r in records {
+        let consensus = r.evals.last().map(|e| e.consensus_error).unwrap_or(0.0);
+        let scenario = if r.netcond.is_empty() { "reliable" } else { r.netcond.as_str() };
+        println!(
+            "{:<12} {:<14} {:>8.2} {:>12.2e} {:>8.1} {:>12} {:>10}",
+            r.method,
+            scenario,
+            100.0 * r.gmp,
+            consensus,
+            100.0 * r.delivery_ratio,
+            human_bytes(r.per_edge_bytes as u64),
+            r.max_staleness,
+        );
+    }
+}
+
 /// Fig 1: aggregate (cost, GMP) scatter out of a set of table-8 records.
 pub fn print_fig1(records: &[RunRecord]) {
     println!("\n== Fig 1: task performance vs total per-edge communication ==");
@@ -288,6 +337,14 @@ pub fn dispatch(id: &str, base: ExperimentConfig, args: &crate::util::cli::Args)
             let p = save_records(id, &records)?;
             println!("saved {p}");
         }
+        "churn" => {
+            let scenarios =
+                args.get_list("scenarios", &["lossy-ring", "flaky-torus", "churn-er"]);
+            let records = churn(&base, &scenarios)?;
+            print_churn(&records);
+            let p = save_records(id, &records)?;
+            println!("saved {p}");
+        }
         "fig7" => {
             let ks: Vec<usize> = args
                 .get_list("ks", &["1", "2", "4", "8", "16"])
@@ -300,7 +357,7 @@ pub fn dispatch(id: &str, base: ExperimentConfig, args: &crate::util::cli::Args)
             println!("saved {p}");
         }
         other => anyhow::bail!(
-            "unknown experiment {other:?}; have fig1, fig3/table8, scaling/fig4/table2, table3, fig6, fig7"
+            "unknown experiment {other:?}; have fig1, fig3/table8, scaling/fig4/table2, table3, fig6, fig7, churn"
         ),
     }
     Ok(())
@@ -419,6 +476,29 @@ pub fn report(paths: &[String]) -> Result<()> {
                     total_bytes: r.get("total_bytes")?.as_f64()? as u64,
                     per_edge_bytes: r.get("per_edge_bytes")?.as_f64()?,
                     wall_secs: r.get("wall_secs")?.as_f64()?,
+                    // netcond fields are optional: records saved before
+                    // ISSUE 2 simply lack them (reliable-network defaults)
+                    netcond: r
+                        .get("netcond")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    delivery_ratio: r
+                        .get("delivery_ratio")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(1.0),
+                    dropped_messages: r
+                        .get("dropped_messages")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0) as u64,
+                    flood_duplicates: r
+                        .get("flood_duplicates")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0) as u64,
+                    max_staleness: r
+                        .get("max_staleness")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0) as u64,
                     ..Default::default()
                 })
             })
@@ -426,6 +506,9 @@ pub fn report(paths: &[String]) -> Result<()> {
         println!("\n### {path} ({} records)", records.len());
         print_table8(&records);
         print_fig1(&records);
+        if records.iter().any(|r| !r.netcond.is_empty()) {
+            print_churn(&records);
+        }
     }
     Ok(())
 }

@@ -8,6 +8,41 @@
 //! *Delayed flooding* (paper §4.5): run only `k` flood steps per local
 //! iteration; the outbox persists across iterations so messages keep
 //! propagating with a bounded delay of ≤ ⌈D/k⌉ iterations.
+//!
+//! # Unreliable networks
+//!
+//! Under an installed [`crate::netcond::NetCond`] fault model, messages
+//! can be lost (packet loss, down links) or stranded (node churn). The
+//! flooding state answers with *repair*: every message ever seen is kept
+//! in an append-only [`FloodState::log`] (cheap by construction — a
+//! seed–scalar message is 20 bytes, the paper's core point), and when the
+//! network signals a recovery or an anti-entropy heartbeat
+//! ([`crate::net::Network::should_repair`]) the client re-floods the whole
+//! log via [`FloodState::repair`]. Receivers dedup as usual, so only the
+//! genuinely missed messages propagate as fresh — delivery degrades to
+//! *bounded staleness* instead of silent loss.
+//!
+//! A 4-node ring floods to full coverage in D = 2 rounds:
+//!
+//! ```
+//! use seedflood::flood::{flood_rounds, FloodState};
+//! use seedflood::net::{MsgId, Network, SeedUpdate};
+//! use seedflood::topology::Topology;
+//!
+//! let topo = Topology::ring(4);
+//! let d = topo.diameter();
+//! let mut net = Network::new(topo);
+//! let mut states: Vec<FloodState> = (0..4).map(|_| FloodState::new()).collect();
+//! for (i, st) in states.iter_mut().enumerate() {
+//!     st.inject(SeedUpdate {
+//!         id: MsgId { origin: i as u32, step: 0 },
+//!         seed: i as u64,
+//!         coeff: 0.25,
+//!     });
+//! }
+//! flood_rounds(&mut states, &mut net, d, |_client, _fresh| {});
+//! assert!(states.iter().all(|s| s.seen.len() == 4)); // everyone has everything
+//! ```
 
 use std::collections::HashSet;
 
@@ -33,8 +68,15 @@ pub struct FloodState {
     pub seen: HashSet<MsgId>,
     /// R_i — messages received last step, to forward this step
     pub outbox: Vec<SeedUpdate>,
+    /// append-only record of every message in first-seen order — the
+    /// source for netcond recovery re-floods ([`Self::repair`]); 20 bytes
+    /// per entry, the same order of memory as the dedup set
+    pub log: Vec<SeedUpdate>,
     /// duplicate receptions filtered (metrics: flooding overhead)
     pub duplicates: u64,
+    /// worst (apply iteration − origin iteration) observed, recorded via
+    /// [`Self::note_staleness`] — 0 on a reliable full-depth flood
+    pub max_staleness: u64,
     /// wire encoding used by send_round
     pub wire: WireFormat,
 }
@@ -55,8 +97,31 @@ impl FloodState {
             WireFormat::Quantized(scale) => msg.quantized(scale),
         };
         self.seen.insert(msg.id);
+        self.log.push(msg);
         self.outbox.push(msg);
         msg
+    }
+
+    /// Re-flood everything this client has ever seen: reset the outbox to
+    /// the full message log. Called when the network signals a recovery or
+    /// an anti-entropy heartbeat ([`crate::net::Network::should_repair`]).
+    /// Receivers dedup, so only genuinely missed messages propagate as
+    /// fresh; the duplicate traffic is the (counted) price of repair. The
+    /// outbox is always a subset of the log, so nothing is lost here.
+    pub fn repair(&mut self) {
+        self.outbox = self.log.clone();
+    }
+
+    /// Record delivery staleness for freshly applied messages at training
+    /// iteration `step` (staleness = apply iteration − origin iteration).
+    /// On a reliable full-depth flood every message applies in its origin
+    /// iteration; delayed flooding bounds this by ⌈D/k⌉, and netcond
+    /// faults stretch it up to the repair latency.
+    pub fn note_staleness(&mut self, step: usize, fresh: &[SeedUpdate]) {
+        for m in fresh {
+            let stale = (step as u64).saturating_sub(m.id.step as u64);
+            self.max_staleness = self.max_staleness.max(stale);
+        }
     }
 
     /// One flooding step for client `me`: send R_i to all neighbors.
@@ -85,6 +150,7 @@ impl FloodState {
             };
             for msg in batch {
                 if self.seen.insert(msg.id) {
+                    self.log.push(msg);
                     fresh.push(msg);
                 } else {
                     self.duplicates += 1;
@@ -96,9 +162,51 @@ impl FloodState {
     }
 }
 
+/// The lockstep flooding loop, generic over where each client's
+/// [`FloodState`] lives (`flood_of` projects it out of the per-client
+/// item) — the single production copy of the round protocol, shared by
+/// [`flood_rounds`] over bare `FloodState`s and by SeedFlood's
+/// `communicate` over engine `ClientState`s.
+///
+/// Each round advances the network's delivery clock ([`Network::tick`])
+/// and skips offline clients ([`Network::is_online`]): an offline client
+/// neither drains its outbox (so nothing is lost while churned out) nor
+/// receives — both no-ops on the reliable default network. `apply` runs
+/// on the whole item, with the `FloodState` borrow released, whenever a
+/// round delivered fresh messages to that client.
+pub fn flood_rounds_by<S, G, F>(
+    items: &mut [S],
+    net: &mut Network,
+    k: usize,
+    mut flood_of: G,
+    mut apply: F,
+) where
+    G: FnMut(&mut S) -> &mut FloodState,
+    F: FnMut(&mut S, usize, &[SeedUpdate]),
+{
+    for _ in 0..k {
+        net.tick();
+        for (i, it) in items.iter_mut().enumerate() {
+            if net.is_online(i) {
+                flood_of(it).send_round(i, net);
+            }
+        }
+        for (i, it) in items.iter_mut().enumerate() {
+            if !net.is_online(i) {
+                continue;
+            }
+            let fresh = flood_of(it).collect(i, net);
+            if !fresh.is_empty() {
+                apply(it, i, &fresh);
+            }
+        }
+    }
+}
+
 /// Run `k` synchronous flooding rounds over all clients; calls `apply`
-/// with (client, &fresh messages) after each round. This is the lockstep
-/// driver used by SeedFlood and the flooding tests.
+/// with (client, &fresh messages) after each round. Thin wrapper over
+/// [`flood_rounds_by`] for plain `FloodState` slices (tests, benches,
+/// examples).
 pub fn flood_rounds<F>(
     states: &mut [FloodState],
     net: &mut Network,
@@ -107,18 +215,13 @@ pub fn flood_rounds<F>(
 ) where
     F: FnMut(usize, &[SeedUpdate]),
 {
-    let n = states.len();
-    for _ in 0..k {
-        for (i, st) in states.iter_mut().enumerate() {
-            st.send_round(i, net);
-        }
-        for i in 0..n {
-            let fresh = states[i].collect(i, net);
-            if !fresh.is_empty() {
-                apply(i, &fresh);
-            }
-        }
+    // fn item, not a closure: projection callbacks returning borrows of
+    // their argument need late-bound lifetimes to satisfy the for<'a>
+    // bound, which closure inference does not reliably produce
+    fn itself(s: &mut FloodState) -> &mut FloodState {
+        s
     }
+    flood_rounds_by(states, net, k, itself, |_, i, fresh| apply(i, fresh));
 }
 
 #[cfg(test)]
@@ -258,6 +361,44 @@ mod tests {
         // each message traverses each directed edge at most twice
         let max_bytes = (2 * n) as u64 * SeedUpdate::WIRE_BYTES * 2 * n as u64;
         assert!(net.acct.total_bytes <= max_bytes);
+    }
+
+    #[test]
+    fn log_records_first_seen_order_and_repair_refloods() {
+        let topo = Topology::ring(4);
+        let d = topo.diameter();
+        let mut net = Network::new(topo);
+        let mut states: Vec<FloodState> = (0..4).map(|_| FloodState::new()).collect();
+        for (i, st) in states.iter_mut().enumerate() {
+            st.inject(msg(i as u32, 0));
+        }
+        flood_rounds(&mut states, &mut net, d + 1, |_, _| {});
+        for st in &states {
+            assert_eq!(st.log.len(), 4, "log holds everything ever seen");
+            assert!(st.outbox.is_empty(), "drained after D+1 rounds");
+        }
+        // repair resets the outbox to the full log; receivers dedup, so a
+        // re-flood round only costs duplicate traffic
+        let bytes_before = net.acct.total_bytes;
+        states[0].repair();
+        assert_eq!(states[0].outbox.len(), 4);
+        flood_rounds(&mut states, &mut net, 1, |_, fresh| {
+            panic!("nothing should be fresh, got {fresh:?}")
+        });
+        assert!(net.acct.total_bytes > bytes_before);
+        assert!(states.iter().skip(1).any(|s| s.duplicates > 0));
+    }
+
+    #[test]
+    fn staleness_tracks_apply_minus_origin_step() {
+        let mut st = FloodState::new();
+        st.note_staleness(5, &[msg(0, 3), msg(1, 5)]);
+        assert_eq!(st.max_staleness, 2);
+        st.note_staleness(7, &[msg(2, 1)]);
+        assert_eq!(st.max_staleness, 6);
+        // a message applied "before" its origin step never underflows
+        st.note_staleness(0, &[msg(3, 9)]);
+        assert_eq!(st.max_staleness, 6);
     }
 
     #[test]

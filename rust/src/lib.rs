@@ -5,11 +5,13 @@
 //! rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the decentralized-training coordinator: network
-//!   topologies, a simulated reliable message-passing network with exact
-//!   per-edge byte accounting, the flooding consensus primitive, the SubCGE
-//!   subspace state, zeroth-order estimation, and all paper baselines
-//!   (DSGD, ChocoSGD, DZSGD, LoRA variants) behind one [`algos::Algorithm`]
-//!   trait, driven by the [`sim`] experiment runner.
+//!   topologies ([`topology`]), a simulated message-passing network with
+//!   exact per-edge byte accounting ([`net`]) plus a deterministic
+//!   unreliable-network & churn fault model ([`netcond`]), the flooding
+//!   consensus primitive ([`flood`]), the SubCGE subspace state
+//!   ([`subcge`]), zeroth-order estimation ([`zo`]), and all paper
+//!   baselines (DSGD, ChocoSGD, DZSGD, LoRA variants) behind one
+//!   [`algos::Algorithm`] trait, driven by the [`sim`] experiment runner.
 //! * **L2** — a jax transformer LM (`python/compile/model.py`), AOT-lowered
 //!   to HLO text artifacts loaded by [`runtime`] through PJRT.
 //! * **L1** — pallas kernels (`python/compile/kernels/`): the SubCGE
@@ -18,6 +20,35 @@
 //!
 //! Python never runs at request time: `make artifacts` is the only python
 //! step; afterwards the `seedflood` binary is self-contained.
+//!
+//! See `ARCHITECTURE.md` for the module map and a message-lifecycle
+//! walkthrough, and `EXPERIMENTS.md` for the measurement conventions
+//! behind every number the binary reports.
+//!
+//! ## Quick start (synthetic backend, no artifacts)
+//!
+//! The pure-rust synthetic oracle ([`oracle`]) makes the whole simulator
+//! runnable without AOT artifacts — this is what tier-1 tests and benches
+//! use:
+//!
+//! ```
+//! use seedflood::config::ExperimentConfig;
+//! use seedflood::sim::{self, Env};
+//!
+//! let env = Env::synthetic(ExperimentConfig {
+//!     clients: 4,
+//!     steps: 2,
+//!     ..Default::default()
+//! })
+//! .unwrap();
+//! let record = sim::run_with_env(&env).unwrap();
+//! assert!(record.total_bytes > 0); // seeds were flooded
+//! assert_eq!(record.delivery_ratio, 1.0); // reliable network by default
+//! ```
+//!
+//! To stress the same run under packet loss and churn, set
+//! `netcond: "churn-er".into()` (or any [`netcond`] spec string) in the
+//! config — nothing else changes.
 
 pub mod algos;
 pub mod config;
@@ -27,6 +58,7 @@ pub mod flood;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod netcond;
 pub mod oracle;
 pub mod rng;
 pub mod runtime;

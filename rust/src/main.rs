@@ -3,14 +3,15 @@
 //! Subcommands:
 //!   train        run one experiment configuration and report GMP + cost
 //!   experiment   regenerate a paper table/figure (fig1, fig3/table8,
-//!                scaling/fig4/table2, table3, fig6, fig7)
+//!                scaling/fig4/table2, table3, fig6, fig7, churn)
 //!   topo         inspect a topology (diameter, spectral gap, edges)
 //!   info         print manifest / artifact info
 //!
 //! Examples:
 //!   seedflood train --method seedflood --clients 16 --topology ring \
 //!       --task sst2 --steps 400 --model tiny
-//!   seedflood experiment fig7 --tasks sst2 --clients 8 --steps 200
+//!   seedflood train --method seedflood --model synthetic --netcond churn-er
+//!   seedflood experiment churn --scenarios lossy-ring,churn-er --steps 200
 //!   seedflood topo --topology meshgrid --clients 64
 
 use anyhow::Result;
@@ -105,6 +106,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         human_bytes(record.per_edge_bytes as u64),
         record.wall_secs
     );
+    if !record.netcond.is_empty() {
+        println!(
+            "netcond {}: delivery {:.1}% | dropped {} | flood duplicates {} | max staleness {} iter",
+            record.netcond,
+            100.0 * record.delivery_ratio,
+            record.dropped_messages,
+            record.flood_duplicates,
+            record.max_staleness
+        );
+    }
     for (phase, ms) in &record.phase_ms {
         println!("phase {phase}: {ms:.1} ms total");
     }
@@ -158,8 +169,13 @@ train        --method <dsgd|choco|dsgd-lora|choco-lora|dzsgd|dzsgd-lora|seedfloo
              --steps N --lr F --eps F --rank N --refresh N --flood-steps N
              --threads N (local-step worker threads; 1 = sequential, 0 = all
              cores — results are identical for every value)
+             --netcond SPEC (unreliable-network & churn injection: a preset
+             <lossy-ring|flaky-torus|churn-er> or a spec string such as
+             \"loss=0.05;delay=1;node:3@10..20;link:0-1@5..15;repair=25\";
+             presets pin their topology; default: reliable network)
              [--out results/run.json]
-experiment   <fig1|fig3|table8|scaling|fig4|table2|table3|fig6|fig7> [--tasks a,b]
+experiment   <fig1|fig3|table8|scaling|fig4|table2|table3|fig6|fig7|churn>
+             [--tasks a,b] [--scenarios lossy-ring,flaky-torus,churn-er]
 pretrain     --model tiny [--steps N --lr F --target-acc F] -> checkpoints/
 report       [results/foo.json ...]   re-render tables from saved records
 topo         --topology K --clients N

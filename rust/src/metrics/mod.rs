@@ -27,6 +27,8 @@ pub struct RunRecord {
     pub topology: String,
     pub clients: usize,
     pub steps: usize,
+    /// netcond fault scenario (preset name or spec string; "" = reliable)
+    pub netcond: String,
     pub train_losses: Vec<f64>,
     pub evals: Vec<EvalPoint>,
     /// final Global Model Performance (accuracy of averaged model on test)
@@ -34,6 +36,16 @@ pub struct RunRecord {
     pub final_loss: f64,
     pub total_bytes: u64,
     pub per_edge_bytes: f64,
+    /// messages killed by fault injection (their bytes stay counted)
+    pub dropped_messages: u64,
+    /// delivered / transmitted messages (1.0 on the reliable network)
+    pub delivery_ratio: f64,
+    /// duplicate flood receipts filtered by the dedup set (SeedFlood only;
+    /// includes the deliberate duplicate traffic of netcond repairs)
+    pub flood_duplicates: u64,
+    /// worst (apply iteration − origin iteration) over all flooded
+    /// messages (SeedFlood only; 0 = everything applied same-iteration)
+    pub max_staleness: u64,
     pub wall_secs: f64,
     /// phase name -> total ms (Table 4 breakdown)
     pub phase_ms: Vec<(String, f64)>,
@@ -48,10 +60,15 @@ impl RunRecord {
             ("topology", Json::str(&self.topology)),
             ("clients", Json::num(self.clients as f64)),
             ("steps", Json::num(self.steps as f64)),
+            ("netcond", Json::str(&self.netcond)),
             ("gmp", Json::num(self.gmp)),
             ("final_loss", Json::num(self.final_loss)),
             ("total_bytes", Json::num(self.total_bytes as f64)),
             ("per_edge_bytes", Json::num(self.per_edge_bytes)),
+            ("dropped_messages", Json::num(self.dropped_messages as f64)),
+            ("delivery_ratio", Json::num(self.delivery_ratio)),
+            ("flood_duplicates", Json::num(self.flood_duplicates as f64)),
+            ("max_staleness", Json::num(self.max_staleness as f64)),
             ("wall_secs", Json::num(self.wall_secs)),
             ("train_losses", Json::arr_f64(&self.train_losses)),
             (
@@ -104,8 +121,12 @@ mod tests {
         let mut r = RunRecord {
             method: "SeedFlood".into(),
             task: "sst2".into(),
+            netcond: "lossy-ring".into(),
             gmp: 0.84,
             total_bytes: 400_000,
+            delivery_ratio: 0.93,
+            dropped_messages: 112,
+            max_staleness: 3,
             ..Default::default()
         };
         r.evals.push(EvalPoint {
@@ -121,6 +142,9 @@ mod tests {
         let txt = j.to_string_pretty();
         let back = Json::parse(&txt).unwrap();
         assert_eq!(back.get("gmp").unwrap().as_f64().unwrap(), 0.84);
+        assert_eq!(back.get("netcond").unwrap().as_str().unwrap(), "lossy-ring");
+        assert_eq!(back.get("delivery_ratio").unwrap().as_f64().unwrap(), 0.93);
+        assert_eq!(back.get("max_staleness").unwrap().as_f64().unwrap(), 3.0);
         assert_eq!(
             back.get("evals").unwrap().as_arr().unwrap()[0]
                 .get("accuracy")

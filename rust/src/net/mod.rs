@@ -1,4 +1,4 @@
-//! Simulated reliable message-passing network with exact byte accounting.
+//! Simulated message-passing network with exact byte accounting.
 //!
 //! The paper (§2.1) assumes a connected, static, reliable graph; clients
 //! exchange messages only with neighbors. This module provides that
@@ -12,12 +12,40 @@
 //! * dense tensor traffic: 4 B per f32 element (+16 B header)
 //! * sparse top-K traffic: 8 B per (index, value) pair (+16 B header)
 //!
-//! Failure injection (drop probability, crashed clients) is supported for
-//! robustness tests; all paper experiments run with a lossless network.
+//! # Fault injection
+//!
+//! The reliable static graph is only the *default*. Installing a
+//! [`NetCond`] ([`Network::install`]) turns on the unreliable-network &
+//! churn model: per-edge packet loss and delivery delay, scheduled link
+//! down-windows, and node churn, all driven by a dedicated seeded RNG
+//! stream so faulty runs stay bit-for-bit reproducible. Without an
+//! installed model the network behaves exactly as the pre-netcond
+//! simulator (no RNG draws, immediate delivery).
+//!
+//! Two clocks govern faults: [`Network::set_step`] advances the
+//! *schedule* clock (training iterations — link/node windows, repair
+//! triggers) and [`Network::tick`] advances the *delivery* clock
+//! (communication rounds — delay queues).
+//!
+//! ```
+//! use seedflood::net::{MsgId, Network, Payload, SeedUpdate};
+//! use seedflood::topology::Topology;
+//!
+//! let mut net = Network::new(Topology::ring(4));
+//! let update = SeedUpdate { id: MsgId { origin: 0, step: 0 }, seed: 7, coeff: 0.5 };
+//! net.send(0, 1, Payload::Seeds(vec![update]));
+//! assert_eq!(net.acct.total_bytes, SeedUpdate::WIRE_BYTES);
+//! let msgs = net.recv_all(1);
+//! assert_eq!(msgs.len(), 1);
+//! assert_eq!(msgs[0].from, 0);
+//! ```
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
+use anyhow::Result;
+
+use crate::netcond::{Event, NetCond};
 use crate::rng::Rng;
 use crate::tensor::ParamVec;
 use crate::topology::Topology;
@@ -116,6 +144,46 @@ pub struct Accounting {
     pub edge_bytes: Vec<u64>,
     pub total_bytes: u64,
     pub total_messages: u64,
+    /// messages actually handed to a receiver by [`Network::recv_all`]
+    pub delivered_messages: u64,
+    /// messages killed by fault injection (loss, down links, down nodes);
+    /// their bytes stay counted — transmission is what costs
+    pub dropped_messages: u64,
+}
+
+impl Accounting {
+    /// Delivered fraction of all transmissions. Messages still in flight
+    /// (delayed, or buffered for an offline receiver) count against the
+    /// ratio until they are received; on the reliable default path every
+    /// drained run reports exactly 1.0.
+    pub fn delivery_ratio(&self) -> f64 {
+        if self.total_messages == 0 {
+            return 1.0;
+        }
+        self.delivered_messages as f64 / self.total_messages as f64
+    }
+}
+
+/// Compiled per-edge fault state (from an installed [`NetCond`]).
+struct CondState {
+    /// iid loss probability per flat directed edge
+    loss: Vec<f64>,
+    /// delivery delay in rounds per flat directed edge
+    delay: Vec<u64>,
+    /// schedule-evaluated: link currently down, per flat directed edge
+    link_down: Vec<bool>,
+    /// schedule-evaluated: node currently offline
+    node_down: Vec<bool>,
+    /// repair trigger for the current step (recovery or anti-entropy)
+    repair_due: Vec<bool>,
+    /// previous step's per-node impairment, for recovery-edge detection
+    impaired_prev: Vec<bool>,
+    events: Vec<Event>,
+    repair_every: usize,
+    /// dedicated fault stream — advanced only on the sequential
+    /// communication path, never by worker threads, so faulty runs keep
+    /// the engine's `--threads` determinism contract
+    rng: Rng,
 }
 
 /// The simulated network: directed-edge queues over a [`Topology`].
@@ -127,7 +195,8 @@ pub struct Accounting {
 /// from O(n²·deg) to O(n·deg) network overhead.
 pub struct Network {
     topo: Topology,
-    queues: Vec<VecDeque<Message>>, // one per directed edge
+    /// one FIFO per directed edge; entries are (deliver-at round, message)
+    queues: Vec<VecDeque<(u64, Message)>>,
     edge_index: Vec<Vec<(usize, usize)>>, // [src] -> (dst, flat edge id)
     /// O(1) directed-edge lookup: (src, dst) -> flat edge id
     edge_ids: HashMap<(usize, usize), usize>,
@@ -136,11 +205,10 @@ pub struct Network {
     /// historical 0..n scan (determinism contract)
     in_edges: Vec<Vec<(usize, usize)>>,
     pub acct: Accounting,
-    /// iid drop probability (failure injection; 0.0 in paper experiments)
-    pub drop_prob: f64,
-    /// clients that silently drop all traffic (crash-stop injection)
-    pub crashed: Vec<bool>,
-    drop_rng: Rng,
+    /// delivery clock, in communication rounds (see [`Self::tick`])
+    now: u64,
+    /// fault injection, absent by default (see [`Self::install`])
+    cond: Option<CondState>,
 }
 
 impl Network {
@@ -166,10 +234,129 @@ impl Network {
                 edge_bytes: vec![0; count],
                 ..Default::default()
             },
-            drop_prob: 0.0,
-            crashed: vec![false; topo.n],
-            drop_rng: Rng::new(0xD20B),
+            now: 0,
+            cond: None,
             topo,
+        }
+    }
+
+    /// Compile and install a fault model. Validates the model against this
+    /// network's topology. Call before the first send; the schedule starts
+    /// fully up — drive it with [`Self::set_step`].
+    pub fn install(&mut self, cond: &NetCond) -> Result<()> {
+        cond.validate(&self.topo)?;
+        let ne = self.queues.len();
+        let n = self.topo.n;
+        let mut loss = vec![cond.loss; ne];
+        let mut delay = vec![cond.delay; ne];
+        for &(a, b, p) in &cond.edge_loss {
+            for (x, y) in [(a, b), (b, a)] {
+                if let Some(&e) = self.edge_ids.get(&(x, y)) {
+                    loss[e] = p;
+                }
+            }
+        }
+        for &(a, b, k) in &cond.edge_delay {
+            for (x, y) in [(a, b), (b, a)] {
+                if let Some(&e) = self.edge_ids.get(&(x, y)) {
+                    delay[e] = k;
+                }
+            }
+        }
+        self.cond = Some(CondState {
+            loss,
+            delay,
+            link_down: vec![false; ne],
+            node_down: vec![false; n],
+            repair_due: vec![false; n],
+            impaired_prev: vec![false; n],
+            events: cond.events.clone(),
+            repair_every: cond.repair_every,
+            rng: Rng::new(cond.seed),
+        });
+        Ok(())
+    }
+
+    /// Advance the fault schedule to training iteration `t`: evaluate the
+    /// link/node down-windows and compute the per-client repair triggers
+    /// (down→up recovery edges, plus the periodic anti-entropy heartbeat).
+    /// No-op without an installed fault model.
+    pub fn set_step(&mut self, t: usize) {
+        let Some(c) = self.cond.as_mut() else { return };
+        for v in c.link_down.iter_mut() {
+            *v = false;
+        }
+        for v in c.node_down.iter_mut() {
+            *v = false;
+        }
+        for k in 0..c.events.len() {
+            match c.events[k] {
+                Event::Node { id, from, until } => {
+                    if t >= from && t < until {
+                        c.node_down[id] = true;
+                    }
+                }
+                Event::Link { a, b, from, until } => {
+                    if t >= from && t < until {
+                        for (x, y) in [(a, b), (b, a)] {
+                            if let Some(&e) = self.edge_ids.get(&(x, y)) {
+                                c.link_down[e] = true;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // links don't buffer: everything in flight on a down link dies the
+        // moment the schedule marks it down, independent of when (or
+        // whether) the receiver polls — unlike node churn, where in-flight
+        // traffic stays buffered on the in-edges until the node rejoins
+        for (eid, down) in c.link_down.iter().enumerate() {
+            if *down && !self.queues[eid].is_empty() {
+                self.acct.dropped_messages += self.queues[eid].len() as u64;
+                self.queues[eid].clear();
+            }
+        }
+        // per-node impairment — exactly the local knowledge a real client
+        // has: itself offline, a neighbor offline, or an incident link down
+        let n = self.topo.n;
+        let mut impaired = vec![false; n];
+        for (i, imp) in impaired.iter_mut().enumerate() {
+            *imp = c.node_down[i]
+                || self.edge_index[i]
+                    .iter()
+                    .any(|&(dst, eid)| c.node_down[dst] || c.link_down[eid]);
+        }
+        let periodic = c.repair_every > 0 && t > 0 && t % c.repair_every == 0;
+        for i in 0..n {
+            c.repair_due[i] = (c.impaired_prev[i] && !impaired[i]) || periodic;
+        }
+        c.impaired_prev = impaired;
+    }
+
+    /// Advance the delivery clock one communication round (delayed
+    /// messages become receivable once the clock passes their arrival).
+    pub fn tick(&mut self) {
+        self.now += 1;
+    }
+
+    /// Whether client `i` is currently online (always true without a
+    /// fault model). Offline clients neither transmit nor receive; the
+    /// protocol layer also skips their send rounds so outboxes persist.
+    pub fn is_online(&self, i: usize) -> bool {
+        match &self.cond {
+            Some(c) => !c.node_down[i],
+            None => true,
+        }
+    }
+
+    /// Whether client `i` should re-flood its message log this iteration
+    /// (set by [`Self::set_step`]: an incident link/node just recovered,
+    /// or the anti-entropy period elapsed).
+    pub fn should_repair(&self, i: usize) -> bool {
+        match &self.cond {
+            Some(c) => c.repair_due[i],
+            None => false,
         }
     }
 
@@ -192,21 +379,39 @@ impl Network {
 
     /// Send to one neighbor. Panics if (src,dst) is not an edge — the
     /// decentralized constraint is enforced structurally.
+    ///
+    /// Fault semantics: an offline *sender* transmits nothing (no cost);
+    /// everything else is counted as transmitted, then possibly killed by
+    /// a down link, an offline receiver, or a seeded loss draw — dropped
+    /// bytes stay in the accounting because transmission is what costs.
     pub fn send(&mut self, src: usize, dst: usize, payload: Payload) {
         let eid = self
             .edge_id(src, dst)
             .unwrap_or_else(|| panic!("({src},{dst}) is not an edge of {}", self.topo.kind));
+        if let Some(c) = self.cond.as_ref() {
+            if c.node_down[src] {
+                return;
+            }
+        }
         let bytes = payload.wire_bytes();
         self.acct.edge_bytes[eid] += bytes;
         self.acct.total_bytes += bytes;
         self.acct.total_messages += 1;
-        if self.crashed[src] || self.crashed[dst] {
-            return; // counted as sent, never delivered
-        }
-        if self.drop_prob > 0.0 && self.drop_rng.next_f64() < self.drop_prob {
-            return;
-        }
-        self.queues[eid].push_back(Message { from: src, payload });
+        let deliver_at = match self.cond.as_mut() {
+            Some(c) => {
+                if c.node_down[dst] || c.link_down[eid] {
+                    self.acct.dropped_messages += 1;
+                    return;
+                }
+                if c.loss[eid] > 0.0 && c.rng.next_f64() < c.loss[eid] {
+                    self.acct.dropped_messages += 1;
+                    return;
+                }
+                self.now + c.delay[eid]
+            }
+            None => self.now,
+        };
+        self.queues[eid].push_back((deliver_at, Message { from: src, payload }));
     }
 
     /// Send the same payload to every neighbor of `src` (clone-per-edge is
@@ -218,16 +423,30 @@ impl Network {
         }
     }
 
-    /// Drain every queued message destined for `dst` — O(in-degree) via the
-    /// precomputed reverse-adjacency table, sources in ascending order.
+    /// Drain every *due* queued message destined for `dst` — O(in-degree)
+    /// via the precomputed reverse-adjacency table, sources in ascending
+    /// order. Messages whose delivery round is still in the future stay
+    /// queued (per-edge delay is constant, so FIFO order is preserved).
+    ///
+    /// Faults: an offline receiver drains nothing — its in-flight traffic
+    /// stays buffered until it rejoins (nodes buffer). Down *links* never
+    /// hold traffic at all: sends onto them are dropped and anything
+    /// already in flight is purged when the schedule marks the link down
+    /// ([`Self::set_step`]), so a link queue reaching this point is live.
     pub fn recv_all(&mut self, dst: usize) -> Vec<Message> {
+        if let Some(c) = self.cond.as_ref() {
+            if c.node_down[dst] {
+                return vec![];
+            }
+        }
         let mut out = vec![];
         for k in 0..self.in_edges[dst].len() {
             let (_, eid) = self.in_edges[dst][k];
-            while let Some(m) = self.queues[eid].pop_front() {
-                out.push(m);
+            while self.queues[eid].front().is_some_and(|&(at, _)| at <= self.now) {
+                out.push(self.queues[eid].pop_front().unwrap().1);
             }
         }
+        self.acct.delivered_messages += out.len() as u64;
         out
     }
 
@@ -269,6 +488,8 @@ mod tests {
         }
         // queue drained
         assert!(net.recv_all(1).is_empty());
+        assert_eq!(net.acct.delivered_messages, 1);
+        assert_eq!(net.acct.delivery_ratio(), 1.0);
     }
 
     #[test]
@@ -380,24 +601,152 @@ mod tests {
     }
 
     #[test]
-    fn crashed_client_blackholes() {
+    fn offline_receiver_blackholes_new_sends() {
         let mut net = Network::new(Topology::ring(4));
-        net.crashed[1] = true;
+        net.install(&NetCond {
+            events: vec![Event::Node { id: 1, from: 0, until: 10 }],
+            ..Default::default()
+        })
+        .unwrap();
+        net.set_step(0);
         net.send(0, 1, seed_payload(1));
         assert!(net.recv_all(1).is_empty());
-        // still counted as transmitted
+        // still counted as transmitted, and counted as dropped
+        assert_eq!(net.acct.total_messages, 1);
+        assert_eq!(net.acct.dropped_messages, 1);
+        // ...while the offline *sender* costs nothing
+        net.send(1, 2, seed_payload(1));
         assert_eq!(net.acct.total_messages, 1);
     }
 
     #[test]
-    fn drop_prob_loses_some() {
-        let mut net = Network::new(Topology::ring(4));
-        net.drop_prob = 0.5;
-        for _ in 0..200 {
-            net.send(0, 1, seed_payload(1));
-        }
-        let got = net.recv_all(1).len();
+    fn seeded_loss_loses_some_deterministically() {
+        let run = || {
+            let mut net = Network::new(Topology::ring(4));
+            net.install(&NetCond { loss: 0.5, ..Default::default() }).unwrap();
+            for _ in 0..200 {
+                net.send(0, 1, seed_payload(1));
+            }
+            net.recv_all(1).len()
+        };
+        let got = run();
         assert!(got > 50 && got < 150, "got {got}");
+        // dedicated seeded stream → bit-for-bit reproducible loss pattern
+        assert_eq!(got, run());
+    }
+
+    #[test]
+    fn link_down_window_drops_then_recovers() {
+        let mut net = Network::new(Topology::ring(4));
+        net.install(&NetCond {
+            events: vec![Event::Link { a: 0, b: 1, from: 2, until: 4 }],
+            ..Default::default()
+        })
+        .unwrap();
+        net.set_step(2);
+        net.send(0, 1, seed_payload(1)); // down window: dropped both ways
+        net.send(1, 0, seed_payload(1));
+        assert!(net.recv_all(1).is_empty());
+        assert!(net.recv_all(0).is_empty());
+        assert_eq!(net.acct.dropped_messages, 2);
+        // other links unaffected
+        net.send(1, 2, seed_payload(1));
+        assert_eq!(net.recv_all(2).len(), 1);
+        net.set_step(4); // window closed: both endpoints see a recovery
+        assert!(net.should_repair(0) && net.should_repair(1));
+        assert!(!net.should_repair(3));
+        net.send(0, 1, seed_payload(1));
+        assert_eq!(net.recv_all(1).len(), 1);
+    }
+
+    #[test]
+    fn in_flight_message_dies_when_link_cut_mid_flight() {
+        // links don't buffer: an in-flight delayed message is purged the
+        // moment the schedule cuts the link — independent of when (or
+        // whether) the receiver polls during the outage, so an overlapping
+        // receiver churn window cannot resurrect it afterwards
+        let mut net = Network::new(Topology::ring(4));
+        net.install(&NetCond {
+            delay: 2,
+            events: vec![
+                Event::Link { a: 0, b: 1, from: 1, until: 3 },
+                Event::Node { id: 1, from: 1, until: 4 },
+            ],
+            ..Default::default()
+        })
+        .unwrap();
+        net.set_step(0);
+        net.send(0, 1, seed_payload(1)); // link up at send, due at round 2
+        net.tick();
+        net.tick();
+        net.set_step(1); // link cut with the packet in flight → purged
+        assert_eq!(net.acct.dropped_messages, 1);
+        net.set_step(4); // link and receiver both back up — packet is gone
+        assert!(net.recv_all(1).is_empty());
+    }
+
+    #[test]
+    fn delay_defers_delivery_until_tick() {
+        let mut net = Network::new(Topology::ring(4));
+        net.install(&NetCond { delay: 2, ..Default::default() }).unwrap();
+        net.send(0, 1, seed_payload(1));
+        assert!(net.recv_all(1).is_empty());
+        net.tick();
+        assert!(net.recv_all(1).is_empty());
+        net.tick();
+        assert_eq!(net.recv_all(1).len(), 1);
+    }
+
+    #[test]
+    fn node_recovery_triggers_neighbor_repair_and_buffered_delivery() {
+        let mut net = Network::new(Topology::ring(4));
+        net.install(&NetCond {
+            delay: 1,
+            events: vec![Event::Node { id: 2, from: 1, until: 3 }],
+            ..Default::default()
+        })
+        .unwrap();
+        net.set_step(0);
+        net.send(1, 2, seed_payload(1)); // in flight when 2 goes down
+        net.tick();
+        net.set_step(1);
+        assert!(!net.is_online(2));
+        assert!(net.recv_all(2).is_empty()); // buffered, not dropped
+        net.set_step(3); // node 2 rejoins
+        assert!(net.is_online(2));
+        // the node itself and its ring neighbors all see the recovery
+        assert!(net.should_repair(2) && net.should_repair(1) && net.should_repair(3));
+        assert!(!net.should_repair(0));
+        assert_eq!(net.recv_all(2).len(), 1); // buffered message delivered
+    }
+
+    #[test]
+    fn periodic_repair_heartbeat() {
+        let mut net = Network::new(Topology::ring(4));
+        net.install(&NetCond { loss: 0.1, repair_every: 3, ..Default::default() })
+            .unwrap();
+        for (t, due) in [(0, false), (1, false), (2, false), (3, true), (4, false), (6, true)] {
+            net.set_step(t);
+            assert_eq!(net.should_repair(0), due, "step {t}");
+        }
+    }
+
+    #[test]
+    fn zero_cond_behaves_like_no_cond() {
+        let run = |install: bool| {
+            let mut net = Network::new(Topology::ring(4));
+            if install {
+                net.install(&NetCond { loss: 0.0, ..Default::default() }).unwrap();
+            }
+            for t in 0..5 {
+                net.set_step(t);
+                net.tick();
+                net.send(0, 1, seed_payload(t + 1));
+            }
+            let got = net.recv_all(1).len();
+            (got, net.acct.total_bytes, net.acct.dropped_messages)
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]

@@ -1,0 +1,435 @@
+//! `NetCond` — deterministic unreliable-network & churn fault injection.
+//!
+//! The paper's central claim is that flooding near-zero-size seed messages
+//! stays robust "across complex network topologies" (§3.3), but the
+//! simulator historically exercised only perfectly reliable, static
+//! graphs. This module is the declarative fault model that closes that
+//! gap: per-edge packet-loss probability, integer delivery delay, scheduled
+//! link up/down windows, and node churn (clients offline for `[from,
+//! until)` iteration windows, then rejoining). [`crate::net::Network`]
+//! compiles a `NetCond` into per-edge tables
+//! ([`crate::net::Network::install`]) and consults them on every
+//! send/receive; [`crate::flood::FloodState`]
+//! answers faults with recovery re-floods so delivery degrades to
+//! *bounded staleness* instead of silent loss.
+//!
+//! Everything is deterministic: fault draws come from a dedicated RNG
+//! stream (`seed`), advanced only on the sequential communication path, so
+//! a faulty run is bit-for-bit reproducible and independent of
+//! `--threads` (tested in `rust/tests/netcond.rs`).
+//!
+//! # Spec strings
+//!
+//! A `NetCond` is described by a compact spec string — the value of the
+//! `--netcond` CLI knob and the `netcond` config/TOML key. Clauses are
+//! separated by `;` (never `,` — commas separate whole scenarios in list
+//! options like `experiment churn --scenarios a,b`):
+//!
+//! | clause | meaning |
+//! |---|---|
+//! | `loss=P` | iid per-edge packet-loss probability (both directions) |
+//! | `delay=K` | delivery delay of `K` communication rounds on every edge |
+//! | `link:A-B@T0..T1` | undirected link A–B down during iterations `[T0, T1)` |
+//! | `node:I@T0..T1` | client I offline during iterations `[T0, T1)` |
+//! | `eloss:A-B=P` | per-edge loss override for link A–B |
+//! | `edelay:A-B=K` | per-edge delay override for link A–B |
+//! | `repair=K` | anti-entropy: re-flood the full message log every K iterations |
+//! | `seed=S` | fault RNG stream seed |
+//!
+//! Alternatively the spec may be one of the scenario [`preset`] names
+//! (`lossy-ring`, `flaky-torus`, `churn-er`), which also pin the topology
+//! they are named after.
+//!
+//! ```
+//! use seedflood::net::Network;
+//! use seedflood::netcond::NetCond;
+//! use seedflood::topology::Topology;
+//!
+//! let cond = NetCond::parse("loss=0.1;delay=1;node:2@1..3;repair=4").unwrap();
+//! let mut net = Network::new(Topology::ring(4));
+//! net.install(&cond).unwrap();
+//! net.set_step(1);
+//! assert!(!net.is_online(2)); // inside the churn window
+//! net.set_step(3);
+//! assert!(net.is_online(2));
+//! assert!(net.should_repair(2)); // just recovered → re-flood trigger
+//! ```
+
+use anyhow::{bail, ensure, Result};
+
+use crate::topology::{Kind, Topology};
+
+/// Default seed of the dedicated fault RNG stream (spec clause `seed=S`).
+pub const DEFAULT_FAULT_SEED: u64 = 0xFA_01_17;
+
+/// One scheduled connectivity event. Windows are half-open iteration
+/// ranges `[from, until)` on the simulation's step clock
+/// ([`crate::net::Network::set_step`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// Undirected link `a`–`b` drops all traffic during the window.
+    Link { a: usize, b: usize, from: usize, until: usize },
+    /// Client `id` is offline during the window: it transmits nothing and
+    /// receives nothing; in-flight messages addressed to it stay buffered
+    /// on its in-edges until it rejoins.
+    Node { id: usize, from: usize, until: usize },
+}
+
+/// Declarative fault model for the simulated network. Disabled is
+/// represented by *absence* (no `NetCond` installed), so the reliable
+/// default path carries zero overhead and stays bit-for-bit identical to
+/// the pre-netcond simulator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetCond {
+    /// fault RNG stream seed (independent of the experiment seed)
+    pub seed: u64,
+    /// uniform iid per-edge packet-loss probability
+    pub loss: f64,
+    /// uniform per-edge delivery delay, in communication rounds
+    pub delay: u64,
+    /// per-link loss overrides (undirected: applied to both directions)
+    pub edge_loss: Vec<(usize, usize, f64)>,
+    /// per-link delay overrides (undirected)
+    pub edge_delay: Vec<(usize, usize, u64)>,
+    /// scheduled link/node down windows
+    pub events: Vec<Event>,
+    /// anti-entropy period: every `repair_every` iterations each client
+    /// re-floods its full message log (0 = recovery-triggered repair only)
+    pub repair_every: usize,
+}
+
+impl Default for NetCond {
+    fn default() -> Self {
+        NetCond {
+            seed: DEFAULT_FAULT_SEED,
+            loss: 0.0,
+            delay: 0,
+            edge_loss: vec![],
+            edge_delay: vec![],
+            events: vec![],
+            repair_every: 0,
+        }
+    }
+}
+
+impl NetCond {
+    /// Parse a spec string (see the module docs for the clause grammar).
+    /// Range errors (probabilities outside `[0, 1]`, empty windows) are
+    /// rejected here; graph-shape errors (unknown nodes/edges) are caught
+    /// by [`Self::validate`] once the topology is known.
+    pub fn parse(spec: &str) -> Result<NetCond> {
+        let mut c = NetCond::default();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(rest) = clause.strip_prefix("link:") {
+                let (edge, window) = split2(rest, '@', clause)?;
+                let (a, b) = parse_edge(edge)?;
+                let (from, until) = parse_window(window)?;
+                c.events.push(Event::Link { a, b, from, until });
+            } else if let Some(rest) = clause.strip_prefix("node:") {
+                let (id, window) = split2(rest, '@', clause)?;
+                let id = parse_num::<usize>(id, "node id")?;
+                let (from, until) = parse_window(window)?;
+                c.events.push(Event::Node { id, from, until });
+            } else if let Some(rest) = clause.strip_prefix("eloss:") {
+                let (edge, p) = split2(rest, '=', clause)?;
+                let (a, b) = parse_edge(edge)?;
+                let p = parse_prob(p)?;
+                c.edge_loss.push((a, b, p));
+            } else if let Some(rest) = clause.strip_prefix("edelay:") {
+                let (edge, k) = split2(rest, '=', clause)?;
+                let (a, b) = parse_edge(edge)?;
+                c.edge_delay.push((a, b, parse_num::<u64>(k, "delay")?));
+            } else if let Some((k, v)) = clause.split_once('=') {
+                match k.trim() {
+                    "loss" => c.loss = parse_prob(v)?,
+                    "delay" => c.delay = parse_num(v, "delay")?,
+                    "seed" => c.seed = parse_num(v, "seed")?,
+                    "repair" => c.repair_every = parse_num(v, "repair period")?,
+                    other => bail!("unknown netcond key {other:?} in clause {clause:?}"),
+                }
+            } else {
+                bail!("cannot parse netcond clause {clause:?}");
+            }
+        }
+        Ok(c)
+    }
+
+    /// Check the model against a concrete graph: every referenced node
+    /// must exist and every referenced link must be an edge of `topo`.
+    pub fn validate(&self, topo: &Topology) -> Result<()> {
+        let check_edge = |a: usize, b: usize| -> Result<()> {
+            ensure!(
+                a < topo.n && b < topo.n && topo.has_edge(a, b),
+                "netcond references {a}-{b}, not an edge of {} (n={})",
+                topo.kind,
+                topo.n
+            );
+            Ok(())
+        };
+        for &(a, b, _) in &self.edge_loss {
+            check_edge(a, b)?;
+        }
+        for &(a, b, _) in &self.edge_delay {
+            check_edge(a, b)?;
+        }
+        for ev in &self.events {
+            match *ev {
+                Event::Link { a, b, from, until } => {
+                    check_edge(a, b)?;
+                    ensure!(from < until, "empty link window {from}..{until}");
+                }
+                Event::Node { id, from, until } => {
+                    ensure!(id < topo.n, "netcond node {id} out of range (n={})", topo.n);
+                    ensure!(from < until, "empty node window {from}..{until}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// True if any fault source is active (an all-zero model behaves
+    /// identically to no model, just with the bookkeeping installed).
+    pub fn is_faulty(&self) -> bool {
+        self.loss > 0.0
+            || self.delay > 0
+            || !self.events.is_empty()
+            || self.edge_loss.iter().any(|&(_, _, p)| p > 0.0)
+            || self.edge_delay.iter().any(|&(_, _, k)| k > 0)
+    }
+}
+
+/// A named scenario: a fault model plus the topology it is defined on.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub kind: Kind,
+    pub cond: NetCond,
+}
+
+/// Scenario presets for the robustness experiments (`seedflood experiment
+/// churn`, `examples/churn_tolerance.rs`). Preset names pin the topology
+/// they are named after; windows scale with `steps` so the same preset
+/// works for short tests and long runs.
+pub fn preset(name: &str, n: usize, steps: usize) -> Option<Scenario> {
+    // window helper: the [num/den, (num+1)/den) fraction of training
+    let w = |num: usize, den: usize| (steps * num / den, steps * (num + 1) / den);
+    match name {
+        // uniform 5% packet loss on the sparsest paper topology — every
+        // message crosses each ring hop exactly twice, so loss bites
+        // hardest here; periodic anti-entropy restores delivery
+        "lossy-ring" => Some(Scenario {
+            kind: Kind::Ring,
+            cond: NetCond {
+                loss: 0.05,
+                repair_every: (steps / 10).max(1),
+                ..Default::default()
+            },
+        }),
+        // mild loss plus three scheduled link flaps on a torus: while a
+        // link is down the effective diameter exceeds the flood depth, so
+        // the persistent outbox has to carry messages across iterations
+        "flaky-torus" => {
+            let mut cond = NetCond {
+                loss: 0.02,
+                repair_every: (steps / 10).max(1),
+                ..Default::default()
+            };
+            if n >= 4 && steps >= 6 {
+                let topo = Topology::torus(n);
+                for (j, node) in [0, n / 3, 2 * n / 3].into_iter().enumerate() {
+                    let nbr = topo.neighbors(node)[0];
+                    let (from, until) = w(j + 1, 6);
+                    cond.events.push(Event::Link { a: node, b: nbr, from, until });
+                }
+            }
+            Some(Scenario { kind: Kind::Torus, cond })
+        }
+        // staggered node churn on an Erdős–Rényi graph: up to three
+        // distinct clients go offline for a fifth of training each and
+        // rejoin; repair is purely recovery-triggered
+        "churn-er" => {
+            let mut cond = NetCond { loss: 0.01, ..Default::default() };
+            if n >= 4 && steps >= 5 {
+                // candidates are ascending, so adjacent dedup suffices
+                // (at n = 4, n/2 == n-2 — don't churn one client twice)
+                let mut nodes = vec![1, n / 2, n - 2];
+                nodes.dedup();
+                for (j, node) in nodes.into_iter().enumerate() {
+                    let (from, until) = w(j + 1, 5);
+                    cond.events.push(Event::Node { id: node, from, until });
+                }
+            }
+            Some(Scenario { kind: Kind::ErdosRenyi, cond })
+        }
+        _ => None,
+    }
+}
+
+/// Resolve a `--netcond` value: a [`preset`] name (which also pins the
+/// topology) or a raw spec string (which leaves the topology alone).
+pub fn resolve(spec: &str, n: usize, steps: usize) -> Result<(Option<Kind>, NetCond)> {
+    if let Some(sc) = preset(spec, n, steps) {
+        return Ok((Some(sc.kind), sc.cond));
+    }
+    Ok((None, NetCond::parse(spec)?))
+}
+
+fn split2<'a>(s: &'a str, sep: char, clause: &str) -> Result<(&'a str, &'a str)> {
+    s.split_once(sep)
+        .ok_or_else(|| anyhow::anyhow!("expected {sep:?} in netcond clause {clause:?}"))
+}
+
+fn parse_num<T: std::str::FromStr>(s: &str, what: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    s.trim()
+        .parse::<T>()
+        .map_err(|e| anyhow::anyhow!("bad {what} {s:?}: {e}"))
+}
+
+fn parse_prob(s: &str) -> Result<f64> {
+    let p: f64 = parse_num(s, "probability")?;
+    ensure!((0.0..=1.0).contains(&p), "probability {p} outside [0, 1]");
+    Ok(p)
+}
+
+/// `"A-B"` → (A, B)
+fn parse_edge(s: &str) -> Result<(usize, usize)> {
+    let (a, b) = s
+        .split_once('-')
+        .ok_or_else(|| anyhow::anyhow!("expected A-B edge, got {s:?}"))?;
+    Ok((parse_num(a, "node id")?, parse_num(b, "node id")?))
+}
+
+/// `"T0..T1"` → [T0, T1), non-empty
+fn parse_window(s: &str) -> Result<(usize, usize)> {
+    let (a, b) = s
+        .split_once("..")
+        .ok_or_else(|| anyhow::anyhow!("expected T0..T1 window, got {s:?}"))?;
+    let (from, until) = (parse_num(a, "window start")?, parse_num(b, "window end")?);
+    ensure!(from < until, "empty netcond window {from}..{until}");
+    Ok((from, until))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_clause_kinds() {
+        let c = NetCond::parse(
+            "loss=0.1; delay=2; seed=9; repair=5; link:0-1@3..7; node:2@4..6; \
+             eloss:1-2=0.5; edelay:2-3=4",
+        )
+        .unwrap();
+        assert_eq!(c.loss, 0.1);
+        assert_eq!(c.delay, 2);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.repair_every, 5);
+        assert_eq!(c.edge_loss, vec![(1, 2, 0.5)]);
+        assert_eq!(c.edge_delay, vec![(2, 3, 4)]);
+        assert_eq!(
+            c.events,
+            vec![
+                Event::Link { a: 0, b: 1, from: 3, until: 7 },
+                Event::Node { id: 2, from: 4, until: 6 },
+            ]
+        );
+        assert!(c.is_faulty());
+    }
+
+    #[test]
+    fn empty_clauses_ok_but_comma_is_not_a_separator() {
+        let c = NetCond::parse("loss=0.05;;delay=1;").unwrap();
+        assert_eq!(c.loss, 0.05);
+        assert_eq!(c.delay, 1);
+        // commas separate whole scenarios in CLI list options, so they
+        // must never silently split a single spec
+        assert!(NetCond::parse("loss=0.05,delay=1").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(NetCond::parse("loss=1.5").is_err()); // prob out of range
+        assert!(NetCond::parse("node:2@7..3").is_err()); // empty window
+        assert!(NetCond::parse("link:0@1..2").is_err()); // missing -B
+        assert!(NetCond::parse("gibberish").is_err());
+        assert!(NetCond::parse("frob=1").is_err()); // unknown key
+    }
+
+    #[test]
+    fn zero_spec_is_not_faulty() {
+        let c = NetCond::parse("loss=0").unwrap();
+        assert!(!c.is_faulty());
+        assert_eq!(c, NetCond { loss: 0.0, ..Default::default() });
+    }
+
+    #[test]
+    fn validate_against_topology() {
+        let topo = Topology::ring(6);
+        // 0-1 is a ring edge, 0-3 is not
+        assert!(NetCond::parse("link:0-1@0..5").unwrap().validate(&topo).is_ok());
+        assert!(NetCond::parse("link:0-3@0..5").unwrap().validate(&topo).is_err());
+        assert!(NetCond::parse("node:9@0..5").unwrap().validate(&topo).is_err());
+        assert!(NetCond::parse("eloss:2-3=0.2").unwrap().validate(&topo).is_ok());
+        assert!(NetCond::parse("edelay:2-4=1").unwrap().validate(&topo).is_err());
+    }
+
+    #[test]
+    fn presets_resolve_and_validate() {
+        for (name, kind) in [
+            ("lossy-ring", Kind::Ring),
+            ("flaky-torus", Kind::Torus),
+            ("churn-er", Kind::ErdosRenyi),
+        ] {
+            let sc = preset(name, 16, 100).expect(name);
+            assert_eq!(sc.kind, kind, "{name}");
+            assert!(sc.cond.is_faulty(), "{name}");
+            let topo = Topology::build(sc.kind, 16, 0);
+            sc.cond.validate(&topo).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        assert!(preset("nope", 16, 100).is_none());
+    }
+
+    #[test]
+    fn presets_survive_tiny_runs() {
+        // short tests use few steps/clients; windows must stay valid
+        for name in ["lossy-ring", "flaky-torus", "churn-er"] {
+            let sc = preset(name, 8, 10).expect(name);
+            let topo = Topology::build(sc.kind, 8, 0);
+            sc.cond.validate(&topo).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn churn_er_nodes_distinct_at_minimum_n() {
+        // at n = 4, the candidates [1, n/2, n-2] collide — the preset must
+        // not churn the same client in back-to-back windows
+        let sc = preset("churn-er", 4, 20).unwrap();
+        let ids: Vec<usize> = sc
+            .cond
+            .events
+            .iter()
+            .map(|ev| match *ev {
+                Event::Node { id, .. } => id,
+                Event::Link { .. } => panic!("churn-er has no link events"),
+            })
+            .collect();
+        assert_eq!(ids, vec![1, 2]);
+    }
+
+    #[test]
+    fn resolve_preset_vs_raw_spec() {
+        let (kind, cond) = resolve("lossy-ring", 16, 200).unwrap();
+        assert_eq!(kind, Some(Kind::Ring));
+        assert_eq!(cond.loss, 0.05);
+        let (kind, cond) = resolve("loss=0.2;delay=1", 16, 200).unwrap();
+        assert_eq!(kind, None);
+        assert_eq!(cond.loss, 0.2);
+        assert!(resolve("not-a-preset-or-spec", 16, 200).is_err());
+    }
+}

@@ -10,15 +10,22 @@
 //! deterministic network rounds). A run's `RunRecord` is bit-identical for
 //! every `--threads` value: local steps are independent across clients and
 //! results are merged in client order (tested in tests/engine.rs).
+//!
+//! With `--netcond` set (ISSUE 2), each iteration first advances the fault
+//! schedule ([`Network::set_step`]) before the hooks run; fault draws come
+//! from a dedicated RNG stream on the sequential communication path, so
+//! the `--threads` determinism contract extends to faulty runs (tested in
+//! tests/netcond.rs).
 
 use anyhow::{bail, Context, Result};
 
-use crate::algos;
+use crate::algos::{self, Scratch};
 use crate::config::ExperimentConfig;
 use crate::data::{BatchSampler, Dataset, Example, TaskSpec, CLASS_TOKENS};
 use crate::metrics::{EvalPoint, RunRecord};
 use crate::model::{checkpoint, Manifest, ParamStore};
 use crate::net::Network;
+use crate::netcond;
 use crate::oracle::{AotBackend, Backend, SyntheticOracle};
 use crate::runtime::Arg;
 use crate::subcge::{CoeffAccum, DeviceBasisCache, SubspaceBasis};
@@ -355,9 +362,23 @@ pub fn run_experiment(cfg: ExperimentConfig) -> Result<RunRecord> {
 /// and dataset across runs).
 pub fn run_with_env(env: &Env) -> Result<RunRecord> {
     let cfg = &env.cfg;
-    let topo = Topology::build(cfg.topology, cfg.clients, cfg.topology_seed);
+    // netcond: a preset name pins the topology it is named after; a raw
+    // spec string leaves the configured topology alone; empty = the
+    // reliable static graph, bit-for-bit identical to the pre-netcond
+    // simulator (no fault state is installed at all)
+    let (kind_override, cond) = if cfg.netcond.is_empty() {
+        (None, None)
+    } else {
+        let (k, c) = netcond::resolve(&cfg.netcond, cfg.clients, cfg.steps)?;
+        (k, Some(c))
+    };
+    let kind = kind_override.unwrap_or(cfg.topology);
+    let topo = Topology::build(kind, cfg.clients, cfg.topology_seed);
     let (mut algo, mut states) = algos::build(env, &topo)?;
     let mut net = Network::new(topo);
+    if let Some(c) = &cond {
+        net.install(c)?;
+    }
     let timer = Timer::start();
 
     let mut record = RunRecord {
@@ -367,6 +388,7 @@ pub fn run_with_env(env: &Env) -> Result<RunRecord> {
         topology: net.topology().kind.clone(),
         clients: cfg.clients,
         steps: cfg.steps,
+        netcond: cfg.netcond.clone(),
         ..Default::default()
     };
 
@@ -376,6 +398,7 @@ pub fn run_with_env(env: &Env) -> Result<RunRecord> {
     let mut best: (f64, Option<Vec<ParamVec>>) = (f64::INFINITY, None);
 
     for t in 0..cfg.steps {
+        net.set_step(t); // advance the fault schedule (no-op when reliable)
         algo.begin_step(t, env)?;
         let losses = algos::local_step_all(&*algo, &mut states, t, env, cfg.threads)?;
         // merged in client order: the mean is identical for any thread count
@@ -423,6 +446,14 @@ pub fn run_with_env(env: &Env) -> Result<RunRecord> {
     record.final_loss = final_loss;
     record.total_bytes = net.acct.total_bytes;
     record.per_edge_bytes = net.per_edge_bytes();
+    record.dropped_messages = net.acct.dropped_messages;
+    record.delivery_ratio = net.acct.delivery_ratio();
+    for s in &states {
+        if let Scratch::Flood { flood, .. } = &s.scratch {
+            record.flood_duplicates += flood.duplicates;
+            record.max_staleness = record.max_staleness.max(flood.max_staleness);
+        }
+    }
     record.wall_secs = timer.elapsed().as_secs_f64();
     record.phase_ms = algo.phase_ms();
     Ok(record)

@@ -7,6 +7,17 @@
 //! quantities the algorithms need: BFS diameter, Metropolis–Hastings mixing
 //! weights (doubly-stochastic, the `w_ij` of Eq. 2) and a spectral-gap
 //! estimate (consensus-rate diagnostic).
+//!
+//! ```
+//! use seedflood::topology::Topology;
+//!
+//! let mesh = Topology::meshgrid(16); // the paper's 4×4 grid
+//! assert!(mesh.is_connected());
+//! assert_eq!(mesh.diameter(), 6); // flooding depth D for full consensus
+//! // denser graphs gossip faster: complete ≻ meshgrid ≻ ring
+//! assert!(Topology::complete(16).spectral_gap() > mesh.spectral_gap());
+//! assert!(mesh.spectral_gap() > Topology::ring(16).spectral_gap());
+//! ```
 
 use crate::rng::Rng;
 
@@ -187,6 +198,14 @@ impl Topology {
 
     pub fn neighbors(&self, i: usize) -> &[usize] {
         &self.adj[i]
+    }
+
+    /// Whether `a`–`b` is an (undirected) edge. Adjacency lists are kept
+    /// sorted, so this is a binary search — used by
+    /// [`crate::netcond::NetCond::validate`] to reject fault schedules
+    /// that reference links the graph does not have.
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        a < self.n && b < self.n && self.adj[a].binary_search(&b).is_ok()
     }
 
     pub fn num_edges(&self) -> usize {
@@ -398,6 +417,17 @@ mod tests {
         assert_eq!(t.num_edges(), 0);
         assert_eq!(t.diameter(), 0);
         assert!(t.is_connected());
+    }
+
+    #[test]
+    fn has_edge_matches_adjacency() {
+        let t = Topology::meshgrid(9);
+        for a in 0..9 {
+            for b in 0..9 {
+                assert_eq!(t.has_edge(a, b), t.neighbors(a).contains(&b), "({a},{b})");
+            }
+        }
+        assert!(!t.has_edge(0, 12)); // out of range is false, not a panic
     }
 
     #[test]

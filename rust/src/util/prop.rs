@@ -2,8 +2,8 @@
 //! this offline image).
 //!
 //! Runs a property over many pseudo-random cases; on failure, reports the
-//! failing case seed so it can be replayed deterministically, and performs
-//! a simple halving shrink on integer inputs via [`Gen::shrinkable_usize`].
+//! failing case seed so it can be replayed deterministically via
+//! [`replay`].
 
 use crate::rng::Rng;
 

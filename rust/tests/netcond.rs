@@ -1,0 +1,194 @@
+//! NetCond fault-injection tests (ISSUE 2): the unreliable-network &
+//! churn subsystem must
+//!
+//! 1. be *invisible* when disabled or all-zero — delivery under p=0 loss
+//!    equals the reliable baseline bit-for-bit;
+//! 2. stay on the engine's determinism contract — a faulty run is
+//!    bit-identical for `--threads 1/4/0` (fault draws live on a dedicated
+//!    RNG stream, advanced only on the sequential communication path);
+//! 3. degrade to *bounded staleness*, not silent loss — under seeded loss
+//!    + churn, every injected update still reaches every live client
+//!    within the repair/staleness bound.
+//!
+//! Everything runs on the artifact-free synthetic backend.
+
+use seedflood::config::{ExperimentConfig, Method};
+use seedflood::flood::{flood_rounds, FloodState};
+use seedflood::metrics::RunRecord;
+use seedflood::net::{MsgId, Network, SeedUpdate};
+use seedflood::netcond::NetCond;
+use seedflood::sim::{self, Env};
+use seedflood::topology::{Kind, Topology};
+
+fn run(method: Method, netcond: &str, threads: usize) -> RunRecord {
+    let cfg = ExperimentConfig {
+        method,
+        clients: 8,
+        topology: Kind::Ring,
+        steps: 8,
+        local_steps: 2,
+        lr: 1e-2,
+        task: "sst2".into(),
+        eval_every: 4,
+        netcond: netcond.into(),
+        threads,
+        ..Default::default()
+    };
+    let env = Env::synthetic(cfg).unwrap();
+    sim::run_with_env(&env).unwrap()
+}
+
+/// Bitwise comparison of everything the determinism contract covers
+/// (wall-clock/phase timings excluded; the netcond *string* is compared by
+/// the caller where it is expected to match).
+fn assert_identical(a: &RunRecord, b: &RunRecord, what: &str) {
+    assert_eq!(a.train_losses, b.train_losses, "{what}: train losses differ");
+    assert_eq!(a.gmp, b.gmp, "{what}: GMP differs");
+    assert_eq!(a.final_loss, b.final_loss, "{what}: final loss differs");
+    assert_eq!(a.total_bytes, b.total_bytes, "{what}: byte counts differ");
+    assert_eq!(a.per_edge_bytes, b.per_edge_bytes, "{what}: per-edge bytes differ");
+    assert_eq!(a.dropped_messages, b.dropped_messages, "{what}: drop counts differ");
+    assert_eq!(a.delivery_ratio, b.delivery_ratio, "{what}: delivery ratios differ");
+    assert_eq!(a.flood_duplicates, b.flood_duplicates, "{what}: duplicates differ");
+    assert_eq!(a.max_staleness, b.max_staleness, "{what}: staleness differs");
+    assert_eq!(a.evals.len(), b.evals.len(), "{what}: eval point counts differ");
+    for (ea, eb) in a.evals.iter().zip(b.evals.iter()) {
+        assert_eq!(ea.step, eb.step, "{what}: eval step");
+        assert_eq!(ea.loss, eb.loss, "{what}: eval loss @ step {}", ea.step);
+        assert_eq!(ea.accuracy, eb.accuracy, "{what}: eval acc @ step {}", ea.step);
+        assert_eq!(ea.total_bytes, eb.total_bytes, "{what}: eval bytes @ step {}", ea.step);
+        assert_eq!(
+            ea.consensus_error, eb.consensus_error,
+            "{what}: consensus error @ step {}",
+            ea.step
+        );
+    }
+}
+
+#[test]
+fn zero_fault_netcond_is_bitwise_identical_to_reliable_baseline() {
+    // installing an all-zero fault model must not perturb anything: no
+    // RNG draws, immediate delivery, identical accounting
+    for method in [Method::SeedFlood, Method::Dsgd, Method::ChocoSgd] {
+        let reliable = run(method, "", 1);
+        let zero = run(method, "loss=0", 1);
+        assert_identical(&reliable, &zero, &format!("{method:?} p=0"));
+        assert_eq!(reliable.delivery_ratio, 1.0, "{method:?}");
+        assert_eq!(zero.dropped_messages, 0, "{method:?}");
+    }
+}
+
+#[test]
+fn faulty_runs_keep_the_threads_determinism_contract() {
+    let spec = "loss=0.1;delay=1;node:3@2..5;repair=2;seed=11";
+    for method in [Method::SeedFlood, Method::ChocoSgd, Method::Dzsgd] {
+        let seq = run(method, spec, 1);
+        assert_identical(&seq, &run(method, spec, 4), &format!("{method:?} threads=4"));
+        assert_identical(&seq, &run(method, spec, 0), &format!("{method:?} threads=0"));
+        // and the scenario actually did something
+        assert!(seq.dropped_messages > 0, "{method:?}: no faults injected?");
+        assert!(seq.delivery_ratio < 1.0, "{method:?}");
+    }
+}
+
+#[test]
+fn flood_delivers_everything_under_seeded_loss_and_churn() {
+    // Protocol-level bounded-staleness check, straight on the flooding
+    // layer: ring of 8 (D = 4), 5% packet loss, client 4 churned out for
+    // iterations [2, 5), link 0–1 down for [5, 7), anti-entropy repair
+    // every iteration. Every update injected over 8 iterations — including
+    // the ones client 4 generates while offline — must reach every client.
+    let n = 8;
+    let inject_iters = 8u32;
+    let settle_iters = 8u32;
+    let topo = Topology::ring(n);
+    let d = topo.diameter();
+    let cond = NetCond::parse("loss=0.05;repair=1;node:4@2..5;link:0-1@5..7;seed=3").unwrap();
+    let mut net = Network::new(topo);
+    net.install(&cond).unwrap();
+    let mut states: Vec<FloodState> = (0..n).map(|_| FloodState::new()).collect();
+
+    let mut max_stale = 0u64;
+    for t in 0..(inject_iters + settle_iters) {
+        net.set_step(t as usize);
+        for (i, st) in states.iter_mut().enumerate() {
+            if net.should_repair(i) {
+                st.repair();
+            }
+        }
+        if t < inject_iters {
+            // compute continues through churn: offline clients keep
+            // injecting; their updates queue in the persistent outbox/log
+            for (i, st) in states.iter_mut().enumerate() {
+                st.inject(SeedUpdate {
+                    id: MsgId { origin: i as u32, step: t },
+                    seed: (i as u64) << 32 | t as u64,
+                    coeff: 1e-4,
+                });
+            }
+        }
+        flood_rounds(&mut states, &mut net, d, |_, fresh| {
+            for m in fresh {
+                max_stale = max_stale.max((t as u64).saturating_sub(m.id.step as u64));
+            }
+        });
+    }
+
+    let total = (n as u32 * inject_iters) as usize;
+    for (i, st) in states.iter().enumerate() {
+        assert_eq!(st.seen.len(), total, "client {i} is missing updates");
+        assert_eq!(st.log.len(), total, "client {i} log incomplete");
+    }
+    // client 4's offline window forces staleness ≥ its downtime (its
+    // t = 2 update cannot appear elsewhere before it rejoins at t = 5)...
+    assert!(max_stale >= 3, "churn must induce staleness, got {max_stale}");
+    // ...and repair bounds it: downtime (3) + a few loss/link-flap repair
+    // cycles — far below the 16-iteration horizon
+    assert!(max_stale <= 8, "staleness {max_stale} beyond the repair bound");
+    // lost and blackholed traffic really happened
+    assert!(net.acct.dropped_messages > 0);
+    assert!(states.iter().map(|s| s.duplicates).sum::<u64>() > 0);
+}
+
+#[test]
+fn churn_preset_runs_end_to_end_and_pins_topology() {
+    let r = run(Method::SeedFlood, "churn-er", 1);
+    // the preset pins its own topology even though the config said ring
+    assert_eq!(r.topology, "erdos-renyi");
+    assert_eq!(r.netcond, "churn-er");
+    assert!(r.dropped_messages > 0, "churn windows must blackhole some sends");
+    assert!(r.delivery_ratio > 0.5 && r.delivery_ratio <= 1.0, "{}", r.delivery_ratio);
+    assert!((0.0..=1.0).contains(&r.gmp));
+    assert!(r.final_loss.is_finite());
+}
+
+#[test]
+fn lossy_ring_preset_records_fault_metrics() {
+    let r = run(Method::SeedFlood, "lossy-ring", 1);
+    assert_eq!(r.topology, "ring");
+    assert!(r.delivery_ratio < 1.0, "5% loss must drop something");
+    assert!(r.flood_duplicates > 0, "repair re-floods must dedup as duplicates");
+    assert!(r.total_bytes > 0);
+}
+
+#[test]
+fn bad_netcond_spec_is_a_config_error() {
+    let cfg = ExperimentConfig {
+        clients: 4,
+        steps: 2,
+        netcond: "loss=2.0".into(), // probability out of range
+        ..Default::default()
+    };
+    let env = Env::synthetic(cfg).unwrap();
+    assert!(sim::run_with_env(&env).is_err());
+    // schedule referencing a non-edge is caught at install time
+    let cfg = ExperimentConfig {
+        clients: 8,
+        steps: 2,
+        topology: Kind::Ring,
+        netcond: "link:0-4@0..1".into(), // 0-4 is not a ring edge
+        ..Default::default()
+    };
+    let env = Env::synthetic(cfg).unwrap();
+    assert!(sim::run_with_env(&env).is_err());
+}

@@ -1,6 +1,6 @@
 //! Offline shim of the `anyhow` crate — the exact subset this repo uses:
-//! [`Error`], [`Result`], the [`anyhow!`]/[`bail!`] macros, the [`Context`]
-//! trait on `Result`/`Option`, and the typed [`Ok`] helper. Error values
+//! [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`] macros, the
+//! [`Context`] trait on `Result`/`Option`, and the typed [`Ok`] helper. Error values
 //! are stored as a rendered message chain (outermost first), which matches
 //! how the coordinator consumes them (Display/Debug only, no downcasting).
 
@@ -126,6 +126,18 @@ macro_rules! bail {
     };
 }
 
+/// Like anyhow's `ensure!`: bail with the formatted message unless the
+/// condition holds (callers always pass a message in this repo, so the
+/// real crate's condition-only default form is not implemented).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +167,16 @@ mod tests {
         assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
         let e: Error = anyhow!("plain {}", 7);
         assert_eq!(e.to_string(), "plain 7");
+    }
+
+    #[test]
+    fn ensure_bails_with_message() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(-4).unwrap_err().to_string(), "negative: -4");
     }
 
     #[test]
