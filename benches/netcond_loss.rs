@@ -1,13 +1,15 @@
-//! Robustness bench (ISSUE 2): per-edge bytes and consensus error for all
-//! four methods under increasing packet loss, on the sparsest topology
-//! (ring of 8) where loss bites hardest. Complements table1: the question
-//! here is not how cost scales with d or n, but what *staying robust*
-//! costs — SeedFlood's repair re-floods add duplicate seed traffic, dense
-//! gossip silently mixes with fewer neighbors.
+//! Robustness bench (ISSUE 2/3): per-edge bytes and consensus error for
+//! all four methods under increasing packet loss, on the sparsest topology
+//! (ring of 8) where loss bites hardest — plus the repair-protocol
+//! comparison under the churn-er preset: gap-request repair (summaries +
+//! gap-fills, O(gap) on the wire) vs the legacy full-log re-flood.
+//! Complements table1: the question here is not how cost scales with d or
+//! n, but what *staying robust* costs.
 //!
 //! Run: cargo bench --bench netcond_loss
 
 use seedflood::config::{ExperimentConfig, Method};
+use seedflood::flood::RepairMode;
 use seedflood::metrics::RunRecord;
 use seedflood::sim;
 
@@ -32,11 +34,27 @@ fn run(method: Method, loss: f64) -> RunRecord {
     sim::run_experiment(cfg).unwrap()
 }
 
+fn run_churn(mode: RepairMode, retain: usize) -> RunRecord {
+    let cfg = ExperimentConfig {
+        method: Method::SeedFlood,
+        model: "synthetic".into(),
+        task: "sst2".into(),
+        clients: 8,
+        steps: 40,
+        lr: 1e-3,
+        netcond: "churn-er".into(),
+        repair_mode: mode,
+        flood_retain: retain,
+        ..Default::default()
+    };
+    sim::run_experiment(cfg).unwrap()
+}
+
 fn main() {
     println!("== netcond: four-method robustness to packet loss (ring of 8, synthetic) ==\n");
     println!(
-        "{:>6} {:<12} {:>8} {:>8} {:>14} {:>14}",
-        "loss", "method", "GMP%", "deliv%", "consensus", "B/edge"
+        "{:>6} {:<12} {:>8} {:>8} {:>14} {:>14} {:>12}",
+        "loss", "method", "GMP%", "deliv%", "consensus", "B/edge", "repair B"
     );
     let mut seedflood_lossy = None;
     let mut dsgd_lossy = None;
@@ -46,13 +64,14 @@ fn main() {
             let r = run(method, loss);
             let consensus = r.evals.last().map(|e| e.consensus_error).unwrap_or(0.0);
             println!(
-                "{:>6} {:<12} {:>8.2} {:>8.1} {:>14.2e} {:>14.0}",
+                "{:>6} {:<12} {:>8.2} {:>8.1} {:>14.2e} {:>14.0} {:>12}",
                 loss,
                 r.method,
                 100.0 * r.gmp,
                 100.0 * r.delivery_ratio,
                 consensus,
-                r.per_edge_bytes
+                r.per_edge_bytes,
+                r.repair_bytes
             );
             if method == Method::SeedFlood && loss == 0.0 {
                 seedflood_reliable = Some(r);
@@ -69,7 +88,7 @@ fn main() {
     let sf = seedflood_lossy.unwrap();
     let dsgd = dsgd_lossy.unwrap();
     // seed messages stay orders of magnitude below dense gossip even with
-    // the repair re-flood overhead folded in (the paper's O(n) vs O(d))
+    // the repair traffic folded in (the paper's O(n) vs O(d))
     assert!(
         sf.per_edge_bytes * 10.0 < dsgd.per_edge_bytes,
         "seedflood repair overhead ate its cost advantage: {} vs {}",
@@ -79,13 +98,47 @@ fn main() {
     // the fault layer really dropped traffic, and the reliable run didn't
     assert_eq!(sf0.delivery_ratio, 1.0, "reliable run must deliver everything");
     assert!(sf.delivery_ratio < 1.0, "10% loss must drop messages");
-    assert!(sf.flood_duplicates > sf0.flood_duplicates, "repairs must re-flood");
+    assert_eq!(sf0.repair_bytes, 0, "no faults, no repair traffic");
+    assert!(sf.repair_bytes > 0, "anti-entropy heartbeats must transmit repairs");
     println!(
         "netcond_loss OK: seedflood/dsgd per-edge under 10% loss = {:.1}/{:.1} KB, \
-         seedflood delivery {:.1}% with staleness ≤ {} iter",
+         seedflood delivery {:.1}% with staleness ≤ {} iter\n",
         sf.per_edge_bytes / 1024.0,
         dsgd.per_edge_bytes / 1024.0,
         100.0 * sf.delivery_ratio,
         sf.max_staleness
+    );
+
+    println!("== repair-protocol comparison under churn-er (8 clients, 40 steps) ==\n");
+    println!(
+        "{:<10} {:>8} {:>12} {:>12} {:>10} {:>10}",
+        "mode", "GMP%", "repair B", "total B", "staleness", "retained"
+    );
+    // reflood needs retain=0 (keep everything): it replays the full log
+    let reflood = run_churn(RepairMode::Reflood, 0);
+    let gap = run_churn(RepairMode::Gap, 4096);
+    for (mode, r) in [("reflood", &reflood), ("gap", &gap)] {
+        println!(
+            "{:<10} {:>8.2} {:>12} {:>12} {:>10} {:>10}",
+            mode, 100.0 * r.gmp, r.repair_bytes, r.total_bytes, r.max_staleness,
+            r.flood_retained
+        );
+    }
+    assert!(reflood.repair_bytes > 0, "churn recoveries must trigger re-floods");
+    assert!(gap.repair_bytes > 0, "churn recoveries must trigger gap repairs");
+    // the acceptance criterion: gap-request repair strictly undercuts the
+    // full-log re-flood on the wire
+    assert!(
+        gap.repair_bytes < reflood.repair_bytes,
+        "gap repair ({} B) must beat full-log re-flood ({} B)",
+        gap.repair_bytes,
+        reflood.repair_bytes
+    );
+    println!(
+        "\nnetcond_loss OK: gap repair {} B vs full-log re-flood {} B \
+         ({:.1}x fewer repair bytes under churn-er)",
+        gap.repair_bytes,
+        reflood.repair_bytes,
+        reflood.repair_bytes as f64 / gap.repair_bytes.max(1) as f64
     );
 }

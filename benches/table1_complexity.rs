@@ -33,7 +33,11 @@ fn seedflood_round_bytes(n: usize) -> f64 {
     let mut net = Network::new(topo);
     let mut states: Vec<FloodState> = (0..n).map(|_| FloodState::new()).collect();
     for (i, st) in states.iter_mut().enumerate() {
-        st.inject(SeedUpdate { id: MsgId { origin: i as u32, step: 0 }, seed: i as u64, coeff: 1.0 });
+        st.inject(SeedUpdate {
+            id: MsgId { origin: i as u32, step: 0 },
+            seed: i as u64,
+            coeff: 1.0,
+        });
     }
     flood_rounds(&mut states, &mut net, diam + 1, |_, _| {});
     net.per_edge_bytes()
@@ -42,7 +46,10 @@ fn seedflood_round_bytes(n: usize) -> f64 {
 fn main() {
     println!("== Table 1: measured per-edge bytes per communication round ==\n");
 
-    println!("{:>12} {:>12} {:>16} {:>16}", "d (params)", "n (clients)", "gossip B/edge", "seedflood B/edge");
+    println!(
+        "{:>12} {:>12} {:>16} {:>16}",
+        "d (params)", "n (clients)", "gossip B/edge", "seedflood B/edge"
+    );
     let mut gossip_by_d = vec![];
     let mut flood_by_d = vec![];
     for d in [10_000usize, 100_000, 1_000_000] {

@@ -44,9 +44,12 @@ fn main() -> anyhow::Result<()> {
     experiments::print_churn(&records);
 
     println!(
-        "\n(SeedFlood's 20-byte messages make full-log repair re-floods affordable:\n\
-         under loss and churn, delivery degrades to bounded staleness instead of\n\
-         silent loss, while dense gossip pays O(d) per edge to achieve less.)"
+        "\n(SeedFlood answers loss and churn with gap-request repair: a recovering\n\
+         client broadcasts O(n) high-water marks and neighbors return only the\n\
+         missing ranges — the repairB column. Delivery degrades to bounded\n\
+         staleness instead of silent loss, while dense gossip pays O(d) per edge\n\
+         to achieve less. Compare --repair-mode reflood for the legacy full-log\n\
+         re-flood cost.)"
     );
     Ok(())
 }

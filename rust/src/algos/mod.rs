@@ -379,7 +379,7 @@ pub fn build(env: &Env, topo: &Topology) -> Result<(Box<dyn Algorithm>, Vec<Clie
         Method::Dsgd | Method::DsgdLora => dsgd::Dsgd::build(env, topo),
         Method::ChocoSgd | Method::ChocoLora => choco::Choco::build(env, topo),
         Method::Dzsgd | Method::DzsgdLora => dzsgd::Dzsgd::build(env, topo),
-        Method::SeedFlood => seedflood::SeedFlood::build(env, topo),
+        Method::SeedFlood => seedflood::SeedFlood::build(env, topo)?,
         Method::Mezo => single::SingleZo::build(env, false),
         Method::SubCge => single::SingleZo::build(env, true),
     })

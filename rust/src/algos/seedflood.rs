@@ -24,8 +24,10 @@
 //! Under a [`crate::netcond::NetCond`] fault model, step (C) additionally
 //! honours the network's churn/repair signals: offline clients keep
 //! computing locally but skip their flood rounds (outboxes persist), and
-//! a recovery or anti-entropy trigger re-floods the full message log so
-//! every update still reaches every live client with bounded staleness.
+//! a recovery or anti-entropy trigger runs the configured repair protocol
+//! (`--repair-mode`: gap-request summaries by default, legacy full
+//! re-flood otherwise) so every update still reaches every live client
+//! with bounded staleness.
 //! Caveat: the staleness bound must stay well below the basis-refresh
 //! period τ — a message applied after a refresh reconstructs its probe in
 //! the *new* basis (documented approximation, same as delayed flooding).
@@ -35,7 +37,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::{init_states, probe_seed, Algorithm, ClientState, Scratch, Space};
-use crate::flood::{self, FloodState, WireFormat};
+use crate::flood::{self, FloodState, RepairMode, WireFormat};
 use crate::net::{MsgId, Network, SeedUpdate};
 use crate::sim::Env;
 use crate::subcge::{CoeffAccum, DeviceBasisCache, SubspaceBasis};
@@ -61,7 +63,15 @@ pub struct SeedFlood {
 }
 
 impl SeedFlood {
-    pub fn build(env: &Env, topo: &Topology) -> (Box<dyn Algorithm>, Vec<ClientState>) {
+    pub fn build(env: &Env, topo: &Topology) -> Result<(Box<dyn Algorithm>, Vec<ClientState>)> {
+        // reflood replays the retention window as the full history; with a
+        // bounded window, messages evicted before a repair would be lost
+        // for good — reject the combination instead of silently degrading
+        anyhow::ensure!(
+            env.cfg.repair_mode != RepairMode::Reflood || env.cfg.flood_retain == 0,
+            "repair_mode=reflood requires flood_retain=0 (unbounded retention): \
+             a bounded window cannot replay the full history"
+        );
         let n = env.n_clients();
         let basis = SubspaceBasis::new(
             &env.manifest,
@@ -77,7 +87,12 @@ impl SeedFlood {
         let space = Space::Full;
         let states = init_states(env, &space, |_| Scratch::Flood {
             accum: CoeffAccum::new(&basis),
-            flood: FloodState { wire, ..FloodState::new() },
+            flood: FloodState {
+                wire,
+                retain: env.cfg.flood_retain,
+                repair_mode: env.cfg.repair_mode,
+                ..FloodState::new()
+            },
         });
         let flood_steps = if env.cfg.flood_steps == 0 {
             topo.diameter().max(1)
@@ -95,7 +110,7 @@ impl SeedFlood {
             use_artifact: true,
             device_cache: None,
         };
-        (Box::new(algo), states)
+        Ok((Box::new(algo), states))
     }
 }
 
@@ -172,8 +187,10 @@ impl Algorithm for SeedFlood {
         net: &mut Network,
     ) -> Result<()> {
         // netcond repair: clients whose connectivity just recovered (or
-        // whose anti-entropy period elapsed) re-flood their full message
-        // log — bounded-staleness delivery instead of silent loss
+        // whose anti-entropy period elapsed) run the configured repair
+        // protocol — gap-request (summary + gap-fill, O(gap) on the wire)
+        // or the legacy full re-flood — so delivery degrades to bounded
+        // staleness instead of silent loss
         for (i, st) in states.iter_mut().enumerate() {
             if net.should_repair(i) {
                 let (_, _, flood) = st.flood_parts();

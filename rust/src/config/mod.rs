@@ -7,6 +7,7 @@ pub mod toml;
 
 use anyhow::{bail, Result};
 
+use crate::flood::RepairMode;
 use crate::topology::Kind;
 use crate::util::cli::Args;
 
@@ -57,8 +58,10 @@ impl Method {
     }
 
     pub fn is_zeroth_order(&self) -> bool {
-        matches!(self, Method::Dzsgd | Method::DzsgdLora | Method::SeedFlood
-                       | Method::Mezo | Method::SubCge)
+        matches!(
+            self,
+            Method::Dzsgd | Method::DzsgdLora | Method::SeedFlood | Method::Mezo | Method::SubCge
+        )
     }
 
     pub fn is_lora(&self) -> bool {
@@ -113,6 +116,16 @@ pub struct ExperimentConfig {
     /// `flaky-torus`, `churn-er` — presets also pin the topology). Empty =
     /// the paper's reliable static graph.
     pub netcond: String,
+    /// SeedFlood repair-window capacity: how many recent messages each
+    /// client retains for netcond repair (gap-fill responses / re-floods).
+    /// 0 retains everything — required for `repair_mode = reflood` to
+    /// replay the full history; the default keeps per-client memory
+    /// O(n + window) on long runs
+    pub flood_retain: usize,
+    /// how SeedFlood answers netcond repair triggers: `gap` (summary +
+    /// gap-fill, O(gap) on the wire — default) or `reflood` (legacy full
+    /// re-flood of the retention window)
+    pub repair_mode: RepairMode,
     /// worker threads for the local-step fan-out (1 = sequential,
     /// 0 = all cores). Never changes results: a parallel run reproduces the
     /// sequential `RunRecord` exactly (tests/engine.rs).
@@ -146,6 +159,8 @@ impl Default for ExperimentConfig {
             quantize_msgs: false,
             dirichlet_alpha: 0.0,
             netcond: String::new(),
+            flood_retain: 4096,
+            repair_mode: RepairMode::Gap,
             threads: 1,
         }
     }
@@ -186,6 +201,13 @@ impl ExperimentConfig {
         c.quantize_msgs = args.has("quantize") || c.quantize_msgs;
         c.dirichlet_alpha = args.get_parse("dirichlet-alpha", c.dirichlet_alpha)?;
         c.netcond = args.get_or("netcond", &c.netcond).to_string();
+        c.flood_retain = args.get_parse("flood-retain", c.flood_retain)?;
+        if let Some(m) = args.get("repair-mode") {
+            c.repair_mode = match RepairMode::parse(m) {
+                Some(m) => m,
+                None => bail!("unknown repair mode {m:?} (have gap, reflood)"),
+            };
+        }
         c.threads = args.get_parse("threads", c.threads)?;
         Ok(c)
     }
@@ -223,6 +245,11 @@ impl ExperimentConfig {
                 "quantize_msgs" => self.quantize_msgs = v.as_bool()?,
                 "dirichlet_alpha" => self.dirichlet_alpha = v.as_float()?,
                 "netcond" => self.netcond = v.as_str()?.to_string(),
+                "flood_retain" => self.flood_retain = v.as_int()? as usize,
+                "repair_mode" => {
+                    self.repair_mode = RepairMode::parse(v.as_str()?)
+                        .ok_or_else(|| anyhow::anyhow!("unknown repair mode"))?
+                }
                 "threads" => self.threads = v.as_int()? as usize,
                 other => bail!("unknown config key {other:?}"),
             }
@@ -237,8 +264,10 @@ mod tests {
 
     #[test]
     fn method_parse_roundtrip() {
-        for m in ["dsgd", "choco", "dsgd-lora", "choco-lora", "dzsgd",
-                  "dzsgd-lora", "seedflood", "mezo", "subcge"] {
+        for m in [
+            "dsgd", "choco", "dsgd-lora", "choco-lora", "dzsgd", "dzsgd-lora", "seedflood",
+            "mezo", "subcge",
+        ] {
             assert!(Method::parse(m).is_some(), "{m}");
         }
         assert!(Method::parse("sgd").is_none());
@@ -250,11 +279,12 @@ mod tests {
     #[test]
     fn from_args_overrides() {
         let args = Args::parse(
-            ["--method", "dsgd", "--clients", "32", "--topology", "mesh",
-             "--lr", "0.0001", "--steps", "50", "--threads", "4",
-             "--netcond", "loss=0.1;delay=1"]
-                .iter()
-                .map(|s| s.to_string()),
+            [
+                "--method", "dsgd", "--clients", "32", "--topology", "mesh", "--lr", "0.0001",
+                "--steps", "50", "--threads", "4", "--netcond", "loss=0.1;delay=1",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
             &[],
         );
         let c = ExperimentConfig::from_args(&args).unwrap();
@@ -275,6 +305,27 @@ mod tests {
     }
 
     #[test]
+    fn repair_knobs_parse_and_default() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.repair_mode, RepairMode::Gap);
+        assert_eq!(d.flood_retain, 4096);
+        let args = Args::parse(
+            ["--repair-mode", "reflood", "--flood-retain", "0"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let c = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(c.repair_mode, RepairMode::Reflood);
+        assert_eq!(c.flood_retain, 0);
+        let bad = Args::parse(
+            ["--repair-mode", "full-log"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        assert!(ExperimentConfig::from_args(&bad).is_err());
+    }
+
+    #[test]
     fn from_args_rejects_bad() {
         let args = Args::parse(
             ["--method", "nope"].iter().map(|s| s.to_string()),
@@ -287,7 +338,7 @@ mod tests {
     fn apply_toml_section() {
         let parsed = toml::parse(
             "method = \"seedflood\"\nrank = 64\nrefresh = 5000\nlr = 1e-5\n\
-             netcond = \"churn-er\"\n",
+             netcond = \"churn-er\"\nflood_retain = 512\nrepair_mode = \"reflood\"\n",
         )
         .unwrap();
         let mut c = ExperimentConfig::default();
@@ -296,5 +347,7 @@ mod tests {
         assert_eq!(c.refresh, 5000);
         assert_eq!(c.lr, 1e-5);
         assert_eq!(c.netcond, "churn-er");
+        assert_eq!(c.flood_retain, 512);
+        assert_eq!(c.repair_mode, RepairMode::Reflood);
     }
 }

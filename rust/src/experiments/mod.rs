@@ -86,8 +86,13 @@ pub fn scaling(
     for &topo in &[Kind::Ring, Kind::Meshgrid] {
         for task in tasks {
             for &n in client_counts {
-                for method in [Method::Dsgd, Method::ChocoSgd, Method::DsgdLora,
-                               Method::ChocoLora, Method::SeedFlood] {
+                for method in [
+                    Method::Dsgd,
+                    Method::ChocoSgd,
+                    Method::DsgdLora,
+                    Method::ChocoLora,
+                    Method::SeedFlood,
+                ] {
                     let mut cfg = base.clone();
                     cfg.method = method;
                     cfg.task = task.clone();
@@ -243,23 +248,26 @@ pub fn churn(base: &ExperimentConfig, scenarios: &[String]) -> Result<Vec<RunRec
 }
 
 /// Churn/loss table: how far does each method drift from consensus, how
-/// much of its traffic survives, and what does staying robust cost.
+/// much of its traffic survives, and what does staying robust cost —
+/// including the repair traffic itself (`repairB`, gap-request summaries
+/// + gap-fills or legacy re-floods).
 pub fn print_churn(records: &[RunRecord]) {
     println!(
-        "\n{:<12} {:<14} {:>8} {:>12} {:>8} {:>12} {:>10}",
-        "method", "scenario", "GMP%", "consensus", "deliv%", "cost/edge", "staleness"
+        "\n{:<12} {:<14} {:>8} {:>12} {:>8} {:>12} {:>10} {:>10}",
+        "method", "scenario", "GMP%", "consensus", "deliv%", "cost/edge", "repairB", "staleness"
     );
     for r in records {
         let consensus = r.evals.last().map(|e| e.consensus_error).unwrap_or(0.0);
         let scenario = if r.netcond.is_empty() { "reliable" } else { r.netcond.as_str() };
         println!(
-            "{:<12} {:<14} {:>8.2} {:>12.2e} {:>8.1} {:>12} {:>10}",
+            "{:<12} {:<14} {:>8.2} {:>12.2e} {:>8.1} {:>12} {:>10} {:>10}",
             r.method,
             scenario,
             100.0 * r.gmp,
             consensus,
             100.0 * r.delivery_ratio,
             human_bytes(r.per_edge_bytes as u64),
+            human_bytes(r.repair_bytes),
             r.max_staleness,
         );
     }
@@ -357,7 +365,8 @@ pub fn dispatch(id: &str, base: ExperimentConfig, args: &crate::util::cli::Args)
             println!("saved {p}");
         }
         other => anyhow::bail!(
-            "unknown experiment {other:?}; have fig1, fig3/table8, scaling/fig4/table2, table3, fig6, fig7, churn"
+            "unknown experiment {other:?}; have fig1, fig3/table8, scaling/fig4/table2, \
+             table3, fig6, fig7, churn"
         ),
     }
     Ok(())
@@ -396,8 +405,8 @@ pub fn pretrain(
     let mut val = vec![];
     for name in TaskSpec::all_names() {
         let spec = TaskSpec::named(name).unwrap();
-        let ex = Dataset::pretrain_split(&spec, manifest.config.vocab,
-                                         manifest.config.seq, 512);
+        let ex =
+            Dataset::pretrain_split(&spec, manifest.config.vocab, manifest.config.seq, 512);
         val.extend(ex[..64].to_vec());
         train.extend(ex[64..].to_vec());
     }
@@ -497,6 +506,22 @@ pub fn report(paths: &[String]) -> Result<()> {
                         .unwrap_or(0.0) as u64,
                     max_staleness: r
                         .get("max_staleness")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0) as u64,
+                    repair_bytes: r
+                        .get("repair_bytes")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0) as u64,
+                    repair_messages: r
+                        .get("repair_messages")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0) as u64,
+                    repair_gap_misses: r
+                        .get("repair_gap_misses")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0) as u64,
+                    flood_retained: r
+                        .get("flood_retained")
                         .and_then(|v| v.as_f64())
                         .unwrap_or(0.0) as u64,
                     ..Default::default()

@@ -9,18 +9,41 @@
 //! iteration; the outbox persists across iterations so messages keep
 //! propagating with a bounded delay of ≤ ⌈D/k⌉ iterations.
 //!
+//! # Dedup in O(n + window), not O(T·n)
+//!
+//! Message ids are `(origin, step)` pairs and every origin emits exactly
+//! one message per step, so the dedup filter ([`FloodDedup`]) stores, per
+//! origin, a contiguous high-water mark (all steps below it seen) plus a
+//! small tail bitset for out-of-order arrivals ([`StepSet`]) — per-client
+//! memory is O(n) plus the transient reorder gap, instead of one hash
+//! entry per message ever received. A million-step flood retains a few
+//! words per origin. Accept/duplicate decisions are bit-identical to a
+//! reference `HashSet<MsgId>` (property-tested in
+//! `rust/tests/properties.rs`).
+//!
 //! # Unreliable networks
 //!
 //! Under an installed [`crate::netcond::NetCond`] fault model, messages
 //! can be lost (packet loss, down links) or stranded (node churn). The
-//! flooding state answers with *repair*: every message ever seen is kept
-//! in an append-only [`FloodState::log`] (cheap by construction — a
-//! seed–scalar message is 20 bytes, the paper's core point), and when the
-//! network signals a recovery or an anti-entropy heartbeat
-//! ([`crate::net::Network::should_repair`]) the client re-floods the whole
-//! log via [`FloodState::repair`]. Receivers dedup as usual, so only the
-//! genuinely missed messages propagate as fresh — delivery degrades to
-//! *bounded staleness* instead of silent loss.
+//! flooding state answers with *repair*: a bounded [`FloodState::window`]
+//! retains the most recent `retain` messages in first-seen order, and when
+//! the network signals a recovery or an anti-entropy heartbeat
+//! ([`crate::net::Network::should_repair`]) the client runs one of two
+//! repair protocols ([`RepairMode`]):
+//!
+//! * [`RepairMode::Gap`] (default) — broadcast a
+//!   [`crate::net::Payload::Summary`] of per-origin high-water marks
+//!   (O(n) bytes); each neighbor answers with a
+//!   [`crate::net::Payload::GapFill`] carrying only the retained messages
+//!   the summary shows missing — repair cost is O(gap) on the wire.
+//! * [`RepairMode::Reflood`] — legacy: re-broadcast the whole retention
+//!   window; receivers dedup, so the cost is duplicate traffic
+//!   proportional to the *entire history* retained (requires unbounded
+//!   retention, `retain = 0`).
+//!
+//! Either way delivery degrades to *bounded staleness* instead of silent
+//! loss, provided the retention window covers the longest outage
+//! (`retain` ≥ messages generated per outage; 0 retains everything).
 //!
 //! A 4-node ring floods to full coverage in D = 2 rounds:
 //!
@@ -44,7 +67,8 @@
 //! assert!(states.iter().all(|s| s.seen.len() == 4)); // everyone has everything
 //! ```
 
-use std::collections::HashSet;
+use std::collections::{HashSet, VecDeque};
+use std::sync::Arc;
 
 use crate::net::{Message, MsgId, Network, Payload, SeedUpdate};
 
@@ -61,19 +85,246 @@ pub enum WireFormat {
     Quantized(f32),
 }
 
+/// How a client answers a repair trigger (recovery or anti-entropy).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RepairMode {
+    /// Gap-request protocol: broadcast a [`Payload::Summary`] of
+    /// per-origin high-water marks; neighbors reply with
+    /// [`Payload::GapFill`] carrying only the missing ranges they retain.
+    /// Repair cost is O(gap) on the wire.
+    #[default]
+    Gap,
+    /// Legacy full re-flood: re-broadcast the whole retention window
+    /// (minus anything already outbound). Repair cost is O(everything
+    /// retained) in duplicate traffic; requires unbounded retention.
+    Reflood,
+}
+
+impl RepairMode {
+    pub fn parse(s: &str) -> Option<RepairMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "gap" => Some(RepairMode::Gap),
+            "reflood" => Some(RepairMode::Reflood),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RepairMode::Gap => "gap",
+            RepairMode::Reflood => "reflood",
+        }
+    }
+}
+
+/// Set of seen step numbers for one origin: a contiguous high-water mark
+/// (every step below [`Self::hwm`] seen) plus a tail bitset for
+/// out-of-order arrivals. Memory is O(reorder gap / 64) words and drops
+/// back to zero once the gap closes — the structure the `(origin, step)`
+/// id scheme makes exact.
+///
+/// ```
+/// use seedflood::flood::StepSet;
+///
+/// let mut s = StepSet::default();
+/// assert!(s.insert(1)); // out of order: goes to the tail bitset
+/// assert!(s.insert(0)); // closes the gap: hwm jumps to 2, tail empties
+/// assert!(!s.insert(1)); // duplicate
+/// assert_eq!(s.hwm(), 2);
+/// assert_eq!(s.tail_entries(), 0);
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct StepSet {
+    /// every step `< hwm` has been seen
+    hwm: u64,
+    /// bit `b` of `tail[w]` set ⇔ step `hwm + 64·w + b` seen (out of order)
+    tail: Vec<u64>,
+}
+
+impl StepSet {
+    /// The contiguous high-water mark: every step below it has been seen.
+    pub fn hwm(&self) -> u64 {
+        self.hwm
+    }
+
+    pub fn contains(&self, step: u32) -> bool {
+        let s = step as u64;
+        if s < self.hwm {
+            return true;
+        }
+        let off = (s - self.hwm) as usize;
+        self.tail.get(off / 64).is_some_and(|w| w >> (off % 64) & 1 == 1)
+    }
+
+    /// Record `step` as seen; returns true iff it was new. Inserting the
+    /// step at the high-water mark compacts the tail (the mark advances
+    /// over every contiguously seen step, freeing the bitset words).
+    pub fn insert(&mut self, step: u32) -> bool {
+        let s = step as u64;
+        if s < self.hwm {
+            return false;
+        }
+        let off = (s - self.hwm) as usize;
+        let (w, b) = (off / 64, off % 64);
+        if self.tail.len() <= w {
+            self.tail.resize(w + 1, 0);
+        }
+        if self.tail[w] >> b & 1 == 1 {
+            return false;
+        }
+        self.tail[w] |= 1 << b;
+        if off == 0 {
+            self.compact();
+        }
+        true
+    }
+
+    /// Advance `hwm` over the contiguous run of seen steps at the front of
+    /// the tail and shift the bitset down accordingly.
+    fn compact(&mut self) {
+        while let Some(&w0) = self.tail.first() {
+            let run = (!w0).trailing_zeros() as usize;
+            if run == 0 {
+                break;
+            }
+            if run == 64 {
+                self.tail.remove(0);
+                self.hwm += 64;
+            } else {
+                for i in 0..self.tail.len() {
+                    self.tail[i] >>= run;
+                    if i + 1 < self.tail.len() {
+                        self.tail[i] |= self.tail[i + 1] << (64 - run);
+                    }
+                }
+                self.hwm += run as u64;
+                break;
+            }
+        }
+        while self.tail.last() == Some(&0) {
+            self.tail.pop();
+        }
+    }
+
+    /// Total steps seen.
+    pub fn len(&self) -> u64 {
+        self.hwm + self.tail_entries()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hwm == 0 && self.tail.is_empty()
+    }
+
+    /// Out-of-order steps currently held above the high-water mark.
+    pub fn tail_entries(&self) -> u64 {
+        self.tail.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Bitset words currently allocated (the memory-bound metric).
+    pub fn tail_words(&self) -> usize {
+        self.tail.len()
+    }
+}
+
+/// The flooding dedup filter: one [`StepSet`] per origin, replacing the
+/// historical `HashSet<MsgId>`. Same accept/duplicate decisions, O(n +
+/// reorder gap) memory instead of O(T·n) (property-tested against the
+/// hash-set reference in `rust/tests/properties.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct FloodDedup {
+    origins: Vec<StepSet>,
+    total: u64,
+}
+
+impl FloodDedup {
+    /// Record `id` as seen; returns true iff it was new (the exact
+    /// contract of `HashSet::insert`).
+    pub fn insert(&mut self, id: MsgId) -> bool {
+        let o = id.origin as usize;
+        if self.origins.len() <= o {
+            self.origins.resize_with(o + 1, StepSet::default);
+        }
+        let fresh = self.origins[o].insert(id.step);
+        if fresh {
+            self.total += 1;
+        }
+        fresh
+    }
+
+    pub fn contains(&self, id: &MsgId) -> bool {
+        self.origins.get(id.origin as usize).is_some_and(|s| s.contains(id.step))
+    }
+
+    /// Total messages seen (what `HashSet::len` used to report).
+    pub fn len(&self) -> usize {
+        self.total as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Contiguous high-water mark for one origin (0 if never heard from).
+    pub fn hwm(&self, origin: u32) -> u64 {
+        self.origins.get(origin as usize).map_or(0, |s| s.hwm())
+    }
+
+    /// Per-origin high-water marks, origin-indexed — the O(n)-byte state
+    /// summary of the gap-request repair protocol
+    /// ([`Payload::Summary`]). Conservative by construction: out-of-order
+    /// tail entries above a mark are *not* advertised, so a responder may
+    /// re-send a few already-seen messages (dedup absorbs them).
+    pub fn summary(&self) -> Vec<u32> {
+        self.origins.iter().map(|s| s.hwm().min(u32::MAX as u64) as u32).collect()
+    }
+
+    /// Out-of-order entries retained above the high-water marks.
+    pub fn tail_entries(&self) -> u64 {
+        self.origins.iter().map(|s| s.tail_entries()).sum()
+    }
+
+    /// Bitset words currently allocated across all origins.
+    pub fn tail_words(&self) -> usize {
+        self.origins.iter().map(|s| s.tail_words()).sum()
+    }
+}
+
 /// Per-client flooding protocol state (Alg. 1: S_i = seen, R_i = outbox).
 #[derive(Debug, Default)]
 pub struct FloodState {
-    /// S_i — every message id ever received (dedup filter)
-    pub seen: HashSet<MsgId>,
+    /// S_i — dedup filter over every message id received, as per-origin
+    /// step intervals + tail bitsets (O(n + window), not O(T·n))
+    pub seen: FloodDedup,
     /// R_i — messages received last step, to forward this step
     pub outbox: Vec<SeedUpdate>,
-    /// append-only record of every message in first-seen order — the
-    /// source for netcond recovery re-floods ([`Self::repair`]); 20 bytes
-    /// per entry, the same order of memory as the dedup set
-    pub log: Vec<SeedUpdate>,
+    /// bounded retention of recent messages in first-seen order — the
+    /// source for repair (gap-fill responses, legacy re-floods); 20 bytes
+    /// per entry, at most [`Self::retain`] entries
+    pub window: VecDeque<SeedUpdate>,
+    /// retention-window capacity; 0 retains everything (legacy behavior —
+    /// required for [`RepairMode::Reflood`] to replay the full history)
+    pub retain: usize,
+    /// how repair triggers are answered (see [`RepairMode`])
+    pub repair_mode: RepairMode,
+    /// gap protocol: a repair trigger arms a summary broadcast for the
+    /// next send round
+    pub summary_due: bool,
+    /// gap protocol: per-neighbor gap-fill replies queued for the next
+    /// send round (computed in [`Self::collect`] from incoming summaries)
+    pub gap_out: Vec<(usize, Vec<SeedUpdate>)>,
+    /// reflood protocol: retained messages queued for a repair broadcast
+    /// next send round — only messages *not* already outbound, so the
+    /// attribution to [`crate::net::Accounting::repair_bytes`] counts
+    /// nothing that would have been transmitted anyway
+    pub repair_batch: Vec<SeedUpdate>,
     /// duplicate receptions filtered (metrics: flooding overhead)
     pub duplicates: u64,
+    /// gap-fill responses where the requester's *oldest* missing step had
+    /// already been evicted from the retention window — that history
+    /// cannot be replayed from here. Persistently nonzero means `retain`
+    /// is too small for the outage lengths (silent-loss warning,
+    /// surfaced as `RunRecord::repair_gap_misses`)
+    pub gap_misses: u64,
     /// worst (apply iteration − origin iteration) observed, recorded via
     /// [`Self::note_staleness`] — 0 on a reliable full-depth flood
     pub max_staleness: u64,
@@ -86,30 +337,61 @@ impl FloodState {
         Self::default()
     }
 
+    /// Retention-window push with eviction (first-seen order, capped at
+    /// [`Self::retain`] entries; 0 = unbounded).
+    fn remember(&mut self, msg: SeedUpdate) {
+        self.window.push_back(msg);
+        if self.retain > 0 && self.window.len() > self.retain {
+            self.window.pop_front();
+        }
+    }
+
+    /// Entries currently held for dedup + repair: retention-window
+    /// messages plus out-of-order dedup tail entries — the O(n + window)
+    /// memory bound ([`crate::metrics::RunRecord::flood_retained`]).
+    pub fn retained_entries(&self) -> usize {
+        self.window.len() + self.seen.tail_entries() as usize
+    }
+
     /// Inject this client's own freshly generated update (start of Alg. 1
-    /// step C): goes into both the seen-set and the outbox. Under the
-    /// quantized wire format the coefficient is rounded here so the origin
-    /// applies exactly what the network will carry. Returns the message as
-    /// it will circulate.
+    /// step C): goes into the dedup filter, the retention window, and the
+    /// outbox. Under the quantized wire format the coefficient is rounded
+    /// here so the origin applies exactly what the network will carry.
+    /// Returns the message as it will circulate.
     pub fn inject(&mut self, msg: SeedUpdate) -> SeedUpdate {
         let msg = match self.wire {
             WireFormat::Full => msg,
             WireFormat::Quantized(scale) => msg.quantized(scale),
         };
         self.seen.insert(msg.id);
-        self.log.push(msg);
+        self.remember(msg);
         self.outbox.push(msg);
         msg
     }
 
-    /// Re-flood everything this client has ever seen: reset the outbox to
-    /// the full message log. Called when the network signals a recovery or
-    /// an anti-entropy heartbeat ([`crate::net::Network::should_repair`]).
-    /// Receivers dedup, so only genuinely missed messages propagate as
-    /// fresh; the duplicate traffic is the (counted) price of repair. The
-    /// outbox is always a subset of the log, so nothing is lost here.
+    /// Answer a repair trigger ([`crate::net::Network::should_repair`])
+    /// according to [`Self::repair_mode`]:
+    ///
+    /// * `Gap` — arm a [`Payload::Summary`] broadcast for the next send
+    ///   round; neighbors reply with only the missing ranges
+    ///   ([`Payload::GapFill`]). The outbox is left untouched.
+    /// * `Reflood` — legacy: queue the whole retention window (minus
+    ///   anything already outbound) for re-broadcast. Receivers dedup, so
+    ///   only genuinely missed messages propagate as fresh; the duplicate
+    ///   traffic is the (counted) price.
     pub fn repair(&mut self) {
-        self.outbox = self.log.clone();
+        match self.repair_mode {
+            RepairMode::Gap => self.summary_due = true,
+            RepairMode::Reflood => {
+                let outbound: HashSet<MsgId> = self.outbox.iter().map(|m| m.id).collect();
+                self.repair_batch = self
+                    .window
+                    .iter()
+                    .filter(|m| !outbound.contains(&m.id))
+                    .copied()
+                    .collect();
+            }
+        }
     }
 
     /// Record delivery staleness for freshly applied messages at training
@@ -124,33 +406,98 @@ impl FloodState {
         }
     }
 
-    /// One flooding step for client `me`: send R_i to all neighbors.
+    /// One flooding step for client `me`: send R_i to all neighbors, plus
+    /// any armed repair traffic (summary broadcast, queued gap-fill
+    /// replies — both counted into
+    /// [`crate::net::Accounting::repair_bytes`] by the network).
     /// Call [`Self::collect`] after *all* clients have sent (synchronous
     /// round semantics — matches Alg. 1's lockstep `for d = 0..D-1`).
     pub fn send_round(&mut self, me: usize, net: &mut Network) {
+        if self.summary_due {
+            self.summary_due = false;
+            net.broadcast(me, &Payload::Summary(Arc::new(self.seen.summary())));
+        }
+        let quantized = matches!(self.wire, WireFormat::Quantized(_));
+        for (dst, msgs) in std::mem::take(&mut self.gap_out) {
+            net.send(me, dst, Payload::GapFill { msgs, quantized });
+        }
+        if !self.repair_batch.is_empty() {
+            // legacy reflood repair: its own broadcast, so exactly these
+            // bytes — and nothing that was already outbound — are
+            // attributed to the repair accounting (Seeds payloads carry no
+            // header, so the split costs no extra wire bytes)
+            let batch = std::mem::take(&mut self.repair_batch);
+            let payload = self.wire_payload(batch);
+            let (bytes0, msgs0) = (net.acct.total_bytes, net.acct.total_messages);
+            net.broadcast(me, &payload);
+            net.acct.repair_bytes += net.acct.total_bytes - bytes0;
+            net.acct.repair_messages += net.acct.total_messages - msgs0;
+        }
         if self.outbox.is_empty() {
             return;
         }
         let batch = std::mem::take(&mut self.outbox);
-        let payload = match self.wire {
+        let payload = self.wire_payload(batch);
+        net.broadcast(me, &payload);
+    }
+
+    /// Wrap a seed batch in this client's wire encoding.
+    fn wire_payload(&self, batch: Vec<SeedUpdate>) -> Payload {
+        match self.wire {
             WireFormat::Full => Payload::Seeds(batch),
             WireFormat::Quantized(_) => Payload::SeedsQuantized(batch),
-        };
-        net.broadcast(me, &payload);
+        }
     }
 
     /// Receive + dedup; newly seen messages become the next outbox and are
     /// returned for the caller to apply (Alg. 1: R_i ← received \ S_i).
+    /// [`Payload::GapFill`] batches are folded exactly like flooded seeds;
+    /// an incoming [`Payload::Summary`] queues a gap-fill reply (sent next
+    /// round) with the retained messages the requester's high-water marks
+    /// show missing.
     pub fn collect(&mut self, me: usize, net: &mut Network) -> Vec<SeedUpdate> {
         let mut fresh = vec![];
-        for Message { payload, .. } in net.recv_all(me) {
+        for Message { from, payload } in net.recv_all(me) {
             let batch = match payload {
                 Payload::Seeds(b) | Payload::SeedsQuantized(b) => b,
+                Payload::GapFill { msgs, .. } => msgs,
+                Payload::Summary(hwms) => {
+                    // linear scan of the retention window per summary:
+                    // O(retain) on the rare repair path; index the window
+                    // by origin if anti-entropy periods ever get aggressive
+                    let gaps: Vec<SeedUpdate> = self
+                        .window
+                        .iter()
+                        .filter(|m| {
+                            let their_hwm =
+                                hwms.get(m.id.origin as usize).copied().unwrap_or(0);
+                            m.id.step as u64 >= their_hwm as u64
+                        })
+                        .copied()
+                        .collect();
+                    // the requester's oldest missing step per origin is
+                    // below our high-water mark, so we saw it — if it is
+                    // not among the gaps, the window evicted it and this
+                    // client cannot replay that history: count it
+                    for (o, &my_hwm) in self.seen.summary().iter().enumerate() {
+                        let their = hwms.get(o).copied().unwrap_or(0);
+                        let covered = gaps
+                            .iter()
+                            .any(|m| m.id.origin as usize == o && m.id.step == their);
+                        if their < my_hwm && !covered {
+                            self.gap_misses += 1;
+                        }
+                    }
+                    if !gaps.is_empty() {
+                        self.gap_out.push((from, gaps));
+                    }
+                    continue;
+                }
                 _ => panic!("flooding received non-seed payload"),
             };
             for msg in batch {
                 if self.seen.insert(msg.id) {
-                    self.log.push(msg);
+                    self.remember(msg);
                     fresh.push(msg);
                 } else {
                     self.duplicates += 1;
@@ -207,12 +554,8 @@ pub fn flood_rounds_by<S, G, F>(
 /// with (client, &fresh messages) after each round. Thin wrapper over
 /// [`flood_rounds_by`] for plain `FloodState` slices (tests, benches,
 /// examples).
-pub fn flood_rounds<F>(
-    states: &mut [FloodState],
-    net: &mut Network,
-    k: usize,
-    mut apply: F,
-) where
+pub fn flood_rounds<F>(states: &mut [FloodState], net: &mut Network, k: usize, mut apply: F)
+where
     F: FnMut(usize, &[SeedUpdate]),
 {
     // fn item, not a closure: projection callbacks returning borrows of
@@ -226,6 +569,8 @@ pub fn flood_rounds<F>(
 
 #[cfg(test)]
 mod tests {
+    use std::collections::HashSet;
+
     use super::*;
     use crate::topology::Topology;
 
@@ -261,6 +606,83 @@ mod tests {
             seed: origin as u64 * 1000 + step as u64,
             coeff: 1.0,
         }
+    }
+
+    #[test]
+    fn step_set_in_order_stays_compact() {
+        let mut s = StepSet::default();
+        for step in 0..1000 {
+            assert!(s.insert(step), "step {step}");
+            assert!(!s.insert(step), "duplicate step {step}");
+        }
+        assert_eq!(s.hwm(), 1000);
+        assert_eq!(s.len(), 1000);
+        assert_eq!(s.tail_words(), 0, "in-order inserts must not retain tail");
+    }
+
+    #[test]
+    fn step_set_out_of_order_compacts_when_gap_closes() {
+        let mut s = StepSet::default();
+        // arrive 0..200 in reversed 100-blocks: [100..200), then [0..100)
+        for step in 100..200 {
+            assert!(s.insert(step));
+        }
+        assert_eq!(s.hwm(), 0);
+        assert_eq!(s.tail_entries(), 100);
+        for step in 0..100 {
+            assert!(s.insert(step));
+        }
+        assert_eq!(s.hwm(), 200, "closing the gap must advance the mark");
+        assert_eq!(s.tail_words(), 0, "compaction must free the bitset");
+        assert_eq!(s.len(), 200);
+        for step in 0..200 {
+            assert!(s.contains(step));
+        }
+        assert!(!s.contains(200));
+    }
+
+    #[test]
+    fn step_set_matches_hashset_on_word_boundaries() {
+        // exercise the cross-word shift in compact(): runs of 63/64/65
+        let mut s = StepSet::default();
+        let mut reference = HashSet::new();
+        for &step in &[64u32, 0, 63, 1, 2, 130, 65, 64, 129, 128, 3] {
+            assert_eq!(s.insert(step), reference.insert(step), "step {step}");
+        }
+        for step in 0..200 {
+            assert_eq!(s.contains(step), reference.contains(&step), "step {step}");
+        }
+        assert_eq!(s.len(), reference.len() as u64);
+    }
+
+    #[test]
+    fn dedup_summary_reports_contiguous_prefix_only() {
+        let mut d = FloodDedup::default();
+        d.insert(MsgId { origin: 0, step: 0 });
+        d.insert(MsgId { origin: 0, step: 1 });
+        d.insert(MsgId { origin: 2, step: 5 }); // origin 2: gap below 5
+        assert_eq!(d.summary(), vec![2, 0, 0]);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.tail_entries(), 1);
+        assert!(d.contains(&MsgId { origin: 2, step: 5 }));
+        assert!(!d.contains(&MsgId { origin: 2, step: 4 }));
+        assert!(!d.contains(&MsgId { origin: 7, step: 0 }));
+    }
+
+    #[test]
+    fn million_step_flood_memory_stays_bounded() {
+        // acceptance: per-client dedup memory is O(n + window) retained
+        // entries on a million-step run, not O(T·n)
+        let retain = 1024;
+        let mut st = FloodState { retain, ..FloodState::new() };
+        for step in 0..1_000_000u32 {
+            st.inject(msg(0, step));
+            st.outbox.clear(); // stand-in for a drained send round
+        }
+        assert_eq!(st.seen.len(), 1_000_000);
+        assert_eq!(st.window.len(), retain, "window must evict to its cap");
+        assert_eq!(st.seen.tail_words(), 0, "in-order steps retain no bitset");
+        assert!(st.retained_entries() <= retain);
     }
 
     /// Everyone receives everything after D rounds — the paper's perfect-
@@ -364,7 +786,130 @@ mod tests {
     }
 
     #[test]
-    fn log_records_first_seen_order_and_repair_refloods() {
+    fn window_records_first_seen_order_and_reflood_repair_resends_it() {
+        let topo = Topology::ring(4);
+        let d = topo.diameter();
+        let mut net = Network::new(topo);
+        let mut states: Vec<FloodState> = (0..4)
+            .map(|_| FloodState { repair_mode: RepairMode::Reflood, ..FloodState::new() })
+            .collect();
+        for (i, st) in states.iter_mut().enumerate() {
+            st.inject(msg(i as u32, 0));
+        }
+        flood_rounds(&mut states, &mut net, d + 1, |_, _| {});
+        for st in &states {
+            assert_eq!(st.window.len(), 4, "window holds everything (retain=0)");
+            assert!(st.outbox.is_empty(), "drained after D+1 rounds");
+        }
+        // reflood repair queues the full window (nothing is outbound) for
+        // re-broadcast; receivers dedup, so a re-flood round only costs
+        // duplicate (repair) traffic
+        let bytes_before = net.acct.total_bytes;
+        states[0].repair();
+        assert_eq!(states[0].repair_batch.len(), 4);
+        assert!(states[0].outbox.is_empty(), "repair must not touch the outbox");
+        flood_rounds(&mut states, &mut net, 1, |_, fresh| {
+            panic!("nothing should be fresh, got {fresh:?}")
+        });
+        assert!(net.acct.total_bytes > bytes_before);
+        assert_eq!(
+            net.acct.repair_bytes,
+            net.acct.total_bytes - bytes_before,
+            "the whole re-flood must be attributed to repair"
+        );
+        assert!(states.iter().skip(1).any(|s| s.duplicates > 0));
+    }
+
+    #[test]
+    fn reflood_repair_excludes_already_outbound_messages() {
+        let topo = Topology::ring(4);
+        let mut net = Network::new(topo);
+        let mut states: Vec<FloodState> = (0..4)
+            .map(|_| FloodState { repair_mode: RepairMode::Reflood, ..FloodState::new() })
+            .collect();
+        for step in 0..5 {
+            states[0].inject(msg(0, step));
+        }
+        // everything is still outbound (never sent) → nothing to re-flood:
+        // those messages would have been transmitted anyway and must not
+        // inflate the repair accounting
+        states[0].repair();
+        assert!(states[0].repair_batch.is_empty());
+        states[0].send_round(0, &mut net);
+        let normal_bytes = net.acct.total_bytes;
+        assert!(normal_bytes > 0);
+        assert_eq!(net.acct.repair_bytes, 0, "outbound traffic is not repair");
+        // with the outbox drained, a repair re-floods the whole window —
+        // and exactly that broadcast is attributed to repair
+        states[0].repair();
+        assert_eq!(states[0].repair_batch.len(), 5);
+        states[0].send_round(0, &mut net);
+        assert_eq!(net.acct.repair_bytes, net.acct.total_bytes - normal_bytes);
+    }
+
+    #[test]
+    fn gap_repair_requests_only_the_missing_range() {
+        // client 1 on a 2-ring misses steps 3..10 from origin 0; a gap
+        // repair must move exactly the missing messages plus the summary,
+        // not the whole history
+        let topo = Topology::ring(2);
+        let mut net = Network::new(topo);
+        let mut states: Vec<FloodState> = (0..2).map(|_| FloodState::new()).collect();
+        for step in 0..10 {
+            states[0].inject(msg(0, step));
+        }
+        // steps 0..3 reached client 1 before the (simulated) outage
+        for step in 0..3 {
+            states[1].seen.insert(MsgId { origin: 0, step });
+        }
+        states[0].outbox.clear(); // outage: the normal flood never happened
+        states[1].repair(); // recovery trigger → summary next round
+        let mut fresh_at_1 = vec![];
+        flood_rounds(&mut states, &mut net, 2, |i, fresh| {
+            if i == 1 {
+                fresh_at_1.extend_from_slice(fresh);
+            }
+        });
+        // round 1: summary 1→0; round 2: gap-fill 0→1 with steps 3..10
+        let got: Vec<u32> = fresh_at_1.iter().map(|m| m.id.step).collect();
+        assert_eq!(got, (3..10).collect::<Vec<u32>>());
+        assert_eq!(states[1].seen.len(), 10);
+        // repair accounting: one summary + one 7-message gap-fill, plus the
+        // requester forwarding nothing it already had
+        let expect = Payload::Summary(Arc::new(states[1].seen.summary())).wire_bytes()
+            + Payload::GapFill { msgs: fresh_at_1.clone(), quantized: false }.wire_bytes();
+        assert_eq!(net.acct.repair_bytes, expect);
+        assert_eq!(net.acct.repair_messages, 2);
+    }
+
+    #[test]
+    fn gap_repair_counts_history_evicted_from_the_window() {
+        // responder retains only the last 2 of 10 messages; a requester
+        // missing everything gets those 2 — and the unfillable older
+        // history is counted instead of silently ignored
+        let topo = Topology::ring(2);
+        let mut net = Network::new(topo);
+        let mut states: Vec<FloodState> = (0..2)
+            .map(|_| FloodState { retain: 2, ..FloodState::new() })
+            .collect();
+        for step in 0..10 {
+            states[0].inject(msg(0, step));
+        }
+        states[0].outbox.clear(); // outage: the normal flood never happened
+        states[1].repair();
+        let mut fresh_at_1 = vec![];
+        flood_rounds(&mut states, &mut net, 2, |i, fresh| {
+            if i == 1 {
+                fresh_at_1.extend_from_slice(fresh);
+            }
+        });
+        let got: Vec<u32> = fresh_at_1.iter().map(|m| m.id.step).collect();
+        assert_eq!(got, vec![8, 9], "only the retained tail is replayable");
+        assert_eq!(states[0].gap_misses, 1, "the evicted gap must be counted");
+    }
+
+    #[test]
+    fn gap_repair_is_a_noop_when_nothing_is_missing() {
         let topo = Topology::ring(4);
         let d = topo.diameter();
         let mut net = Network::new(topo);
@@ -373,20 +918,17 @@ mod tests {
             st.inject(msg(i as u32, 0));
         }
         flood_rounds(&mut states, &mut net, d + 1, |_, _| {});
-        for st in &states {
-            assert_eq!(st.log.len(), 4, "log holds everything ever seen");
-            assert!(st.outbox.is_empty(), "drained after D+1 rounds");
-        }
-        // repair resets the outbox to the full log; receivers dedup, so a
-        // re-flood round only costs duplicate traffic
-        let bytes_before = net.acct.total_bytes;
         states[0].repair();
-        assert_eq!(states[0].outbox.len(), 4);
-        flood_rounds(&mut states, &mut net, 1, |_, fresh| {
+        flood_rounds(&mut states, &mut net, 2, |_, fresh| {
             panic!("nothing should be fresh, got {fresh:?}")
         });
-        assert!(net.acct.total_bytes > bytes_before);
-        assert!(states.iter().skip(1).any(|s| s.duplicates > 0));
+        // the summary's marks (hwm = 1 per origin) cover every retained
+        // message, so neighbors send no gap-fill replies at all — repair
+        // cost is the two summary broadcasts and nothing else
+        assert_eq!(
+            net.acct.repair_messages, 2,
+            "one summary per neighbor, no gap-fill replies"
+        );
     }
 
     #[test]
@@ -412,5 +954,13 @@ mod tests {
         flood_rounds(&mut states, &mut net, 2, |_, _| {});
         let dup_total: u64 = states.iter().map(|s| s.duplicates).sum();
         assert!(dup_total > 0, "complete graph must produce duplicate receipts");
+    }
+
+    #[test]
+    fn repair_mode_parses() {
+        assert_eq!(RepairMode::parse("gap"), Some(RepairMode::Gap));
+        assert_eq!(RepairMode::parse("Reflood"), Some(RepairMode::Reflood));
+        assert_eq!(RepairMode::parse("full-log"), None);
+        assert_eq!(RepairMode::default().name(), "gap");
     }
 }

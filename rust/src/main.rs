@@ -108,12 +108,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     if !record.netcond.is_empty() {
         println!(
-            "netcond {}: delivery {:.1}% | dropped {} | flood duplicates {} | max staleness {} iter",
+            "netcond {}: delivery {:.1}% | dropped {} | flood duplicates {} | \
+             max staleness {} iter",
             record.netcond,
             100.0 * record.delivery_ratio,
             record.dropped_messages,
             record.flood_duplicates,
             record.max_staleness
+        );
+        println!(
+            "repair: {} in {} messages | flood retained {} entries/client max",
+            human_bytes(record.repair_bytes),
+            record.repair_messages,
+            record.flood_retained
         );
     }
     for (phase, ms) in &record.phase_ms {
@@ -144,15 +151,25 @@ fn cmd_info(args: &Args) -> Result<()> {
     let dir = args.get_or("artifacts", "artifacts");
     let model = args.get_or("model", "tiny");
     let m = Manifest::load(&format!("{dir}/{model}_manifest.json"))?;
-    println!("model config {}: d={} params, vocab={}, seq={}, dim={}, layers={}",
-             m.config.name, m.config.num_params, m.config.vocab, m.config.seq,
-             m.config.dim, m.config.layers);
-    println!("2D params under SubCGE: {} (artifact rank {})",
-             m.params2d.len(), m.config.subcge_rank);
+    println!(
+        "model config {}: d={} params, vocab={}, seq={}, dim={}, layers={}",
+        m.config.name, m.config.num_params, m.config.vocab, m.config.seq, m.config.dim,
+        m.config.layers
+    );
+    println!(
+        "2D params under SubCGE: {} (artifact rank {})",
+        m.params2d.len(),
+        m.config.subcge_rank
+    );
     println!("artifacts:");
     for a in &m.artifacts {
-        println!("  {:<12} {} ({} inputs, {} outputs)", a.tag, a.file,
-                 a.inputs.len(), a.outputs.len());
+        println!(
+            "  {:<12} {} ({} inputs, {} outputs)",
+            a.tag,
+            a.file,
+            a.inputs.len(),
+            a.outputs.len()
+        );
     }
     Ok(())
 }
@@ -173,6 +190,11 @@ train        --method <dsgd|choco|dsgd-lora|choco-lora|dzsgd|dzsgd-lora|seedfloo
              <lossy-ring|flaky-torus|churn-er> or a spec string such as
              \"loss=0.05;delay=1;node:3@10..20;link:0-1@5..15;repair=25\";
              presets pin their topology; default: reliable network)
+             --repair-mode <gap|reflood> (how flooding answers repair
+             triggers: gap-request summaries + gap-fills, or the legacy
+             full re-flood; default gap)
+             --flood-retain N (repair-window capacity per client; 0 keeps
+             everything — required for reflood; default 4096)
              [--out results/run.json]
 experiment   <fig1|fig3|table8|scaling|fig4|table2|table3|fig6|fig7|churn>
              [--tasks a,b] [--scenarios lossy-ring,flaky-torus,churn-er]

@@ -46,6 +46,21 @@ pub struct RunRecord {
     /// worst (apply iteration − origin iteration) over all flooded
     /// messages (SeedFlood only; 0 = everything applied same-iteration)
     pub max_staleness: u64,
+    /// bytes of repair traffic: gap-request summaries + gap-fills, or
+    /// legacy re-flood broadcasts (subset of `total_bytes`; 0 when no
+    /// repair ever triggered)
+    pub repair_bytes: u64,
+    /// transmissions attributable to repair (same attribution rules)
+    pub repair_messages: u64,
+    /// gap-fill responses whose oldest requested step was already evicted
+    /// from the responder's retention window — history that could not be
+    /// replayed. Persistently nonzero ⇒ `flood_retain` is too small for
+    /// the scenario's outage lengths (silent-loss warning)
+    pub repair_gap_misses: u64,
+    /// worst per-client memory retained by the flooding layer at run end:
+    /// repair-window entries + out-of-order dedup tail entries — the
+    /// O(n + window) bound (SeedFlood only)
+    pub flood_retained: u64,
     pub wall_secs: f64,
     /// phase name -> total ms (Table 4 breakdown)
     pub phase_ms: Vec<(String, f64)>,
@@ -69,6 +84,10 @@ impl RunRecord {
             ("delivery_ratio", Json::num(self.delivery_ratio)),
             ("flood_duplicates", Json::num(self.flood_duplicates as f64)),
             ("max_staleness", Json::num(self.max_staleness as f64)),
+            ("repair_bytes", Json::num(self.repair_bytes as f64)),
+            ("repair_messages", Json::num(self.repair_messages as f64)),
+            ("repair_gap_misses", Json::num(self.repair_gap_misses as f64)),
+            ("flood_retained", Json::num(self.flood_retained as f64)),
             ("wall_secs", Json::num(self.wall_secs)),
             ("train_losses", Json::arr_f64(&self.train_losses)),
             (
@@ -127,6 +146,8 @@ mod tests {
             delivery_ratio: 0.93,
             dropped_messages: 112,
             max_staleness: 3,
+            repair_bytes: 1234,
+            flood_retained: 96,
             ..Default::default()
         };
         r.evals.push(EvalPoint {
@@ -145,6 +166,8 @@ mod tests {
         assert_eq!(back.get("netcond").unwrap().as_str().unwrap(), "lossy-ring");
         assert_eq!(back.get("delivery_ratio").unwrap().as_f64().unwrap(), 0.93);
         assert_eq!(back.get("max_staleness").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(back.get("repair_bytes").unwrap().as_f64().unwrap(), 1234.0);
+        assert_eq!(back.get("flood_retained").unwrap().as_f64().unwrap(), 96.0);
         assert_eq!(
             back.get("evals").unwrap().as_arr().unwrap()[0]
                 .get("accuracy")

@@ -294,8 +294,10 @@ pub mod checkpoint {
         }
         for ((n, t), spec) in p.names.iter().zip(p.tensors.iter()).zip(m.params.iter()) {
             if n != &spec.name || t.shape != spec.shape {
-                bail!("checkpoint tensor {n} {:?} != manifest {} {:?}",
-                      t.shape, spec.name, spec.shape);
+                bail!(
+                    "checkpoint tensor {n} {:?} != manifest {} {:?}",
+                    t.shape, spec.name, spec.shape
+                );
             }
         }
         Ok(())

@@ -11,6 +11,8 @@
 //! * seed–scalar update: origin+step id (8 B) + seed (8 B) + coeff (4 B) = 20 B
 //! * dense tensor traffic: 4 B per f32 element (+16 B header)
 //! * sparse top-K traffic: 8 B per (index, value) pair (+16 B header)
+//! * repair summary: 8 B header + 4 B per origin (contiguous high-water mark)
+//! * repair gap-fill: 8 B header + 20 B per update (9 B when quantized)
 //!
 //! # Fault injection
 //!
@@ -75,19 +77,32 @@ impl SeedUpdate {
     /// µ-law coefficient.
     pub const WIRE_BYTES_QUANTIZED: u64 = 9;
 
+    /// The code an exactly-zero coefficient maps to. The grid is
+    /// *mid-tread*: codes are `128 + round(y·127)` with `y` the µ-law
+    /// companded value, so code 128 sits exactly on zero and the zero cell
+    /// is symmetric — a historical mid-riser grid (offset 127.5) had no
+    /// zero code at all, decoding `c = 0.0` to a small positive value and
+    /// injecting a systematic drift under `--quantize-msgs`. Code 0 is
+    /// unused (255 symmetric levels).
+    pub const ZERO_CODE: u8 = 128;
+
     /// µ-law quantize the coefficient to 8 bits around `scale` (callers
     /// use the learning rate — coefficients are η·α/n, so |c|/scale is
-    /// O(α) and well covered by µ-law's dynamic range).
+    /// O(α) and well covered by µ-law's dynamic range). Monotone in `c`;
+    /// `c = 0.0` maps to [`Self::ZERO_CODE`] and round-trips to exactly
+    /// 0.0, with the same dead zone on either side of zero.
     pub fn quantize_coeff(c: f32, scale: f32) -> u8 {
         let x = (c / (scale * 64.0)).clamp(-1.0, 1.0);
         const MU: f32 = 255.0;
         let y = x.signum() * (1.0 + MU * x.abs()).ln() / (1.0 + MU).ln();
-        (((y + 1.0) * 127.5).round() as i32).clamp(0, 255) as u8
+        (Self::ZERO_CODE as i32 + (y * 127.0).round() as i32).clamp(1, 255) as u8
     }
 
+    /// Inverse of [`Self::quantize_coeff`]; monotone, with
+    /// [`Self::ZERO_CODE`] decoding to exactly 0.0.
     pub fn dequantize_coeff(q: u8, scale: f32) -> f32 {
         const MU: f32 = 255.0;
-        let y = q as f32 / 127.5 - 1.0;
+        let y = (q as f32 - Self::ZERO_CODE as f32) / 127.0;
         let x = y.signum() * ((1.0 + MU).powf(y.abs()) - 1.0) / MU;
         x * scale * 64.0
     }
@@ -113,9 +128,24 @@ pub enum Payload {
     Dense(Arc<ParamVec>),
     /// Sparse top-K compressed delta (ChocoSGD): per-tensor (index, value).
     Sparse(Arc<Vec<Vec<(u32, f32)>>>),
+    /// Gap-request repair, step 1: per-origin contiguous high-water marks
+    /// (origin-indexed; everything below `summary[o]` seen from origin
+    /// `o`). O(n) bytes, broadcast by a recovering client so neighbors can
+    /// answer with only what it missed. Counted into
+    /// [`Accounting::repair_bytes`].
+    Summary(Arc<Vec<u32>>),
+    /// Gap-request repair, step 2: the retained messages a received
+    /// [`Payload::Summary`] showed missing, unicast back to the requester.
+    /// O(gap) bytes; `quantized` mirrors the run's seed wire format so
+    /// repair traffic is costed like the flood traffic it replaces.
+    /// Counted into [`Accounting::repair_bytes`].
+    GapFill { msgs: Vec<SeedUpdate>, quantized: bool },
 }
 
 impl Payload {
+    /// Framing header modeled for the repair payloads (type tag + length).
+    pub const REPAIR_HEADER_BYTES: u64 = 8;
+
     /// Logical bytes on the wire (the paper's communication-cost metric).
     pub fn wire_bytes(&self) -> u64 {
         match self {
@@ -127,7 +157,23 @@ impl Payload {
             Payload::Sparse(t) => {
                 16 + 8 * t.iter().map(|v| v.len() as u64).sum::<u64>()
             }
+            Payload::Summary(h) => Self::REPAIR_HEADER_BYTES + 4 * h.len() as u64,
+            Payload::GapFill { msgs, quantized } => {
+                let per_msg = if *quantized {
+                    SeedUpdate::WIRE_BYTES_QUANTIZED
+                } else {
+                    SeedUpdate::WIRE_BYTES
+                };
+                Self::REPAIR_HEADER_BYTES + msgs.len() as u64 * per_msg
+            }
         }
+    }
+
+    /// Whether this payload is repair traffic (gap-request protocol);
+    /// [`Network::send`] attributes its bytes to
+    /// [`Accounting::repair_bytes`].
+    pub fn is_repair(&self) -> bool {
+        matches!(self, Payload::Summary(_) | Payload::GapFill { .. })
     }
 }
 
@@ -149,6 +195,13 @@ pub struct Accounting {
     /// messages killed by fault injection (loss, down links, down nodes);
     /// their bytes stay counted — transmission is what costs
     pub dropped_messages: u64,
+    /// bytes attributable to repair: gap-request summaries and gap-fills
+    /// (counted by [`Network::send`] via [`Payload::is_repair`]) plus
+    /// legacy re-flood broadcasts (attributed by the flooding layer,
+    /// `flood::FloodState::send_round`). A subset of `total_bytes`.
+    pub repair_bytes: u64,
+    /// transmissions attributable to repair (same attribution rules)
+    pub repair_messages: u64,
 }
 
 impl Accounting {
@@ -289,8 +342,8 @@ impl Network {
         for v in c.node_down.iter_mut() {
             *v = false;
         }
-        for k in 0..c.events.len() {
-            match c.events[k] {
+        for ev in &c.events {
+            match *ev {
                 Event::Node { id, from, until } => {
                     if t >= from && t < until {
                         c.node_down[id] = true;
@@ -350,9 +403,10 @@ impl Network {
         }
     }
 
-    /// Whether client `i` should re-flood its message log this iteration
+    /// Whether client `i` should run its repair protocol this iteration
     /// (set by [`Self::set_step`]: an incident link/node just recovered,
-    /// or the anti-entropy period elapsed).
+    /// or the anti-entropy period elapsed). What "repair" means is the
+    /// flooding layer's choice — see [`crate::flood::RepairMode`].
     pub fn should_repair(&self, i: usize) -> bool {
         match &self.cond {
             Some(c) => c.repair_due[i],
@@ -397,6 +451,10 @@ impl Network {
         self.acct.edge_bytes[eid] += bytes;
         self.acct.total_bytes += bytes;
         self.acct.total_messages += 1;
+        if payload.is_repair() {
+            self.acct.repair_bytes += bytes;
+            self.acct.repair_messages += 1;
+        }
         let deliver_at = match self.cond.as_mut() {
             Some(c) => {
                 if c.node_down[dst] || c.link_down[eid] {
@@ -440,8 +498,7 @@ impl Network {
             }
         }
         let mut out = vec![];
-        for k in 0..self.in_edges[dst].len() {
-            let (_, eid) = self.in_edges[dst][k];
+        for &(_, eid) in &self.in_edges[dst] {
             while self.queues[eid].front().is_some_and(|&(at, _)| at <= self.now) {
                 out.push(self.queues[eid].pop_front().unwrap().1);
             }
@@ -536,6 +593,62 @@ mod tests {
         let quant = Payload::SeedsQuantized(msgs).wire_bytes();
         assert_eq!(full, 200);
         assert_eq!(quant, 90);
+    }
+
+    #[test]
+    fn quantize_zero_roundtrips_exactly() {
+        // regression: c = 0.0 used to decode to a small positive value
+        // (the 127.5 midpoint has no exact-zero code), injecting a
+        // systematic drift under --quantize-msgs
+        for scale in [1e-5f32, 1e-3, 1.0] {
+            let q = SeedUpdate::quantize_coeff(0.0, scale);
+            assert_eq!(SeedUpdate::dequantize_coeff(q, scale), 0.0, "scale {scale}");
+        }
+        // the zero code does not break decode monotonicity around zero,
+        // and the mid-tread grid is symmetric: ±c map to mirrored codes,
+        // so near-zero noise carries no systematic sign bias
+        let scale = 1e-3;
+        assert!(SeedUpdate::dequantize_coeff(127, scale) < 0.0);
+        assert!(SeedUpdate::dequantize_coeff(129, scale) > 0.0);
+        for k in 1..=127u8 {
+            assert_eq!(
+                SeedUpdate::dequantize_coeff(128 + k, scale),
+                -SeedUpdate::dequantize_coeff(128 - k, scale),
+                "code {k}"
+            );
+        }
+        for c in [1e-12f32, 3e-4, 0.02] {
+            assert_eq!(
+                SeedUpdate::quantize_coeff(c, scale) as i32 - 128,
+                128 - SeedUpdate::quantize_coeff(-c, scale) as i32,
+                "c={c}"
+            );
+        }
+    }
+
+    #[test]
+    fn repair_payload_wire_sizes_and_accounting() {
+        let mut net = Network::new(Topology::ring(4));
+        let summary = Payload::Summary(Arc::new(vec![5, 0, 3, 1]));
+        assert_eq!(summary.wire_bytes(), 8 + 4 * 4);
+        let msgs: Vec<SeedUpdate> = (0..3)
+            .map(|i| SeedUpdate {
+                id: MsgId { origin: 0, step: i },
+                seed: i as u64,
+                coeff: 1.0,
+            })
+            .collect();
+        let gap = Payload::GapFill { msgs: msgs.clone(), quantized: false };
+        assert_eq!(gap.wire_bytes(), 8 + 3 * SeedUpdate::WIRE_BYTES);
+        // quantized runs cost their repair traffic at the quantized rate
+        let gap_q = Payload::GapFill { msgs, quantized: true };
+        assert_eq!(gap_q.wire_bytes(), 8 + 3 * SeedUpdate::WIRE_BYTES_QUANTIZED);
+        net.send(0, 1, summary);
+        net.send(1, 0, gap);
+        net.send(0, 1, seed_payload(2)); // normal traffic is not repair
+        assert_eq!(net.acct.repair_bytes, 24 + 68);
+        assert_eq!(net.acct.repair_messages, 2);
+        assert_eq!(net.acct.total_bytes, 24 + 68 + 40);
     }
 
     #[test]

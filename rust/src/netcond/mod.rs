@@ -9,9 +9,10 @@
 //! until)` iteration windows, then rejoining). [`crate::net::Network`]
 //! compiles a `NetCond` into per-edge tables
 //! ([`crate::net::Network::install`]) and consults them on every
-//! send/receive; [`crate::flood::FloodState`]
-//! answers faults with recovery re-floods so delivery degrades to
-//! *bounded staleness* instead of silent loss.
+//! send/receive; [`crate::flood::FloodState`] answers faults with repair
+//! (gap-request summaries by default, legacy full re-floods via
+//! [`crate::flood::RepairMode`]) so delivery degrades to *bounded
+//! staleness* instead of silent loss.
 //!
 //! Everything is deterministic: fault draws come from a dedicated RNG
 //! stream (`seed`), advanced only on the sequential communication path, so
@@ -33,7 +34,7 @@
 //! | `node:I@T0..T1` | client I offline during iterations `[T0, T1)` |
 //! | `eloss:A-B=P` | per-edge loss override for link A–B |
 //! | `edelay:A-B=K` | per-edge delay override for link A–B |
-//! | `repair=K` | anti-entropy: re-flood the full message log every K iterations |
+//! | `repair=K` | anti-entropy: trigger the repair protocol every K iterations |
 //! | `seed=S` | fault RNG stream seed |
 //!
 //! Alternatively the spec may be one of the scenario [`preset`] names
@@ -94,7 +95,8 @@ pub struct NetCond {
     /// scheduled link/node down windows
     pub events: Vec<Event>,
     /// anti-entropy period: every `repair_every` iterations each client
-    /// re-floods its full message log (0 = recovery-triggered repair only)
+    /// runs its repair protocol — gap-request summary or legacy re-flood,
+    /// see [`crate::flood::RepairMode`] (0 = recovery-triggered only)
     pub repair_every: usize,
 }
 

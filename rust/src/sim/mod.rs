@@ -448,10 +448,15 @@ pub fn run_with_env(env: &Env) -> Result<RunRecord> {
     record.per_edge_bytes = net.per_edge_bytes();
     record.dropped_messages = net.acct.dropped_messages;
     record.delivery_ratio = net.acct.delivery_ratio();
+    record.repair_bytes = net.acct.repair_bytes;
+    record.repair_messages = net.acct.repair_messages;
     for s in &states {
         if let Scratch::Flood { flood, .. } = &s.scratch {
             record.flood_duplicates += flood.duplicates;
             record.max_staleness = record.max_staleness.max(flood.max_staleness);
+            record.repair_gap_misses += flood.gap_misses;
+            record.flood_retained =
+                record.flood_retained.max(flood.retained_entries() as u64);
         }
     }
     record.wall_secs = timer.elapsed().as_secs_f64();

@@ -280,7 +280,8 @@ impl Topology {
         if n < 2 {
             return 1.0;
         }
-        let mut x: Vec<f64> = (0..n).map(|i| ((i * 2654435761) % 1000) as f64 / 1000.0 - 0.5).collect();
+        let mut x: Vec<f64> =
+            (0..n).map(|i| ((i * 2654435761) % 1000) as f64 / 1000.0 - 0.5).collect();
         let mut lambda = 0.0;
         for _ in 0..500 {
             // project out the all-ones direction

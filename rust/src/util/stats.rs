@@ -18,12 +18,16 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile by linear interpolation (p in [0,100]).
+///
+/// NaN handling: inputs are ordered by IEEE 754 `total_cmp`, under which
+/// (positive) NaNs sort after +∞ — they occupy the top percentiles
+/// instead of panicking. Filter NaNs beforehand if they should not count.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let pos = (p / 100.0) * (v.len() - 1) as f64;
     let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
     if lo == hi {
@@ -33,17 +37,26 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// 50th [`percentile`] (same `total_cmp` NaN ordering).
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
 /// Online mean/min/max/count accumulator.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Summary {
     pub count: u64,
     pub sum: f64,
     pub min: f64,
     pub max: f64,
+}
+
+/// Delegates to [`Summary::new`]: the derived impl would zero `min`/`max`,
+/// silently corrupting both for any sample stream that never crosses 0.
+impl Default for Summary {
+    fn default() -> Self {
+        Summary::new()
+    }
 }
 
 impl Summary {
@@ -92,5 +105,34 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
         assert_eq!(s.mean(), 2.0);
+    }
+
+    #[test]
+    fn summary_default_matches_new() {
+        // regression: the derived Default yielded min/max = 0.0, so an
+        // all-positive sample stream reported min = 0.0 (and all-negative
+        // max = 0.0) when accumulated from Summary::default()
+        let d = Summary::default();
+        assert_eq!(d.count, 0);
+        assert_eq!(d.min, f64::INFINITY);
+        assert_eq!(d.max, f64::NEG_INFINITY);
+        let mut s = Summary::default();
+        s.add(5.0);
+        s.add(7.0);
+        assert_eq!(s.min, 5.0, "min must come from the samples, not the init");
+        let mut neg = Summary::default();
+        neg.add(-3.0);
+        assert_eq!(neg.max, -3.0, "max must come from the samples, not the init");
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_input() {
+        // regression: partial_cmp(..).unwrap() used to panic on NaN
+        let xs = [2.0, f64::NAN, 1.0, 3.0];
+        // NaN sorts after +inf (total_cmp), so it lands at the top
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(median(&xs), 2.5);
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert!(percentile(&[], 50.0).is_nan());
     }
 }

@@ -13,7 +13,7 @@
 //! Everything runs on the artifact-free synthetic backend.
 
 use seedflood::config::{ExperimentConfig, Method};
-use seedflood::flood::{flood_rounds, FloodState};
+use seedflood::flood::{flood_rounds, FloodState, RepairMode};
 use seedflood::metrics::RunRecord;
 use seedflood::net::{MsgId, Network, SeedUpdate};
 use seedflood::netcond::NetCond;
@@ -21,6 +21,16 @@ use seedflood::sim::{self, Env};
 use seedflood::topology::{Kind, Topology};
 
 fn run(method: Method, netcond: &str, threads: usize) -> RunRecord {
+    run_mode(method, netcond, threads, RepairMode::Gap, 4096)
+}
+
+fn run_mode(
+    method: Method,
+    netcond: &str,
+    threads: usize,
+    repair_mode: RepairMode,
+    flood_retain: usize,
+) -> RunRecord {
     let cfg = ExperimentConfig {
         method,
         clients: 8,
@@ -31,6 +41,8 @@ fn run(method: Method, netcond: &str, threads: usize) -> RunRecord {
         task: "sst2".into(),
         eval_every: 4,
         netcond: netcond.into(),
+        repair_mode,
+        flood_retain,
         threads,
         ..Default::default()
     };
@@ -51,6 +63,10 @@ fn assert_identical(a: &RunRecord, b: &RunRecord, what: &str) {
     assert_eq!(a.delivery_ratio, b.delivery_ratio, "{what}: delivery ratios differ");
     assert_eq!(a.flood_duplicates, b.flood_duplicates, "{what}: duplicates differ");
     assert_eq!(a.max_staleness, b.max_staleness, "{what}: staleness differs");
+    assert_eq!(a.repair_bytes, b.repair_bytes, "{what}: repair bytes differ");
+    assert_eq!(a.repair_messages, b.repair_messages, "{what}: repair messages differ");
+    assert_eq!(a.repair_gap_misses, b.repair_gap_misses, "{what}: gap misses differ");
+    assert_eq!(a.flood_retained, b.flood_retained, "{what}: retained entries differ");
     assert_eq!(a.evals.len(), b.evals.len(), "{what}: eval point counts differ");
     for (ea, eb) in a.evals.iter().zip(b.evals.iter()) {
         assert_eq!(ea.step, eb.step, "{what}: eval step");
@@ -91,13 +107,13 @@ fn faulty_runs_keep_the_threads_determinism_contract() {
     }
 }
 
-#[test]
-fn flood_delivers_everything_under_seeded_loss_and_churn() {
-    // Protocol-level bounded-staleness check, straight on the flooding
-    // layer: ring of 8 (D = 4), 5% packet loss, client 4 churned out for
-    // iterations [2, 5), link 0–1 down for [5, 7), anti-entropy repair
-    // every iteration. Every update injected over 8 iterations — including
-    // the ones client 4 generates while offline — must reach every client.
+/// Protocol-level bounded-staleness check, straight on the flooding
+/// layer: ring of 8 (D = 4), 5% packet loss, client 4 churned out for
+/// iterations [2, 5), link 0–1 down for [5, 7), anti-entropy repair
+/// every iteration. Every update injected over 8 iterations — including
+/// the ones client 4 generates while offline — must reach every client,
+/// under both repair protocols. Returns the total repair bytes spent.
+fn flood_delivery_under_faults(mode: RepairMode) -> u64 {
     let n = 8;
     let inject_iters = 8u32;
     let settle_iters = 8u32;
@@ -106,7 +122,9 @@ fn flood_delivers_everything_under_seeded_loss_and_churn() {
     let cond = NetCond::parse("loss=0.05;repair=1;node:4@2..5;link:0-1@5..7;seed=3").unwrap();
     let mut net = Network::new(topo);
     net.install(&cond).unwrap();
-    let mut states: Vec<FloodState> = (0..n).map(|_| FloodState::new()).collect();
+    let mut states: Vec<FloodState> = (0..n)
+        .map(|_| FloodState { repair_mode: mode, ..FloodState::new() })
+        .collect();
 
     let mut max_stale = 0u64;
     for t in 0..(inject_iters + settle_iters) {
@@ -118,7 +136,7 @@ fn flood_delivers_everything_under_seeded_loss_and_churn() {
         }
         if t < inject_iters {
             // compute continues through churn: offline clients keep
-            // injecting; their updates queue in the persistent outbox/log
+            // injecting; their updates queue in the persistent outbox
             for (i, st) in states.iter_mut().enumerate() {
                 st.inject(SeedUpdate {
                     id: MsgId { origin: i as u32, step: t },
@@ -136,18 +154,69 @@ fn flood_delivers_everything_under_seeded_loss_and_churn() {
 
     let total = (n as u32 * inject_iters) as usize;
     for (i, st) in states.iter().enumerate() {
-        assert_eq!(st.seen.len(), total, "client {i} is missing updates");
-        assert_eq!(st.log.len(), total, "client {i} log incomplete");
+        assert_eq!(st.seen.len(), total, "{mode:?}: client {i} is missing updates");
+        assert_eq!(st.window.len(), total, "{mode:?}: client {i} window (retain=0)");
     }
     // client 4's offline window forces staleness ≥ its downtime (its
     // t = 2 update cannot appear elsewhere before it rejoins at t = 5)...
-    assert!(max_stale >= 3, "churn must induce staleness, got {max_stale}");
+    assert!(max_stale >= 3, "{mode:?}: churn must induce staleness, got {max_stale}");
     // ...and repair bounds it: downtime (3) + a few loss/link-flap repair
-    // cycles — far below the 16-iteration horizon
-    assert!(max_stale <= 8, "staleness {max_stale} beyond the repair bound");
-    // lost and blackholed traffic really happened
+    // cycles (gap repair adds a summary→gap-fill round trip on top of the
+    // reflood path) — far below the 16-iteration horizon
+    assert!(max_stale <= 9, "{mode:?}: staleness {max_stale} beyond the repair bound");
+    // lost and blackholed traffic really happened, and repair fought back
     assert!(net.acct.dropped_messages > 0);
+    assert!(net.acct.repair_bytes > 0, "{mode:?}: repairs must transmit");
     assert!(states.iter().map(|s| s.duplicates).sum::<u64>() > 0);
+    net.acct.repair_bytes
+}
+
+#[test]
+fn flood_delivers_everything_under_seeded_loss_and_churn() {
+    let gap = flood_delivery_under_faults(RepairMode::Gap);
+    let reflood = flood_delivery_under_faults(RepairMode::Reflood);
+    // both protocols deliver everything; the gap-request protocol pays
+    // O(gap) per repair instead of O(everything retained)
+    assert!(
+        gap < reflood,
+        "gap repair ({gap} B) must undercut full re-floods ({reflood} B)"
+    );
+}
+
+#[test]
+fn gap_repair_spends_fewer_bytes_than_reflood_end_to_end() {
+    // same churn-er scenario through the full sim: the gap-request
+    // protocol (summaries + gap-fills) must strictly undercut the legacy
+    // full-log re-flood in repair traffic, while both runs stay sane
+    let gap = run_mode(Method::SeedFlood, "churn-er", 1, RepairMode::Gap, 4096);
+    let reflood = run_mode(Method::SeedFlood, "churn-er", 1, RepairMode::Reflood, 0);
+    assert!(gap.repair_bytes > 0, "recoveries must trigger gap repairs");
+    assert!(reflood.repair_bytes > 0, "recoveries must trigger re-floods");
+    assert!(
+        gap.repair_bytes < reflood.repair_bytes,
+        "gap repair ({} B) must undercut re-flood ({} B)",
+        gap.repair_bytes,
+        reflood.repair_bytes
+    );
+    assert!(gap.final_loss.is_finite() && reflood.final_loss.is_finite());
+    assert!(gap.flood_retained <= 4096, "retention window must bound memory");
+}
+
+#[test]
+fn reflood_with_bounded_window_is_rejected() {
+    // a bounded retention window cannot replay the full history, so the
+    // legacy reflood mode must refuse it instead of silently dropping
+    // evicted messages from repairs
+    let cfg = ExperimentConfig {
+        method: Method::SeedFlood,
+        clients: 4,
+        steps: 2,
+        repair_mode: RepairMode::Reflood,
+        flood_retain: 100,
+        ..Default::default()
+    };
+    let env = Env::synthetic(cfg).unwrap();
+    assert!(sim::run_with_env(&env).is_err());
 }
 
 #[test]
@@ -167,7 +236,7 @@ fn lossy_ring_preset_records_fault_metrics() {
     let r = run(Method::SeedFlood, "lossy-ring", 1);
     assert_eq!(r.topology, "ring");
     assert!(r.delivery_ratio < 1.0, "5% loss must drop something");
-    assert!(r.flood_duplicates > 0, "repair re-floods must dedup as duplicates");
+    assert!(r.flood_duplicates > 0, "ring redundancy + repair must dedup duplicates");
     assert!(r.total_bytes > 0);
 }
 

@@ -2,8 +2,11 @@
 //! flooding, mixing, aggregation) using the in-repo proptest-lite harness
 //! (`util::prop`; this offline image vendors no proptest crate).
 
-use seedflood::flood::{flood_rounds, FloodState};
+use std::collections::HashSet;
+
+use seedflood::flood::{flood_rounds, FloodDedup, FloodState};
 use seedflood::net::{MsgId, Network, SeedUpdate};
+use seedflood::netcond::NetCond;
 use seedflood::subcge::{apply_uavt, CoeffAccum, SubspaceBasis};
 use seedflood::tensor::{ParamVec, Tensor};
 use seedflood::topology::{Kind, Topology};
@@ -42,6 +45,135 @@ fn prop_every_topology_is_connected_and_flooding_covers_it() {
             if st.seen.len() != n {
                 return Err(format!("client {i} saw {}/{n} messages", st.seen.len()));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dedup_matches_hashset_reference() {
+    // the interval/bitset filter must make identical accept/duplicate
+    // decisions as a reference HashSet<MsgId> under randomized delivery
+    // orders with duplicated receipts — the exact contract the flooding
+    // layer relies on (satellite 4)
+    check("dedup-vs-hashset", 60, |g| {
+        let origins = g.usize_in(1, 6) as u32;
+        let steps = g.usize_in(1, 80) as u32;
+        // random delivery stream: every (origin, step) once, plus random
+        // duplicate receipts, in a random order
+        let mut stream: Vec<MsgId> = (0..origins)
+            .flat_map(|o| (0..steps).map(move |s| MsgId { origin: o, step: s }))
+            .collect();
+        for _ in 0..g.usize_in(0, 40) {
+            let dup = stream[g.usize_in(0, stream.len() - 1)];
+            stream.push(dup);
+        }
+        let perm = g.rng.permutation(stream.len());
+        let mut dedup = FloodDedup::default();
+        let mut reference: HashSet<MsgId> = HashSet::new();
+        for &k in &perm {
+            let id = stream[k as usize];
+            if dedup.insert(id) != reference.insert(id) {
+                return Err(format!("decision diverged on {id:?}"));
+            }
+            if dedup.len() != reference.len() {
+                return Err(format!("len {} != {}", dedup.len(), reference.len()));
+            }
+        }
+        for &id in &stream {
+            if !dedup.contains(&id) {
+                return Err(format!("{id:?} lost after insert"));
+            }
+        }
+        // once every step of an origin has arrived, the tail compacts away
+        if dedup.tail_entries() != 0 {
+            return Err(format!("{} tail entries after full coverage", dedup.tail_entries()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dedup_matches_hashset_under_netcond_reordering() {
+    // same equivalence, but with the delivery order produced by the real
+    // fault layer: seeded loss + per-edge delay on a random topology
+    // reorders and duplicates receipts organically
+    check("dedup-vs-hashset-netcond", 20, |g| {
+        let topo = random_topology(g);
+        let n = topo.n;
+        let d = topo.diameter().max(1);
+        let spec = format!(
+            "loss={:.2};delay={};repair=2;seed={}",
+            g.f32_in(0.0, 0.3),
+            g.usize_in(0, 2),
+            g.rng.next_u64() % 1000
+        );
+        let mut net = Network::new(topo);
+        net.install(&NetCond::parse(&spec).unwrap()).unwrap();
+        let mut states: Vec<FloodState> = (0..n).map(|_| FloodState::new()).collect();
+        let mut reference: Vec<HashSet<MsgId>> = vec![HashSet::new(); n];
+        let mut diverged = None;
+        for t in 0..4u32 {
+            net.set_step(t as usize);
+            for (i, st) in states.iter_mut().enumerate() {
+                if net.should_repair(i) {
+                    st.repair();
+                }
+                let m = st.inject(SeedUpdate {
+                    id: MsgId { origin: i as u32, step: t },
+                    seed: 0,
+                    coeff: 1.0,
+                });
+                reference[i].insert(m.id);
+            }
+            flood_rounds(&mut states, &mut net, d, |i, fresh| {
+                for m in fresh {
+                    if !reference[i].insert(m.id) {
+                        diverged = Some(format!("client {i} got {:?} fresh twice", m.id));
+                    }
+                }
+            });
+        }
+        if let Some(e) = diverged {
+            return Err(e);
+        }
+        for (i, st) in states.iter().enumerate() {
+            if st.seen.len() != reference[i].len() {
+                return Err(format!(
+                    "client {i}: dedup {} != reference {}",
+                    st.seen.len(),
+                    reference[i].len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_retention_window_bounds_retained_entries() {
+    // long-run memory bound (satellite 4): retained entries never exceed
+    // the window size, whatever the arrival pattern
+    check("window-bound", 40, |g| {
+        let retain = g.usize_in(1, 64);
+        let mut st = FloodState { retain, ..FloodState::new() };
+        let total = g.usize_in(100, 2000) as u32;
+        for step in 0..total {
+            st.inject(SeedUpdate {
+                id: MsgId { origin: 0, step },
+                seed: 0,
+                coeff: 1.0,
+            });
+            st.outbox.clear(); // stand-in for a drained send round
+            if st.window.len() > retain {
+                return Err(format!("window {} > retain {retain}", st.window.len()));
+            }
+        }
+        if st.seen.len() != total as usize {
+            return Err("eviction must never evict dedup knowledge".into());
+        }
+        if st.retained_entries() > retain {
+            return Err(format!("retained {} > {retain}", st.retained_entries()));
         }
         Ok(())
     });
