@@ -47,11 +47,11 @@ fn parallel_local_step_scaling() -> anyhow::Result<()> {
     for &threads in &[1usize, 2, 4, 8] {
         let (mut algo, mut states) = algos::build(&env, &topo)?;
         // warmup iteration (thread spawn paths, caches)
-        algo.begin_step(0, &env)?;
+        algo.begin_step(&mut states, 0, &env)?;
         std::hint::black_box(algos::local_step_all(&*algo, &mut states, 0, &env, threads)?);
         let t0 = Instant::now();
         for t in 1..=iters {
-            algo.begin_step(t, &env)?;
+            algo.begin_step(&mut states, t, &env)?;
             let losses = algos::local_step_all(&*algo, &mut states, t, &env, threads)?;
             std::hint::black_box(losses);
         }

@@ -1,0 +1,84 @@
+//! Straggler resilience (ISSUE 4): SeedFlood vs the gossip baselines on
+//! the event-driven virtual-time engine, under heterogeneous client
+//! speeds — the regime the lockstep clock cannot even express, and where
+//! related work argues decentralized training is actually decided (From
+//! Promise to Practice, arXiv:2410.11998; Unifying Local Communications
+//! and Local Updates, arXiv:2606.11081).
+//!
+//! Gossip methods mix simultaneous snapshots of every neighbor, so under
+//! `--time-model event` they run through the barrier adapter: results
+//! match lockstep exactly, but every iteration costs the cohort maximum
+//! and the fast clients' waiting shows up as idle fraction. SeedFlood is
+//! fully asynchronous: a client floods its seed the moment its local step
+//! finishes, nobody waits, and slow clients surface as a *staleness
+//! distribution* instead of wasted time.
+//!
+//! Runs entirely on the synthetic backend — no artifacts needed:
+//!
+//!   cargo run --release --example straggler_resilience -- \
+//!       [--clients 16] [--steps 60] [--rates lognormal:0.7]
+//!
+//! Try `--rates stragglers:0.25,4` (a quarter of the fleet 4× slower) or
+//! `--rates jitter:0.6` (per-step stalls — the worst case for barriers:
+//! they pay Σ_t max_i while SeedFlood pays max_i Σ_t).
+
+use seedflood::config::{ExperimentConfig, Method};
+use seedflood::experiments::run_one;
+use seedflood::sched::TimeModel;
+use seedflood::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let clients: usize = args.get_parse("clients", 16)?;
+    let steps: usize = args.get_parse("steps", 60)?;
+    let rates = args.get_or("rates", "lognormal:0.7").to_string();
+    println!(
+        "{clients} clients, {steps} local steps each, event-driven virtual time, \
+         rates {rates} (synthetic backend)"
+    );
+
+    let base = ExperimentConfig {
+        model: "synthetic".into(),
+        task: "sst2".into(),
+        clients,
+        steps,
+        lr: 1e-3,
+        time_model: TimeModel::Event,
+        rates,
+        ..Default::default()
+    };
+
+    println!(
+        "\n{:<12} {:>8} {:>10} {:>12} {:>8} {:>18}",
+        "method", "GMP%", "makespan", "idle%", "policy", "staleness p50/99"
+    );
+    for method in [Method::Dsgd, Method::ChocoSgd, Method::Dzsgd, Method::SeedFlood] {
+        let mut cfg = base.clone();
+        cfg.method = method;
+        if !method.is_zeroth_order() {
+            cfg.lr = base.lr * 10.0; // FO tolerates larger steps (Table 5)
+        }
+        let r = run_one(cfg)?;
+        let policy = if method == Method::SeedFlood { "async" } else { "barrier" };
+        println!(
+            "{:<12} {:>8.2} {:>10.1} {:>12.1} {:>8} {:>15}/{}",
+            r.method,
+            100.0 * r.gmp,
+            r.virtual_makespan,
+            100.0 * r.idle_frac,
+            policy,
+            r.staleness_p50,
+            r.staleness_p99,
+        );
+    }
+
+    println!(
+        "\n(makespan is virtual time in nominal-step units. Barrier methods wait\n\
+         for the slowest client every iteration — identical results to lockstep,\n\
+         paid for in idle time; SeedFlood floods each seed the moment its local\n\
+         step finishes, so heterogeneity becomes bounded staleness instead of\n\
+         waiting. Compare --rates jitter:0.6, where the per-step cohort maximum\n\
+         makes the barrier tax strict.)"
+    );
+    Ok(())
+}

@@ -19,7 +19,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::{init_states, Algorithm, ClientState, Scratch, Space};
+use super::{init_states, Algorithm, ClientState, Scratch, Space, TimePolicy};
 use crate::net::{Network, Payload};
 use crate::sim::Env;
 use crate::tensor::ParamVec;
@@ -173,6 +173,14 @@ impl Algorithm for Choco {
             params.axpy(self.gamma, &delta);
         }
         Ok(())
+    }
+
+    /// Virtual-time hook API (ISSUE 4): the surrogate-tracking consensus
+    /// step needs every neighbor's delta from the *same* round, so Choco
+    /// runs through the lockstep adapter in event mode (identical results
+    /// for any `--rates`; stragglers show up as makespan/idle metrics).
+    fn time_policy(&self) -> TimePolicy {
+        TimePolicy::Barrier
     }
 
     fn eval_gmp(

@@ -7,7 +7,10 @@
 
 use anyhow::Result;
 
-use super::{gossip_mix, init_states, with_client_params, Algorithm, ClientState, Scratch, Space};
+use super::{
+    gossip_mix, init_states, with_client_params, Algorithm, ClientState, Scratch, Space,
+    TimePolicy,
+};
 use crate::net::Network;
 use crate::sim::Env;
 use crate::topology::Topology;
@@ -59,6 +62,16 @@ impl Algorithm for Dsgd {
             with_client_params(states, |ps| gossip_mix(ps, &self.weights, net));
         }
         Ok(())
+    }
+
+    /// Virtual-time hook API (ISSUE 4): dense gossip averages simultaneous
+    /// snapshots of every neighbor, so DSGD runs through the lockstep
+    /// adapter — under `--time-model event` every step still barriers
+    /// (results identical to lockstep for any `--rates`), and the cost of
+    /// requiring that barrier shows up as virtual makespan + idle
+    /// fraction in the `RunRecord`.
+    fn time_policy(&self) -> TimePolicy {
+        TimePolicy::Barrier
     }
 
     fn eval_gmp(

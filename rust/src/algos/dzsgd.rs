@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use super::{
     gossip_mix, init_states, probe_seed, with_client_params, Algorithm, ClientState, Scratch,
-    Space,
+    Space, TimePolicy,
 };
 use crate::net::Network;
 use crate::sim::Env;
@@ -88,6 +88,14 @@ impl Algorithm for Dzsgd {
             with_client_params(states, |ps| gossip_mix(ps, &self.weights, net));
         }
         Ok(())
+    }
+
+    /// Virtual-time hook API (ISSUE 4): the local step is zeroth-order
+    /// but consensus is still dense gossip over simultaneous snapshots,
+    /// so DZSGD barriers like DSGD — exactly the contrast with SeedFlood
+    /// ([`TimePolicy::Async`]) the straggler experiments measure.
+    fn time_policy(&self) -> TimePolicy {
+        TimePolicy::Barrier
     }
 
     fn eval_gmp(

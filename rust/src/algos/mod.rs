@@ -19,6 +19,34 @@
 //!    client order so a parallel run reproduces a sequential run exactly;
 //! 3. [`Algorithm::communicate`] — sequential, deterministic network
 //!    rounds (each algorithm applies its own schedule).
+//!
+//! # The virtual-time hook API (ISSUE 4 tentpole)
+//!
+//! Under `--time-model event` the loop above is replaced by a
+//! discrete-event driver ([`crate::sim::EventDriven`]): clients complete
+//! local steps at virtual times set by a seeded speed model, and
+//! communication is driven off the delivery clock. An algorithm declares
+//! its [`TimePolicy`]:
+//!
+//! * [`TimePolicy::Barrier`] (trait default) — the *lockstep adapter*:
+//!   the driver still synchronizes every step (calling the synchronous
+//!   [`Algorithm::communicate`] at each barrier), and heterogeneous
+//!   speeds only show up as honest timing metrics (virtual makespan, idle
+//!   fraction). DSGD/Choco/DZSGD gossip over dense snapshots of *all*
+//!   clients, so they cannot run barrier-free — this is the measured cost
+//!   of requiring one.
+//! * [`TimePolicy::Async`] — the per-client hooks run instead:
+//!   [`Algorithm::on_step_begin`] (catch up on deliveries before
+//!   probing), [`Algorithm::on_step_complete`] (flood the fresh update
+//!   immediately — no barrier), [`Algorithm::on_send`]/
+//!   [`Algorithm::on_deliver`] (one communication round on the delivery
+//!   clock), [`Algorithm::on_iteration_start`] (nominal schedule clock
+//!   advanced — netcond repair triggers), and [`Algorithm::on_barrier`]
+//!   (all clients completed a step index: settle state for evaluation).
+//!
+//! With uniform rates the event interleaving degenerates to the lockstep
+//! order, and the async hooks reproduce the lockstep trajectory
+//! bit-for-bit (property-tested in rust/tests/properties.rs).
 
 pub mod choco;
 pub mod dsgd;
@@ -109,14 +137,43 @@ impl ClientState {
     }
 }
 
+/// How an algorithm relates to the virtual-time engine (`--time-model
+/// event`): can it act per-client on the delivery clock, or does it need
+/// the step barrier the lockstep loop provided implicitly?
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TimePolicy {
+    /// Synchronize every local step across clients (the lockstep
+    /// adapter): results are identical to `--time-model lockstep` for any
+    /// speed model; heterogeneous rates surface only as virtual-time
+    /// metrics (makespan, idle fraction). The default — dense/sparse
+    /// gossip mixes simultaneous snapshots of all clients and has no
+    /// barrier-free formulation here.
+    #[default]
+    Barrier,
+    /// Fully event-driven: local steps complete at per-client virtual
+    /// times, communication runs off the delivery clock through the
+    /// `on_*` hooks, and no client ever waits for another.
+    Async,
+}
+
 /// One decentralized training method. Implementations must be
 /// `Send + Sync`: during the local phase the same `&self` is shared by all
 /// worker threads (interior mutability only for thread-safe telemetry like
 /// [`crate::util::timer::SharedClock`]).
 pub trait Algorithm: Send + Sync {
     /// Sequential pre-iteration hook — the only place shared state may be
-    /// mutated (e.g. SeedFlood's τ-periodic subspace refresh).
-    fn begin_step(&mut self, _step: usize, _env: &Env) -> Result<()> {
+    /// mutated (e.g. SeedFlood's τ-periodic subspace refresh). Receives
+    /// the client states because shared-state changes can require settling
+    /// per-client pending state first: coefficient accumulators are
+    /// basis-relative, and under the event engine stragglers may still
+    /// hold coefficients when the fastest client crosses a refresh
+    /// boundary (a no-op in lockstep, where every iteration flushes).
+    fn begin_step(
+        &mut self,
+        _states: &mut [ClientState],
+        _step: usize,
+        _env: &Env,
+    ) -> Result<()> {
         Ok(())
     }
 
@@ -140,6 +197,101 @@ pub trait Algorithm: Send + Sync {
         env: &Env,
         net: &mut Network,
     ) -> Result<()>;
+
+    // --- virtual-time hooks (ISSUE 4; only called by the event driver) ---
+
+    /// Whether this method runs barrier-free in event mode (see
+    /// [`TimePolicy`]). Default: the lockstep adapter.
+    fn time_policy(&self) -> TimePolicy {
+        TimePolicy::Barrier
+    }
+
+    /// Async mode: the nominal schedule clock advanced to iteration
+    /// `step` ([`Network::set_step`] was just called) — arm netcond
+    /// repair triggers etc. Sequential.
+    fn on_iteration_start(
+        &mut self,
+        _states: &mut [ClientState],
+        _step: usize,
+        _env: &Env,
+        _net: &mut Network,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Async mode: `client` is about to run local step `step` — catch up
+    /// on everything delivered since its last step (e.g. flush a pending
+    /// coefficient accumulator so the probe sees current params). Must be
+    /// a no-op when nothing was delivered in between.
+    fn on_step_begin(
+        &mut self,
+        _state: &mut ClientState,
+        _client: usize,
+        _step: usize,
+        _env: &Env,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Async mode: `client` just finished local step `step` — transmit
+    /// immediately instead of waiting for a barrier (SeedFlood floods the
+    /// freshly injected seed here). Only called for online clients.
+    fn on_step_complete(
+        &mut self,
+        _state: &mut ClientState,
+        _client: usize,
+        _step: usize,
+        _env: &Env,
+        _net: &mut Network,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Async mode, send half of one delivery-clock round: forward
+    /// anything queued (outbox, armed repair traffic). Only called for
+    /// online clients. The driver advances the delivery clock with
+    /// virtual time *before* processing any event at an instant, so
+    /// sends here and in [`Self::on_step_complete`] stamp the same round
+    /// — netcond `delay=K` costs K rounds on every hop, as in lockstep.
+    fn on_send(
+        &mut self,
+        _state: &mut ClientState,
+        _client: usize,
+        _env: &Env,
+        _net: &mut Network,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Async mode, receive half of one delivery-clock round: drain due
+    /// messages for `client` and apply them (`step` is the nominal
+    /// iteration, for staleness accounting). Only called for online
+    /// clients, after every client's send half.
+    fn on_deliver(
+        &mut self,
+        _state: &mut ClientState,
+        _client: usize,
+        _step: usize,
+        _env: &Env,
+        _net: &mut Network,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Event mode: every client has completed local step `step` — settle
+    /// state so evaluation sees comparable models. The default is the
+    /// lockstep adapter: run the synchronous [`Self::communicate`]
+    /// (barrier methods gossip here); async methods override to flush
+    /// per-client accumulators instead.
+    fn on_barrier(
+        &mut self,
+        states: &mut [ClientState],
+        step: usize,
+        env: &Env,
+        net: &mut Network,
+    ) -> Result<()> {
+        self.communicate(states, step, env, net)
+    }
 
     /// Global Model Performance: evaluate the *average* of client models
     /// (paper §4.1 metric) on the given batches → (loss, accuracy).

@@ -30,13 +30,20 @@
 //! with bounded staleness.
 //! Caveat: the staleness bound must stay well below the basis-refresh
 //! period τ — a message applied after a refresh reconstructs its probe in
-//! the *new* basis (documented approximation, same as delayed flooding).
+//! the *new* basis (documented approximation, same as delayed flooding
+//! §4.5). Under the event engine this includes heterogeneous-rate lag:
+//! `begin_step` settles every *accumulated* coefficient before a refresh,
+//! but a message still in flight (or a straggler lagging the nominal
+//! clock by ≳ τ) crosses the boundary and reconstructs in the new basis.
+//! The run reports `staleness_p50/p90/p99` exactly so this is checkable:
+//! keep τ ≫ `staleness_p99`. Epoch-stamped messages that make the caveat
+//! structural are a ROADMAP item.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{init_states, probe_seed, Algorithm, ClientState, Scratch, Space};
+use super::{init_states, probe_seed, Algorithm, ClientState, Scratch, Space, TimePolicy};
 use crate::flood::{self, FloodState, RepairMode, WireFormat};
 use crate::net::{MsgId, Network, SeedUpdate};
 use crate::sim::Env;
@@ -112,18 +119,63 @@ impl SeedFlood {
         };
         Ok((Box::new(algo), states))
     }
+
+    /// Flush one client's accumulated coefficients through the batched
+    /// kernel — a strict no-op (not even a device-cache build) when
+    /// nothing is pending. The single flush body behind every path that
+    /// applies coefficients ([`Self::flush_all`], the event engine's
+    /// per-client catch-up in `on_step_begin`, the pre-refresh settle in
+    /// `begin_step`), so all of them perform identical float operations.
+    fn flush_one(&mut self, state: &mut ClientState, env: &Env) -> Result<()> {
+        let pending = match &state.scratch {
+            Scratch::Flood { accum, .. } => accum.pending,
+            _ => 0,
+        };
+        if pending == 0 {
+            return Ok(());
+        }
+        if self.use_artifact && self.device_cache.is_none() {
+            self.device_cache = env.make_device_cache(&self.basis)?;
+        }
+        let t0 = Instant::now();
+        let (params, accum) = state.accum_parts();
+        if self.use_artifact {
+            env.subcge_flush(&self.basis, accum, params, self.device_cache.as_mut())?;
+        } else {
+            accum.flush_rust(&self.basis, params);
+        }
+        self.clock.add("MA", t0.elapsed());
+        Ok(())
+    }
+
+    /// [`Self::flush_one`] over every client — the tail of every lockstep
+    /// iteration and the event driver's barrier settle
+    /// ([`Algorithm::on_barrier`]).
+    fn flush_all(&mut self, states: &mut [ClientState], env: &Env) -> Result<()> {
+        for st in states.iter_mut() {
+            self.flush_one(st, env)?;
+        }
+        Ok(())
+    }
 }
 
 impl Algorithm for SeedFlood {
-    fn begin_step(&mut self, step: usize, _env: &Env) -> Result<()> {
+    fn begin_step(&mut self, states: &mut [ClientState], step: usize, env: &Env) -> Result<()> {
         // (A) subspace refresh — sequential, before the local-step fan-out,
-        // so all clients see the same basis this iteration. Pending
-        // accumulators are empty across a basis change; they are —
-        // communicate() flushes every iteration.
-        if step > 0 && self.basis.maybe_refresh(step) {
-            // device copies are stale; DeviceBasisCache::sync would catch
-            // the epoch bump too, dropping keeps the invariant obvious
-            self.device_cache = None;
+        // so all clients see the same basis this iteration. Accumulated
+        // coefficients are basis-relative, so any pending ones must be
+        // applied before the basis changes: a strict no-op in lockstep
+        // (communicate() flushes every iteration), but under the event
+        // engine stragglers can hold deliveries accumulated against the
+        // old basis when the fastest client crosses a refresh boundary.
+        if step > 0 && self.basis.refresh_due(step) {
+            self.flush_all(states, env)?;
+            if self.basis.maybe_refresh(step) {
+                // device copies are stale; DeviceBasisCache::sync would
+                // catch the epoch bump too, dropping keeps the invariant
+                // obvious
+                self.device_cache = None;
+            }
         }
         Ok(())
     }
@@ -224,20 +276,115 @@ impl Algorithm for SeedFlood {
             },
         );
         // apply the batched update through the pallas artifact (Eq. 10)
-        if self.use_artifact && self.device_cache.is_none() {
-            self.device_cache = env.make_device_cache(&self.basis)?;
-        }
-        for st in states.iter_mut() {
-            let t0 = Instant::now();
-            let (params, accum) = st.accum_parts();
-            if self.use_artifact {
-                env.subcge_flush(&self.basis, accum, params, self.device_cache.as_mut())?;
-            } else {
-                accum.flush_rust(&self.basis, params);
+        self.flush_all(states, env)
+    }
+
+    // --- virtual-time hooks (ISSUE 4): flooding is fully asynchronous ---
+    //
+    // The seed–scalar protocol never needs a step barrier: a client
+    // floods the moment its local step finishes, forwards at every
+    // delivery-clock round, and folds received messages into its O(1)
+    // coefficient accumulator whenever they arrive. With uniform rates
+    // the event interleaving degenerates to the lockstep order (inject
+    // sends == the first round's sends, barrier flush == the iteration
+    // flush), which is why `--time-model event --rates uniform`
+    // reproduces the lockstep trajectory bit-for-bit.
+
+    fn time_policy(&self) -> TimePolicy {
+        TimePolicy::Async
+    }
+
+    fn on_iteration_start(
+        &mut self,
+        states: &mut [ClientState],
+        _step: usize,
+        _env: &Env,
+        net: &mut Network,
+    ) -> Result<()> {
+        // netcond repair triggers, re-keyed to the nominal iteration
+        // clock — the same arming loop communicate() runs in lockstep
+        for (i, st) in states.iter_mut().enumerate() {
+            if net.should_repair(i) {
+                st.flood_parts().2.repair();
             }
-            self.clock.add("MA", t0.elapsed());
         }
         Ok(())
+    }
+
+    fn on_step_begin(
+        &mut self,
+        state: &mut ClientState,
+        _client: usize,
+        _step: usize,
+        env: &Env,
+    ) -> Result<()> {
+        // catch-up flush: a straggler (or a fast client racing ahead)
+        // applies everything delivered since its last flush, so the SPSA
+        // probe sees current params. Pending is zero whenever the last
+        // barrier flush already caught up — then this is a strict no-op,
+        // preserving the uniform-rate reduction contract.
+        self.flush_one(state, env)
+    }
+
+    fn on_step_complete(
+        &mut self,
+        state: &mut ClientState,
+        client: usize,
+        _step: usize,
+        _env: &Env,
+        net: &mut Network,
+    ) -> Result<()> {
+        // flood the freshly injected seed now — no barrier; this send is
+        // the event-time equivalent of the first lockstep round's send
+        state.flood_parts().2.send_round(client, net);
+        Ok(())
+    }
+
+    fn on_send(
+        &mut self,
+        state: &mut ClientState,
+        client: usize,
+        _env: &Env,
+        net: &mut Network,
+    ) -> Result<()> {
+        state.flood_parts().2.send_round(client, net);
+        Ok(())
+    }
+
+    fn on_deliver(
+        &mut self,
+        state: &mut ClientState,
+        client: usize,
+        step: usize,
+        _env: &Env,
+        net: &mut Network,
+    ) -> Result<()> {
+        let basis = &self.basis;
+        let (_, accum, flood) = state.flood_parts();
+        let fresh = flood.collect(client, net);
+        if fresh.is_empty() {
+            return Ok(());
+        }
+        flood.note_staleness(step, &fresh);
+        let t0 = Instant::now();
+        for m in &fresh {
+            accum.accumulate(basis, m);
+        }
+        self.clock.add("MA", t0.elapsed());
+        Ok(())
+    }
+
+    fn on_barrier(
+        &mut self,
+        states: &mut [ClientState],
+        _step: usize,
+        env: &Env,
+        _net: &mut Network,
+    ) -> Result<()> {
+        // all clients completed this step index: flush so evaluation sees
+        // settled params — the event-time position of the lockstep
+        // iteration flush. No communication happens here.
+        self.flush_all(states, env)
     }
 
     fn eval_gmp(

@@ -11,7 +11,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{init_states, probe_seed, Algorithm, ClientState, Scratch, Space};
+use super::{init_states, probe_seed, Algorithm, ClientState, Scratch, Space, TimePolicy};
 use crate::net::{MsgId, Network, SeedUpdate};
 use crate::sim::Env;
 use crate::subcge::{CoeffAccum, SubspaceBasis};
@@ -50,7 +50,14 @@ impl SingleZo {
 }
 
 impl Algorithm for SingleZo {
-    fn begin_step(&mut self, step: usize, _env: &Env) -> Result<()> {
+    /// No pre-refresh settle needed: `local_step` flushes its accumulator
+    /// inline, so nothing basis-relative is ever pending between steps.
+    fn begin_step(
+        &mut self,
+        _states: &mut [ClientState],
+        step: usize,
+        _env: &Env,
+    ) -> Result<()> {
         if let Some(b) = &mut self.basis {
             if step > 0 {
                 b.maybe_refresh(step);
@@ -123,6 +130,14 @@ impl Algorithm for SingleZo {
         _net: &mut Network,
     ) -> Result<()> {
         Ok(())
+    }
+
+    /// Virtual-time hook API (ISSUE 4): a single client never waits for
+    /// anyone — event mode is just the lockstep sequence with timestamps.
+    /// All `on_*` hooks keep their no-op defaults (updates are applied
+    /// inside `local_step`; there is nothing to flood or flush).
+    fn time_policy(&self) -> TimePolicy {
+        TimePolicy::Async
     }
 
     fn eval_gmp(

@@ -8,6 +8,7 @@ pub mod toml;
 use anyhow::{bail, Result};
 
 use crate::flood::RepairMode;
+use crate::sched::{RateSpec, TimeModel};
 use crate::topology::Kind;
 use crate::util::cli::Args;
 
@@ -130,6 +131,18 @@ pub struct ExperimentConfig {
     /// 0 = all cores). Never changes results: a parallel run reproduces the
     /// sequential `RunRecord` exactly (tests/engine.rs).
     pub threads: usize,
+    /// which execution engine drives the loop (`--time-model`): `lockstep`
+    /// (default, the historical shared-step loop) or `event` (discrete-
+    /// event virtual time — heterogeneous client speeds, asynchronous
+    /// flooding). `event` with uniform rates reproduces lockstep results
+    /// bit-for-bit (rust/tests/properties.rs)
+    pub time_model: TimeModel,
+    /// seeded client speed model for event mode (`--rates`): `uniform`,
+    /// `lognormal:<sigma>`, `stragglers:<frac>,<slowdown>`, or
+    /// `jitter:<sigma>` (per-step duration noise). Non-uniform rates
+    /// require `time_model = event` — the lockstep clock cannot represent
+    /// them ([`ExperimentConfig::validate`])
+    pub rates: String,
 }
 
 impl Default for ExperimentConfig {
@@ -162,6 +175,8 @@ impl Default for ExperimentConfig {
             flood_retain: 4096,
             repair_mode: RepairMode::Gap,
             threads: 1,
+            time_model: TimeModel::Lockstep,
+            rates: "uniform".into(),
         }
     }
 }
@@ -209,7 +224,32 @@ impl ExperimentConfig {
             };
         }
         c.threads = args.get_parse("threads", c.threads)?;
+        if let Some(t) = args.get("time-model") {
+            c.time_model = match TimeModel::parse(t) {
+                Some(t) => t,
+                None => bail!("unknown time model {t:?} (have lockstep, event)"),
+            };
+        }
+        c.rates = args.get_or("rates", &c.rates).to_string();
+        c.validate()?;
         Ok(c)
+    }
+
+    /// Cross-field validation shared by every config source (CLI, TOML,
+    /// programmatic): the rate spec must parse, and non-uniform rates
+    /// require the event engine — the lockstep clock has no notion of a
+    /// client taking longer than a step. Also called by the simulator
+    /// before a run, so TOML- and struct-built configs are covered.
+    pub fn validate(&self) -> Result<()> {
+        let spec = RateSpec::parse(&self.rates)?;
+        if self.time_model == TimeModel::Lockstep && !spec.is_uniform() {
+            bail!(
+                "rates {:?} require --time-model event (lockstep has no \
+                 heterogeneous-speed clock)",
+                self.rates
+            );
+        }
+        Ok(())
     }
 
     /// Apply a parsed TOML table section (`key = value` pairs).
@@ -251,6 +291,11 @@ impl ExperimentConfig {
                         .ok_or_else(|| anyhow::anyhow!("unknown repair mode"))?
                 }
                 "threads" => self.threads = v.as_int()? as usize,
+                "time_model" => {
+                    self.time_model = TimeModel::parse(v.as_str()?)
+                        .ok_or_else(|| anyhow::anyhow!("unknown time model"))?
+                }
+                "rates" => self.rates = v.as_str()?.to_string(),
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -323,6 +368,56 @@ mod tests {
             &[],
         );
         assert!(ExperimentConfig::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn time_model_knobs_parse_and_validate() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.time_model, TimeModel::Lockstep);
+        assert_eq!(d.rates, "uniform");
+        d.validate().unwrap();
+        let args = Args::parse(
+            ["--time-model", "event", "--rates", "stragglers:0.25,4"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        let c = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(c.time_model, TimeModel::Event);
+        assert_eq!(c.rates, "stragglers:0.25,4");
+        // non-uniform rates on the lockstep clock are a config error
+        let bad = Args::parse(
+            ["--rates", "lognormal:0.5"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        assert!(ExperimentConfig::from_args(&bad).is_err());
+        // as is an unparseable spec or an unknown time model
+        let bad = Args::parse(
+            ["--time-model", "event", "--rates", "warp:9"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        );
+        assert!(ExperimentConfig::from_args(&bad).is_err());
+        let bad = Args::parse(
+            ["--time-model", "sometimes"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        assert!(ExperimentConfig::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn time_model_toml_keys() {
+        let parsed = toml::parse("time_model = \"event\"\nrates = \"lognormal:0.5\"\n").unwrap();
+        let mut c = ExperimentConfig::default();
+        c.apply_toml(&parsed.root).unwrap();
+        assert_eq!(c.time_model, TimeModel::Event);
+        assert_eq!(c.rates, "lognormal:0.5");
+        c.validate().unwrap();
+        // TOML can set fields independently; the simulator's validate()
+        // catches an inconsistent combination
+        c.time_model = TimeModel::Lockstep;
+        assert!(c.validate().is_err());
     }
 
     #[test]

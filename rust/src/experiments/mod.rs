@@ -524,6 +524,35 @@ pub fn report(paths: &[String]) -> Result<()> {
                         .get("flood_retained")
                         .and_then(|v| v.as_f64())
                         .unwrap_or(0.0) as u64,
+                    // time-model fields are optional too: records saved
+                    // before ISSUE 4 are implicitly lockstep runs
+                    time_model: r
+                        .get("time_model")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("lockstep")
+                        .to_string(),
+                    rates: r
+                        .get("rates")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("uniform")
+                        .to_string(),
+                    virtual_makespan: r
+                        .get("virtual_makespan")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0),
+                    idle_frac: r.get("idle_frac").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    staleness_p50: r
+                        .get("staleness_p50")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0),
+                    staleness_p90: r
+                        .get("staleness_p90")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0),
+                    staleness_p99: r
+                        .get("staleness_p99")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0),
                     ..Default::default()
                 })
             })

@@ -328,9 +328,20 @@ pub struct FloodState {
     /// worst (apply iteration − origin iteration) observed, recorded via
     /// [`Self::note_staleness`] — 0 on a reliable full-depth flood
     pub max_staleness: u64,
+    /// staleness histogram: `stale_hist[s]` counts messages applied `s`
+    /// iterations after their origin iteration (clamped to
+    /// [`STALE_BUCKETS`] − 1). Feeds the per-run staleness percentiles
+    /// (`RunRecord::staleness_p50/p90/p99`) — the distribution the
+    /// straggler experiments report, not just the worst case
+    pub stale_hist: Vec<u64>,
     /// wire encoding used by send_round
     pub wire: WireFormat,
 }
+
+/// Histogram resolution for [`FloodState::stale_hist`]: staleness values
+/// at or above this clamp into the last bucket (percentiles saturate
+/// there; `max_staleness` stays exact).
+pub const STALE_BUCKETS: usize = 1024;
 
 impl FloodState {
     pub fn new() -> Self {
@@ -400,9 +411,13 @@ impl FloodState {
     /// iteration; delayed flooding bounds this by ⌈D/k⌉, and netcond
     /// faults stretch it up to the repair latency.
     pub fn note_staleness(&mut self, step: usize, fresh: &[SeedUpdate]) {
+        if self.stale_hist.is_empty() && !fresh.is_empty() {
+            self.stale_hist = vec![0; STALE_BUCKETS];
+        }
         for m in fresh {
             let stale = (step as u64).saturating_sub(m.id.step as u64);
             self.max_staleness = self.max_staleness.max(stale);
+            self.stale_hist[(stale as usize).min(STALE_BUCKETS - 1)] += 1;
         }
     }
 
@@ -941,6 +956,15 @@ mod tests {
         // a message applied "before" its origin step never underflows
         st.note_staleness(0, &[msg(3, 9)]);
         assert_eq!(st.max_staleness, 6);
+        // the histogram records the full distribution, not just the max
+        assert_eq!(st.stale_hist[0], 2); // staleness 0: (1,5)@5 and (3,9)@0
+        assert_eq!(st.stale_hist[2], 1);
+        assert_eq!(st.stale_hist[6], 1);
+        assert_eq!(st.stale_hist.iter().sum::<u64>(), 4);
+        // extreme staleness clamps into the last bucket
+        st.note_staleness(5000, &[msg(4, 0)]);
+        assert_eq!(st.stale_hist[STALE_BUCKETS - 1], 1);
+        assert_eq!(st.max_staleness, 5000, "max stays exact beyond the clamp");
     }
 
     #[test]

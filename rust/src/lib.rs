@@ -11,7 +11,11 @@
 //!   consensus primitive ([`flood`]), the SubCGE subspace state
 //!   ([`subcge`]), zeroth-order estimation ([`zo`]), and all paper
 //!   baselines (DSGD, ChocoSGD, DZSGD, LoRA variants) behind one
-//!   [`algos::Algorithm`] trait, driven by the [`sim`] experiment runner.
+//!   [`algos::Algorithm`] trait, driven by the [`sim`] experiment runner
+//!   under either execution engine ([`sim::Driver`]): the lockstep
+//!   shared-step loop or the event-driven virtual-time engine
+//!   ([`sched`], `--time-model event` — heterogeneous client speeds,
+//!   asynchronous flooding).
 //! * **L2** — a jax transformer LM (`python/compile/model.py`), AOT-lowered
 //!   to HLO text artifacts loaded by [`runtime`] through PJRT.
 //! * **L1** — pallas kernels (`python/compile/kernels/`): the SubCGE
@@ -62,6 +66,7 @@ pub mod netcond;
 pub mod oracle;
 pub mod rng;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod subcge;
 pub mod tensor;

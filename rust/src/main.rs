@@ -106,6 +106,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         human_bytes(record.per_edge_bytes as u64),
         record.wall_secs
     );
+    if record.time_model == "event" {
+        println!(
+            "virtual time ({}): makespan {:.1} steps | idle {:.1}% | \
+             staleness p50/p90/p99 {}/{}/{} iter",
+            record.rates,
+            record.virtual_makespan,
+            100.0 * record.idle_frac,
+            record.staleness_p50,
+            record.staleness_p90,
+            record.staleness_p99,
+        );
+    }
     if !record.netcond.is_empty() {
         println!(
             "netcond {}: delivery {:.1}% | dropped {} | flood duplicates {} | \
@@ -195,6 +207,13 @@ train        --method <dsgd|choco|dsgd-lora|choco-lora|dzsgd|dzsgd-lora|seedfloo
              full re-flood; default gap)
              --flood-retain N (repair-window capacity per client; 0 keeps
              everything — required for reflood; default 4096)
+             --time-model <lockstep|event> (execution engine: the default
+             shared-step loop, or discrete-event virtual time — per-client
+             compute speeds, asynchronous flooding; `event` with uniform
+             rates reproduces lockstep bit-for-bit)
+             --rates SPEC (event-mode client speed model:
+             uniform | lognormal:<sigma> | stragglers:<frac>,<slowdown> |
+             jitter:<sigma>; default uniform)
              [--out results/run.json]
 experiment   <fig1|fig3|table8|scaling|fig4|table2|table3|fig6|fig7|churn>
              [--tasks a,b] [--scenarios lossy-ring,flaky-torus,churn-er]

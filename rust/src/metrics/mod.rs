@@ -61,9 +61,53 @@ pub struct RunRecord {
     /// repair-window entries + out-of-order dedup tail entries — the
     /// O(n + window) bound (SeedFlood only)
     pub flood_retained: u64,
+    /// which execution engine drove the loop: "lockstep" or "event"
+    pub time_model: String,
+    /// the client speed-model spec ("uniform" on the lockstep clock)
+    pub rates: String,
+    /// total virtual time of the run in nominal-step units (event mode;
+    /// 0.0 under lockstep, which has no clock). For barrier methods this
+    /// is Σ_t max_i dur, for async methods max_i Σ_t dur — the straggler
+    /// tax is exactly the gap between the two
+    pub virtual_makespan: f64,
+    /// fraction of aggregate client-time not spent computing
+    /// (1 − Σ compute / (n · makespan)): barrier waiting plus end-of-run
+    /// tail idling. 0.0 under lockstep and under uniform rates
+    pub idle_frac: f64,
+    /// local steps completed per client (event mode; equal to `steps` for
+    /// every client today — the field exists so late-joiner/participation
+    /// churn runs can report partial progress)
+    pub client_steps: Vec<u64>,
+    /// staleness distribution percentiles over every applied flooded
+    /// message (apply iteration − origin iteration; SeedFlood only).
+    /// Under lockstep these accompany `max_staleness`; under `stragglers`
+    /// rates they are the headline robustness metric
+    pub staleness_p50: f64,
+    pub staleness_p90: f64,
+    pub staleness_p99: f64,
     pub wall_secs: f64,
     /// phase name -> total ms (Table 4 breakdown)
     pub phase_ms: Vec<(String, f64)>,
+}
+
+/// Exact percentile of a histogram of integer-valued samples
+/// (`hist[v]` = count of samples with value `v`): the smallest value at
+/// or below which at least `p`% of the mass lies. 0.0 on an empty
+/// histogram.
+pub fn hist_percentile(hist: &[u64], p: f64) -> f64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let target = (p / 100.0 * total as f64).ceil().max(1.0) as u64;
+    let mut seen = 0u64;
+    for (v, &c) in hist.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return v as f64;
+        }
+    }
+    (hist.len() - 1) as f64
 }
 
 impl RunRecord {
@@ -88,6 +132,17 @@ impl RunRecord {
             ("repair_messages", Json::num(self.repair_messages as f64)),
             ("repair_gap_misses", Json::num(self.repair_gap_misses as f64)),
             ("flood_retained", Json::num(self.flood_retained as f64)),
+            ("time_model", Json::str(&self.time_model)),
+            ("rates", Json::str(&self.rates)),
+            ("virtual_makespan", Json::num(self.virtual_makespan)),
+            ("idle_frac", Json::num(self.idle_frac)),
+            (
+                "client_steps",
+                Json::Arr(self.client_steps.iter().map(|&s| Json::num(s as f64)).collect()),
+            ),
+            ("staleness_p50", Json::num(self.staleness_p50)),
+            ("staleness_p90", Json::num(self.staleness_p90)),
+            ("staleness_p99", Json::num(self.staleness_p99)),
             ("wall_secs", Json::num(self.wall_secs)),
             ("train_losses", Json::arr_f64(&self.train_losses)),
             (
@@ -148,6 +203,13 @@ mod tests {
             max_staleness: 3,
             repair_bytes: 1234,
             flood_retained: 96,
+            time_model: "event".into(),
+            rates: "stragglers:0.25,4".into(),
+            virtual_makespan: 481.5,
+            idle_frac: 0.32,
+            client_steps: vec![120, 120, 30],
+            staleness_p50: 1.0,
+            staleness_p99: 17.0,
             ..Default::default()
         };
         r.evals.push(EvalPoint {
@@ -168,6 +230,12 @@ mod tests {
         assert_eq!(back.get("max_staleness").unwrap().as_f64().unwrap(), 3.0);
         assert_eq!(back.get("repair_bytes").unwrap().as_f64().unwrap(), 1234.0);
         assert_eq!(back.get("flood_retained").unwrap().as_f64().unwrap(), 96.0);
+        assert_eq!(back.get("time_model").unwrap().as_str().unwrap(), "event");
+        assert_eq!(back.get("rates").unwrap().as_str().unwrap(), "stragglers:0.25,4");
+        assert_eq!(back.get("virtual_makespan").unwrap().as_f64().unwrap(), 481.5);
+        assert_eq!(back.get("idle_frac").unwrap().as_f64().unwrap(), 0.32);
+        assert_eq!(back.get("client_steps").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(back.get("staleness_p99").unwrap().as_f64().unwrap(), 17.0);
         assert_eq!(
             back.get("evals").unwrap().as_arr().unwrap()[0]
                 .get("accuracy")
@@ -176,5 +244,22 @@ mod tests {
                 .unwrap(),
             0.8
         );
+    }
+
+    #[test]
+    fn hist_percentile_exact_on_integer_buckets() {
+        // 10 samples: value 0 ×5, value 2 ×4, value 7 ×1
+        let mut hist = vec![0u64; 8];
+        hist[0] = 5;
+        hist[2] = 4;
+        hist[7] = 1;
+        assert_eq!(hist_percentile(&hist, 50.0), 0.0);
+        assert_eq!(hist_percentile(&hist, 90.0), 2.0);
+        assert_eq!(hist_percentile(&hist, 99.0), 7.0);
+        assert_eq!(hist_percentile(&hist, 100.0), 7.0);
+        assert_eq!(hist_percentile(&[], 50.0), 0.0);
+        assert_eq!(hist_percentile(&[0, 0], 50.0), 0.0);
+        // a single sample is every percentile
+        assert_eq!(hist_percentile(&[0, 0, 0, 1], 1.0), 3.0);
     }
 }

@@ -29,6 +29,14 @@
 //! triggers) and [`Network::tick`] advances the *delivery* clock
 //! (communication rounds — delay queues).
 //!
+//! Who drives those clocks is the execution engine's choice
+//! ([`crate::sim::Driver`]): the lockstep loop advances the schedule once
+//! per shared iteration and ticks `k` rounds inside each `communicate`;
+//! the event-driven engine (`--time-model event`) re-keys both to virtual
+//! time — one tick every [`crate::sched::TICKS_PER_ROUND`] virtual ticks
+//! and one schedule step per *nominal* iteration — so `delay` keeps its
+//! round unit and down-windows their iteration unit under either engine.
+//!
 //! ```
 //! use seedflood::net::{MsgId, Network, Payload, SeedUpdate};
 //! use seedflood::topology::Topology;
@@ -260,6 +268,8 @@ pub struct Network {
     pub acct: Accounting,
     /// delivery clock, in communication rounds (see [`Self::tick`])
     now: u64,
+    /// messages currently queued on some edge (see [`Self::in_flight`])
+    in_flight: usize,
     /// fault injection, absent by default (see [`Self::install`])
     cond: Option<CondState>,
 }
@@ -288,6 +298,7 @@ impl Network {
                 ..Default::default()
             },
             now: 0,
+            in_flight: 0,
             cond: None,
             topo,
         }
@@ -367,6 +378,7 @@ impl Network {
         for (eid, down) in c.link_down.iter().enumerate() {
             if *down && !self.queues[eid].is_empty() {
                 self.acct.dropped_messages += self.queues[eid].len() as u64;
+                self.in_flight -= self.queues[eid].len();
                 self.queues[eid].clear();
             }
         }
@@ -391,6 +403,13 @@ impl Network {
     /// messages become receivable once the clock passes their arrival).
     pub fn tick(&mut self) {
         self.now += 1;
+    }
+
+    /// Current delivery-clock round (number of [`Self::tick`]s so far) —
+    /// diagnostic only; delivery decisions always compare against the
+    /// live clock inside [`Self::recv_all`].
+    pub fn now(&self) -> u64 {
+        self.now
     }
 
     /// Whether client `i` is currently online (always true without a
@@ -469,6 +488,7 @@ impl Network {
             }
             None => self.now,
         };
+        self.in_flight += 1;
         self.queues[eid].push_back((deliver_at, Message { from: src, payload }));
     }
 
@@ -504,7 +524,15 @@ impl Network {
             }
         }
         self.acct.delivered_messages += out.len() as u64;
+        self.in_flight -= out.len();
         out
+    }
+
+    /// Messages currently queued on some edge (delayed, or buffered for a
+    /// churned-out receiver). The event driver uses this to prove a
+    /// delivery round cannot do anything and skip its scans.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
     }
 
     /// Paper convention: "total transmitted volume over the training per
@@ -804,10 +832,36 @@ mod tests {
         net.install(&NetCond { delay: 2, ..Default::default() }).unwrap();
         net.send(0, 1, seed_payload(1));
         assert!(net.recv_all(1).is_empty());
+        assert_eq!(net.in_flight(), 1, "delayed message is in flight");
         net.tick();
         assert!(net.recv_all(1).is_empty());
         net.tick();
         assert_eq!(net.recv_all(1).len(), 1);
+        assert_eq!(net.in_flight(), 0, "delivery must drain the in-flight count");
+    }
+
+    #[test]
+    fn in_flight_tracks_queues_through_drops_and_purges() {
+        let mut net = Network::new(Topology::ring(4));
+        assert_eq!(net.in_flight(), 0);
+        net.send(0, 1, seed_payload(1));
+        assert_eq!(net.in_flight(), 1);
+        net.recv_all(1);
+        assert_eq!(net.in_flight(), 0);
+        // a loss-dropped send never enters a queue
+        net.install(&NetCond {
+            delay: 1,
+            events: vec![Event::Link { a: 0, b: 1, from: 1, until: 2 }],
+            ..Default::default()
+        })
+        .unwrap();
+        net.set_step(0);
+        net.send(0, 1, seed_payload(1)); // queued, due next round
+        assert_eq!(net.in_flight(), 1);
+        net.set_step(1); // link cut: the in-flight message is purged
+        assert_eq!(net.in_flight(), 0);
+        net.send(0, 1, seed_payload(1)); // down link: dropped at send
+        assert_eq!(net.in_flight(), 0);
     }
 
     #[test]

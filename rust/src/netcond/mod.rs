@@ -65,7 +65,10 @@ pub const DEFAULT_FAULT_SEED: u64 = 0xFA_01_17;
 
 /// One scheduled connectivity event. Windows are half-open iteration
 /// ranges `[from, until)` on the simulation's step clock
-/// ([`crate::net::Network::set_step`]).
+/// ([`crate::net::Network::set_step`]) — under the event-driven engine
+/// (`--time-model event`) that clock is the *nominal* iteration (virtual
+/// time in nominal-step units), so the same scenario spec stresses both
+/// engines at the same point of training.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Event {
     /// Undirected link `a`–`b` drops all traffic during the window.

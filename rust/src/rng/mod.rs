@@ -8,6 +8,21 @@
 //! message reconstructs bit-identically everywhere — the shared-randomness
 //! assumption holds by construction.
 
+/// Mix a seed with an index through the splitmix64 finalizer: a stateless
+/// avalanche in which every input bit flips each output bit with
+/// probability ~1/2. Use this to derive per-entity seeds (per-client
+/// samplers, per-(client, step) jitter draws) — unlike an xor of the raw
+/// index, adjacent indices yield uncorrelated streams.
+#[inline]
+pub fn mix(seed: u64, index: u64) -> u64 {
+    let mut z = seed
+        .wrapping_add(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(index.wrapping_mul(0xA076_1D64_78BD_642F));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// Splitmix64 PRNG. Small state, splittable by construction (`fold_in`),
 /// passes BigCrush on its output function; exactly reproducible across
 /// clients/platforms (pure integer arithmetic).
@@ -177,6 +192,24 @@ mod tests {
             seen[v] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn mix_avalanches_adjacent_indices() {
+        // regression for the sampler-seed fix: seed ^ i gives adjacent
+        // clients streams differing in one bit; mix must decorrelate them
+        let mut outs = std::collections::HashSet::new();
+        for i in 0..256u64 {
+            let m = mix(7, i);
+            assert!(outs.insert(m), "collision at index {i}");
+            // adjacent indices differ in roughly half the output bits
+            // (5σ band around 32 — xor-of-index schemes flip 1 bit)
+            let dist = (m ^ mix(7, i + 1)).count_ones();
+            assert!((12..=52).contains(&dist), "index {i}: hamming {dist}");
+        }
+        // deterministic, and seed-sensitive
+        assert_eq!(mix(7, 3), mix(7, 3));
+        assert_ne!(mix(7, 3), mix(8, 3));
     }
 
     #[test]

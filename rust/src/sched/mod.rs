@@ -1,0 +1,437 @@
+//! Deterministic discrete-event scheduling for the virtual-time execution
+//! engine (ISSUE 4 tentpole).
+//!
+//! The lockstep simulator advances one *shared* step index: every client
+//! computes at the same speed and communication happens at a global
+//! barrier. That hides exactly the straggler/asynchrony regime where
+//! decentralized methods are argued to win. This module provides the
+//! primitives the event-driven driver ([`crate::sim`], `--time-model
+//! event`) is built on:
+//!
+//! * a **virtual clock** in integer ticks ([`TICKS_PER_ROUND`] ticks per
+//!   communication round, `flood_steps × TICKS_PER_ROUND` per nominal
+//!   local step), so all scheduling is pure integer arithmetic and runs
+//!   are bit-for-bit reproducible;
+//! * a **deterministic event queue** ([`EventQueue`]): a binary heap
+//!   ordered by `(time, priority, insertion sequence)` — ties between
+//!   simultaneous events always break the same way, independent of
+//!   platform or allocation order;
+//! * a **seeded speed model** ([`SpeedModel`], parsed from [`RateSpec`]):
+//!   per-client compute rates (`uniform`, `lognormal:<sigma>`,
+//!   `stragglers:<frac>,<slowdown>`) plus per-step duration jitter
+//!   (`jitter:<sigma>`), all drawn from streams derived with the splitmix
+//!   mixer ([`crate::rng::mix`]) so durations are pure functions of
+//!   `(seed, client, step)`.
+//!
+//! The module is deliberately self-contained (it depends only on
+//! [`crate::rng`]): the drivers in `sim` own all simulation semantics.
+//!
+//! ```
+//! use seedflood::sched::{EventQueue, RateSpec, SpeedModel, TICKS_PER_ROUND};
+//!
+//! // uniform rates: every step takes exactly the nominal duration
+//! let spec = RateSpec::parse("uniform").unwrap();
+//! let model = SpeedModel::build(&spec, 4, 0);
+//! assert_eq!(model.duration(2, 7, 4 * TICKS_PER_ROUND), 4 * TICKS_PER_ROUND);
+//!
+//! // events at the same tick pop by priority, then insertion order
+//! let mut q: EventQueue<&str> = EventQueue::new();
+//! q.push(5, 1, "round");
+//! q.push(5, 0, "step-complete");
+//! q.push(3, 2, "early");
+//! assert_eq!(q.pop().unwrap().payload, "early");
+//! assert_eq!(q.pop().unwrap().payload, "step-complete");
+//! assert_eq!(q.pop().unwrap().payload, "round");
+//! ```
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::rng::{mix, Rng};
+
+/// Virtual-time ticks per communication round. The delivery clock
+/// ([`crate::net::Network::tick`]) advances once per round in both time
+/// models, so a netcond `delay=K` means the same K rounds either way; the
+/// sub-round tick resolution only exists so heterogeneous step durations
+/// can interleave at finer granularity than a whole round (rate
+/// granularity is 1/256 of a round).
+pub const TICKS_PER_ROUND: u64 = 256;
+
+/// Which execution engine drives the training loop (`--time-model`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TimeModel {
+    /// The historical shared-step loop: every client computes at the same
+    /// speed, communication happens at a global barrier — the reference
+    /// trajectory the event engine must reproduce under uniform rates.
+    #[default]
+    Lockstep,
+    /// Discrete-event virtual time: each client's local steps complete at
+    /// times set by its compute rate; flooding methods communicate off
+    /// the delivery clock without a step barrier, gossip methods run
+    /// through the barrier adapter (same results, honest timing metrics).
+    Event,
+}
+
+impl TimeModel {
+    pub fn parse(s: &str) -> Option<TimeModel> {
+        match s.to_ascii_lowercase().as_str() {
+            "lockstep" => Some(TimeModel::Lockstep),
+            "event" => Some(TimeModel::Event),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TimeModel::Lockstep => "lockstep",
+            TimeModel::Event => "event",
+        }
+    }
+}
+
+/// Parsed `--rates` spec: how per-client compute speeds are drawn.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RateSpec {
+    /// Every client computes at the nominal rate (1.0) — the event engine
+    /// reproduces the lockstep trajectory exactly.
+    Uniform,
+    /// Per-client rate `exp(sigma · z_i)`, `z_i` standard normal: a
+    /// heavy-tailed mix of fast and slow clients (median rate 1).
+    LogNormal { sigma: f64 },
+    /// `floor(frac · n)` seeded-randomly chosen clients run `slowdown`×
+    /// slower than the rest — the classic straggler regime.
+    Stragglers { frac: f64, slowdown: f64 },
+    /// Per-client *per-step* lognormal duration jitter (mean rate 1):
+    /// models stochastic stalls rather than persistently slow hardware —
+    /// this is where barrier methods pay the `Σ_t max_i` straggler tax
+    /// while asynchronous flooding pays only `max_i Σ_t`.
+    Jitter { sigma: f64 },
+}
+
+impl RateSpec {
+    /// Parse `uniform | lognormal:<sigma> | stragglers:<frac>,<slowdown>
+    /// | jitter:<sigma>`.
+    pub fn parse(s: &str) -> Result<RateSpec> {
+        let s = s.trim();
+        if s.is_empty() || s.eq_ignore_ascii_case("uniform") {
+            return Ok(RateSpec::Uniform);
+        }
+        let (kind, params) = s.split_once(':').unwrap_or((s, ""));
+        match kind.to_ascii_lowercase().as_str() {
+            "lognormal" => {
+                let sigma: f64 = parse_f64(params, "lognormal sigma")?;
+                ensure!(sigma >= 0.0, "lognormal sigma {sigma} must be >= 0");
+                Ok(RateSpec::LogNormal { sigma })
+            }
+            "jitter" => {
+                let sigma: f64 = parse_f64(params, "jitter sigma")?;
+                ensure!(sigma >= 0.0, "jitter sigma {sigma} must be >= 0");
+                Ok(RateSpec::Jitter { sigma })
+            }
+            "stragglers" => {
+                let (frac, slow) = params.split_once(',').ok_or_else(|| {
+                    anyhow::anyhow!("stragglers needs <frac>,<slowdown>, got {params:?}")
+                })?;
+                let frac = parse_f64(frac, "straggler fraction")?;
+                let slowdown = parse_f64(slow, "straggler slowdown")?;
+                ensure!((0.0..=1.0).contains(&frac), "straggler frac {frac} outside [0, 1]");
+                ensure!(slowdown >= 1.0, "straggler slowdown {slowdown} must be >= 1");
+                Ok(RateSpec::Stragglers { frac, slowdown })
+            }
+            other => bail!(
+                "unknown rate spec {other:?} (have uniform, lognormal:<sigma>, \
+                 stragglers:<frac>,<slowdown>, jitter:<sigma>)"
+            ),
+        }
+    }
+
+    /// True iff this spec cannot produce any non-nominal duration (the
+    /// event engine then reproduces lockstep exactly).
+    pub fn is_uniform(&self) -> bool {
+        match self {
+            RateSpec::Uniform => true,
+            RateSpec::LogNormal { sigma } | RateSpec::Jitter { sigma } => *sigma == 0.0,
+            RateSpec::Stragglers { frac, slowdown } => *frac == 0.0 || *slowdown == 1.0,
+        }
+    }
+}
+
+fn parse_f64(s: &str, what: &str) -> Result<f64> {
+    s.trim()
+        .parse::<f64>()
+        .map_err(|e| anyhow::anyhow!("bad {what} {s:?}: {e}"))
+}
+
+/// Seed salt for the speed-model streams (independent of probe/sampler
+/// randomness; combined with the experiment seed via [`mix`]).
+const SPEED_SALT: u64 = 0x5_BEED_4A7E;
+
+/// Compiled per-client compute speeds: base rate per client plus optional
+/// per-step jitter. [`Self::duration`] is a pure function of
+/// `(seed, client, step)` — durations never depend on simulation order,
+/// which keeps the event engine deterministic and lets both drivers share
+/// one model.
+#[derive(Clone, Debug)]
+pub struct SpeedModel {
+    rates: Vec<f64>,
+    jitter_sigma: f64,
+    seed: u64,
+    uniform: bool,
+}
+
+impl SpeedModel {
+    /// Draw per-client rates from the spec on a stream derived from
+    /// `seed` (the experiment seed; the salt keeps it disjoint from probe
+    /// and sampler streams).
+    pub fn build(spec: &RateSpec, n: usize, seed: u64) -> SpeedModel {
+        let seed = mix(seed, SPEED_SALT);
+        let mut rng = Rng::new(seed);
+        let (rates, jitter_sigma) = match spec {
+            RateSpec::Uniform => (vec![1.0; n], 0.0),
+            RateSpec::Jitter { sigma } => (vec![1.0; n], *sigma),
+            RateSpec::LogNormal { sigma } => {
+                ((0..n).map(|_| (sigma * rng.next_normal() as f64).exp()).collect(), 0.0)
+            }
+            RateSpec::Stragglers { frac, slowdown } => {
+                let k = (frac * n as f64).floor() as usize;
+                let perm = rng.permutation(n);
+                let mut rates = vec![1.0; n];
+                for &i in perm.iter().take(k) {
+                    rates[i as usize] = 1.0 / slowdown;
+                }
+                (rates, 0.0)
+            }
+        };
+        SpeedModel { rates, jitter_sigma, seed, uniform: spec.is_uniform() }
+    }
+
+    /// This client's base compute rate (1.0 = nominal).
+    pub fn rate(&self, client: usize) -> f64 {
+        self.rates[client]
+    }
+
+    pub fn n(&self) -> usize {
+        self.rates.len()
+    }
+
+    /// True iff every duration equals `step_ticks` exactly.
+    pub fn is_uniform(&self) -> bool {
+        self.uniform
+    }
+
+    /// Virtual-time duration of `client`'s local step number `step`, where
+    /// a nominal client takes `step_ticks`. Uniform models return
+    /// `step_ticks` *exactly* (no float round-trip) — the bitwise
+    /// reduction contract of the event engine hangs on this.
+    pub fn duration(&self, client: usize, step: usize, step_ticks: u64) -> u64 {
+        if self.uniform {
+            return step_ticks;
+        }
+        let mut rate = self.rates[client];
+        if self.jitter_sigma > 0.0 {
+            let mut r = Rng::new(mix(mix(self.seed, client as u64), step as u64));
+            rate *= (self.jitter_sigma * r.next_normal() as f64).exp();
+        }
+        ((step_ticks as f64 / rate).round() as u64).max(1)
+    }
+}
+
+/// One scheduled event: fires at `time`, with `prio` breaking ties at the
+/// same tick (lower first) and insertion order breaking ties within a
+/// priority class.
+#[derive(Clone, Debug)]
+pub struct Event<T> {
+    pub time: u64,
+    pub prio: u8,
+    seq: u64,
+    pub payload: T,
+}
+
+impl<T> PartialEq for Event<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+impl<T> Eq for Event<T> {}
+
+impl<T> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Event<T> {
+    /// Reversed key order: `BinaryHeap` is a max-heap, so "greatest" must
+    /// mean "earliest" for `pop` to return events in causal order.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.key().cmp(&self.key())
+    }
+}
+
+impl<T> Event<T> {
+    fn key(&self) -> (u64, u8, u64) {
+        (self.time, self.prio, self.seq)
+    }
+}
+
+/// Deterministic event queue: pops in ascending `(time, prio, seq)` order.
+/// Determinism does not depend on the payload type — simultaneous events
+/// of equal priority fire in insertion order, always.
+#[derive(Debug, Default)]
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Event<T>>,
+    seq: u64,
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn push(&mut self, time: u64, prio: u8, payload: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Event { time, prio, seq, payload });
+    }
+
+    pub fn pop(&mut self) -> Option<Event<T>> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_orders_by_time_prio_seq() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.push(10, 0, 1);
+        q.push(5, 1, 2);
+        q.push(5, 0, 3);
+        q.push(5, 0, 4); // same (time, prio) as 3: insertion order wins
+        q.push(7, 2, 5);
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, vec![3, 4, 2, 5, 1]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn queue_is_reproducible() {
+        let run = || {
+            let mut q: EventQueue<usize> = EventQueue::new();
+            for i in 0..100 {
+                q.push((i * 37) as u64 % 13, (i % 3) as u8, i);
+            }
+            std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn rate_spec_parses() {
+        assert_eq!(RateSpec::parse("uniform").unwrap(), RateSpec::Uniform);
+        assert_eq!(RateSpec::parse("").unwrap(), RateSpec::Uniform);
+        assert_eq!(
+            RateSpec::parse("lognormal:0.5").unwrap(),
+            RateSpec::LogNormal { sigma: 0.5 }
+        );
+        assert_eq!(
+            RateSpec::parse("stragglers:0.25,4").unwrap(),
+            RateSpec::Stragglers { frac: 0.25, slowdown: 4.0 }
+        );
+        assert_eq!(RateSpec::parse("jitter:0.3").unwrap(), RateSpec::Jitter { sigma: 0.3 });
+        for bad in [
+            "nope",
+            "lognormal",
+            "lognormal:-1",
+            "stragglers:0.5",
+            "stragglers:1.5,2",
+            "stragglers:0.5,0.5",
+            "jitter:x",
+        ] {
+            assert!(RateSpec::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn uniform_duration_is_exact() {
+        let m = SpeedModel::build(&RateSpec::Uniform, 8, 42);
+        for c in 0..8 {
+            for t in 0..20 {
+                assert_eq!(m.duration(c, t, 1024), 1024);
+            }
+        }
+        assert!(m.is_uniform());
+        // degenerate parameterizations collapse to uniform too
+        assert!(SpeedModel::build(&RateSpec::LogNormal { sigma: 0.0 }, 4, 0).is_uniform());
+        assert!(
+            SpeedModel::build(&RateSpec::Stragglers { frac: 0.0, slowdown: 9.0 }, 4, 0)
+                .is_uniform()
+        );
+    }
+
+    #[test]
+    fn stragglers_slow_exactly_the_fraction() {
+        let m = SpeedModel::build(&RateSpec::Stragglers { frac: 0.25, slowdown: 4.0 }, 16, 7);
+        let slow = (0..16).filter(|&i| m.rate(i) < 1.0).count();
+        assert_eq!(slow, 4);
+        for i in 0..16 {
+            let d = m.duration(i, 0, 1000);
+            if m.rate(i) < 1.0 {
+                assert_eq!(d, 4000, "straggler {i}");
+            } else {
+                assert_eq!(d, 1000, "fast client {i}");
+            }
+        }
+        // seeded: same seed → same straggler set; different seed → usually not
+        let m2 = SpeedModel::build(&RateSpec::Stragglers { frac: 0.25, slowdown: 4.0 }, 16, 7);
+        for i in 0..16 {
+            assert_eq!(m.rate(i), m2.rate(i));
+        }
+    }
+
+    #[test]
+    fn lognormal_rates_positive_and_seeded() {
+        let m = SpeedModel::build(&RateSpec::LogNormal { sigma: 1.0 }, 32, 3);
+        assert!((0..32).all(|i| m.rate(i) > 0.0));
+        assert!(!m.is_uniform());
+        let spread = (0..32).any(|i| (m.rate(i) - 1.0).abs() > 0.1);
+        assert!(spread, "sigma=1 must actually spread the rates");
+        let m2 = SpeedModel::build(&RateSpec::LogNormal { sigma: 1.0 }, 32, 3);
+        for i in 0..32 {
+            assert_eq!(m.rate(i), m2.rate(i));
+        }
+    }
+
+    #[test]
+    fn jitter_durations_vary_per_step_but_are_pure() {
+        let m = SpeedModel::build(&RateSpec::Jitter { sigma: 0.5 }, 4, 11);
+        let d: Vec<u64> = (0..50).map(|t| m.duration(1, t, 1000)).collect();
+        assert!(d.iter().any(|&x| x != d[0]), "jitter must vary across steps");
+        // pure function of (seed, client, step): re-query in any order
+        for t in (0..50).rev() {
+            assert_eq!(m.duration(1, t, 1000), d[t]);
+        }
+        assert!(d.iter().all(|&x| x >= 1));
+    }
+
+    #[test]
+    fn time_model_parses() {
+        assert_eq!(TimeModel::parse("lockstep"), Some(TimeModel::Lockstep));
+        assert_eq!(TimeModel::parse("Event"), Some(TimeModel::Event));
+        assert_eq!(TimeModel::parse("async"), None);
+        assert_eq!(TimeModel::default(), TimeModel::Lockstep);
+        assert_eq!(TimeModel::Event.name(), "event");
+    }
+}

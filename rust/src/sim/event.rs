@@ -1,0 +1,299 @@
+//! The event-driven virtual-time execution engine (`--time-model event`,
+//! ISSUE 4 tentpole).
+//!
+//! Each client has a compute rate drawn from the seeded speed model
+//! (`--rates`, [`SpeedModel`]); its local steps complete at virtual times
+//! instead of a shared step index. Communication runs off the delivery
+//! clock: one [`crate::net::Network::tick`] round every
+//! [`TICKS_PER_ROUND`] virtual ticks (a nominal local step spans
+//! `flood_steps` rounds, matching the lockstep cadence), so netcond
+//! delays and down-windows keep their round/iteration units — re-keyed to
+//! virtual time rather than the barrier loop.
+//!
+//! The driver honors each algorithm's [`TimePolicy`]:
+//!
+//! * **Async** (SeedFlood, the single-client baselines) — a deterministic
+//!   event queue interleaves three event kinds: `Step` (a client's local
+//!   step completes: catch-up flush → `local_step` → flood immediately
+//!   via `on_step_complete`), `Round` (delivery-clock round: every online
+//!   client's `on_send` then `on_deliver`), and `Barrier` (every client
+//!   has completed step `t`: settle via `on_barrier`, record the train
+//!   loss, run the evaluation bookkeeping). The nominal schedule clock
+//!   (`virtual time / step span`) drives [`crate::net::Network::set_step`]
+//!   and the netcond repair triggers.
+//! * **Barrier** (DSGD, ChocoSGD, DZSGD and the LoRA variants) — the
+//!   lockstep adapter: dense/sparse gossip mixes simultaneous snapshots
+//!   of all clients and has no barrier-free formulation, so the driver
+//!   reuses the shared `RunCtx::lockstep_iteration` verbatim and heterogeneous
+//!   speeds surface only as the timing metrics. Results are identical to
+//!   `--time-model lockstep` for *any* `--rates` — the honest semantics
+//!   of a method that must wait for its slowest participant.
+//!
+//! # The reduction contract
+//!
+//! With uniform rates every step-completion cohort lands on one virtual
+//! instant, the queue's `(time, priority, insertion)` order degenerates
+//! to the lockstep order (completions → k rounds → barrier), completion
+//! sends coincide with what the first lockstep round would have sent, and
+//! the barrier flush sits exactly where the lockstep iteration flush sat —
+//! so `--time-model event --rates uniform` reproduces the lockstep
+//! trajectory bit-for-bit, for async and barrier methods alike
+//! (property-tested in rust/tests/properties.rs). Non-uniform rates are
+//! then the *only* source of divergence, which is what makes the
+//! straggler experiments attributable.
+//!
+//! # Timing metrics
+//!
+//! The run's `RunRecord` gains `virtual_makespan` (nominal-step units:
+//! `Σ_t max_i dur` for barrier methods, `max_i Σ_t dur` for async — the
+//! gap between the two is the straggler tax), `idle_frac`
+//! (1 − compute / (n · makespan)), `client_steps`, and the flooding
+//! staleness percentiles (`staleness_p50/p90/p99`), measured on the
+//! nominal iteration clock.
+
+use anyhow::Result;
+
+use super::{Driver, Env, RunCtx};
+use crate::algos::TimePolicy;
+use crate::metrics::RunRecord;
+use crate::sched::{EventQueue, RateSpec, SpeedModel, TICKS_PER_ROUND};
+
+/// Event kinds of the async engine; the listed order is also the
+/// same-tick priority (completions before the round that forwards them,
+/// rounds before the barrier that evaluates their effect).
+enum Ev {
+    /// Client `client` completes local step `step`.
+    Step { client: usize, step: usize },
+    /// One delivery-clock communication round.
+    Round,
+    /// Every client has completed local step `step`.
+    Barrier { step: usize },
+}
+
+const PRIO_STEP: u8 = 0;
+const PRIO_ROUND: u8 = 1;
+const PRIO_BARRIER: u8 = 2;
+
+/// The `--time-model event` driver. See the module docs.
+pub struct EventDriven;
+
+impl Driver for EventDriven {
+    fn run(&mut self, env: &Env) -> Result<RunRecord> {
+        let ctx = RunCtx::setup(env)?;
+        let spec = RateSpec::parse(&env.cfg.rates)?;
+        let speed = SpeedModel::build(&spec, env.cfg.clients, env.cfg.seed);
+        match ctx.algo.time_policy() {
+            TimePolicy::Barrier => run_barrier(ctx, &speed),
+            TimePolicy::Async => run_async(ctx, &speed),
+        }
+    }
+}
+
+/// Virtual-time span of one nominal local step: `flood_steps` delivery
+/// rounds (the lockstep cadence — k rounds per iteration), resolving the
+/// `0 = topology diameter` default exactly as SeedFlood does.
+fn step_ticks(ctx: &RunCtx<'_>) -> u64 {
+    let k = if ctx.env.cfg.flood_steps == 0 {
+        ctx.net.topology().diameter().max(1)
+    } else {
+        ctx.env.cfg.flood_steps
+    };
+    k as u64 * TICKS_PER_ROUND
+}
+
+/// Fill the driver-owned timing fields of the record.
+fn time_metrics(
+    record: &mut RunRecord,
+    makespan_ticks: u64,
+    compute_ticks: u64,
+    ticks_per_step: u64,
+    n: usize,
+    steps: usize,
+) {
+    record.virtual_makespan = makespan_ticks as f64 / ticks_per_step as f64;
+    record.idle_frac = if makespan_ticks == 0 {
+        0.0
+    } else {
+        1.0 - compute_ticks as f64 / (n as u64 * makespan_ticks) as f64
+    };
+    record.client_steps = vec![steps as u64; n];
+}
+
+/// The lockstep adapter: reuse the exact lockstep iteration for barrier
+/// methods and account virtual time around it — each iteration costs the
+/// cohort maximum (everyone waits for the slowest), which is where the
+/// `Σ_t max_i` straggler tax comes from.
+fn run_barrier(mut ctx: RunCtx<'_>, speed: &SpeedModel) -> Result<RunRecord> {
+    let steps = ctx.env.cfg.steps;
+    let n = ctx.env.cfg.clients;
+    let s = step_ticks(&ctx);
+    let (mut now, mut compute) = (0u64, 0u64);
+    for t in 0..steps {
+        ctx.lockstep_iteration(t)?;
+        let durs: Vec<u64> = (0..n).map(|i| speed.duration(i, t, s)).collect();
+        now += durs.iter().copied().max().unwrap_or(0);
+        compute += durs.iter().sum::<u64>();
+    }
+    time_metrics(&mut ctx.record, now, compute, s, n, steps);
+    ctx.finalize()
+}
+
+/// The fully asynchronous engine for [`TimePolicy::Async`] methods.
+///
+/// Local steps execute lazily at their completion events (sequentially —
+/// event interleavings are inherently serial; per-client results are
+/// independent of execution order by the engine's determinism contract,
+/// so this agrees with the threaded lockstep fan-out). The schedule
+/// clock, `begin_step`, and the repair triggers advance with the nominal
+/// iteration (`virtual time / step span`), mirroring their lockstep
+/// positions.
+fn run_async(mut ctx: RunCtx<'_>, speed: &SpeedModel) -> Result<RunRecord> {
+    let steps = ctx.env.cfg.steps;
+    let n = ctx.env.cfg.clients;
+    let s = step_ticks(&ctx);
+    if steps == 0 || n == 0 {
+        return ctx.finalize();
+    }
+
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut compute = 0u64;
+    for i in 0..n {
+        let d = speed.duration(i, 0, s);
+        compute += d;
+        q.push(d, PRIO_STEP, Ev::Step { client: i, step: 0 });
+    }
+    q.push(TICKS_PER_ROUND, PRIO_ROUND, Ev::Round);
+
+    // per-step completion counts and per-(step, client) losses; the loss
+    // matrix keeps the barrier's mean a client-order sum regardless of
+    // the completion order, preserving the reduction contract
+    let mut completed = vec![0usize; steps];
+    let mut losses = vec![0f32; steps * n];
+    let mut finish = vec![0u64; n];
+    let mut begun: Option<usize> = None; // highest step begin_step has seen
+    let mut sched: Option<usize> = None; // last Network::set_step argument
+    let mut barriers = 0usize;
+    let mut clock = 0u64; // delivery rounds ticked so far
+    // false ⇔ provably quiescent: the last round moved nothing, nothing
+    // is in flight, and no step/barrier/schedule event happened since —
+    // lets Round events skip their O(n·deg) scans while stragglers crawl
+    let mut active = true;
+
+    while let Some(ev) = q.pop() {
+        let now = ev.time;
+        // delivery clock: one round per TICKS_PER_ROUND of virtual time,
+        // advanced *before* any event at this instant. A completion's
+        // send and the coincident round's sends therefore stamp the same
+        // round, so a netcond `delay=K` costs exactly K delivery rounds
+        // on every hop — the same relative timing as lockstep's
+        // tick-then-send order (absolute clock values differ only by a
+        // constant offset, which no stamp comparison can observe).
+        while clock < now / TICKS_PER_ROUND {
+            ctx.net.tick();
+            clock += 1;
+        }
+        // nominal iteration: events in [(t+1)·s, (t+2)·s) belong to
+        // iteration t — under uniform rates exactly the window from the
+        // step-t completions up to (excluding) the step-t+1 completions,
+        // aligning the schedule clock and staleness accounting with
+        // lockstep. The clock keeps running past `steps` while stragglers
+        // catch up (anti-entropy heartbeats continue; every scheduled
+        // down-window is over by then).
+        let nominal = ((now / s).saturating_sub(1)) as usize;
+        while sched.map_or(true, |g| g < nominal) {
+            let g = sched.map_or(0, |g| g + 1);
+            ctx.net.set_step(g);
+            ctx.algo.on_iteration_start(&mut ctx.states, g, ctx.env, &mut ctx.net)?;
+            sched = Some(g);
+            active = true; // churn flips, repair arming: rounds matter again
+        }
+
+        match ev.payload {
+            Ev::Step { client, step } => {
+                if begun.map_or(true, |b| step > b) {
+                    // shared-state hook (e.g. the τ-periodic basis
+                    // refresh) follows the most advanced client; it
+                    // settles any basis-relative pending state across
+                    // all clients before mutating (stragglers can hold
+                    // accumulated coefficients at a refresh boundary)
+                    ctx.algo.begin_step(&mut ctx.states, step, ctx.env)?;
+                    begun = Some(step);
+                }
+                ctx.algo.on_step_begin(&mut ctx.states[client], client, step, ctx.env)?;
+                let loss = ctx.algo.local_step(&mut ctx.states[client], client, step, ctx.env)?;
+                losses[step * n + client] = loss;
+                if ctx.net.is_online(client) {
+                    ctx.algo.on_step_complete(
+                        &mut ctx.states[client],
+                        client,
+                        step,
+                        ctx.env,
+                        &mut ctx.net,
+                    )?;
+                }
+                completed[step] += 1;
+                if step + 1 < steps {
+                    let d = speed.duration(client, step + 1, s);
+                    compute += d;
+                    q.push(now + d, PRIO_STEP, Ev::Step { client, step: step + 1 });
+                } else {
+                    finish[client] = now;
+                }
+                if completed[step] == n {
+                    // settle after the remaining rounds of this nominal
+                    // step (k rounds total follow a full cohort — the
+                    // lockstep iteration's communication depth)
+                    let settle = (s / TICKS_PER_ROUND - 1) * TICKS_PER_ROUND;
+                    q.push(now + settle, PRIO_BARRIER, Ev::Barrier { step });
+                }
+                active = true;
+            }
+            Ev::Round => {
+                // scans are skipped while provably quiescent: an idle
+                // round's send_round/collect cannot change any state, so
+                // skipping is invisible to the trajectory — it only
+                // avoids O(n·deg) no-op work on long straggler tails
+                if active {
+                    let bytes0 = ctx.net.acct.total_bytes;
+                    let deliv0 = ctx.net.acct.delivered_messages;
+                    for i in 0..n {
+                        if ctx.net.is_online(i) {
+                            ctx.algo.on_send(&mut ctx.states[i], i, ctx.env, &mut ctx.net)?;
+                        }
+                    }
+                    for i in 0..n {
+                        if ctx.net.is_online(i) {
+                            ctx.algo.on_deliver(
+                                &mut ctx.states[i],
+                                i,
+                                nominal,
+                                ctx.env,
+                                &mut ctx.net,
+                            )?;
+                        }
+                    }
+                    active = ctx.net.acct.total_bytes != bytes0
+                        || ctx.net.acct.delivered_messages != deliv0
+                        || ctx.net.in_flight() > 0;
+                }
+                q.push(now + TICKS_PER_ROUND, PRIO_ROUND, Ev::Round);
+            }
+            Ev::Barrier { step } => {
+                debug_assert_eq!(step, barriers, "barriers must settle in step order");
+                let row: Vec<f32> = losses[step * n..(step + 1) * n].to_vec();
+                ctx.push_train_loss(&row);
+                ctx.algo.on_barrier(&mut ctx.states, step, ctx.env, &mut ctx.net)?;
+                ctx.after_step(step)?;
+                barriers += 1;
+                if barriers == steps {
+                    break;
+                }
+                active = true; // an on_barrier override may have sent
+            }
+        }
+    }
+
+    let makespan = finish.iter().copied().max().unwrap_or(0);
+    time_metrics(&mut ctx.record, makespan, compute, s, n, steps);
+    ctx.finalize()
+}

@@ -3,31 +3,57 @@
 //! communication), evaluates GMP, and records everything in a
 //! [`RunRecord`].
 //!
-//! Since the parallel-engine refactor (ISSUE 1) the iteration loop is:
-//! `begin_step` (sequential shared-state hook) → `local_step_all` (fan-out
-//! over a scoped-thread pool, per-client state isolated in
-//! [`crate::algos::ClientState`]) → `communicate` (sequential,
-//! deterministic network rounds). A run's `RunRecord` is bit-identical for
-//! every `--threads` value: local steps are independent across clients and
-//! results are merged in client order (tested in tests/engine.rs).
+//! # The [`Driver`] split (ISSUE 4)
 //!
-//! With `--netcond` set (ISSUE 2), each iteration first advances the fault
-//! schedule ([`Network::set_step`]) before the hooks run; fault draws come
-//! from a dedicated RNG stream on the sequential communication path, so
-//! the `--threads` determinism contract extends to faulty runs (tested in
-//! tests/netcond.rs).
+//! What "time" means is a property of the *driver*, selected by
+//! `--time-model`:
+//!
+//! * [`Lockstep`] (default) — the historical shared-step loop, preserved
+//!   operation-for-operation by the driver split: `begin_step`
+//!   (sequential shared-state hook) →
+//!   `local_step_all` (fan-out over a scoped-thread pool, per-client state
+//!   isolated in [`crate::algos::ClientState`]) → `communicate`
+//!   (sequential, deterministic network rounds). A run's `RunRecord` is
+//!   bit-identical for every `--threads` value: local steps are
+//!   independent across clients and results are merged in client order
+//!   (tested in tests/engine.rs).
+//! * [`EventDriven`] (`--time-model event`, [`event`]) — discrete-event
+//!   virtual time: each client's local steps complete at times set by a
+//!   seeded speed model (`--rates`), flooding methods communicate off the
+//!   delivery clock through the [`crate::algos::Algorithm`] async hooks,
+//!   and gossip methods run through the barrier adapter. Uniform rates
+//!   reproduce the lockstep trajectory exactly
+//!   (rust/tests/properties.rs).
+//!
+//! Both drivers share one crate-internal `RunCtx`: setup, the
+//! per-iteration evaluation bookkeeping, the single [`EvalPoint`]
+//! construction site, and the final record assembly, so the two time
+//! models cannot drift apart.
+//!
+//! With `--netcond` set (ISSUE 2), the fault schedule advances
+//! ([`Network::set_step`]) before each iteration's hooks run (under the
+//! event driver: whenever the nominal iteration clock advances); fault
+//! draws come from a dedicated RNG stream on the sequential communication
+//! path, so the `--threads` determinism contract extends to faulty runs
+//! (tested in tests/netcond.rs).
+
+pub mod event;
 
 use anyhow::{bail, Context, Result};
 
-use crate::algos::{self, Scratch};
+pub use event::EventDriven;
+
+use crate::algos::{self, Algorithm, ClientState, Scratch};
 use crate::config::ExperimentConfig;
 use crate::data::{BatchSampler, Dataset, Example, TaskSpec, CLASS_TOKENS};
-use crate::metrics::{EvalPoint, RunRecord};
+use crate::flood::STALE_BUCKETS;
+use crate::metrics::{hist_percentile, EvalPoint, RunRecord};
 use crate::model::{checkpoint, Manifest, ParamStore};
 use crate::net::Network;
 use crate::netcond;
 use crate::oracle::{AotBackend, Backend, SyntheticOracle};
 use crate::runtime::Arg;
+use crate::sched::TimeModel;
 use crate::subcge::{CoeffAccum, DeviceBasisCache, SubspaceBasis};
 use crate::tensor::ParamVec;
 use crate::topology::Topology;
@@ -122,11 +148,21 @@ impl Env {
     }
 
     /// Per-client mini-batch samplers over the uniform partition.
+    ///
+    /// Seeds go through the splitmix mixer ([`crate::rng::mix`]): the
+    /// historical `seed ^ (0xBA7C << 8) ^ i` gave adjacent clients seeds
+    /// differing in a single bit, which a small-state PRNG turns into
+    /// visibly correlated early batch orders. The mixer avalanches every
+    /// index bit; each sampler is still a pure function of
+    /// `(cfg.seed, client)`, so the threads-determinism contract is
+    /// untouched.
     pub fn make_samplers(&self) -> Vec<BatchSampler> {
         self.partitions
             .iter()
             .enumerate()
-            .map(|(i, p)| BatchSampler::new(p.clone(), self.cfg.seed ^ (0xBA7C << 8) ^ i as u64))
+            .map(|(i, p)| {
+                BatchSampler::new(p.clone(), crate::rng::mix(self.cfg.seed ^ 0xBA7C, i as u64))
+            })
             .collect()
     }
 
@@ -359,109 +395,205 @@ pub fn run_experiment(cfg: ExperimentConfig) -> Result<RunRecord> {
 }
 
 /// Run with a pre-built Env (lets experiment harnesses share the runtime
-/// and dataset across runs).
+/// and dataset across runs). Dispatches to the configured [`Driver`].
 pub fn run_with_env(env: &Env) -> Result<RunRecord> {
-    let cfg = &env.cfg;
-    // netcond: a preset name pins the topology it is named after; a raw
-    // spec string leaves the configured topology alone; empty = the
-    // reliable static graph, bit-for-bit identical to the pre-netcond
-    // simulator (no fault state is installed at all)
-    let (kind_override, cond) = if cfg.netcond.is_empty() {
-        (None, None)
-    } else {
-        let (k, c) = netcond::resolve(&cfg.netcond, cfg.clients, cfg.steps)?;
-        (k, Some(c))
-    };
-    let kind = kind_override.unwrap_or(cfg.topology);
-    let topo = Topology::build(kind, cfg.clients, cfg.topology_seed);
-    let (mut algo, mut states) = algos::build(env, &topo)?;
-    let mut net = Network::new(topo);
-    if let Some(c) = &cond {
-        net.install(c)?;
+    env.cfg.validate()?; // TOML/programmatic configs skip from_args
+    match env.cfg.time_model {
+        TimeModel::Lockstep => Lockstep.run(env),
+        TimeModel::Event => EventDriven.run(env),
     }
-    let timer = Timer::start();
+}
 
-    let mut record = RunRecord {
-        method: cfg.method.name().to_string(),
-        task: cfg.task.clone(),
-        model: cfg.model.clone(),
-        topology: net.topology().kind.clone(),
-        clients: cfg.clients,
-        steps: cfg.steps,
-        netcond: cfg.netcond.clone(),
-        ..Default::default()
-    };
+/// An execution engine for the training protocol: owns the definition of
+/// "time" (shared step index vs discrete-event virtual time) and drives
+/// the [`Algorithm`] through its lifecycle. Both implementations share
+/// the crate-internal `RunCtx` so setup, evaluation bookkeeping, and
+/// record assembly stay identical.
+pub trait Driver {
+    fn run(&mut self, env: &Env) -> Result<RunRecord>;
+}
 
-    // best-validation checkpoint selection (paper Table 5): validate every
-    // tenth of training, keep the snapshot with the lowest val loss
-    let val_every = (cfg.steps / 10).max(1);
-    let mut best: (f64, Option<Vec<ParamVec>>) = (f64::INFINITY, None);
+/// The historical shared-step engine (`--time-model lockstep`, default):
+/// every client computes one local step per iteration, communication
+/// happens at the global barrier. The driver split preserves the loop
+/// operation-for-operation — within a version, `--time-model event
+/// --rates uniform` and every `--threads` value reproduce it exactly.
+/// (Trajectories DO differ from releases before the sampler-seed fix in
+/// [`Env::make_samplers`] — that change was deliberate.)
+pub struct Lockstep;
 
-    for t in 0..cfg.steps {
-        net.set_step(t); // advance the fault schedule (no-op when reliable)
-        algo.begin_step(t, env)?;
-        let losses = algos::local_step_all(&*algo, &mut states, t, env, cfg.threads)?;
+impl Driver for Lockstep {
+    fn run(&mut self, env: &Env) -> Result<RunRecord> {
+        let mut ctx = RunCtx::setup(env)?;
+        for t in 0..env.cfg.steps {
+            ctx.lockstep_iteration(t)?;
+        }
+        ctx.finalize()
+    }
+}
+
+/// Shared per-run state and bookkeeping for both [`Driver`]s.
+pub(crate) struct RunCtx<'e> {
+    pub(crate) env: &'e Env,
+    pub(crate) algo: Box<dyn Algorithm>,
+    pub(crate) states: Vec<ClientState>,
+    pub(crate) net: Network,
+    pub(crate) record: RunRecord,
+    timer: Timer,
+    /// best-validation cadence (paper Table 5): validate every tenth of
+    /// training, keep the snapshot with the lowest val loss
+    val_every: usize,
+    best: (f64, Option<Vec<ParamVec>>),
+}
+
+impl<'e> RunCtx<'e> {
+    pub(crate) fn setup(env: &'e Env) -> Result<RunCtx<'e>> {
+        let cfg = &env.cfg;
+        // netcond: a preset name pins the topology it is named after; a
+        // raw spec string leaves the configured topology alone; empty =
+        // the reliable static graph, bit-for-bit identical to the
+        // pre-netcond simulator (no fault state is installed at all)
+        let (kind_override, cond) = if cfg.netcond.is_empty() {
+            (None, None)
+        } else {
+            let (k, c) = netcond::resolve(&cfg.netcond, cfg.clients, cfg.steps)?;
+            (k, Some(c))
+        };
+        let kind = kind_override.unwrap_or(cfg.topology);
+        let topo = Topology::build(kind, cfg.clients, cfg.topology_seed);
+        let (algo, states) = algos::build(env, &topo)?;
+        let mut net = Network::new(topo);
+        if let Some(c) = &cond {
+            net.install(c)?;
+        }
+        let record = RunRecord {
+            method: cfg.method.name().to_string(),
+            task: cfg.task.clone(),
+            model: cfg.model.clone(),
+            topology: net.topology().kind.clone(),
+            clients: cfg.clients,
+            steps: cfg.steps,
+            netcond: cfg.netcond.clone(),
+            time_model: cfg.time_model.name().to_string(),
+            rates: cfg.rates.clone(),
+            ..Default::default()
+        };
+        Ok(RunCtx {
+            env,
+            algo,
+            states,
+            net,
+            record,
+            timer: Timer::start(),
+            val_every: (cfg.steps / 10).max(1),
+            best: (f64::INFINITY, None),
+        })
+    }
+
+    /// One full lockstep iteration — the body of the [`Lockstep`] driver,
+    /// reused verbatim by the event driver's barrier adapter (so a
+    /// barrier method under `--time-model event` reproduces lockstep
+    /// results exactly, for *any* speed model).
+    pub(crate) fn lockstep_iteration(&mut self, t: usize) -> Result<()> {
+        self.net.set_step(t); // advance the fault schedule (no-op when reliable)
+        self.algo.begin_step(&mut self.states, t, self.env)?;
+        let threads = self.env.cfg.threads;
+        let losses = algos::local_step_all(&*self.algo, &mut self.states, t, self.env, threads)?;
         // merged in client order: the mean is identical for any thread count
-        let step_loss: f64 = losses.iter().map(|&l| l as f64).sum();
-        record.train_losses.push(step_loss / cfg.clients as f64);
-        algo.communicate(&mut states, t, env, &mut net)?;
+        self.push_train_loss(&losses);
+        self.algo.communicate(&mut self.states, t, self.env, &mut self.net)?;
+        self.after_step(t)
+    }
 
-        if (t + 1) % val_every == 0 || t + 1 == cfg.steps {
-            let (vl, _) = algo.eval_gmp(&states, env, env.select_batches())?;
-            if vl < best.0 {
-                best = (vl, Some(algo.snapshot(&states)));
+    /// Record the iteration's mean train loss (client-order sum, so the
+    /// float result is identical for every thread count).
+    pub(crate) fn push_train_loss(&mut self, losses: &[f32]) {
+        let step_loss: f64 = losses.iter().map(|&l| l as f64).sum();
+        self.record.train_losses.push(step_loss / self.env.cfg.clients as f64);
+    }
+
+    /// One evaluation point at `step` over `batches` — the single
+    /// construction site for the periodic, final, and event-driven eval
+    /// paths (this used to be two hand-maintained copies).
+    pub(crate) fn eval_point(
+        &mut self,
+        step: usize,
+        batches: &[(Vec<i32>, Vec<i32>)],
+    ) -> Result<EvalPoint> {
+        let (loss, accuracy) = self.algo.eval_gmp(&self.states, self.env, batches)?;
+        Ok(EvalPoint {
+            step,
+            loss,
+            accuracy,
+            total_bytes: self.net.acct.total_bytes,
+            per_edge_bytes: self.net.per_edge_bytes(),
+            consensus_error: self.algo.consensus_error(&self.states),
+        })
+    }
+
+    /// Post-iteration evaluation bookkeeping: the best-validation
+    /// snapshot (every tenth of training + the final step) and the
+    /// periodic `eval_every` [`EvalPoint`]. Called after iteration `t`'s
+    /// communication has settled, by both drivers.
+    pub(crate) fn after_step(&mut self, t: usize) -> Result<()> {
+        let cfg = &self.env.cfg;
+        if (t + 1) % self.val_every == 0 || t + 1 == cfg.steps {
+            let (vl, _) = self.algo.eval_gmp(&self.states, self.env, self.env.select_batches())?;
+            if vl < self.best.0 {
+                self.best = (vl, Some(self.algo.snapshot(&self.states)));
             }
         }
-
         if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 && t + 1 < cfg.steps {
-            let (loss, acc) = algo.eval_gmp(&states, env, env.quick_batches())?;
-            record.evals.push(EvalPoint {
-                step: t + 1,
-                loss,
-                accuracy: acc,
-                total_bytes: net.acct.total_bytes,
-                per_edge_bytes: net.per_edge_bytes(),
-                consensus_error: algo.consensus_error(&states),
-            });
+            let point = self.eval_point(t + 1, self.env.quick_batches())?;
             log::info!(
                 "[{}] step {} loss {:.4} acc {:.3} bytes {}",
-                record.method, t + 1, loss, acc, net.acct.total_bytes
+                self.record.method, t + 1, point.loss, point.accuracy, point.total_bytes
             );
+            self.record.evals.push(point);
         }
+        Ok(())
     }
 
-    if let Some(snap) = best.1.take() {
-        algo.restore(&mut states, snap);
-    }
-    let (final_loss, gmp) = algo.eval_gmp(&states, env, &env.test_batches)?;
-    record.evals.push(EvalPoint {
-        step: cfg.steps,
-        loss: final_loss,
-        accuracy: gmp,
-        total_bytes: net.acct.total_bytes,
-        per_edge_bytes: net.per_edge_bytes(),
-        consensus_error: algo.consensus_error(&states),
-    });
-    record.gmp = gmp;
-    record.final_loss = final_loss;
-    record.total_bytes = net.acct.total_bytes;
-    record.per_edge_bytes = net.per_edge_bytes();
-    record.dropped_messages = net.acct.dropped_messages;
-    record.delivery_ratio = net.acct.delivery_ratio();
-    record.repair_bytes = net.acct.repair_bytes;
-    record.repair_messages = net.acct.repair_messages;
-    for s in &states {
-        if let Scratch::Flood { flood, .. } = &s.scratch {
-            record.flood_duplicates += flood.duplicates;
-            record.max_staleness = record.max_staleness.max(flood.max_staleness);
-            record.repair_gap_misses += flood.gap_misses;
-            record.flood_retained =
-                record.flood_retained.max(flood.retained_entries() as u64);
+    /// Restore the best-validation snapshot, run the final test-set
+    /// evaluation, and assemble the [`RunRecord`] (byte accounting, fault
+    /// metrics, flooding staleness distribution, wall clock). Timing
+    /// fields (`virtual_makespan`, `idle_frac`, `client_steps`) are the
+    /// drivers' responsibility and are left as set.
+    pub(crate) fn finalize(mut self) -> Result<RunRecord> {
+        if let Some(snap) = self.best.1.take() {
+            self.algo.restore(&mut self.states, snap);
         }
+        let point = self.eval_point(self.env.cfg.steps, &self.env.test_batches)?;
+        self.record.gmp = point.accuracy;
+        self.record.final_loss = point.loss;
+        self.record.evals.push(point);
+        self.record.total_bytes = self.net.acct.total_bytes;
+        self.record.per_edge_bytes = self.net.per_edge_bytes();
+        self.record.dropped_messages = self.net.acct.dropped_messages;
+        self.record.delivery_ratio = self.net.acct.delivery_ratio();
+        self.record.repair_bytes = self.net.acct.repair_bytes;
+        self.record.repair_messages = self.net.acct.repair_messages;
+        let mut stale_hist = vec![0u64; STALE_BUCKETS];
+        for s in &self.states {
+            if let Scratch::Flood { flood, .. } = &s.scratch {
+                self.record.flood_duplicates += flood.duplicates;
+                self.record.max_staleness =
+                    self.record.max_staleness.max(flood.max_staleness);
+                self.record.repair_gap_misses += flood.gap_misses;
+                self.record.flood_retained =
+                    self.record.flood_retained.max(flood.retained_entries() as u64);
+                for (b, &c) in flood.stale_hist.iter().enumerate() {
+                    stale_hist[b] += c;
+                }
+            }
+        }
+        self.record.staleness_p50 = hist_percentile(&stale_hist, 50.0);
+        self.record.staleness_p90 = hist_percentile(&stale_hist, 90.0);
+        self.record.staleness_p99 = hist_percentile(&stale_hist, 99.0);
+        self.record.wall_secs = self.timer.elapsed().as_secs_f64();
+        self.record.phase_ms = self.algo.phase_ms();
+        Ok(self.record)
     }
-    record.wall_secs = timer.elapsed().as_secs_f64();
-    record.phase_ms = algo.phase_ms();
-    Ok(record)
 }
 
 #[cfg(test)]

@@ -82,12 +82,20 @@ impl SubspaceBasis {
         self.param_indices.len()
     }
 
+    /// Whether [`Self::maybe_refresh`] would regenerate at `step` — the
+    /// peek that lets callers flush basis-relative pending state *before*
+    /// the subspace changes (the event engine's stragglers can hold
+    /// accumulated coefficients at a refresh boundary).
+    pub fn refresh_due(&self, step: usize) -> bool {
+        step % self.refresh_period == 0
+    }
+
     /// Alg. 1 step A: every τ steps re-draw U, V from RNG(s_glob + t).
     /// All clients call this with the same t ⇒ identical subspaces.
     /// Returns true if a refresh happened (pending A's must be flushed
     /// *before* calling — coordinates are basis-relative).
     pub fn maybe_refresh(&mut self, step: usize) -> bool {
-        if step % self.refresh_period == 0 {
+        if self.refresh_due(step) {
             self.regenerate(step);
             true
         } else {

@@ -1,0 +1,253 @@
+//! Event-driven virtual-time engine tests (ISSUE 4): the `--time-model
+//! event` driver must
+//!
+//! 1. **reduce** to the lockstep trajectory under uniform rates — every
+//!    trajectory field of the `RunRecord` bit-identical, for both the
+//!    async path (SeedFlood) and the barrier adapter (DSGD);
+//! 2. keep barrier methods **rate-invariant**: stragglers change only the
+//!    timing metrics (virtual makespan, idle fraction), never the
+//!    training results;
+//! 3. make heterogeneity **visible**: `stragglers:` rates yield a
+//!    nonzero staleness distribution in the `RunRecord`, and per-step
+//!    `jitter:` charges barrier methods the `Σ_t max_i` straggler tax
+//!    that asynchronous flooding (`max_i Σ_t`) avoids;
+//! 4. compose with the netcond fault layer (delays/windows re-keyed to
+//!    virtual time) without losing determinism.
+//!
+//! Everything runs on the artifact-free synthetic backend.
+
+use seedflood::config::{ExperimentConfig, Method};
+use seedflood::metrics::RunRecord;
+use seedflood::sched::TimeModel;
+use seedflood::sim::{self, Env};
+use seedflood::topology::Kind;
+
+fn base_cfg(method: Method) -> ExperimentConfig {
+    ExperimentConfig {
+        method,
+        clients: 8,
+        topology: Kind::Ring,
+        steps: 6,
+        local_steps: 2,
+        lr: 1e-2,
+        task: "sst2".into(),
+        eval_every: 3,
+        ..Default::default()
+    }
+}
+
+fn run(cfg: ExperimentConfig) -> RunRecord {
+    let env = Env::synthetic(cfg).unwrap();
+    sim::run_with_env(&env).unwrap()
+}
+
+fn run_event(method: Method, rates: &str) -> RunRecord {
+    let cfg = ExperimentConfig {
+        time_model: TimeModel::Event,
+        rates: rates.into(),
+        ..base_cfg(method)
+    };
+    run(cfg)
+}
+
+/// Bitwise comparison of every *trajectory* field — everything that
+/// describes what training did. Engine-identity and timing fields
+/// (`time_model`, `virtual_makespan`, `idle_frac`, `client_steps`,
+/// `wall_secs`, `phase_ms`) are excluded by construction: they describe
+/// which engine ran and what it cost, not the trajectory.
+fn assert_trajectory_identical(a: &RunRecord, b: &RunRecord, what: &str) {
+    assert_eq!(a.train_losses, b.train_losses, "{what}: train losses differ");
+    assert_eq!(a.gmp, b.gmp, "{what}: GMP differs");
+    assert_eq!(a.final_loss, b.final_loss, "{what}: final loss differs");
+    assert_eq!(a.total_bytes, b.total_bytes, "{what}: byte counts differ");
+    assert_eq!(a.per_edge_bytes, b.per_edge_bytes, "{what}: per-edge bytes differ");
+    assert_eq!(a.dropped_messages, b.dropped_messages, "{what}: drop counts differ");
+    assert_eq!(a.delivery_ratio, b.delivery_ratio, "{what}: delivery ratios differ");
+    assert_eq!(a.flood_duplicates, b.flood_duplicates, "{what}: duplicates differ");
+    assert_eq!(a.max_staleness, b.max_staleness, "{what}: max staleness differs");
+    assert_eq!(a.staleness_p50, b.staleness_p50, "{what}: staleness p50 differs");
+    assert_eq!(a.staleness_p90, b.staleness_p90, "{what}: staleness p90 differs");
+    assert_eq!(a.staleness_p99, b.staleness_p99, "{what}: staleness p99 differs");
+    assert_eq!(a.repair_bytes, b.repair_bytes, "{what}: repair bytes differ");
+    assert_eq!(a.repair_messages, b.repair_messages, "{what}: repair messages differ");
+    assert_eq!(a.repair_gap_misses, b.repair_gap_misses, "{what}: gap misses differ");
+    assert_eq!(a.flood_retained, b.flood_retained, "{what}: retained entries differ");
+    assert_eq!(a.evals.len(), b.evals.len(), "{what}: eval point counts differ");
+    for (ea, eb) in a.evals.iter().zip(b.evals.iter()) {
+        assert_eq!(ea.step, eb.step, "{what}: eval step");
+        assert_eq!(ea.loss, eb.loss, "{what}: eval loss @ step {}", ea.step);
+        assert_eq!(ea.accuracy, eb.accuracy, "{what}: eval acc @ step {}", ea.step);
+        assert_eq!(ea.total_bytes, eb.total_bytes, "{what}: eval bytes @ step {}", ea.step);
+        assert_eq!(
+            ea.consensus_error, eb.consensus_error,
+            "{what}: consensus error @ step {}",
+            ea.step
+        );
+    }
+}
+
+#[test]
+fn seedflood_event_uniform_reduces_to_lockstep() {
+    let lockstep = run(base_cfg(Method::SeedFlood));
+    let event = run_event(Method::SeedFlood, "uniform");
+    assert_trajectory_identical(&lockstep, &event, "seedflood event/uniform");
+    assert_eq!(lockstep.time_model, "lockstep");
+    assert_eq!(event.time_model, "event");
+    // uniform rates: makespan is exactly the nominal step count, no idling
+    assert_eq!(event.virtual_makespan, 6.0);
+    assert_eq!(event.idle_frac, 0.0);
+    assert_eq!(event.client_steps, vec![6; 8]);
+    assert!(event.total_bytes > 0);
+}
+
+#[test]
+fn dsgd_event_uniform_reduces_to_lockstep() {
+    let lockstep = run(base_cfg(Method::Dsgd));
+    let event = run_event(Method::Dsgd, "uniform");
+    assert_trajectory_identical(&lockstep, &event, "dsgd event/uniform");
+    assert_eq!(event.virtual_makespan, 6.0);
+    assert_eq!(event.idle_frac, 0.0);
+}
+
+#[test]
+fn barrier_methods_are_rate_invariant_but_pay_in_time() {
+    // the lockstep adapter: stragglers cannot change a barrier method's
+    // results — only its clock
+    for method in [Method::Dsgd, Method::ChocoSgd, Method::Dzsgd] {
+        let lockstep = run(base_cfg(method));
+        let slow = run_event(method, "stragglers:0.25,4");
+        assert_trajectory_identical(&lockstep, &slow, &format!("{method:?} stragglers"));
+        // 2 of 8 clients run 4× slower: every iteration costs the cohort
+        // max (4 nominal steps), and 6/8 fast clients idle through 3/4 of
+        // each one
+        assert_eq!(slow.virtual_makespan, 24.0, "{method:?}");
+        assert!(
+            (slow.idle_frac - 0.5625).abs() < 1e-9,
+            "{method:?}: idle {}",
+            slow.idle_frac
+        );
+    }
+}
+
+#[test]
+fn seedflood_stragglers_report_a_staleness_distribution() {
+    let r = run_event(Method::SeedFlood, "stragglers:0.25,4");
+    assert_eq!(r.time_model, "event");
+    assert_eq!(r.rates, "stragglers:0.25,4");
+    // async: nobody waits — makespan is the stragglers' own pace
+    assert_eq!(r.virtual_makespan, 24.0);
+    assert_eq!(r.client_steps, vec![6; 8]);
+    // stragglers lag the nominal clock, so their flooded updates apply
+    // late: the distribution must be visible, ordered, and bounded by the
+    // recorded maximum
+    assert!(r.max_staleness > 0, "stragglers must induce staleness");
+    assert!(r.staleness_p99 > 0.0, "p99 must surface the straggler tail");
+    assert!(r.staleness_p50 <= r.staleness_p90);
+    assert!(r.staleness_p90 <= r.staleness_p99);
+    assert!(r.staleness_p99 <= r.max_staleness as f64);
+    // and the run still trains sanely
+    assert!(r.final_loss.is_finite());
+    assert!((0.0..=1.0).contains(&r.gmp));
+    assert_eq!(r.train_losses.len(), 6);
+    assert_eq!(r.delivery_ratio, 1.0, "no faults: everything sent is delivered");
+}
+
+#[test]
+fn stragglers_crossing_a_basis_refresh_settle_pending_coefficients() {
+    // regression: the τ-periodic basis refresh follows the most advanced
+    // client, so stragglers can hold coefficients accumulated against the
+    // old basis at the boundary — begin_step must flush them *before*
+    // regenerating (coefficients are basis-relative). refresh=2 forces a
+    // boundary crossing every other step.
+    let mk = || {
+        let cfg = ExperimentConfig {
+            time_model: TimeModel::Event,
+            rates: "stragglers:0.25,4".into(),
+            refresh: 2,
+            ..base_cfg(Method::SeedFlood)
+        };
+        run(cfg)
+    };
+    let r = mk();
+    assert!(r.final_loss.is_finite());
+    assert!((0.0..=1.0).contains(&r.gmp));
+    assert_eq!(r.train_losses.len(), 6);
+    assert_trajectory_identical(&r, &mk(), "stragglers+refresh repeat");
+}
+
+#[test]
+fn event_runs_are_reproducible() {
+    let a = run_event(Method::SeedFlood, "lognormal:0.5");
+    let b = run_event(Method::SeedFlood, "lognormal:0.5");
+    assert_trajectory_identical(&a, &b, "seedflood lognormal repeat");
+    assert_eq!(a.virtual_makespan, b.virtual_makespan);
+    assert_eq!(a.idle_frac, b.idle_frac);
+}
+
+#[test]
+fn jitter_charges_barrier_methods_the_straggler_tax() {
+    // per-step duration noise: a barrier pays Σ_t max_i dur, async pays
+    // max_i Σ_t dur ≤ Σ_t max_i dur. Same speed model either way
+    // (durations are pure functions of (seed, client, step)), so the gap
+    // is exactly the barrier tax.
+    let barrier = run_event(Method::Dzsgd, "jitter:0.8");
+    let flood = run_event(Method::SeedFlood, "jitter:0.8");
+    assert!(
+        barrier.virtual_makespan >= flood.virtual_makespan,
+        "Σ_t max ({}) can never undercut max Σ_t ({})",
+        barrier.virtual_makespan,
+        flood.virtual_makespan
+    );
+    // with 8 clients drawing independent per-step noise, the per-step max
+    // exceeds the nominal duration and no client is uniformly slowest
+    assert!(barrier.virtual_makespan > 6.0, "jitter must inflate the barrier clock");
+    assert!(barrier.idle_frac > 0.0, "someone must wait at a jittered barrier");
+}
+
+#[test]
+fn event_mode_composes_with_netcond_faults() {
+    // churn + loss + stragglers together: the schedule clock and delivery
+    // delays are re-keyed to virtual time; the run must stay sane and
+    // deterministic
+    let mk = || {
+        let cfg = ExperimentConfig {
+            time_model: TimeModel::Event,
+            rates: "stragglers:0.25,3".into(),
+            netcond: "loss=0.05;delay=1;node:3@2..4;repair=2;seed=11".into(),
+            ..base_cfg(Method::SeedFlood)
+        };
+        run(cfg)
+    };
+    let r = mk();
+    assert!(r.dropped_messages > 0, "faults must actually fire");
+    assert!(r.delivery_ratio < 1.0);
+    assert!(r.final_loss.is_finite());
+    assert!((0.0..=1.0).contains(&r.gmp));
+    assert!(r.max_staleness > 0);
+    let r2 = mk();
+    assert_trajectory_identical(&r, &r2, "event+netcond repeat");
+}
+
+#[test]
+fn lockstep_rejects_non_uniform_rates() {
+    let cfg = ExperimentConfig {
+        rates: "stragglers:0.5,2".into(), // time_model stays lockstep
+        ..base_cfg(Method::SeedFlood)
+    };
+    let env = Env::synthetic(cfg).unwrap();
+    assert!(sim::run_with_env(&env).is_err());
+}
+
+#[test]
+fn single_client_methods_run_under_the_event_engine() {
+    let cfg = ExperimentConfig {
+        clients: 1,
+        time_model: TimeModel::Event,
+        rates: "lognormal:0.5".into(),
+        ..base_cfg(Method::SubCge)
+    };
+    let r = run(cfg);
+    assert!(r.final_loss.is_finite());
+    assert_eq!(r.client_steps, vec![6]);
+    assert!(r.virtual_makespan > 0.0);
+}

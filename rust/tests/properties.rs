@@ -4,9 +4,12 @@
 
 use std::collections::HashSet;
 
+use seedflood::config::{ExperimentConfig, Method};
 use seedflood::flood::{flood_rounds, FloodDedup, FloodState};
 use seedflood::net::{MsgId, Network, SeedUpdate};
 use seedflood::netcond::NetCond;
+use seedflood::sched::TimeModel;
+use seedflood::sim::{self, Env};
 use seedflood::subcge::{apply_uavt, CoeffAccum, SubspaceBasis};
 use seedflood::tensor::{ParamVec, Tensor};
 use seedflood::topology::{Kind, Topology};
@@ -405,6 +408,79 @@ fn prop_network_byte_accounting_additive() {
         }
         if net.acct.total_bytes != expected {
             return Err(format!("{} != {expected}", net.acct.total_bytes));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_engine_uniform_rates_reduce_to_lockstep() {
+    // the reduction contract of the virtual-time engine (ISSUE 4): with
+    // uniform rates and zero delay, `--time-model event` produces a
+    // RunRecord whose trajectory is bit-identical to `--time-model
+    // lockstep` — for the async path (SeedFlood) and the barrier adapter
+    // (DSGD) alike, across random small configurations. Engine-identity
+    // and timing fields (time_model, virtual_makespan, idle_frac,
+    // client_steps, wall/phase clocks) describe the engine, not the
+    // trajectory, and are excluded by construction.
+    check("event-reduces-to-lockstep", 6, |g| {
+        let cfg = ExperimentConfig {
+            method: *g.choose(&[Method::SeedFlood, Method::Dsgd]),
+            clients: g.usize_in(2, 5),
+            steps: g.usize_in(2, 4),
+            topology: *g.choose(&[Kind::Ring, Kind::Complete, Kind::Star]),
+            local_steps: g.usize_in(1, 2),
+            flood_steps: g.usize_in(0, 2),
+            eval_every: g.usize_in(0, 2),
+            // a small period makes runs cross basis-refresh boundaries,
+            // covering begin_step's pre-refresh settle in both engines
+            refresh: *g.choose(&[2, 1000]),
+            lr: 1e-2,
+            task: "sst2".into(),
+            model: "synthetic".into(),
+            ..Default::default()
+        };
+        let what = format!(
+            "{:?} n={} steps={} {:?} k={}",
+            cfg.method, cfg.clients, cfg.steps, cfg.topology, cfg.flood_steps
+        );
+        let run = |tm: TimeModel| {
+            let cfg = ExperimentConfig { time_model: tm, ..cfg.clone() };
+            sim::run_with_env(&Env::synthetic(cfg).map_err(|e| e.to_string())?)
+                .map_err(|e| e.to_string())
+        };
+        let lock = run(TimeModel::Lockstep)?;
+        let event = run(TimeModel::Event)?;
+        if lock.train_losses != event.train_losses {
+            return Err(format!("{what}: train losses diverged"));
+        }
+        if lock.gmp != event.gmp || lock.final_loss != event.final_loss {
+            return Err(format!("{what}: final eval diverged"));
+        }
+        if lock.total_bytes != event.total_bytes
+            || lock.per_edge_bytes != event.per_edge_bytes
+        {
+            return Err(format!(
+                "{what}: bytes diverged ({} vs {})",
+                lock.total_bytes, event.total_bytes
+            ));
+        }
+        if lock.flood_duplicates != event.flood_duplicates
+            || lock.max_staleness != event.max_staleness
+            || lock.staleness_p50 != event.staleness_p50
+            || lock.staleness_p99 != event.staleness_p99
+        {
+            return Err(format!("{what}: flood metrics diverged"));
+        }
+        if lock.evals.len() != event.evals.len() {
+            return Err(format!("{what}: eval point counts diverged"));
+        }
+        for (a, b) in lock.evals.iter().zip(event.evals.iter()) {
+            if (a.step, a.loss, a.accuracy, a.total_bytes, a.consensus_error)
+                != (b.step, b.loss, b.accuracy, b.total_bytes, b.consensus_error)
+            {
+                return Err(format!("{what}: eval point @ step {} diverged", a.step));
+            }
         }
         Ok(())
     });
