@@ -1,0 +1,40 @@
+//! Env-core cache microbench (ISSUE 5): what the sweep driver saves per
+//! cell. `EnvCore::build` pays for backend construction, dataset
+//! generation, batchification and the uniform partition; a cell run from
+//! a cached core only re-derives the seeded θ⁰ (`Env::from_core`). The
+//! ratio between the two rows is the per-cell setup speedup of an
+//! N-seed × M-method sweep over one (model, task, clients) group.
+//!
+//! Run: cargo bench --bench sweep_cache
+
+use std::sync::Arc;
+
+use seedflood::config::ExperimentConfig;
+use seedflood::sim::{CoreKey, Env, EnvCore};
+use seedflood::util::bench::Bencher;
+
+fn main() {
+    let cfg = ExperimentConfig {
+        model: "synthetic".into(),
+        task: "sst2".into(),
+        clients: 16,
+        ..Default::default()
+    };
+    let mut b = Bencher::coarse();
+    b.bench("EnvCore::build (synthetic, 16 clients)", || {
+        EnvCore::build(CoreKey::of(&cfg)).unwrap()
+    });
+    let core = Arc::new(EnvCore::build(CoreKey::of(&cfg)).unwrap());
+    let mut seed = 0u64;
+    b.bench("Env::from_core (cached core, fresh seed)", || {
+        seed += 1;
+        Env::from_core(core.clone(), ExperimentConfig { seed, ..cfg.clone() }).unwrap()
+    });
+    let build = b.results[0].median_s();
+    let derive = b.results[1].median_s();
+    println!(
+        "\ncached-core cell setup is {:.1}x cheaper than a from-scratch Env",
+        build / derive.max(1e-12)
+    );
+    print!("{}", b.summary());
+}

@@ -415,7 +415,7 @@ impl Space {
     pub fn init_client(&self, env: &Env) -> ParamVec {
         match self {
             Space::Full => env.init_params.clone(),
-            Space::Lora { .. } => ParamStore::init_lora(&env.manifest, env.cfg.seed),
+            Space::Lora { .. } => ParamStore::init_lora(env.manifest(), env.cfg.seed),
         }
     }
 

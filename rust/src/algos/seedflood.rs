@@ -81,7 +81,7 @@ impl SeedFlood {
         );
         let n = env.n_clients();
         let basis = SubspaceBasis::new(
-            &env.manifest,
+            env.manifest(),
             env.cfg.rank,
             env.cfg.refresh,
             env.cfg.seed ^ 0x5EED_F100D,

@@ -30,7 +30,7 @@ impl SingleZo {
     pub fn build(env: &Env, subcge: bool) -> (Box<dyn Algorithm>, Vec<ClientState>) {
         assert_eq!(env.n_clients(), 1, "single-client methods need --clients 1");
         let basis = subcge.then(|| {
-            SubspaceBasis::new(&env.manifest, env.cfg.rank, env.cfg.refresh,
+            SubspaceBasis::new(env.manifest(), env.cfg.rank, env.cfg.refresh,
                                env.cfg.seed ^ 0x5EED_F100D)
         });
         let space = Space::Full;

@@ -185,6 +185,17 @@ impl ExperimentConfig {
     /// Build from CLI args (every field overridable).
     pub fn from_args(args: &Args) -> Result<ExperimentConfig> {
         let mut c = ExperimentConfig::default();
+        c.overlay_args(args)?;
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Apply CLI options over the current values — the body of
+    /// [`Self::from_args`], split out so the sweep driver can layer CLI
+    /// flags on top of a TOML-loaded base (no validation here; callers
+    /// validate once all sources are applied).
+    pub fn overlay_args(&mut self, args: &Args) -> Result<()> {
+        let c = self;
         if let Some(m) = args.get("method") {
             c.method = match Method::parse(m) {
                 Some(m) => m,
@@ -231,8 +242,7 @@ impl ExperimentConfig {
             };
         }
         c.rates = args.get_or("rates", &c.rates).to_string();
-        c.validate()?;
-        Ok(c)
+        Ok(())
     }
 
     /// Cross-field validation shared by every config source (CLI, TOML,

@@ -2,23 +2,29 @@
 //! per-experiment index). Each prints the paper's rows and writes
 //! `results/<id>.json`.
 
+pub mod sweep;
+
 use anyhow::Result;
 
 use crate::config::{ExperimentConfig, Method};
 use crate::metrics::RunRecord;
-use crate::sim::{self};
+use crate::sim::{self, Env};
 use crate::topology::Kind;
 use crate::util::human_bytes;
 use crate::util::json::Json;
 
-/// Run one config, reusing a cached Env when the (model, task, clients)
-/// triple matches — re-deriving dataset partitions when clients change.
+/// Run one config, reusing a cached Env core when the
+/// (model, task, clients) triple matches ([`sim::shared_core`]) —
+/// re-deriving only the per-run state (seeded θ⁰, Dirichlet partitions).
+/// A cached run is bit-identical to a fresh [`sim::run_experiment`]
+/// (tests/sweep.rs).
 pub fn run_one(cfg: ExperimentConfig) -> Result<RunRecord> {
     log::info!(
         "run: {} task={} clients={} topo={:?} steps={}",
         cfg.method.name(), cfg.task, cfg.clients, cfg.topology, cfg.steps
     );
-    sim::run_experiment(cfg)
+    let core = sim::shared_core(&cfg)?;
+    sim::run_with_env(&Env::from_core(core, cfg)?)
 }
 
 fn save_records(id: &str, records: &[RunRecord]) -> Result<String> {
@@ -27,6 +33,13 @@ fn save_records(id: &str, records: &[RunRecord]) -> Result<String> {
     let j = Json::Arr(records.iter().map(|r| r.to_json()).collect());
     std::fs::write(&path, j.to_string_pretty())?;
     Ok(path)
+}
+
+/// Load a `results/<id>.json` record array ([`RunRecord::from_json`]).
+pub fn load_records(path: &str) -> Result<Vec<RunRecord>> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text)?;
+    j.as_arr()?.iter().map(RunRecord::from_json).collect()
 }
 
 /// Methods of the paper's main grid (Fig 3 / Table 8).
@@ -174,31 +187,53 @@ pub fn fig6(
     Ok(records)
 }
 
-pub fn print_fig6(records: &[RunRecord], ranks: &[usize], periods: &[usize]) {
-    // group by task, print rank × period GMP grid
-    let tasks: Vec<String> = {
-        let mut t: Vec<String> = records.iter().map(|r| r.task.clone()).collect();
-        t.dedup();
-        t
-    };
-    for task in tasks {
-        println!("\n== {task}: GMP% by rank (rows) × refresh period (cols) ==");
-        print!("{:>6}", "rank");
-        for p in periods {
-            print!("{:>10}", p);
-        }
-        println!();
-        let mut it = records.iter().filter(|r| r.task == task);
-        for r0 in ranks {
-            print!("{:>6}", r0);
-            for _ in periods {
-                if let Some(r) = it.next() {
-                    print!("{:>10.2}", 100.0 * r.gmp);
-                }
-            }
-            println!();
+/// Render the fig6 rank × refresh-period GMP grids, one per task.
+///
+/// Cells are keyed by the records' `(task, rank, refresh)` provenance
+/// fields (ISSUE 5) — the old renderer walked an iterator positionally
+/// (with a consecutive-only `dedup` for tasks), so one missing or failed
+/// cell silently shifted every subsequent cell and truncated the grid.
+/// Absent cells (including every cell of a pre-ISSUE-5 file, which
+/// recorded no rank/refresh) render as an explicit `--`.
+pub fn render_fig6(records: &[RunRecord], ranks: &[usize], periods: &[usize]) -> String {
+    use std::fmt::Write as _;
+    let mut tasks: Vec<&str> = vec![];
+    for r in records {
+        if !tasks.contains(&r.task.as_str()) {
+            tasks.push(&r.task);
         }
     }
+    let mut out = String::new();
+    for task in tasks {
+        let _ = writeln!(out, "\n== {task}: GMP% by rank (rows) × refresh period (cols) ==");
+        let _ = write!(out, "{:>6}", "rank");
+        for p in periods {
+            let _ = write!(out, "{p:>10}");
+        }
+        let _ = writeln!(out);
+        for &rank in ranks {
+            let _ = write!(out, "{rank:>6}");
+            for &period in periods {
+                let cell = records
+                    .iter()
+                    .find(|r| r.task == task && r.rank == rank && r.refresh == period);
+                match cell {
+                    Some(r) => {
+                        let _ = write!(out, "{:>10.2}", 100.0 * r.gmp);
+                    }
+                    None => {
+                        let _ = write!(out, "{:>10}", "--");
+                    }
+                }
+            }
+            let _ = writeln!(out);
+        }
+    }
+    out
+}
+
+pub fn print_fig6(records: &[RunRecord], ranks: &[usize], periods: &[usize]) {
+    print!("{}", render_fig6(records, ranks, periods));
 }
 
 /// Fig 7: delayed flooding k sweep vs the DZSGD reference line.
@@ -307,20 +342,26 @@ pub fn dispatch(id: &str, base: ExperimentConfig, args: &crate::util::cli::Args)
             println!("saved {p}");
         }
         "fig1" => {
-            let records = fig3(&base, &tasks, base.topology)?;
+            // fig1 is a *view* over the fig3 grid: render it from saved
+            // records when they exist instead of re-running every cell
+            let records = match load_records("results/fig3.json") {
+                Ok(r) if !r.is_empty() => {
+                    println!("fig1: rendering from results/fig3.json ({} records)", r.len());
+                    r
+                }
+                _ => fig3(&base, &tasks, base.topology)?,
+            };
             print_fig1(&records);
             let p = save_records(id, &records)?;
             println!("saved {p}");
         }
         "scaling" | "fig4" | "table2" => {
-            let counts: Vec<usize> = args
-                .get_list("clients-list", &["4", "8", "16"])
-                .iter()
-                .map(|s| s.parse().unwrap())
-                .collect();
+            let counts = args.get_parse_list("clients-list", &[4usize, 8, 16])?;
             let records = scaling(&base, &tasks, &counts)?;
             print_table2(&records);
-            let p = save_records("scaling", &records)?;
+            // saved under the id actually invoked (the aliases used to
+            // all clobber results/scaling.json)
+            let p = save_records(id, &records)?;
             println!("saved {p}");
         }
         "table3" => {
@@ -330,16 +371,8 @@ pub fn dispatch(id: &str, base: ExperimentConfig, args: &crate::util::cli::Args)
             println!("saved {p}");
         }
         "fig6" => {
-            let ranks: Vec<usize> = args
-                .get_list("ranks", &["8", "16", "32", "64"])
-                .iter()
-                .map(|s| s.parse().unwrap())
-                .collect();
-            let periods: Vec<usize> = args
-                .get_list("periods", &["50", "500", "2000"])
-                .iter()
-                .map(|s| s.parse().unwrap())
-                .collect();
+            let ranks = args.get_parse_list("ranks", &[8usize, 16, 32, 64])?;
+            let periods = args.get_parse_list("periods", &[50usize, 500, 2000])?;
             let records = fig6(&base, &tasks, &ranks, &periods)?;
             print_fig6(&records, &ranks, &periods);
             let p = save_records(id, &records)?;
@@ -354,11 +387,7 @@ pub fn dispatch(id: &str, base: ExperimentConfig, args: &crate::util::cli::Args)
             println!("saved {p}");
         }
         "fig7" => {
-            let ks: Vec<usize> = args
-                .get_list("ks", &["1", "2", "4", "8", "16"])
-                .iter()
-                .map(|s| s.parse().unwrap())
-                .collect();
+            let ks = args.get_parse_list("ks", &[1usize, 2, 4, 8, 16])?;
             let records = fig7(&base, &tasks, &ks)?;
             print_table8(&records);
             let p = save_records(id, &records)?;
@@ -464,99 +493,21 @@ pub fn pretrain(
 
 /// `seedflood report` — re-render the markdown tables from saved
 /// `results/*.json` records (so EXPERIMENTS.md can be regenerated without
-/// re-running anything).
+/// re-running anything). Record parsing lives in [`RunRecord::from_json`]
+/// (shared with the sweep driver's resume path); sweep files (a JSON
+/// object with a `cells` section) re-render their aggregate table.
 pub fn report(paths: &[String]) -> Result<()> {
     for path in paths {
         let text = std::fs::read_to_string(path)?;
         let j = Json::parse(&text)?;
-        let records: Vec<RunRecord> = j
-            .as_arr()?
-            .iter()
-            .map(|r| {
-                Ok(RunRecord {
-                    method: r.get("method")?.as_str()?.to_string(),
-                    task: r.get("task")?.as_str()?.to_string(),
-                    model: r.get("model")?.as_str()?.to_string(),
-                    topology: r.get("topology")?.as_str()?.to_string(),
-                    clients: r.get("clients")?.as_usize()?,
-                    steps: r.get("steps")?.as_usize()?,
-                    gmp: r.get("gmp")?.as_f64()?,
-                    final_loss: r.get("final_loss")?.as_f64()?,
-                    total_bytes: r.get("total_bytes")?.as_f64()? as u64,
-                    per_edge_bytes: r.get("per_edge_bytes")?.as_f64()?,
-                    wall_secs: r.get("wall_secs")?.as_f64()?,
-                    // netcond fields are optional: records saved before
-                    // ISSUE 2 simply lack them (reliable-network defaults)
-                    netcond: r
-                        .get("netcond")
-                        .and_then(|v| v.as_str())
-                        .unwrap_or("")
-                        .to_string(),
-                    delivery_ratio: r
-                        .get("delivery_ratio")
-                        .and_then(|v| v.as_f64())
-                        .unwrap_or(1.0),
-                    dropped_messages: r
-                        .get("dropped_messages")
-                        .and_then(|v| v.as_f64())
-                        .unwrap_or(0.0) as u64,
-                    flood_duplicates: r
-                        .get("flood_duplicates")
-                        .and_then(|v| v.as_f64())
-                        .unwrap_or(0.0) as u64,
-                    max_staleness: r
-                        .get("max_staleness")
-                        .and_then(|v| v.as_f64())
-                        .unwrap_or(0.0) as u64,
-                    repair_bytes: r
-                        .get("repair_bytes")
-                        .and_then(|v| v.as_f64())
-                        .unwrap_or(0.0) as u64,
-                    repair_messages: r
-                        .get("repair_messages")
-                        .and_then(|v| v.as_f64())
-                        .unwrap_or(0.0) as u64,
-                    repair_gap_misses: r
-                        .get("repair_gap_misses")
-                        .and_then(|v| v.as_f64())
-                        .unwrap_or(0.0) as u64,
-                    flood_retained: r
-                        .get("flood_retained")
-                        .and_then(|v| v.as_f64())
-                        .unwrap_or(0.0) as u64,
-                    // time-model fields are optional too: records saved
-                    // before ISSUE 4 are implicitly lockstep runs
-                    time_model: r
-                        .get("time_model")
-                        .and_then(|v| v.as_str())
-                        .unwrap_or("lockstep")
-                        .to_string(),
-                    rates: r
-                        .get("rates")
-                        .and_then(|v| v.as_str())
-                        .unwrap_or("uniform")
-                        .to_string(),
-                    virtual_makespan: r
-                        .get("virtual_makespan")
-                        .and_then(|v| v.as_f64())
-                        .unwrap_or(0.0),
-                    idle_frac: r.get("idle_frac").and_then(|v| v.as_f64()).unwrap_or(0.0),
-                    staleness_p50: r
-                        .get("staleness_p50")
-                        .and_then(|v| v.as_f64())
-                        .unwrap_or(0.0),
-                    staleness_p90: r
-                        .get("staleness_p90")
-                        .and_then(|v| v.as_f64())
-                        .unwrap_or(0.0),
-                    staleness_p99: r
-                        .get("staleness_p99")
-                        .and_then(|v| v.as_f64())
-                        .unwrap_or(0.0),
-                    ..Default::default()
-                })
-            })
-            .collect::<Result<_>>()?;
+        if j.get("cells").is_ok() {
+            let cells = sweep::parse_cells(&j)?;
+            println!("\n### {path} (sweep, {} cells)", cells.len());
+            print!("{}", sweep::render_table(&sweep::aggregate(&cells)));
+            continue;
+        }
+        let records: Vec<RunRecord> =
+            j.as_arr()?.iter().map(RunRecord::from_json).collect::<Result<_>>()?;
         println!("\n### {path} ({} records)", records.len());
         print_table8(&records);
         print_fig1(&records);

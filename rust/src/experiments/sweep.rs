@@ -1,0 +1,751 @@
+//! Parallel multi-run sweep driver (ROADMAP item 1, ISSUE 5).
+//!
+//! A [`SweepSpec`] expands a configuration grid —
+//! methods × topologies × netcond scenarios × rate specs × seeds — into
+//! one [`ExperimentConfig`] per cell, fans the cells over the
+//! [`crate::util::par`] scoped-thread pool (one full `run_with_env` per
+//! cell, each on a [`crate::sim::shared_core`]-cached environment built
+//! once per (model, task, clients) group), and aggregates the per-seed
+//! records into per-group mean±std GMP / cost / staleness.
+//!
+//! Everything lands in a single `results/sweep_<name>.json`:
+//!
+//! ```json
+//! { "name": "...",
+//!   "cells":  [ { "key": { method, topology, netcond, rates, seed },
+//!                 "record": { ...RunRecord... } }, ... ],
+//!   "groups": [ { method, topology, netcond, rates, seeds,
+//!                 gmp_mean, gmp_std, ... }, ... ] }
+//! ```
+//!
+//! Sweeps are **resumable**: the output file is checkpointed after every
+//! completed cell, and cells whose key is already present in it are
+//! skipped on re-invocation — so an interrupted (Ctrl-C, OOM-killed),
+//! partially failed, or partially *panicked* sweep (panics are caught and
+//! charged to their cell) picks up where it left off, and a widened grid
+//! re-runs only the new cells.
+//!
+//! # Determinism
+//!
+//! Cell results are collected in expansion order regardless of how the OS
+//! schedules the workers, each cell runs with `threads = 1` (the sweep
+//! pool owns the parallelism), and groups aggregate their seeds in
+//! expansion order — so the `groups` section (and every trajectory field
+//! of `cells`; wall-clock timing necessarily varies) is bit-identical for
+//! every `--threads` value (tests/sweep.rs).
+//!
+//! # Grammar
+//!
+//! CLI: `--methods seedflood,dsgd` `--topologies ring,torus`
+//! `--netconds reliable,lossy-ring` (`reliable`/`none`/empty = the fault-
+//! free network) `--rates uniform/lognormal:0.5` (slash-separated — rate
+//! specs contain commas) `--seeds 0,1,2`. The same axes live in a TOML
+//! `[sweep]` table (string values, same separators) under `--config
+//! <file.toml>`, whose root table holds ordinary experiment keys;
+//! precedence is CLI > TOML > defaults. Cells with a non-uniform rate
+//! spec automatically select the event engine.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{toml, ExperimentConfig, Method};
+use crate::metrics::RunRecord;
+use crate::sched::{RateSpec, TimeModel};
+use crate::sim::{self, Env};
+use crate::topology::Kind;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::{human_bytes, par, stats};
+
+/// Grid coordinates of one sweep cell. The key — not the possibly
+/// preset-pinned topology the run reports — is what resume matching and
+/// grouping use, so a `lossy-ring` cell keyed under `topology = "ring"`
+/// stays addressable even though its record says the same thing.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CellKey {
+    pub method: String,
+    pub topology: String,
+    pub netcond: String,
+    pub rates: String,
+    pub seed: u64,
+}
+
+impl CellKey {
+    /// Aggregation identity: every axis except the seed.
+    pub fn group(&self) -> GroupKey {
+        GroupKey {
+            method: self.method.clone(),
+            topology: self.topology.clone(),
+            netcond: self.netcond.clone(),
+            rates: self.rates.clone(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(&self.method)),
+            ("topology", Json::str(&self.topology)),
+            ("netcond", Json::str(&self.netcond)),
+            ("rates", Json::str(&self.rates)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<CellKey> {
+        Ok(CellKey {
+            method: j.get("method")?.as_str()?.to_string(),
+            topology: j.get("topology")?.as_str()?.to_string(),
+            netcond: j.get("netcond")?.as_str()?.to_string(),
+            rates: j.get("rates")?.as_str()?.to_string(),
+            seed: j.get("seed")?.as_f64()? as u64,
+        })
+    }
+}
+
+/// A [`CellKey`] minus the seed: the unit sweep statistics aggregate over.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct GroupKey {
+    pub method: String,
+    pub topology: String,
+    pub netcond: String,
+    pub rates: String,
+}
+
+/// Per-group (mean, sample std) over the group's seeds. Std is 0 for a
+/// single seed ([`stats::stddev`]).
+#[derive(Clone, Debug)]
+pub struct GroupAgg {
+    pub key: GroupKey,
+    pub seeds: usize,
+    pub gmp: (f64, f64),
+    pub final_loss: (f64, f64),
+    pub per_edge_bytes: (f64, f64),
+    pub staleness_p99: (f64, f64),
+    pub delivery_ratio: (f64, f64),
+}
+
+impl GroupAgg {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(&self.key.method)),
+            ("topology", Json::str(&self.key.topology)),
+            ("netcond", Json::str(&self.key.netcond)),
+            ("rates", Json::str(&self.key.rates)),
+            ("seeds", Json::num(self.seeds as f64)),
+            ("gmp_mean", Json::num(self.gmp.0)),
+            ("gmp_std", Json::num(self.gmp.1)),
+            ("final_loss_mean", Json::num(self.final_loss.0)),
+            ("final_loss_std", Json::num(self.final_loss.1)),
+            ("per_edge_bytes_mean", Json::num(self.per_edge_bytes.0)),
+            ("per_edge_bytes_std", Json::num(self.per_edge_bytes.1)),
+            ("staleness_p99_mean", Json::num(self.staleness_p99.0)),
+            ("staleness_p99_std", Json::num(self.staleness_p99.1)),
+            ("delivery_ratio_mean", Json::num(self.delivery_ratio.0)),
+            ("delivery_ratio_std", Json::num(self.delivery_ratio.1)),
+        ])
+    }
+}
+
+/// Group completed cells by [`CellKey::group`] and reduce each metric to
+/// mean±std over the group's seeds, in deterministic (BTreeMap key,
+/// seeds in cell order) order.
+pub fn aggregate(cells: &[(CellKey, RunRecord)]) -> Vec<GroupAgg> {
+    let mut groups: BTreeMap<GroupKey, Vec<&RunRecord>> = BTreeMap::new();
+    for (k, r) in cells {
+        groups.entry(k.group()).or_default().push(r);
+    }
+    groups
+        .into_iter()
+        .map(|(key, rs)| {
+            let col = |f: fn(&RunRecord) -> f64| {
+                let xs: Vec<f64> = rs.iter().map(|&r| f(r)).collect();
+                (stats::mean(&xs), stats::stddev(&xs))
+            };
+            GroupAgg {
+                key,
+                seeds: rs.len(),
+                gmp: col(|r| r.gmp),
+                final_loss: col(|r| r.final_loss),
+                per_edge_bytes: col(|r| r.per_edge_bytes),
+                staleness_p99: col(|r| r.staleness_p99),
+                delivery_ratio: col(|r| r.delivery_ratio),
+            }
+        })
+        .collect()
+}
+
+/// The comparison table a finished sweep prints: one row per group.
+pub fn render_table(groups: &[GroupAgg]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "\n{:<12} {:<10} {:<14} {:<18} {:>5} {:>14} {:>15} {:>19} {:>12}",
+        "method", "topology", "netcond", "rates", "seeds", "GMP%±std", "loss±std",
+        "cost/edge±std", "stale p99±"
+    );
+    for g in groups {
+        let nc = if g.key.netcond.is_empty() { "reliable" } else { g.key.netcond.as_str() };
+        let _ = writeln!(
+            out,
+            "{:<12} {:<10} {:<14} {:<18} {:>5} {:>8.2}±{:<5.2} {:>9.4}±{:<5.4} \
+             {:>10}±{:<8} {:>7.1}±{:<4.1}",
+            g.key.method,
+            g.key.topology,
+            nc,
+            g.key.rates,
+            g.seeds,
+            100.0 * g.gmp.0,
+            100.0 * g.gmp.1,
+            g.final_loss.0,
+            g.final_loss.1,
+            human_bytes(g.per_edge_bytes.0 as u64),
+            human_bytes(g.per_edge_bytes.1 as u64),
+            g.staleness_p99.0,
+            g.staleness_p99.1,
+        );
+    }
+    out
+}
+
+/// The sweep grid: axis value lists plus the base config every cell
+/// inherits its remaining fields from.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Output identity: the sweep writes `<out_dir>/sweep_<name>.json`.
+    pub name: String,
+    pub methods: Vec<Method>,
+    pub topologies: Vec<Kind>,
+    /// netcond scenario specs; "" = the reliable network.
+    pub netconds: Vec<String>,
+    /// rate specs (see [`RateSpec`]); non-uniform entries run their cells
+    /// under the event engine.
+    pub rates: Vec<String>,
+    pub seeds: Vec<u64>,
+    pub base: ExperimentConfig,
+    /// Sweep-pool width: how many cells run concurrently (0 = all cores).
+    /// Cells themselves run with `threads = 1`.
+    pub threads: usize,
+    pub out_dir: String,
+}
+
+impl SweepSpec {
+    /// Single-cell spec around `base`: every axis defaults to the base
+    /// config's value, so axes are opt-in per dimension.
+    pub fn new(base: ExperimentConfig) -> SweepSpec {
+        SweepSpec {
+            name: "default".into(),
+            methods: vec![base.method],
+            topologies: vec![base.topology],
+            netconds: vec![base.netcond.clone()],
+            rates: vec![base.rates.clone()],
+            seeds: vec![base.seed],
+            threads: base.threads,
+            out_dir: "results".into(),
+            base,
+        }
+    }
+
+    /// Build from the CLI: `--config <file.toml>` (root table = experiment
+    /// keys, `[sweep]` table = axes) over the defaults, then CLI options
+    /// over both. `--rates` is the sweep axis here (slash-separated), so
+    /// it is withheld from the base-config overlay.
+    pub fn from_args(args: &Args) -> Result<SweepSpec> {
+        let mut base = ExperimentConfig::default();
+        let mut doc = None;
+        if let Some(path) = args.get("config") {
+            let d = toml::parse_file(path)
+                .with_context(|| format!("reading sweep config {path}"))?;
+            base.apply_toml(&d.root)
+                .with_context(|| format!("applying root table of {path}"))?;
+            doc = Some(d);
+        }
+        let mut cfg_args = args.clone();
+        cfg_args.options.remove("rates"); // the axis, not the base field
+        base.overlay_args(&cfg_args)?;
+        base.validate()?;
+        let mut spec = SweepSpec::new(base);
+        if let Some(tbl) = doc.as_ref().and_then(|d| d.section("sweep")) {
+            spec.apply_toml(tbl)?;
+        }
+        spec.overlay_args(args)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Apply a TOML `[sweep]` table (string values, CLI separators).
+    pub fn apply_toml(&mut self, tbl: &toml::Table) -> Result<()> {
+        for (k, v) in tbl.iter() {
+            match k.as_str() {
+                "name" => self.name = v.as_str()?.to_string(),
+                "methods" => self.methods = parse_methods(v.as_str()?)?,
+                "topologies" => self.topologies = parse_topologies(v.as_str()?)?,
+                "netconds" => self.netconds = split_netconds(v.as_str()?),
+                "rates" => self.rates = split_rates(v.as_str()?),
+                "seeds" => self.seeds = parse_seeds(v.as_str()?)?,
+                "out_dir" => self.out_dir = v.as_str()?.to_string(),
+                other => bail!("unknown [sweep] key {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    fn overlay_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(n) = args.get("name") {
+            self.name = n.to_string();
+        }
+        if let Some(s) = args.get("methods") {
+            self.methods = parse_methods(s)?;
+        }
+        if let Some(s) = args.get("topologies") {
+            self.topologies = parse_topologies(s)?;
+        }
+        if let Some(s) = args.get("netconds") {
+            self.netconds = split_netconds(s);
+        }
+        if let Some(s) = args.get("rates") {
+            self.rates = split_rates(s);
+        }
+        if let Some(s) = args.get("seeds") {
+            self.seeds = parse_seeds(s)?;
+        }
+        if let Some(d) = args.get("out-dir") {
+            self.out_dir = d.to_string();
+        }
+        self.threads = self.base.threads;
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty()
+            || !self.name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            bail!("sweep name {:?} must be non-empty [A-Za-z0-9_-]", self.name);
+        }
+        for (axis, len) in [
+            ("methods", self.methods.len()),
+            ("topologies", self.topologies.len()),
+            ("netconds", self.netconds.len()),
+            ("rates", self.rates.len()),
+            ("seeds", self.seeds.len()),
+        ] {
+            if len == 0 {
+                bail!("sweep axis {axis} is empty");
+            }
+        }
+        // resume matching compares seeds parsed back from JSON, where
+        // numbers are f64: exact only up to 2^53
+        for &s in &self.seeds {
+            if s > (1u64 << 53) {
+                bail!("seed {s} exceeds 2^53 and would not round-trip through the \
+                       results file exactly (resume matching); use a smaller seed");
+            }
+        }
+        for r in &self.rates {
+            RateSpec::parse(r).with_context(|| format!("sweep rates entry {r:?}"))?;
+        }
+        for nc in &self.netconds {
+            if nc.is_empty() {
+                continue;
+            }
+            let (pin, _) = crate::netcond::resolve(nc, self.base.clients, self.base.steps)
+                .with_context(|| format!("sweep netconds entry {nc:?}"))?;
+            // a preset pins its topology: crossing it with a topologies
+            // axis would run identical cells mislabeled by axis value
+            if let Some(kind) = pin {
+                if self.topologies.len() > 1 {
+                    bail!(
+                        "netcond {nc:?} pins the topology to {kind:?}; crossing it \
+                         with {} topologies would run duplicate cells labeled with \
+                         the wrong topology — use a single --topologies value (or a \
+                         raw netcond spec, which leaves the topology free)",
+                        self.topologies.len()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the grid into (key, config) cells, in axis order (methods
+    /// outermost, seeds innermost). Non-uniform rate cells select the
+    /// event engine; every cell runs sequentially within itself
+    /// (`threads = 1` — the sweep pool owns the parallelism, and per-run
+    /// results are thread-count-invariant anyway).
+    pub fn expand(&self) -> Vec<(CellKey, ExperimentConfig)> {
+        let mut cells = vec![];
+        for &method in &self.methods {
+            for &topo in &self.topologies {
+                for nc in &self.netconds {
+                    for rt in &self.rates {
+                        for &seed in &self.seeds {
+                            let mut cfg = self.base.clone();
+                            cfg.method = method;
+                            cfg.topology = topo;
+                            cfg.netcond = nc.clone();
+                            cfg.rates = rt.clone();
+                            cfg.seed = seed;
+                            cfg.threads = 1;
+                            if !RateSpec::parse(rt)
+                                .map(|s| s.is_uniform())
+                                .unwrap_or(true)
+                            {
+                                cfg.time_model = TimeModel::Event;
+                            }
+                            let key = CellKey {
+                                method: method.name().to_string(),
+                                topology: topo.name().to_string(),
+                                netcond: nc.clone(),
+                                rates: rt.clone(),
+                                seed,
+                            };
+                            cells.push((key, cfg));
+                        }
+                    }
+                }
+            }
+        }
+        cells
+    }
+
+    pub fn path(&self) -> String {
+        format!("{}/sweep_{}.json", self.out_dir, self.name)
+    }
+
+    /// Run the sweep: skip cells already in the output file, pre-build
+    /// each distinct Env core exactly once, fan the rest over the thread
+    /// pool, aggregate, and save. Individual cell failures — `Err`s *and*
+    /// panics (caught per cell) — don't abort the sweep; the output file
+    /// is checkpointed after every completed cell, so an interrupted
+    /// (Ctrl-C, OOM-killed) invocation also resumes from what finished.
+    pub fn run(&self) -> Result<SweepOutcome> {
+        self.validate()?;
+        let path = self.path();
+        let done = load_done(&path)?;
+        let mut seen = BTreeSet::new();
+        let cells: Vec<(CellKey, ExperimentConfig)> = self
+            .expand()
+            .into_iter()
+            .filter(|(k, _)| seen.insert(k.clone())) // repeated list entries
+            .collect();
+        let mut pending: Vec<(CellKey, ExperimentConfig)> = cells
+            .iter()
+            .filter(|(k, _)| !done.contains_key(k))
+            .cloned()
+            .collect();
+        let skipped = cells.len() - pending.len();
+        log::info!(
+            "sweep {}: {} cells ({} already in {}), running {} on {} threads",
+            self.name,
+            cells.len(),
+            skipped,
+            path,
+            pending.len(),
+            par::num_threads(self.threads)
+        );
+        // build each distinct (model, task, clients) core once, before the
+        // fan-out — workers then only ever hit the cache
+        for (_, cfg) in &pending {
+            sim::shared_core(cfg)?;
+        }
+        let progress: Mutex<BTreeMap<CellKey, RunRecord>> = Mutex::new(BTreeMap::new());
+        let results: Vec<(CellKey, Result<RunRecord>)> =
+            par::par_map_mut(&mut pending, self.threads, |_, (key, cfg)| {
+                // a panic (e.g. an assert deep in an algorithm) must cost
+                // one cell, not the sweep — and not the pool worker
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    sim::shared_core(cfg)
+                        .and_then(|core| Env::from_core(core, cfg.clone()))
+                        .and_then(|env| sim::run_with_env(&env))
+                }))
+                .unwrap_or_else(|p| {
+                    Err(anyhow::anyhow!("cell panicked: {}", panic_message(p.as_ref())))
+                });
+                if let Ok(rec) = &run {
+                    // checkpoint: rewrite the file with everything
+                    // completed so far, so interruption loses nothing
+                    let mut prog = progress.lock().unwrap_or_else(|p| p.into_inner());
+                    prog.insert(key.clone(), rec.clone());
+                    let snapshot = assemble(&cells, &done, &prog);
+                    if let Err(e) = save(&path, &self.name, &snapshot, &aggregate(&snapshot)) {
+                        log::warn!("sweep {}: checkpoint save failed: {e}", self.name);
+                    }
+                }
+                (key.clone(), run)
+            });
+        let mut failed = vec![];
+        for (key, r) in results {
+            if let Err(e) = r {
+                failed.push((key, format!("{e:?}")));
+            }
+        }
+        let fresh = progress.into_inner().unwrap_or_else(|p| p.into_inner());
+        let ran = fresh.len();
+        let out_cells = assemble(&cells, &done, &fresh);
+        let groups = aggregate(&out_cells);
+        save(&path, &self.name, &out_cells, &groups)?;
+        Ok(SweepOutcome { path, ran, skipped, failed, cells: out_cells, groups })
+    }
+}
+
+/// What [`SweepSpec::run`] did and produced.
+pub struct SweepOutcome {
+    pub path: String,
+    /// cells executed this invocation
+    pub ran: usize,
+    /// cells skipped because the output file already had them
+    pub skipped: usize,
+    pub failed: Vec<(CellKey, String)>,
+    /// every completed cell (resumed + fresh), in expansion order
+    pub cells: Vec<(CellKey, RunRecord)>,
+    pub groups: Vec<GroupAgg>,
+}
+
+/// Parse the `cells` section of a sweep results file (also used by
+/// `seedflood report` to re-render sweep tables from disk).
+pub fn parse_cells(j: &Json) -> Result<Vec<(CellKey, RunRecord)>> {
+    j.get("cells")?
+        .as_arr()?
+        .iter()
+        .map(|c| Ok((CellKey::from_json(c.get("key")?)?, RunRecord::from_json(c.get("record")?)?)))
+        .collect()
+}
+
+/// Completed cells in output order: grid cells (expansion order, resumed
+/// before fresh) first, then completed cells outside the current grid (a
+/// narrower re-invocation) — those are preserved, never silently deleted.
+fn assemble(
+    cells: &[(CellKey, ExperimentConfig)],
+    done: &BTreeMap<CellKey, RunRecord>,
+    fresh: &BTreeMap<CellKey, RunRecord>,
+) -> Vec<(CellKey, RunRecord)> {
+    let mut out: Vec<(CellKey, RunRecord)> = cells
+        .iter()
+        .filter_map(|(k, _)| {
+            done.get(k).or_else(|| fresh.get(k)).map(|r| (k.clone(), r.clone()))
+        })
+        .collect();
+    let grid_keys: BTreeSet<&CellKey> = cells.iter().map(|(k, _)| k).collect();
+    for (k, r) in done {
+        if !grid_keys.contains(k) {
+            out.push((k.clone(), r.clone()));
+        }
+    }
+    out
+}
+
+/// Best-effort rendering of a caught panic payload.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn load_done(path: &str) -> Result<BTreeMap<CellKey, RunRecord>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return Ok(BTreeMap::new()), // no file yet: nothing done
+    };
+    let j = Json::parse(&text).with_context(|| {
+        format!("existing sweep file {path} is not valid JSON (delete it to start over)")
+    })?;
+    Ok(parse_cells(&j)
+        .with_context(|| format!("existing sweep file {path} has an unreadable cell"))?
+        .into_iter()
+        .collect())
+}
+
+fn save(
+    path: &str,
+    name: &str,
+    cells: &[(CellKey, RunRecord)],
+    groups: &[GroupAgg],
+) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let j = Json::obj(vec![
+        ("name", Json::str(name)),
+        (
+            "cells",
+            Json::Arr(
+                cells
+                    .iter()
+                    .map(|(k, r)| {
+                        Json::obj(vec![("key", k.to_json()), ("record", r.to_json())])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("groups", Json::Arr(groups.iter().map(|g| g.to_json()).collect())),
+    ]);
+    std::fs::write(path, j.to_string_pretty())?;
+    Ok(())
+}
+
+fn parse_methods(s: &str) -> Result<Vec<Method>> {
+    s.split(',')
+        .map(|x| x.trim())
+        .filter(|x| !x.is_empty())
+        .map(|x| Method::parse(x).ok_or_else(|| anyhow::anyhow!("unknown method {x:?}")))
+        .collect()
+}
+
+fn parse_topologies(s: &str) -> Result<Vec<Kind>> {
+    s.split(',')
+        .map(|x| x.trim())
+        .filter(|x| !x.is_empty())
+        .map(|x| Kind::parse(x).ok_or_else(|| anyhow::anyhow!("unknown topology {x:?}")))
+        .collect()
+}
+
+/// Comma-separated netcond scenarios; `reliable`/`none` (and a bare empty
+/// element, e.g. `--netconds ,lossy-ring`) mean the fault-free network.
+fn split_netconds(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|x| x.trim())
+        .map(|x| {
+            if x.eq_ignore_ascii_case("reliable") || x.eq_ignore_ascii_case("none") {
+                String::new()
+            } else {
+                x.to_string()
+            }
+        })
+        .collect()
+}
+
+/// Slash-separated rate specs (rate specs contain commas:
+/// `stragglers:0.25,4`). An empty list entry means `uniform`.
+fn split_rates(s: &str) -> Vec<String> {
+    s.split('/')
+        .map(|x| x.trim())
+        .map(|x| if x.is_empty() { "uniform".to_string() } else { x.to_string() })
+        .collect()
+}
+
+fn parse_seeds(s: &str) -> Result<Vec<u64>> {
+    s.split(',')
+        .map(|x| x.trim())
+        .filter(|x| !x.is_empty())
+        .map(|x| x.parse::<u64>().map_err(|e| anyhow::anyhow!("seed {x:?}: {e}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axis_parsers() {
+        assert_eq!(parse_methods("seedflood, dsgd").unwrap().len(), 2);
+        assert!(parse_methods("sgd").is_err());
+        assert_eq!(parse_topologies("ring,mesh").unwrap(), vec![Kind::Ring, Kind::Meshgrid]);
+        assert!(parse_topologies("donut").is_err());
+        assert_eq!(split_netconds("reliable,lossy-ring,none"), vec!["", "lossy-ring", ""]);
+        assert_eq!(split_netconds(",churn-er"), vec!["", "churn-er"]);
+        assert_eq!(
+            split_rates("uniform/stragglers:0.25,4/lognormal:0.5"),
+            vec!["uniform", "stragglers:0.25,4", "lognormal:0.5"]
+        );
+        assert_eq!(parse_seeds("0, 1,2").unwrap(), vec![0, 1, 2]);
+        assert!(parse_seeds("0,x").is_err());
+    }
+
+    #[test]
+    fn expand_crosses_every_axis_and_upgrades_time_model() {
+        let mut spec = SweepSpec::new(ExperimentConfig::default());
+        spec.methods = vec![Method::SeedFlood, Method::Dsgd];
+        spec.topologies = vec![Kind::Ring, Kind::Complete];
+        spec.netconds = vec!["".into(), "lossy-ring".into()];
+        spec.rates = vec!["uniform".into(), "lognormal:0.5".into()];
+        spec.seeds = vec![0, 1, 2];
+        let cells = spec.expand();
+        assert_eq!(cells.len(), 2 * 2 * 2 * 2 * 3);
+        // no duplicate coordinates
+        let keys: BTreeSet<&CellKey> = cells.iter().map(|(k, _)| k).collect();
+        assert_eq!(keys.len(), cells.len());
+        for (key, cfg) in &cells {
+            assert_eq!(cfg.threads, 1, "cells must not nest parallelism");
+            assert_eq!(cfg.seed, key.seed);
+            let expect_event = key.rates != "uniform";
+            assert_eq!(
+                cfg.time_model == TimeModel::Event,
+                expect_event,
+                "{key:?} time model"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let spec = SweepSpec::new(ExperimentConfig::default());
+        spec.validate().unwrap();
+        let mut bad = spec.clone();
+        bad.name = "no spaces".into();
+        assert!(bad.validate().is_err());
+        let mut bad = spec.clone();
+        bad.seeds.clear();
+        assert!(bad.validate().is_err());
+        let mut bad = spec.clone();
+        bad.rates = vec!["warp:9".into()];
+        assert!(bad.validate().is_err());
+        let mut bad = spec.clone();
+        bad.netconds = vec!["loss=nope".into()];
+        assert!(bad.validate().is_err());
+        // seeds above 2^53 would not round-trip through the JSON file
+        let mut bad = spec.clone();
+        bad.seeds = vec![u64::MAX];
+        assert!(bad.validate().is_err());
+        assert!(SweepSpec { seeds: vec![1 << 53], ..spec.clone() }.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_pinned_preset_crossed_with_topologies() {
+        // lossy-ring pins Kind::Ring: crossing it with a 2-topology axis
+        // would run identical cells labeled ring and torus
+        let mut spec = SweepSpec::new(ExperimentConfig::default());
+        spec.topologies = vec![Kind::Ring, Kind::Torus];
+        spec.netconds = vec!["lossy-ring".into()];
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("pins the topology"), "{err}");
+        // a single topology value is fine (the preset still pins it)...
+        spec.topologies = vec![Kind::Torus];
+        spec.validate().unwrap();
+        // ...and raw specs leave the topology axis free
+        spec.topologies = vec![Kind::Ring, Kind::Torus];
+        spec.netconds = vec!["loss=0.05".into()];
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn aggregate_groups_over_seeds_only() {
+        let rec = |gmp: f64| RunRecord { gmp, delivery_ratio: 1.0, ..Default::default() };
+        let key = |m: &str, seed| CellKey {
+            method: m.into(),
+            topology: "ring".into(),
+            netcond: String::new(),
+            rates: "uniform".into(),
+            seed,
+        };
+        let cells = vec![
+            (key("A", 0), rec(0.5)),
+            (key("A", 1), rec(0.7)),
+            (key("B", 0), rec(0.9)),
+        ];
+        let groups = aggregate(&cells);
+        assert_eq!(groups.len(), 2);
+        let a = groups.iter().find(|g| g.key.method == "A").unwrap();
+        assert_eq!(a.seeds, 2);
+        assert!((a.gmp.0 - 0.6).abs() < 1e-12);
+        assert!(a.gmp.1 > 0.0);
+        let b = groups.iter().find(|g| g.key.method == "B").unwrap();
+        assert_eq!((b.seeds, b.gmp.1), (1, 0.0));
+        assert!(render_table(&groups).contains("reliable"));
+    }
+}

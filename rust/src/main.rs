@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train        run one experiment configuration and report GMP + cost
+//!   sweep        run a methods × topologies × netconds × rates × seeds
+//!                grid in parallel, aggregate mean±std per group
 //!   experiment   regenerate a paper table/figure (fig1, fig3/table8,
 //!                scaling/fig4/table2, table3, fig6, fig7, churn)
 //!   topo         inspect a topology (diameter, spectral gap, edges)
@@ -11,6 +13,8 @@
 //!   seedflood train --method seedflood --clients 16 --topology ring \
 //!       --task sst2 --steps 400 --model tiny
 //!   seedflood train --method seedflood --model synthetic --netcond churn-er
+//!   seedflood sweep --name robust --model synthetic --methods seedflood,dsgd \
+//!       --netconds reliable,lossy-ring --seeds 0,1,2 --threads 4
 //!   seedflood experiment churn --scenarios lossy-ring,churn-er --steps 200
 //!   seedflood topo --topology meshgrid --clients 64
 
@@ -48,6 +52,7 @@ fn main() -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
         "experiment" => {
             let id = args
                 .positional
@@ -145,6 +150,30 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let spec = experiments::sweep::SweepSpec::from_args(args)?;
+    let outcome = spec.run()?;
+    print!("{}", experiments::sweep::render_table(&outcome.groups));
+    println!(
+        "\nsweep {}: {} cell(s) run, {} resumed from file, {} failed -> {}",
+        spec.name,
+        outcome.ran,
+        outcome.skipped,
+        outcome.failed.len(),
+        outcome.path
+    );
+    if !outcome.failed.is_empty() {
+        for (key, err) in &outcome.failed {
+            eprintln!("failed cell {key:?}: {err}");
+        }
+        anyhow::bail!(
+            "{} sweep cell(s) failed (completed cells were saved; re-invoke to resume)",
+            outcome.failed.len()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_topo(args: &Args) -> Result<()> {
     let kind = Kind::parse(args.get_or("topology", "ring"))
         .ok_or_else(|| anyhow::anyhow!("unknown topology"))?;
@@ -190,7 +219,7 @@ fn print_help() {
     println!(
         "seedflood — decentralized training via flooded seed-reconstructible ZO updates
 
-USAGE: seedflood <train|experiment|topo|info> [--options]
+USAGE: seedflood <train|sweep|experiment|pretrain|report|topo|info> [--options]
 
 train        --method <dsgd|choco|dsgd-lora|choco-lora|dzsgd|dzsgd-lora|seedflood|mezo|subcge>
              --model <tiny|small|base|synthetic> --task <sst2|rte|boolq|wic|multirc|record>
@@ -215,6 +244,20 @@ train        --method <dsgd|choco|dsgd-lora|choco-lora|dzsgd|dzsgd-lora|seedfloo
              uniform | lognormal:<sigma> | stragglers:<frac>,<slowdown> |
              jitter:<sigma>; default uniform)
              [--out results/run.json]
+sweep        run a config grid in parallel and aggregate mean±std per
+             (method, topology, netcond, rates) group over seeds:
+             --name ID (output: results/sweep_<ID>.json; cells already in
+             the file are skipped on re-invocation — sweeps resume)
+             --methods a,b --topologies a,b
+             --netconds reliable,lossy-ring,... (reliable/none = no faults)
+             --rates uniform/lognormal:0.5/... (slash-separated — rate
+             specs contain commas; non-uniform cells use the event engine)
+             --seeds 0,1,2
+             --threads N (cells in flight; each cell runs single-threaded.
+             aggregates are bit-identical for every thread count)
+             --config sweep.toml (root table = experiment keys, [sweep]
+             table = the axes above; CLI overrides TOML)
+             plus any train option as the base config for every cell
 experiment   <fig1|fig3|table8|scaling|fig4|table2|table3|fig6|fig7|churn>
              [--tasks a,b] [--scenarios lossy-ring,flaky-torus,churn-er]
 pretrain     --model tiny [--steps N --lr F --target-acc F] -> checkpoints/

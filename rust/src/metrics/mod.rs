@@ -27,6 +27,17 @@ pub struct RunRecord {
     pub topology: String,
     pub clients: usize,
     pub steps: usize,
+    /// RNG seed the run was configured with (init θ⁰, samplers, ZO
+    /// probes) — what distinguishes the runs a sweep aggregates over
+    pub seed: u64,
+    /// configured SubCGE subspace rank r (0 in records saved before
+    /// ISSUE 5 = unrecorded)
+    pub rank: usize,
+    /// configured SubCGE basis refresh period τ (0 = unrecorded)
+    pub refresh: usize,
+    /// configured flooding steps per iteration, as given (0 = network
+    /// diameter, the paper default)
+    pub flood_steps: usize,
     /// netcond fault scenario (preset name or spec string; "" = reliable)
     pub netcond: String,
     pub train_losses: Vec<f64>,
@@ -110,6 +121,19 @@ pub fn hist_percentile(hist: &[u64], p: f64) -> f64 {
     (hist.len() - 1) as f64
 }
 
+impl EvalPoint {
+    pub fn from_json(j: &Json) -> anyhow::Result<EvalPoint> {
+        Ok(EvalPoint {
+            step: j.get("step")?.as_usize()?,
+            loss: j.get("loss")?.as_f64()?,
+            accuracy: j.get("accuracy")?.as_f64()?,
+            total_bytes: j.get("total_bytes")?.as_f64()? as u64,
+            per_edge_bytes: j.get("per_edge_bytes")?.as_f64()?,
+            consensus_error: j.get("consensus_error")?.as_f64()?,
+        })
+    }
+}
+
 impl RunRecord {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -119,6 +143,11 @@ impl RunRecord {
             ("topology", Json::str(&self.topology)),
             ("clients", Json::num(self.clients as f64)),
             ("steps", Json::num(self.steps as f64)),
+            // JSON numbers are f64: seeds round-trip exactly up to 2^53
+            ("seed", Json::num(self.seed as f64)),
+            ("rank", Json::num(self.rank as f64)),
+            ("refresh", Json::num(self.refresh as f64)),
+            ("flood_steps", Json::num(self.flood_steps as f64)),
             ("netcond", Json::str(&self.netcond)),
             ("gmp", Json::num(self.gmp)),
             ("final_loss", Json::num(self.final_loss)),
@@ -175,6 +204,85 @@ impl RunRecord {
                 ),
             ),
         ])
+    }
+
+    /// Parse a record saved by [`Self::to_json`] — the single parsing
+    /// site shared by `seedflood report` and the sweep driver's resume
+    /// path (this used to live inline in `experiments::report`).
+    ///
+    /// Fields added after the seed release are optional, with the same
+    /// defaults the writers of that era implied: netcond fields default
+    /// to the reliable network (ISSUE 2), time-model fields to a lockstep
+    /// run (ISSUE 4), and the provenance fields `seed`/`rank`/`refresh`/
+    /// `flood_steps` to 0 = unrecorded (ISSUE 5). Everything
+    /// [`Self::to_json`] writes is parsed back, so
+    /// `from_json(&r.to_json())` reproduces `r` exactly
+    /// (rust/tests/properties.rs).
+    pub fn from_json(r: &Json) -> anyhow::Result<RunRecord> {
+        let opt_f64 = |k: &str, d: f64| r.get(k).and_then(|v| v.as_f64()).unwrap_or(d);
+        let opt_u64 = |k: &str| opt_f64(k, 0.0) as u64;
+        let opt_str = |k: &str, d: &str| {
+            r.get(k).and_then(|v| v.as_str()).unwrap_or(d).to_string()
+        };
+        let f64_arr = |k: &str| -> anyhow::Result<Vec<f64>> {
+            match r.get(k) {
+                Ok(v) => v.as_arr()?.iter().map(|x| x.as_f64()).collect(),
+                Err(_) => Ok(vec![]),
+            }
+        };
+        let evals = match r.get("evals") {
+            Ok(v) => v
+                .as_arr()?
+                .iter()
+                .map(EvalPoint::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            Err(_) => vec![],
+        };
+        let phase_ms = match r.get("phase_ms") {
+            Ok(v) => v
+                .as_arr()?
+                .iter()
+                .map(|p| Ok((p.get("phase")?.as_str()?.to_string(), p.get("ms")?.as_f64()?)))
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            Err(_) => vec![],
+        };
+        Ok(RunRecord {
+            method: r.get("method")?.as_str()?.to_string(),
+            task: r.get("task")?.as_str()?.to_string(),
+            model: r.get("model")?.as_str()?.to_string(),
+            topology: r.get("topology")?.as_str()?.to_string(),
+            clients: r.get("clients")?.as_usize()?,
+            steps: r.get("steps")?.as_usize()?,
+            seed: opt_u64("seed"),
+            rank: opt_f64("rank", 0.0) as usize,
+            refresh: opt_f64("refresh", 0.0) as usize,
+            flood_steps: opt_f64("flood_steps", 0.0) as usize,
+            netcond: opt_str("netcond", ""),
+            train_losses: f64_arr("train_losses")?,
+            evals,
+            gmp: r.get("gmp")?.as_f64()?,
+            final_loss: r.get("final_loss")?.as_f64()?,
+            total_bytes: r.get("total_bytes")?.as_f64()? as u64,
+            per_edge_bytes: r.get("per_edge_bytes")?.as_f64()?,
+            dropped_messages: opt_u64("dropped_messages"),
+            delivery_ratio: opt_f64("delivery_ratio", 1.0),
+            flood_duplicates: opt_u64("flood_duplicates"),
+            max_staleness: opt_u64("max_staleness"),
+            repair_bytes: opt_u64("repair_bytes"),
+            repair_messages: opt_u64("repair_messages"),
+            repair_gap_misses: opt_u64("repair_gap_misses"),
+            flood_retained: opt_u64("flood_retained"),
+            time_model: opt_str("time_model", "lockstep"),
+            rates: opt_str("rates", "uniform"),
+            virtual_makespan: opt_f64("virtual_makespan", 0.0),
+            idle_frac: opt_f64("idle_frac", 0.0),
+            client_steps: f64_arr("client_steps")?.iter().map(|&s| s as u64).collect(),
+            staleness_p50: opt_f64("staleness_p50", 0.0),
+            staleness_p90: opt_f64("staleness_p90", 0.0),
+            staleness_p99: opt_f64("staleness_p99", 0.0),
+            wall_secs: r.get("wall_secs")?.as_f64()?,
+            phase_ms,
+        })
     }
 
     pub fn save(&self, path: &str) -> anyhow::Result<()> {
@@ -244,6 +352,61 @@ mod tests {
                 .unwrap(),
             0.8
         );
+    }
+
+    #[test]
+    fn from_json_parses_what_to_json_writes() {
+        let mut r = RunRecord {
+            method: "SubCGE".into(),
+            task: "rte".into(),
+            model: "synthetic".into(),
+            topology: "ring".into(),
+            clients: 8,
+            steps: 120,
+            seed: 7,
+            rank: 64,
+            refresh: 500,
+            flood_steps: 4,
+            gmp: 0.71,
+            train_losses: vec![1.5, 1.2],
+            client_steps: vec![120, 120],
+            phase_ms: vec![("ge".into(), 12.5)],
+            ..Default::default()
+        };
+        r.evals.push(EvalPoint {
+            step: 60,
+            loss: 1.1,
+            accuracy: 0.6,
+            total_bytes: 2048,
+            per_edge_bytes: 128.0,
+            consensus_error: 1e-9,
+        });
+        let back = RunRecord::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.to_json(), r.to_json());
+        assert_eq!((back.seed, back.rank, back.refresh, back.flood_steps), (7, 64, 500, 4));
+        assert_eq!(back.evals.len(), 1);
+        assert_eq!(back.train_losses, vec![1.5, 1.2]);
+        assert_eq!(back.phase_ms, vec![("ge".into(), 12.5)]);
+    }
+
+    #[test]
+    fn from_json_defaults_fields_missing_from_old_records() {
+        // a record saved before ISSUE 2/4/5: only the seed-era fields
+        let old = r#"{
+          "method": "SeedFlood", "task": "sst2", "model": "tiny",
+          "topology": "ring", "clients": 16, "steps": 400,
+          "gmp": 0.8, "final_loss": 0.4, "total_bytes": 1000,
+          "per_edge_bytes": 12.5, "wall_secs": 3.5
+        }"#;
+        let r = RunRecord::from_json(&Json::parse(old).unwrap()).unwrap();
+        assert_eq!((r.seed, r.rank, r.refresh, r.flood_steps), (0, 0, 0, 0));
+        assert_eq!(r.netcond, "");
+        assert_eq!(r.delivery_ratio, 1.0);
+        assert_eq!(r.time_model, "lockstep");
+        assert_eq!(r.rates, "uniform");
+        assert!(r.evals.is_empty() && r.train_losses.is_empty());
+        // core fields stay strict: a record missing them is an error
+        assert!(RunRecord::from_json(&Json::parse(r#"{"method": "x"}"#).unwrap()).is_err());
     }
 
     #[test]

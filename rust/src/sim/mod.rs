@@ -30,6 +30,17 @@
 //! construction site, and the final record assembly, so the two time
 //! models cannot drift apart.
 //!
+//! # The [`Env`]/[`EnvCore`] split (ISSUE 5)
+//!
+//! Environment state is split by what it depends on: [`EnvCore`] holds
+//! the heavy pieces that are a pure function of
+//! (model, task, clients, artifacts_dir) — backend, dataset, eval
+//! batches, the uniform partition — and is cached process-wide
+//! ([`shared_core`]), while [`Env`] layers the cheap per-run state on top
+//! (config, seeded θ⁰, Dirichlet splits). A sweep or experiment grid
+//! builds each core exactly once; a run from a cached core is
+//! bit-identical to a from-scratch one (tests/sweep.rs).
+//!
 //! With `--netcond` set (ISSUE 2), the fault schedule advances
 //! ([`Network::set_step`]) before each iteration's hooks run (under the
 //! event driver: whenever the nominal iteration clock advances); fault
@@ -38,6 +49,10 @@
 //! (tested in tests/netcond.rs).
 
 pub mod event;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
@@ -63,20 +78,133 @@ use crate::util::timer::Timer;
 /// *task* is the same for every run; `cfg.seed` only drives init/probes.
 const SYNTHETIC_ORACLE_SEED: u64 = 0x51_E7_0D_AC;
 
-/// Everything an algorithm needs from the environment, borrowed immutably
-/// on the hot path (the network is threaded separately as `&mut`). `Env`
-/// is `Send + Sync`: worker threads call the loss oracle concurrently
-/// during the local-step fan-out.
-pub struct Env {
-    pub cfg: ExperimentConfig,
+/// Cache identity of an [`EnvCore`]: everything its contents are a
+/// function of. Keeping the key this small is what makes the core safely
+/// shareable across sweep cells that differ in seed, method, topology, or
+/// fault scenario.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CoreKey {
+    pub model: String,
+    pub task: String,
+    pub clients: usize,
+    pub artifacts_dir: String,
+}
+
+impl CoreKey {
+    pub fn of(cfg: &ExperimentConfig) -> CoreKey {
+        CoreKey {
+            model: cfg.model.clone(),
+            task: cfg.task.clone(),
+            clients: cfg.clients,
+            artifacts_dir: cfg.artifacts_dir.clone(),
+        }
+    }
+}
+
+/// The heavy, seed-independent part of a run environment: runtime backend,
+/// dataset, eval batches, and the uniform client partition — everything
+/// that is a pure function of its [`CoreKey`]. Built once per
+/// (model, task, clients) group and shared across sweep cells behind an
+/// `Arc` ([`shared_core`]); per-run state (seeded θ⁰, Dirichlet splits)
+/// lives on [`Env`].
+pub struct EnvCore {
+    pub key: CoreKey,
     pub manifest: Manifest,
     /// AOT/PJRT artifacts or the pure-rust synthetic oracle.
     pub backend: Backend,
     pub class_tokens: Vec<i32>,
     pub dataset: Dataset,
-    pub partitions: Vec<Vec<Example>>,
+    /// Seed-independent uniform client split; Dirichlet label-skew splits
+    /// depend on the run seed and live on [`Env`].
+    pub uniform_partitions: Vec<Vec<Example>>,
     pub test_batches: Vec<(Vec<i32>, Vec<i32>)>,
     pub val_batches: Vec<(Vec<i32>, Vec<i32>)>,
+}
+
+/// How many [`EnvCore`]s have been constructed process-wide — the probe
+/// behind the harness's exactly-once cache contract (tests/sweep.rs).
+static ENV_BUILDS: AtomicU64 = AtomicU64::new(0);
+
+pub fn env_builds() -> u64 {
+    ENV_BUILDS.load(Ordering::Relaxed)
+}
+
+fn core_cache() -> &'static Mutex<BTreeMap<CoreKey, Arc<EnvCore>>> {
+    static CACHE: OnceLock<Mutex<BTreeMap<CoreKey, Arc<EnvCore>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Process-global [`EnvCore`] cache, keyed by [`CoreKey`]. The build runs
+/// under the cache lock, so concurrent callers observe exactly one
+/// construction per key — this is what lets a 100-cell sweep (and the
+/// `experiment` grid loops via [`crate::experiments::run_one`]) build each
+/// environment once instead of once per cell. Entries live for the
+/// process lifetime.
+pub fn shared_core(cfg: &ExperimentConfig) -> Result<Arc<EnvCore>> {
+    let key = CoreKey::of(cfg);
+    let mut cache = core_cache().lock().unwrap_or_else(|p| p.into_inner());
+    if let Some(core) = cache.get(&key) {
+        return Ok(core.clone());
+    }
+    let core = Arc::new(EnvCore::build(key.clone())?);
+    cache.insert(key, core.clone());
+    Ok(core)
+}
+
+impl EnvCore {
+    /// Construct the core from scratch (bypassing [`shared_core`]). Every
+    /// construction increments the [`env_builds`] probe.
+    pub fn build(key: CoreKey) -> Result<EnvCore> {
+        ENV_BUILDS.fetch_add(1, Ordering::Relaxed);
+        if key.clients == 0 {
+            bail!("clients must be >= 1");
+        }
+        let (manifest, backend) = if key.model == "synthetic" {
+            let manifest = crate::oracle::synthetic_manifest();
+            let backend =
+                Backend::Synthetic(SyntheticOracle::new(&manifest, SYNTHETIC_ORACLE_SEED));
+            (manifest, backend)
+        } else {
+            let manifest_path = format!("{}/{}_manifest.json", key.artifacts_dir, key.model);
+            let manifest = Manifest::load(&manifest_path)?;
+            let backend = Backend::Aot(AotBackend::load(&key.artifacts_dir, &manifest)?);
+            (manifest, backend)
+        };
+        let spec = TaskSpec::named(&key.task)
+            .with_context(|| format!("unknown task {:?}", key.task))?;
+        let dataset = Dataset::generate(&spec, manifest.config.vocab, manifest.config.seq);
+        let uniform_partitions = dataset.partition(key.clients);
+        let b = manifest.config.batch;
+        let test_batches = batchify(&dataset.test, b);
+        let val_batches = batchify(&dataset.val, b);
+        Ok(EnvCore {
+            key,
+            class_tokens: CLASS_TOKENS.to_vec(),
+            manifest,
+            backend,
+            dataset,
+            uniform_partitions,
+            test_batches,
+            val_batches,
+        })
+    }
+}
+
+/// Everything an algorithm needs from the environment, borrowed immutably
+/// on the hot path (the network is threaded separately as `&mut`). `Env`
+/// is `Send + Sync`: worker threads call the loss oracle concurrently
+/// during the local-step fan-out.
+///
+/// The heavy state lives in a shared [`EnvCore`]; an `Env` adds only the
+/// per-run pieces (config, seeded θ⁰, optional Dirichlet split), so
+/// deriving one from a cached core ([`Env::from_core`]) is cheap and
+/// bit-identical to a from-scratch [`Env::new`] (tests/sweep.rs).
+pub struct Env {
+    pub cfg: ExperimentConfig,
+    pub core: Arc<EnvCore>,
+    /// Per-run Dirichlet label-skew split (`None` = the core's uniform
+    /// split; the Dirichlet draw depends on `cfg.seed`).
+    dirichlet_partitions: Option<Vec<Vec<Example>>>,
     /// shared θ⁰ — the paper's "pretrained" starting point (checkpoint if
     /// `cfg.init_from` is set, else seeded random init)
     pub init_params: ParamVec,
@@ -84,16 +212,8 @@ pub struct Env {
 
 impl Env {
     pub fn new(cfg: ExperimentConfig) -> Result<Env> {
-        if cfg.model == "synthetic" {
-            let manifest = crate::oracle::synthetic_manifest();
-            let backend =
-                Backend::Synthetic(SyntheticOracle::new(&manifest, SYNTHETIC_ORACLE_SEED));
-            return Self::assemble(cfg, manifest, backend);
-        }
-        let manifest_path = format!("{}/{}_manifest.json", cfg.artifacts_dir, cfg.model);
-        let manifest = Manifest::load(&manifest_path)?;
-        let backend = Backend::Aot(AotBackend::load(&cfg.artifacts_dir, &manifest)?);
-        Self::assemble(cfg, manifest, backend)
+        let core = Arc::new(EnvCore::build(CoreKey::of(&cfg))?);
+        Self::from_core(core, cfg)
     }
 
     /// Artifact-free environment on the synthetic oracle (tests, benches,
@@ -103,40 +223,37 @@ impl Env {
         Self::new(cfg)
     }
 
-    fn assemble(cfg: ExperimentConfig, manifest: Manifest, backend: Backend) -> Result<Env> {
-        let spec = TaskSpec::named(&cfg.task)
-            .with_context(|| format!("unknown task {:?}", cfg.task))?;
-        let dataset = Dataset::generate(&spec, manifest.config.vocab, manifest.config.seq);
-        if cfg.clients == 0 {
-            bail!("clients must be >= 1");
+    /// Assemble a run environment around a pre-built (typically
+    /// [`shared_core`]-cached) core, deriving only the cheap per-run
+    /// state. `cfg` must match the core's identity exactly.
+    pub fn from_core(core: Arc<EnvCore>, cfg: ExperimentConfig) -> Result<Env> {
+        let key = CoreKey::of(&cfg);
+        if key != core.key {
+            bail!("config identity {key:?} does not match the Env core {:?}", core.key);
         }
-        let partitions = if cfg.dirichlet_alpha > 0.0 {
-            dataset.partition_dirichlet(cfg.clients, cfg.dirichlet_alpha, cfg.seed)
+        let dirichlet_partitions = if cfg.dirichlet_alpha > 0.0 {
+            Some(core.dataset.partition_dirichlet(cfg.clients, cfg.dirichlet_alpha, cfg.seed))
         } else {
-            dataset.partition(cfg.clients)
+            None
         };
-        let b = manifest.config.batch;
-        let test_batches = batchify(&dataset.test, b);
-        let val_batches = batchify(&dataset.val, b);
         let init_params = if cfg.init_from.is_empty() {
-            ParamStore::init(&manifest, cfg.seed)
+            ParamStore::init(&core.manifest, cfg.seed)
         } else {
             let p = checkpoint::load(&cfg.init_from)?;
-            checkpoint::check_compatible(&p, &manifest)?;
+            checkpoint::check_compatible(&p, &core.manifest)?;
             p
         };
+        Ok(Env { cfg, core, dirichlet_partitions, init_params })
+    }
 
-        Ok(Env {
-            cfg,
-            class_tokens: CLASS_TOKENS.to_vec(),
-            manifest,
-            backend,
-            dataset,
-            partitions,
-            test_batches,
-            val_batches,
-            init_params,
-        })
+    pub fn manifest(&self) -> &Manifest {
+        &self.core.manifest
+    }
+
+    /// The per-client example partition: the run's Dirichlet split when
+    /// label skew is configured, else the core's shared uniform split.
+    pub fn partitions(&self) -> &[Vec<Example>] {
+        self.dirichlet_partitions.as_deref().unwrap_or(&self.core.uniform_partitions)
     }
 
     pub fn n_clients(&self) -> usize {
@@ -144,7 +261,7 @@ impl Env {
     }
 
     pub fn batch_shape(&self) -> (usize, usize) {
-        (self.manifest.config.batch, self.manifest.config.seq)
+        (self.core.manifest.config.batch, self.core.manifest.config.seq)
     }
 
     /// Per-client mini-batch samplers over the uniform partition.
@@ -157,7 +274,7 @@ impl Env {
     /// `(cfg.seed, client)`, so the threads-determinism contract is
     /// untouched.
     pub fn make_samplers(&self) -> Vec<BatchSampler> {
-        self.partitions
+        self.partitions()
             .iter()
             .enumerate()
             .map(|(i, p)| {
@@ -168,35 +285,37 @@ impl Env {
 
     /// (loss, #correct) of `params` on one batch.
     pub fn loss_acc(&self, params: &ParamVec, ids: &[i32], labels: &[i32]) -> Result<(f32, f32)> {
-        match &self.backend {
+        match &self.core.backend {
             Backend::Aot(be) => {
                 let (b, s) = self.batch_shape();
-                let args =
-                    crate::runtime::loss_args(params, ids, vec![b, s], labels, &self.class_tokens);
+                let args = crate::runtime::loss_args(
+                    params, ids, vec![b, s], labels, &self.core.class_tokens);
                 let out = be.exe_loss.run(&args)?;
                 be.rt.count_execution();
                 Ok((out[0].data[0], out[1].data[0]))
             }
             Backend::Synthetic(o) => {
-                Ok(o.loss_acc(params, ids, labels, self.manifest.config.seq))
+                Ok(o.loss_acc(params, ids, labels, self.core.manifest.config.seq))
             }
         }
     }
 
     /// (loss, grads) — the FO oracle (DSGD/ChocoSGD local step).
     pub fn grad(&self, params: &ParamVec, ids: &[i32], labels: &[i32]) -> Result<(f32, ParamVec)> {
-        match &self.backend {
+        match &self.core.backend {
             Backend::Aot(be) => {
                 let (b, s) = self.batch_shape();
-                let args =
-                    crate::runtime::loss_args(params, ids, vec![b, s], labels, &self.class_tokens);
+                let args = crate::runtime::loss_args(
+                    params, ids, vec![b, s], labels, &self.core.class_tokens);
                 let out = be.exe_grad.run(&args)?;
                 be.rt.count_execution();
                 let loss = out[0].data[0];
                 let grads = ParamVec::new(params.names.clone(), out[1..].to_vec());
                 Ok((loss, grads))
             }
-            Backend::Synthetic(o) => Ok(o.grad(params, ids, labels, self.manifest.config.seq)),
+            Backend::Synthetic(o) => {
+                Ok(o.grad(params, ids, labels, self.core.manifest.config.seq))
+            }
         }
     }
 
@@ -212,7 +331,7 @@ impl Env {
         args.extend(lora.tensors.iter().map(Arg::F32));
         args.push(Arg::I32(ids, vec![b, s]));
         args.push(Arg::I32(labels, vec![b]));
-        args.push(Arg::I32(&self.class_tokens, vec![2]));
+        args.push(Arg::I32(&self.core.class_tokens, vec![2]));
         args
     }
 
@@ -223,7 +342,7 @@ impl Env {
         ids: &[i32],
         labels: &[i32],
     ) -> Result<(f32, f32)> {
-        match &self.backend {
+        match &self.core.backend {
             Backend::Aot(be) => {
                 let args = self.lora_args(params, lora, ids, labels);
                 let out = be.exe_loss_lora.run(&args)?;
@@ -231,7 +350,7 @@ impl Env {
                 Ok((out[0].data[0], out[1].data[0]))
             }
             Backend::Synthetic(o) => {
-                Ok(o.loss_acc_lora(params, lora, ids, labels, self.manifest.config.seq))
+                Ok(o.loss_acc_lora(params, lora, ids, labels, self.core.manifest.config.seq))
             }
         }
     }
@@ -243,7 +362,7 @@ impl Env {
         ids: &[i32],
         labels: &[i32],
     ) -> Result<(f32, ParamVec)> {
-        match &self.backend {
+        match &self.core.backend {
             Backend::Aot(be) => {
                 let args = self.lora_args(params, lora, ids, labels);
                 let out = be.exe_grad_lora.run(&args)?;
@@ -253,7 +372,7 @@ impl Env {
                 Ok((loss, grads))
             }
             Backend::Synthetic(o) => {
-                Ok(o.grad_lora(params, lora, ids, labels, self.manifest.config.seq))
+                Ok(o.grad_lora(params, lora, ids, labels, self.core.manifest.config.seq))
             }
         }
     }
@@ -269,7 +388,7 @@ impl Env {
         params: &mut ParamVec,
         cache: Option<&mut DeviceBasisCache>,
     ) -> Result<()> {
-        match &self.backend {
+        match &self.core.backend {
             Backend::Synthetic(_) => {
                 accum.flush_rust(basis, params);
                 Ok(())
@@ -286,7 +405,7 @@ impl Env {
     /// Device-resident basis cache for [`Self::subcge_flush`] — `None` on
     /// the synthetic backend (nothing to upload).
     pub fn make_device_cache(&self, basis: &SubspaceBasis) -> Result<Option<DeviceBasisCache>> {
-        match &self.backend {
+        match &self.core.backend {
             Backend::Aot(be) => Ok(Some(DeviceBasisCache::new(basis, &be.rt)?)),
             Backend::Synthetic(_) => Ok(None),
         }
@@ -340,16 +459,16 @@ impl Env {
 
     /// Cheap eval subset used for periodic (non-final) evaluation points.
     pub fn quick_batches(&self) -> &[(Vec<i32>, Vec<i32>)] {
-        let k = self.val_batches.len().min(8);
-        &self.val_batches[..k]
+        let k = self.core.val_batches.len().min(8);
+        &self.core.val_batches[..k]
     }
 
     /// Validation batches used for best-checkpoint selection (paper
     /// Table 5: best val loss every tenth of training is evaluated on the
     /// held-out test set).
     pub fn select_batches(&self) -> &[(Vec<i32>, Vec<i32>)] {
-        let k = self.val_batches.len().min(24);
-        &self.val_batches[..k]
+        let k = self.core.val_batches.len().min(24);
+        &self.core.val_batches[..k]
     }
 }
 
@@ -473,6 +592,13 @@ impl<'e> RunCtx<'e> {
             topology: net.topology().kind.clone(),
             clients: cfg.clients,
             steps: cfg.steps,
+            // provenance (ISSUE 5): the configured values, recorded so two
+            // runs differing only in seed (or two fig6/fig7 grid cells)
+            // stay distinguishable in saved JSON
+            seed: cfg.seed,
+            rank: cfg.rank,
+            refresh: cfg.refresh,
+            flood_steps: cfg.flood_steps,
             netcond: cfg.netcond.clone(),
             time_model: cfg.time_model.name().to_string(),
             rates: cfg.rates.clone(),
@@ -563,7 +689,7 @@ impl<'e> RunCtx<'e> {
         if let Some(snap) = self.best.1.take() {
             self.algo.restore(&mut self.states, snap);
         }
-        let point = self.eval_point(self.env.cfg.steps, &self.env.test_batches)?;
+        let point = self.eval_point(self.env.cfg.steps, &self.env.core.test_batches)?;
         self.record.gmp = point.accuracy;
         self.record.final_loss = point.loss;
         self.record.evals.push(point);
@@ -644,7 +770,7 @@ mod tests {
             ..Default::default()
         })
         .unwrap();
-        assert_eq!(env.partitions.len(), 4);
+        assert_eq!(env.partitions().len(), 4);
         let (loss, acc) = env.eval_full(&env.init_params, env.quick_batches()).unwrap();
         assert!(loss.is_finite() && loss > 0.0);
         assert!((0.0..=1.0).contains(&acc));

@@ -54,6 +54,21 @@ impl Kind {
             _ => return None,
         })
     }
+
+    /// Canonical name: a string [`Kind::parse`] accepts back. This is the
+    /// *requested* kind — [`Topology::build`] may still report a different
+    /// `Topology::kind` (n = 1 degenerates to "singleton").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kind::Ring => "ring",
+            Kind::Meshgrid => "meshgrid",
+            Kind::Torus => "torus",
+            Kind::Complete => "complete",
+            Kind::Star => "star",
+            Kind::ErdosRenyi => "erdos-renyi",
+            Kind::SmallWorld => "small-world",
+        }
+    }
 }
 
 impl Topology {

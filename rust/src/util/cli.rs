@@ -74,6 +74,26 @@ impl Args {
             None => default.iter().map(|s| s.to_string()).collect(),
         }
     }
+
+    /// Comma-separated list option with every element parsed as `T`
+    /// (`--seeds 0,1,2`). Empty elements are skipped; a malformed element
+    /// is an error naming it (the experiment grids used to `unwrap()`
+    /// here and panic on typos).
+    pub fn get_parse_list<T>(&self, key: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: std::str::FromStr + Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|x| x.trim())
+                .filter(|x| !x.is_empty())
+                .map(|x| x.parse::<T>().map_err(|e| anyhow!("--{key} {x:?}: {e}")))
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -119,5 +139,14 @@ mod tests {
         let a = parse(&["--tasks", "sst2, rte,boolq"]);
         assert_eq!(a.get_list("tasks", &[]), vec!["sst2", "rte", "boolq"]);
         assert_eq!(a.get_list("other", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn typed_list_option() {
+        let a = parse(&["--seeds", "0, 1,2,", "--ranks", "8,oops"]);
+        assert_eq!(a.get_parse_list::<u64>("seeds", &[]).unwrap(), vec![0, 1, 2]);
+        assert_eq!(a.get_parse_list::<usize>("missing", &[7]).unwrap(), vec![7]);
+        let err = a.get_parse_list::<usize>("ranks", &[]).unwrap_err().to_string();
+        assert!(err.contains("oops"), "{err}");
     }
 }

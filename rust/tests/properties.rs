@@ -487,6 +487,73 @@ fn prop_event_engine_uniform_rates_reduce_to_lockstep() {
 }
 
 #[test]
+fn prop_runrecord_to_json_from_json_roundtrip() {
+    // RunRecord::from_json must parse back everything to_json writes —
+    // structurally, and through the textual form results files actually
+    // use (the sweep driver's resume path replays records from disk and
+    // must not perturb them; ISSUE 5 satellite)
+    use seedflood::metrics::{EvalPoint, RunRecord};
+    check("runrecord-roundtrip", 40, |g| {
+        let mut r = RunRecord {
+            method: (*g.choose(&["SeedFlood", "DSGD", "SubCGE"])).to_string(),
+            task: (*g.choose(&["sst2", "rte"])).to_string(),
+            model: "synthetic".to_string(),
+            topology: (*g.choose(&["ring", "torus", "singleton"])).to_string(),
+            clients: g.usize_in(1, 64),
+            steps: g.usize_in(1, 5000),
+            // JSON numbers are f64: seeds are exact up to 2^53
+            seed: g.rng.next_u64() >> 11,
+            rank: g.usize_in(0, 64),
+            refresh: g.usize_in(0, 5000),
+            flood_steps: g.usize_in(0, 16),
+            netcond: if g.bool() { "lossy-ring".into() } else { String::new() },
+            gmp: g.f32_in(0.0, 1.0) as f64,
+            final_loss: g.f32_in(0.0, 4.0) as f64,
+            total_bytes: g.usize_in(0, 1 << 30) as u64,
+            per_edge_bytes: g.f32_in(0.0, 1e6) as f64,
+            dropped_messages: g.usize_in(0, 999) as u64,
+            delivery_ratio: g.f32_in(0.0, 1.0) as f64,
+            max_staleness: g.usize_in(0, 40) as u64,
+            repair_bytes: g.usize_in(0, 9999) as u64,
+            flood_retained: g.usize_in(0, 4096) as u64,
+            time_model: (*g.choose(&["lockstep", "event"])).to_string(),
+            rates: (*g.choose(&["uniform", "stragglers:0.25,4"])).to_string(),
+            virtual_makespan: g.f32_in(0.0, 1e4) as f64,
+            idle_frac: g.f32_in(0.0, 1.0) as f64,
+            client_steps: (0..g.usize_in(0, 6)).map(|_| g.usize_in(0, 5000) as u64).collect(),
+            staleness_p99: g.usize_in(0, 64) as f64,
+            wall_secs: g.f32_in(0.0, 100.0) as f64,
+            train_losses: (0..g.usize_in(0, 5)).map(|_| g.f32_in(0.0, 4.0) as f64).collect(),
+            ..Default::default()
+        };
+        for _ in 0..g.usize_in(0, 3) {
+            r.evals.push(EvalPoint {
+                step: g.usize_in(0, 5000),
+                loss: g.f32_in(0.0, 4.0) as f64,
+                accuracy: g.f32_in(0.0, 1.0) as f64,
+                total_bytes: g.usize_in(0, 1 << 20) as u64,
+                per_edge_bytes: g.f32_in(0.0, 1e5) as f64,
+                consensus_error: g.f32_in(0.0, 1.0) as f64,
+            });
+        }
+        if g.bool() {
+            r.phase_ms.push(("ge".into(), g.f32_in(0.0, 500.0) as f64));
+        }
+        let j = r.to_json();
+        let back = RunRecord::from_json(&j).map_err(|e| e.to_string())?;
+        if back.to_json() != j {
+            return Err("structural roundtrip changed the record".into());
+        }
+        let reparsed = Json::parse(&j.to_string_pretty()).map_err(|e| e.to_string())?;
+        let back2 = RunRecord::from_json(&reparsed).map_err(|e| e.to_string())?;
+        if back2.to_json() != j {
+            return Err("textual roundtrip changed the record".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_delayed_flooding_eventually_covers() {
     // with any k >= 1, running enough iterations always reaches everyone
     check("delayed-covers", 20, |g| {

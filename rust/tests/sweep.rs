@@ -1,0 +1,305 @@
+//! Sweep-driver integration tests (ISSUE 5): the Env-core cache's
+//! exactly-once + bit-identical contract, thread-count-invariant
+//! aggregates, resume semantics, the fig6 grid renderer, and the
+//! CLI/TOML sweep grammar. Everything runs on the artifact-free
+//! synthetic backend.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use seedflood::config::{ExperimentConfig, Method};
+use seedflood::experiments::sweep::{SweepOutcome, SweepSpec};
+use seedflood::experiments::{render_fig6, run_one};
+use seedflood::metrics::RunRecord;
+use seedflood::sched::TimeModel;
+use seedflood::sim;
+use seedflood::topology::Kind;
+use seedflood::util::cli::Args;
+use seedflood::util::json::Json;
+
+/// The Env-build probe ([`sim::env_builds`]) is process-global; serialize
+/// the tests in this binary so concurrent builds don't skew the deltas.
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn base(steps: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        model: "synthetic".into(),
+        task: "sst2".into(),
+        clients: 4,
+        steps,
+        topology: Kind::Ring,
+        ..Default::default()
+    }
+}
+
+/// Fresh per-test output directory under the system tmp dir.
+fn tmp_dir(tag: &str) -> String {
+    let d = std::env::temp_dir().join(format!("seedflood_sweep_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d.display().to_string()
+}
+
+/// A record's trajectory identity: everything except the wall-clock
+/// timing fields, which legitimately vary run-to-run.
+fn strip_timing(j: Json) -> Json {
+    match j {
+        Json::Obj(mut m) => {
+            m.remove("wall_secs");
+            m.remove("phase_ms");
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+#[test]
+fn env_core_built_once_and_cached_run_equals_fresh() {
+    let _g = lock();
+    let mut spec = SweepSpec::new(base(6));
+    spec.name = "cache".into();
+    spec.out_dir = tmp_dir("cache");
+    spec.seeds = vec![0, 1, 2];
+    let before = sim::env_builds();
+    let out = spec.run().unwrap();
+    let built = sim::env_builds() - before;
+    // three cells, one (model, task, clients) group — at most one build
+    // (zero if an earlier run_one in this process already cached the key)
+    assert!(built <= 1, "sweep built {built} Env cores for one group");
+    assert_eq!((out.ran, out.skipped), (3, 0));
+
+    // the cached-core run is bit-identical to a fresh, uncached
+    // sim::run_experiment of the same cell config (timing fields aside)
+    let fresh = sim::run_experiment(ExperimentConfig { seed: 1, ..base(6) }).unwrap();
+    let cell = out.cells.iter().find(|(k, _)| k.seed == 1).unwrap();
+    assert_eq!(
+        strip_timing(cell.1.to_json()),
+        strip_timing(fresh.to_json()),
+        "cached-core run must reproduce the fresh run bit-for-bit"
+    );
+    // provenance fields made it into the record
+    assert_eq!(cell.1.seed, 1);
+    assert_eq!(cell.1.refresh, base(6).refresh);
+
+    // run_one hits the same process-global cache: no further builds
+    let before = sim::env_builds();
+    let one = run_one(ExperimentConfig { seed: 1, ..base(6) }).unwrap();
+    assert_eq!(sim::env_builds() - before, 0, "run_one must reuse the cached core");
+    assert_eq!(strip_timing(one.to_json()), strip_timing(fresh.to_json()));
+    let _ = std::fs::remove_dir_all(&spec.out_dir);
+}
+
+#[test]
+fn aggregates_bit_identical_across_thread_counts() {
+    let _g = lock();
+    let run = |threads: usize, tag: &str| -> (SweepOutcome, String) {
+        let mut spec = SweepSpec::new(base(5));
+        spec.name = format!("thr{threads}");
+        spec.out_dir = tmp_dir(tag);
+        spec.methods = vec![Method::SeedFlood, Method::Dsgd];
+        spec.seeds = vec![0, 1];
+        spec.threads = threads;
+        let out = spec.run().unwrap();
+        let dir = spec.out_dir.clone();
+        (out, dir)
+    };
+    let (a, dir_a) = run(1, "thr1");
+    let (b, dir_b) = run(2, "thr2");
+    assert_eq!((a.ran, b.ran), (4, 4));
+    let groups = |o: &SweepOutcome| {
+        Json::Arr(o.groups.iter().map(|g| g.to_json()).collect()).to_string_pretty()
+    };
+    assert_eq!(groups(&a), groups(&b), "aggregates must not depend on --threads");
+    // ...and the per-cell trajectories line up cell-for-cell too
+    assert_eq!(a.cells.len(), b.cells.len());
+    for ((ka, ra), (kb, rb)) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ka, kb, "cell order must be expansion order, not completion order");
+        assert_eq!(strip_timing(ra.to_json()), strip_timing(rb.to_json()));
+    }
+    let _ = std::fs::remove_dir_all(dir_a);
+    let _ = std::fs::remove_dir_all(dir_b);
+}
+
+#[test]
+fn resume_skips_completed_cells_and_keeps_them_byte_faithful() {
+    let _g = lock();
+    let mut spec = SweepSpec::new(base(4));
+    spec.name = "resume".into();
+    spec.out_dir = tmp_dir("resume");
+    spec.seeds = vec![0, 1];
+    let first = spec.run().unwrap();
+    assert_eq!((first.ran, first.skipped), (2, 0));
+
+    // identical re-invocation: everything resumes, nothing runs
+    let again = spec.run().unwrap();
+    assert_eq!((again.ran, again.skipped), (0, 2));
+
+    // widening the grid runs only the new cell
+    spec.seeds = vec![0, 1, 2];
+    let wider = spec.run().unwrap();
+    assert_eq!((wider.ran, wider.skipped), (1, 2));
+    assert_eq!(wider.cells.len(), 3);
+
+    // resumed records survive the disk round-trip byte-for-byte
+    for (key, rec) in &first.cells {
+        let resumed = wider.cells.iter().find(|(k, _)| k == key).unwrap();
+        assert_eq!(
+            rec.to_json().to_string_pretty(),
+            resumed.1.to_json().to_string_pretty(),
+            "resume must replay {key:?} from the file, not re-run it"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&spec.out_dir);
+}
+
+#[test]
+fn sweep_spec_from_toml_and_cli_with_cli_precedence() {
+    let _g = lock();
+    let dir = tmp_dir("toml");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = format!("{dir}/sweep.toml");
+    std::fs::write(
+        &path,
+        r#"
+model = "synthetic"
+clients = 4
+steps = 4
+
+[sweep]
+name = "toml-sweep"
+methods = "seedflood,dsgd"
+topologies = "ring,complete"
+netconds = "reliable,lossy-ring"
+rates = "uniform/lognormal:0.5"
+seeds = "0,1"
+"#,
+    )
+    .unwrap();
+    let args = Args::parse(
+        ["--config", &path, "--seeds", "3,4,5", "--threads", "2"]
+            .iter()
+            .map(|s| s.to_string()),
+        &[],
+    );
+    let spec = SweepSpec::from_args(&args).unwrap();
+    assert_eq!(spec.name, "toml-sweep");
+    assert_eq!(spec.base.model, "synthetic");
+    assert_eq!(spec.base.steps, 4);
+    assert_eq!(spec.methods, vec![Method::SeedFlood, Method::Dsgd]);
+    assert_eq!(spec.topologies, vec![Kind::Ring, Kind::Complete]);
+    assert_eq!(spec.netconds, vec!["".to_string(), "lossy-ring".to_string()]);
+    assert_eq!(spec.rates, vec!["uniform".to_string(), "lognormal:0.5".to_string()]);
+    assert_eq!(spec.seeds, vec![3, 4, 5], "CLI --seeds must override the TOML axis");
+    assert_eq!(spec.threads, 2);
+
+    let cells = spec.expand();
+    assert_eq!(cells.len(), 2 * 2 * 2 * 2 * 3);
+    for (key, cfg) in &cells {
+        assert_eq!(cfg.threads, 1);
+        // non-uniform rate cells auto-select the event engine; uniform
+        // cells keep the lockstep default — and every cell validates
+        cfg.validate().unwrap();
+        let event = cfg.time_model == TimeModel::Event;
+        assert_eq!(event, key.rates == "lognormal:0.5", "{key:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fig6_grid_keys_cells_and_marks_missing_ones() {
+    let rec = |task: &str, rank: usize, refresh: usize, gmp: f64| RunRecord {
+        method: "SubCGE".into(),
+        task: task.into(),
+        rank,
+        refresh,
+        gmp,
+        ..Default::default()
+    };
+    // the (16, 50) cell is missing — say it failed mid-grid
+    let records = vec![
+        rec("sst2", 8, 50, 0.51),
+        rec("sst2", 8, 500, 0.62),
+        rec("sst2", 16, 500, 0.73),
+        rec("rte", 8, 50, 0.55),
+    ];
+    let s = render_fig6(&records, &[8, 16], &[50, 500]);
+    // both tasks appear (non-consecutive dedup would have lost neither,
+    // but interleaved orders used to)
+    assert!(s.contains("== sst2:") && s.contains("== rte:"));
+    let row = |prefix: &str| {
+        s.lines()
+            .find(|l| l.trim_start().starts_with(prefix))
+            .unwrap_or_else(|| panic!("no row {prefix:?} in:\n{s}"))
+            .to_string()
+    };
+    let sst2_16 = s
+        .lines()
+        .skip_while(|l| !l.contains("== sst2:"))
+        .find(|l| l.trim_start().starts_with("16"))
+        .unwrap();
+    // the missing (16, 50) cell prints an explicit placeholder and does
+    // NOT shift (16, 500) into its column (the old positional pairing
+    // printed 73.00 under period 50 and truncated the rest)
+    assert!(sst2_16.contains("--"), "missing cell must render --: {sst2_16:?}");
+    assert!(sst2_16.contains("73.00"), "present cell must keep its value: {sst2_16:?}");
+    assert!(
+        sst2_16.find("--").unwrap() < sst2_16.find("73.00").unwrap(),
+        "placeholder must occupy the earlier column: {sst2_16:?}"
+    );
+    let sst2_8 = row("8");
+    assert!(sst2_8.contains("51.00") && sst2_8.contains("62.00") && !sst2_8.contains("--"));
+}
+
+#[test]
+fn panicking_cell_fails_alone_and_completed_cells_survive() {
+    let _g = lock();
+    let mut spec = SweepSpec::new(base(3));
+    spec.name = "panic".into();
+    spec.out_dir = tmp_dir("panic");
+    // MeZO asserts --clients 1 deep in algos::single — with clients = 4
+    // that cell *panics* (not Err). The sweep must charge the panic to
+    // the cell, keep the SeedFlood cells, and checkpoint them to disk.
+    spec.methods = vec![Method::SeedFlood, Method::Mezo];
+    spec.seeds = vec![0];
+    let out = spec.run().unwrap();
+    assert_eq!(out.ran, 1, "the SeedFlood cell must complete");
+    assert_eq!(out.failed.len(), 1, "the MeZO cell must fail, not abort the sweep");
+    assert!(out.failed[0].0.method == "MeZO");
+    assert!(
+        out.failed[0].1.contains("panicked"),
+        "failure must carry the panic message: {}",
+        out.failed[0].1
+    );
+    // the completed cell is on disk; a re-invocation resumes it and only
+    // re-attempts the failed cell
+    let again = spec.run().unwrap();
+    assert_eq!((again.ran, again.skipped, again.failed.len()), (0, 1, 1));
+    let _ = std::fs::remove_dir_all(&spec.out_dir);
+}
+
+#[test]
+fn sweep_file_round_trips_through_report_parser() {
+    let _g = lock();
+    let mut spec = SweepSpec::new(base(3));
+    spec.name = "roundtrip".into();
+    spec.out_dir = tmp_dir("roundtrip");
+    spec.seeds = vec![0, 1];
+    let out = spec.run().unwrap();
+    let text = std::fs::read_to_string(&out.path).unwrap();
+    let j = Json::parse(&text).unwrap();
+    let cells = seedflood::experiments::sweep::parse_cells(&j).unwrap();
+    assert_eq!(cells.len(), 2);
+    for ((k, r), (k2, r2)) in out.cells.iter().zip(&cells) {
+        assert_eq!(k, k2);
+        assert_eq!(r.to_json(), r2.to_json());
+    }
+    // the saved groups match a re-aggregation of the saved cells
+    let regrouped = seedflood::experiments::sweep::aggregate(&cells);
+    let saved = j.get("groups").unwrap().as_arr().unwrap();
+    assert_eq!(saved.len(), regrouped.len());
+    for (s, g) in saved.iter().zip(&regrouped) {
+        assert_eq!(s, &g.to_json());
+    }
+    let _ = std::fs::remove_dir_all(&spec.out_dir);
+}
