@@ -1,0 +1,420 @@
+//! Massive-scale benchmark and tracked perf ledger (ISSUE 6): O(m)
+//! topology construction at 100k clients, the double-sweep diameter
+//! estimator vs the old all-pairs BFS, CSR network build cost, bounded
+//! flooding throughput from 1k to 100k clients, and a short cheap-model
+//! SeedFlood segment through the event-driven engine.
+//!
+//! Headline comparison — "flood-ready construction": everything the
+//! simulator does before the first flood round (build the topology, then
+//! `Topology::diameter()` for the flood depth). The pre-PR code paths are
+//! reproduced verbatim below (`naive_erdos_renyi`, `naive_diameter`) so
+//! the speedup rows measure the real before/after, not a strawman.
+//!
+//! Run: cargo bench --bench scale               (full grid, ~1 min;
+//!                                               writes BENCH_scale.json)
+//!      cargo bench --bench scale -- --smoke    (CI grid, a few seconds;
+//!                                               writes nothing)
+//!      cargo bench --bench scale -- --smoke --check BENCH_scale.json
+//!                                              (CI regression gate:
+//!                                               every measured metric
+//!                                               must stay within the
+//!                                               tolerance band of the
+//!                                               committed ledger)
+
+use std::collections::{BTreeMap, VecDeque};
+use std::hint::black_box;
+use std::time::Instant;
+
+use seedflood::config::{ExperimentConfig, Method};
+use seedflood::flood::{flood_rounds, FloodState};
+use seedflood::net::{MsgId, Network, SeedUpdate};
+use seedflood::rng::Rng;
+use seedflood::sched::TimeModel;
+use seedflood::sim::{self, Env};
+use seedflood::topology::{Kind, Topology};
+use seedflood::util::json::Json;
+
+/// Multiplicative tolerance band for `--check`: a metric regresses when
+/// it leaves `[baseline/8, baseline*8]`. Wide on purpose — the ledger
+/// tracks order-of-magnitude drift (an O(m) path quietly becoming
+/// O(n^2)), not machine-to-machine noise.
+const TOLERANCE: f64 = 8.0;
+
+/// Median wall-clock seconds over `reps` runs of `f`.
+fn median_time(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut samples: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(f64::total_cmp);
+    samples[samples.len() / 2]
+}
+
+// ---------------------------------------------------------------------------
+// Pre-PR reference implementations, reproduced verbatim from the old
+// rust/src/topology/mod.rs (see git history). Do not "improve" these:
+// their whole point is to be exactly what shipped before the rewrite.
+// ---------------------------------------------------------------------------
+
+/// The old G(n,p) generator: n(n-1)/2 Bernoulli draws per attempt, then
+/// an adjacency build that scans `adj[a]` for duplicates on every edge.
+fn naive_erdos_renyi(n: usize, seed: u64) -> Vec<Vec<usize>> {
+    let p = (2.0 * (n as f64).ln() / n as f64).min(1.0);
+    let mut rng = Rng::new(seed);
+    loop {
+        let mut edges = vec![];
+        for a in 0..n {
+            for b in a + 1..n {
+                if rng.next_f64() < p {
+                    edges.push((a, b));
+                }
+            }
+        }
+        let mut adj: Vec<Vec<usize>> = vec![vec![]; n];
+        for &(a, b) in &edges {
+            if !adj[a].contains(&b) {
+                adj[a].push(b);
+                adj[b].push(a);
+            }
+        }
+        for l in &mut adj {
+            l.sort_unstable();
+        }
+        if connected(&adj) {
+            return adj;
+        }
+    }
+}
+
+fn bfs_dist(adj: &[Vec<usize>], src: usize) -> Vec<usize> {
+    let mut dist = vec![usize::MAX; adj.len()];
+    let mut q = VecDeque::new();
+    dist[src] = 0;
+    q.push_back(src);
+    while let Some(u) = q.pop_front() {
+        for &v in &adj[u] {
+            if dist[v] == usize::MAX {
+                dist[v] = dist[u] + 1;
+                q.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+fn connected(adj: &[Vec<usize>]) -> bool {
+    bfs_dist(adj, 0).iter().all(|&d| d != usize::MAX)
+}
+
+/// The old flood-depth computation: exact all-pairs BFS diameter,
+/// O(n·(n+m)) — what `Topology::diameter()` did at every n.
+fn naive_diameter(adj: &[Vec<usize>]) -> usize {
+    (0..adj.len()).map(|s| bfs_dist(adj, s).into_iter().max().unwrap()).max().unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// Benchmark stages
+// ---------------------------------------------------------------------------
+
+/// Before/after on the flood-setup path at one n: old generator + exact
+/// diameter vs new generator + `diameter()` (bounds estimator above the
+/// exact cutoff). Returns (flood_ready_speedup, generator_speedup).
+fn flood_ready_compare(n: usize) -> (f64, f64) {
+    let naive_gen_s = median_time(1, || {
+        black_box(naive_erdos_renyi(n, 42));
+    });
+    let adj = naive_erdos_renyi(n, 42);
+    let naive_diam_s = median_time(1, || {
+        black_box(naive_diameter(&adj));
+    });
+    let new_gen_s = median_time(3, || {
+        black_box(Topology::build(Kind::ErdosRenyi, n, 42));
+    });
+    let t = Topology::build(Kind::ErdosRenyi, n, 42);
+    let new_diam_s = median_time(3, || {
+        black_box(t.diameter());
+    });
+    let flood_ready = (naive_gen_s + naive_diam_s) / (new_gen_s + new_diam_s).max(1e-9);
+    let generator = naive_gen_s / new_gen_s.max(1e-9);
+    println!(
+        "  n={:<6} old {:>9.1} ms (gen {:>7.1} + diam {:>8.1})  \
+         new {:>7.2} ms  -> {:>6.1}x flood-ready, {:>5.1}x generator",
+        n,
+        1e3 * (naive_gen_s + naive_diam_s),
+        1e3 * naive_gen_s,
+        1e3 * naive_diam_s,
+        1e3 * (new_gen_s + new_diam_s),
+        flood_ready,
+        generator
+    );
+    (flood_ready, generator)
+}
+
+struct FloodRow {
+    secs: f64,
+    delivered: u64,
+    ns_per_delivery: f64,
+}
+
+/// Bounded SeedFlood segment on a scale-free graph: clients 0..64 inject
+/// one update each, then `diameter()` synchronous flood rounds carry all
+/// 64 to every client. Capping the origin set keeps per-client dedup
+/// state at 64 `StepSet`s (~2 KB) so even n = 100k fits comfortably in
+/// memory, while the per-event machinery (CSR fan-out, pooled FIFOs,
+/// windowed dedup) is exercised at full scale.
+fn bounded_flood(n: usize, origins: usize) -> FloodRow {
+    let topo = Topology::build(Kind::ScaleFree, n, 42);
+    let depth = topo.diameter().max(1);
+    let mut net = Network::new(topo);
+    let mut states: Vec<FloodState> = (0..n)
+        .map(|_| {
+            let mut st = FloodState::new();
+            st.retain = 8;
+            st
+        })
+        .collect();
+    let want = origins.min(n);
+    for (i, st) in states.iter_mut().take(want).enumerate() {
+        st.inject(SeedUpdate {
+            id: MsgId { origin: i as u32, step: 0 },
+            seed: 0x5eed ^ i as u64,
+            coeff: 1.0,
+        });
+    }
+    let t0 = Instant::now();
+    flood_rounds(&mut states, &mut net, depth, |_, _| {});
+    let secs = t0.elapsed().as_secs_f64();
+    for (i, st) in states.iter().enumerate() {
+        assert_eq!(
+            st.seen.len(),
+            want,
+            "client {i}/{n} missed flood messages after {depth} rounds"
+        );
+    }
+    let delivered = net.acct.delivered_messages;
+    assert!(delivered > 0, "flood at n={n} delivered nothing");
+    FloodRow { secs, delivered, ns_per_delivery: secs * 1e9 / delivered as f64 }
+}
+
+/// Short cheap-model SeedFlood run through the event-driven engine: the
+/// end-to-end "massive-scale segment" of the acceptance criteria. The
+/// shrunk synthetic oracle keeps per-client step cost trivial, so this
+/// measures the simulator — scheduler, flooding, CSR network — not the
+/// model.
+fn event_segment(clients: usize) -> f64 {
+    let cfg = ExperimentConfig {
+        method: Method::SeedFlood,
+        model: "cheap".into(),
+        task: "sst2".into(),
+        clients,
+        topology: Kind::Hierarchical,
+        steps: 2,
+        local_steps: 1,
+        flood_steps: 1,
+        flood_retain: 64,
+        eval_every: 0,
+        time_model: TimeModel::Event,
+        threads: 1,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let env = Env::new(cfg).expect("cheap-model env");
+    let record = sim::run_with_env(&env).expect("event-driven cheap segment");
+    let secs = t0.elapsed().as_secs_f64();
+    assert!(record.final_loss.is_finite(), "cheap segment diverged");
+    println!(
+        "  {} clients, 2 steps: {:.2} s  (GMP {:.1}%, loss {:.4}, {} B on the wire)",
+        clients,
+        secs,
+        100.0 * record.gmp,
+        record.final_loss,
+        record.total_bytes
+    );
+    secs
+}
+
+/// Regression gate: every metric measured this run that also exists in
+/// the committed ledger must lie within the tolerance band. Metrics
+/// present on only one side are reported but never fail the check (the
+/// smoke grid measures a subset of the full grid).
+fn run_check(path: &str, metrics: &[(String, f64)]) {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("cannot read baseline {path}: {e}"));
+    let base = Json::parse(&text).unwrap_or_else(|e| panic!("unparseable baseline {path}: {e}"));
+    let base_metrics = base
+        .get("metrics")
+        .and_then(|m| m.as_obj().cloned())
+        .unwrap_or_else(|e| panic!("baseline {path} has no metrics object: {e}"));
+    println!("\n== regression check vs {path} (tolerance {TOLERANCE}x) ==");
+    let mut failures = 0;
+    for (name, value) in metrics {
+        match base_metrics.get(name.as_str()) {
+            Some(b) => {
+                let b = b.as_f64().unwrap_or_else(|e| panic!("baseline metric {name}: {e}"));
+                let ok = b > 0.0 && *value >= b / TOLERANCE && *value <= b * TOLERANCE;
+                println!(
+                    "  {:<38} {:>12.4} vs baseline {:>10.4}  [{}]",
+                    name,
+                    value,
+                    b,
+                    if ok { "ok" } else { "REGRESSION" }
+                );
+                if !ok {
+                    failures += 1;
+                }
+            }
+            None => println!("  {name:<38} {value:>12.4} (no baseline entry — skipped)"),
+        }
+    }
+    for name in base_metrics.keys() {
+        if !metrics.iter().any(|(k, _)| k == name) {
+            println!("  {name:<38} (baseline-only — not measured in this mode)");
+        }
+    }
+    assert_eq!(failures, 0, "{failures} metric(s) left the {TOLERANCE}x tolerance band");
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let check_path = argv.iter().position(|a| a == "--check").map(|i| {
+        argv.get(i + 1).unwrap_or_else(|| panic!("--check needs a baseline path")).clone()
+    });
+
+    let mut timings: Vec<(String, f64)> = Vec::new();
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+
+    // -- 1. construction sweep: O(m) generators across four kinds ----------
+    println!(
+        "== construction sweep ({}) ==",
+        if smoke { "smoke: n <= 10k" } else { "full: n <= 100k" }
+    );
+    let kinds = [Kind::Ring, Kind::SmallWorld, Kind::ScaleFree, Kind::Hierarchical];
+    let sweep_ns: &[usize] = if smoke { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
+    for &kind in &kinds {
+        for &n in sweep_ns {
+            let reps = if n >= 100_000 { 1 } else { 3 };
+            let secs = median_time(reps, || {
+                black_box(Topology::build(kind, n, 42));
+            });
+            println!("  {:<12} n={:<7} {:>10.2} ms", kind.name(), n, 1e3 * secs);
+            timings.push((format!("construct_s_{}_{}", kind.name(), n), secs));
+        }
+    }
+
+    // -- 2. flood-ready construction: old code path vs new -----------------
+    println!("\n== flood-ready construction (generator + flood depth), old vs new ==");
+    let cmp_ns: &[usize] = if smoke { &[2_000] } else { &[2_000, 10_000] };
+    for &n in cmp_ns {
+        let (flood_ready, generator) = flood_ready_compare(n);
+        metrics.push((format!("construct_speedup_flood_ready_{}k", n / 1000), flood_ready));
+        metrics.push((format!("er_generator_speedup_{}k", n / 1000), generator));
+    }
+
+    // -- 3. diameter bounds + CSR network build at the largest scale -------
+    let nd = if smoke { 10_000 } else { 100_000 };
+    println!("\n== diameter bounds and network build at n = {nd} ==");
+    for kind in [Kind::ScaleFree, Kind::Hierarchical] {
+        let t = Topology::build(kind, nd, 7);
+        let t0 = Instant::now();
+        let (lb, ub) = t.diameter_bounds();
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(
+            (1..=nd).contains(&lb) && lb <= ub && ub <= nd,
+            "degenerate bounds ({lb}, {ub}) on {} n={nd}",
+            kind.name()
+        );
+        println!("  {:<12} bounds ({lb}, {ub}) in {:>8.2} ms", kind.name(), 1e3 * secs);
+        timings.push((format!("diameter_bounds_s_{}_{}", kind.name(), nd), secs));
+    }
+    let t = Topology::build(Kind::ScaleFree, nd, 7);
+    let net_secs = median_time(1, || {
+        black_box(Network::new(t.clone()));
+    });
+    println!("  CSR Network::new on scale-free n={nd}: {:.2} ms", 1e3 * net_secs);
+    timings.push((format!("network_build_s_scale-free_{nd}"), net_secs));
+
+    // -- 4. bounded flooding throughput ------------------------------------
+    println!("\n== bounded flood (64 origins, scale-free, full coverage asserted) ==");
+    let flood_ns: &[usize] = if smoke { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
+    let mut per_delivery: Vec<(usize, f64)> = Vec::new();
+    for &n in flood_ns {
+        let row = bounded_flood(n, 64);
+        println!(
+            "  n={:<7} {:>8.1} ms, {:>9} deliveries, {:>7.1} ns/delivery",
+            n,
+            1e3 * row.secs,
+            row.delivered,
+            row.ns_per_delivery
+        );
+        metrics.push((format!("per_delivery_ns_{}k", n / 1000), row.ns_per_delivery));
+        per_delivery.push((n, row.ns_per_delivery));
+    }
+    let base_ns = per_delivery[0].1;
+    for &(n, ns) in per_delivery.iter().skip(1) {
+        metrics.push((format!("per_delivery_growth_{}k_vs_1k", n / 1000), ns / base_ns));
+    }
+
+    // -- 5. event-driven cheap-model segment (full grid only) --------------
+    if !smoke {
+        println!("\n== event-driven SeedFlood segment, cheap oracle ==");
+        metrics.push(("event_segment_s".into(), event_segment(2048)));
+    }
+
+    // -- hard floors: the acceptance criteria, independent of any ledger ---
+    let get = |name: &str| -> f64 {
+        metrics
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("metric {name} was not measured"))
+    };
+    if smoke {
+        assert!(
+            get("construct_speedup_flood_ready_2k") >= 8.0,
+            "flood-ready construction fell below 8x at n=2k"
+        );
+        assert!(
+            get("per_delivery_growth_10k_vs_1k") <= 8.0,
+            "per-delivery flood work grew super-linearly from 1k to 10k clients"
+        );
+    } else {
+        assert!(
+            get("construct_speedup_flood_ready_10k") >= 10.0,
+            "flood-ready construction fell below the 10x acceptance floor at n=10k"
+        );
+        assert!(
+            get("per_delivery_growth_100k_vs_1k") <= 8.0,
+            "per-delivery flood work grew super-linearly from 1k to 100k clients"
+        );
+        assert!(get("event_segment_s") <= 60.0, "cheap event segment no longer runs in seconds");
+    }
+
+    // -- ledger + regression gate ------------------------------------------
+    if !smoke {
+        let mut tobj = BTreeMap::new();
+        for (k, v) in &timings {
+            tobj.insert(k.clone(), Json::Num(*v));
+        }
+        let mut mobj = BTreeMap::new();
+        for (k, v) in &metrics {
+            mobj.insert(k.clone(), Json::Num(*v));
+        }
+        let doc = Json::obj(vec![
+            ("schema", Json::str("seedflood-scale-bench-v1")),
+            ("timings", Json::Obj(tobj)),
+            ("metrics", Json::Obj(mobj)),
+        ]);
+        std::fs::write("BENCH_scale.json", doc.to_string_pretty() + "\n")
+            .expect("cannot write BENCH_scale.json");
+        let (nt, nm) = (timings.len(), metrics.len());
+        println!("\nwrote BENCH_scale.json ({nt} timings, {nm} metrics)");
+    }
+    if let Some(path) = check_path {
+        run_check(&path, &metrics);
+    }
+    println!("\nscale bench OK ({})", if smoke { "smoke grid" } else { "full grid" });
+}

@@ -275,7 +275,16 @@ impl FloodDedup {
     /// tail entries above a mark are *not* advertised, so a responder may
     /// re-send a few already-seen messages (dedup absorbs them).
     pub fn summary(&self) -> Vec<u32> {
-        self.origins.iter().map(|s| s.hwm().min(u32::MAX as u64) as u32).collect()
+        self.hwms().map(|h| h.min(u32::MAX as u64) as u32).collect()
+    }
+
+    /// Per-origin high-water marks as an iterator — the allocation-free
+    /// view behind [`Self::summary`]. [`FloodState::collect`] answers each
+    /// incoming summary through this instead of materializing an O(n)
+    /// vector per neighbor per repair round (at n = 100k that allocation
+    /// was the gap-protocol hot path).
+    pub fn hwms(&self) -> impl Iterator<Item = u64> + '_ {
+        self.origins.iter().map(|s| s.hwm())
     }
 
     /// Out-of-order entries retained above the high-water marks.
@@ -494,12 +503,12 @@ impl FloodState {
                     // below our high-water mark, so we saw it — if it is
                     // not among the gaps, the window evicted it and this
                     // client cannot replay that history: count it
-                    for (o, &my_hwm) in self.seen.summary().iter().enumerate() {
+                    for (o, my_hwm) in self.seen.hwms().enumerate() {
                         let their = hwms.get(o).copied().unwrap_or(0);
                         let covered = gaps
                             .iter()
                             .any(|m| m.id.origin as usize == o && m.id.step == their);
-                        if their < my_hwm && !covered {
+                        if (their as u64) < my_hwm && !covered {
                             self.gap_misses += 1;
                         }
                     }

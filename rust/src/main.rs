@@ -222,8 +222,14 @@ fn print_help() {
 USAGE: seedflood <train|sweep|experiment|pretrain|report|topo|info> [--options]
 
 train        --method <dsgd|choco|dsgd-lora|choco-lora|dzsgd|dzsgd-lora|seedflood|mezo|subcge>
-             --model <tiny|small|base|synthetic> --task <sst2|rte|boolq|wic|multirc|record>
-             --clients N --topology <ring|mesh|torus|complete|star|er|ws>
+             --model <tiny|small|base|synthetic|cheap> (cheap = shrunk
+             synthetic oracle for massive-scale runs — 10k+ clients stay
+             topology-bound, not model-bound)
+             --task <sst2|rte|boolq|wic|multirc|record>
+             --clients N
+             --topology <ring|mesh|torus|complete|star|er|ws|scale-free|
+             hierarchical|hub-spoke> (the last three are O(m)-construction
+             massive-scale generators)
              --steps N --lr F --eps F --rank N --refresh N --flood-steps N
              --threads N (local-step worker threads; 1 = sequential, 0 = all
              cores — results are identical for every value)

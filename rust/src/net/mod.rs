@@ -50,7 +50,6 @@
 //! assert_eq!(msgs[0].from, 0);
 //! ```
 
-use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -239,6 +238,10 @@ struct CondState {
     repair_due: Vec<bool>,
     /// previous step's per-node impairment, for recovery-edge detection
     impaired_prev: Vec<bool>,
+    /// reusable scratch for [`Network::set_step`]'s impairment pass —
+    /// computed here each step, then swapped into `impaired_prev` (no
+    /// per-iteration allocation)
+    impaired_scratch: Vec<bool>,
     events: Vec<Event>,
     repair_every: usize,
     /// dedicated fault stream — advanced only on the sequential
@@ -247,24 +250,133 @@ struct CondState {
     rng: Rng,
 }
 
-/// The simulated network: directed-edge queues over a [`Topology`].
+/// Sentinel for "no node" in [`MsgPool`]'s intrusive lists.
+const NIL: u32 = u32::MAX;
+
+/// One slab slot of a per-edge FIFO (see [`MsgPool`]).
+struct MsgNode {
+    /// delivery round (receivable once the clock reaches it)
+    at: u64,
+    /// next node in the same edge's FIFO, or [`NIL`]
+    next: u32,
+    /// `None` while the slot sits on the free list
+    msg: Option<Message>,
+}
+
+/// Pooled per-edge FIFOs: one contiguous message slab plus a free list,
+/// with an intrusive singly-linked list per directed edge. Replaces one
+/// heap-allocated `VecDeque` per edge — at n = 100k that was hundreds of
+/// thousands of resident buffers; here idle edges cost 12 bytes of
+/// head/tail/len and the slab's capacity tracks the *peak in-flight*
+/// message count, not the edge count.
+struct MsgPool {
+    nodes: Vec<MsgNode>,
+    free: Vec<u32>,
+    head: Vec<u32>,
+    tail: Vec<u32>,
+    len: Vec<u32>,
+}
+
+impl MsgPool {
+    fn new(edges: usize) -> MsgPool {
+        MsgPool {
+            nodes: vec![],
+            free: vec![],
+            head: vec![NIL; edges],
+            tail: vec![NIL; edges],
+            len: vec![0; edges],
+        }
+    }
+
+    fn push(&mut self, eid: usize, at: u64, msg: Message) {
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.nodes[s as usize] = MsgNode { at, next: NIL, msg: Some(msg) };
+                s
+            }
+            None => {
+                self.nodes.push(MsgNode { at, next: NIL, msg: Some(msg) });
+                (self.nodes.len() - 1) as u32
+            }
+        };
+        if self.tail[eid] == NIL {
+            self.head[eid] = slot;
+        } else {
+            self.nodes[self.tail[eid] as usize].next = slot;
+        }
+        self.tail[eid] = slot;
+        self.len[eid] += 1;
+    }
+
+    /// Pop the edge's front message if it is due at `now`. FIFO: per-edge
+    /// delay is constant, so the front is always the earliest arrival.
+    fn pop_due(&mut self, eid: usize, now: u64) -> Option<Message> {
+        let h = self.head[eid];
+        if h == NIL || self.nodes[h as usize].at > now {
+            return None;
+        }
+        let node = &mut self.nodes[h as usize];
+        let msg = node.msg.take();
+        self.head[eid] = node.next;
+        if self.head[eid] == NIL {
+            self.tail[eid] = NIL;
+        }
+        self.len[eid] -= 1;
+        self.free.push(h);
+        msg
+    }
+
+    /// Drop everything queued on `eid`; returns how many messages died.
+    /// Payloads are released immediately, not at slot reuse.
+    fn purge(&mut self, eid: usize) -> usize {
+        let mut h = self.head[eid];
+        let mut killed = 0;
+        while h != NIL {
+            let node = &mut self.nodes[h as usize];
+            node.msg = None;
+            self.free.push(h);
+            h = node.next;
+            killed += 1;
+        }
+        self.head[eid] = NIL;
+        self.tail[eid] = NIL;
+        self.len[eid] = 0;
+        killed
+    }
+
+    fn queued(&self, eid: usize) -> usize {
+        self.len[eid] as usize
+    }
+}
+
+/// The simulated network over a [`Topology`], in CSR edge layout.
 ///
-/// Indexing is built for scale (ISSUE 1 tentpole item 3): edge-id lookup is
-/// an O(1) hash probe instead of a per-send adjacency scan, and a
-/// precomputed reverse-adjacency table makes [`Self::recv_all`] O(in-degree)
-/// instead of the previous all-clients scan — a flooding iteration drops
-/// from O(n²·deg) to O(n·deg) network overhead.
+/// Both edge directions live in flat offset arrays: `out` holds the
+/// (dst, eid) rows of every source concatenated (eid = position in `out`,
+/// assigned src-ascending then dst-ascending — the historical id order),
+/// and `inc` the (src, eid) rows of every destination, src ascending.
+/// Edge-id lookup is a binary search of the source's row (rows are
+/// dst-sorted), replacing the former `HashMap<(usize, usize), usize>`;
+/// message queues live in one pooled slab ([`MsgPool`]) instead of a
+/// `VecDeque` per directed edge. Construction and memory are O(n + m)
+/// flat arrays with no per-edge heap allocation — the layout that keeps
+/// 100k-client graphs cheap — while [`Self::recv_all`]'s ascending-source
+/// drain order and [`Self::send`]'s RNG draw order stay bit-for-bit
+/// identical to the previous implementation (determinism contract, see
+/// `recv_all_orders_sources_ascending` and rust/tests/properties.rs).
 pub struct Network {
     topo: Topology,
-    /// one FIFO per directed edge; entries are (deliver-at round, message)
-    queues: Vec<VecDeque<(u64, Message)>>,
-    edge_index: Vec<Vec<(usize, usize)>>, // [src] -> (dst, flat edge id)
-    /// O(1) directed-edge lookup: (src, dst) -> flat edge id
-    edge_ids: HashMap<(usize, usize), usize>,
-    /// reverse adjacency: [dst] -> (src, flat edge id), src ascending —
-    /// the ascending order keeps recv_all's message order identical to the
-    /// historical 0..n scan (determinism contract)
-    in_edges: Vec<Vec<(usize, usize)>>,
+    /// CSR out-edges: flat (dst, eid) pairs; row of `src` is
+    /// `out[out_off[src]..out_off[src+1]]`, dst ascending, eid = index
+    out: Vec<(usize, usize)>,
+    out_off: Vec<usize>,
+    /// CSR in-edges: flat (src, eid) pairs; row of `dst` is
+    /// `inc[in_off[dst]..in_off[dst+1]]`, src ascending — keeps recv_all's
+    /// message order identical to the historical 0..n scan
+    inc: Vec<(usize, usize)>,
+    in_off: Vec<usize>,
+    /// pooled per-edge FIFOs; entries are (deliver-at round, message)
+    pool: MsgPool,
     pub acct: Accounting,
     /// delivery clock, in communication rounds (see [`Self::tick`])
     now: u64,
@@ -274,27 +386,57 @@ pub struct Network {
     cond: Option<CondState>,
 }
 
+/// Directed-edge id lookup in the CSR out table: binary search of the
+/// dst-sorted row of `src`. Free function so [`Network::set_step`] can use
+/// it while holding a mutable borrow of the fault state.
+fn edge_id_in(out: &[(usize, usize)], out_off: &[usize], src: usize, dst: usize) -> Option<usize> {
+    if src >= out_off.len() - 1 {
+        return None;
+    }
+    let row = &out[out_off[src]..out_off[src + 1]];
+    row.binary_search_by_key(&dst, |&(d, _)| d).ok().map(|p| out_off[src] + p)
+}
+
 impl Network {
     pub fn new(topo: Topology) -> Network {
-        let mut edge_index = vec![vec![]; topo.n];
-        let mut in_edges = vec![vec![]; topo.n];
-        let mut edge_ids = HashMap::new();
-        let mut count = 0;
-        for src in 0..topo.n {
+        let n = topo.n;
+        let m2: usize = (0..n).map(|i| topo.neighbors(i).len()).sum();
+        let mut out = Vec::with_capacity(m2);
+        let mut out_off = Vec::with_capacity(n + 1);
+        out_off.push(0);
+        for src in 0..n {
             for &dst in topo.neighbors(src) {
-                edge_index[src].push((dst, count));
-                in_edges[dst].push((src, count));
-                edge_ids.insert((src, dst), count);
-                count += 1;
+                let eid = out.len();
+                out.push((dst, eid));
+            }
+            out_off.push(out.len());
+        }
+        // reverse CSR: count in-degrees, prefix-sum, fill — iterating
+        // sources in ascending order makes each row src-ascending for free
+        let mut in_off = vec![0usize; n + 1];
+        for &(dst, _) in &out {
+            in_off[dst + 1] += 1;
+        }
+        for i in 0..n {
+            in_off[i + 1] += in_off[i];
+        }
+        let mut cursor = in_off.clone();
+        let mut inc = vec![(0usize, 0usize); m2];
+        for src in 0..n {
+            for k in out_off[src]..out_off[src + 1] {
+                let (dst, eid) = out[k];
+                inc[cursor[dst]] = (src, eid);
+                cursor[dst] += 1;
             }
         }
         Network {
-            queues: (0..count).map(|_| VecDeque::new()).collect(),
-            edge_index,
-            edge_ids,
-            in_edges,
+            pool: MsgPool::new(m2),
+            out,
+            out_off,
+            inc,
+            in_off,
             acct: Accounting {
-                edge_bytes: vec![0; count],
+                edge_bytes: vec![0; m2],
                 ..Default::default()
             },
             now: 0,
@@ -309,20 +451,20 @@ impl Network {
     /// fully up — drive it with [`Self::set_step`].
     pub fn install(&mut self, cond: &NetCond) -> Result<()> {
         cond.validate(&self.topo)?;
-        let ne = self.queues.len();
+        let ne = self.out.len();
         let n = self.topo.n;
         let mut loss = vec![cond.loss; ne];
         let mut delay = vec![cond.delay; ne];
         for &(a, b, p) in &cond.edge_loss {
             for (x, y) in [(a, b), (b, a)] {
-                if let Some(&e) = self.edge_ids.get(&(x, y)) {
+                if let Some(e) = edge_id_in(&self.out, &self.out_off, x, y) {
                     loss[e] = p;
                 }
             }
         }
         for &(a, b, k) in &cond.edge_delay {
             for (x, y) in [(a, b), (b, a)] {
-                if let Some(&e) = self.edge_ids.get(&(x, y)) {
+                if let Some(e) = edge_id_in(&self.out, &self.out_off, x, y) {
                     delay[e] = k;
                 }
             }
@@ -334,6 +476,7 @@ impl Network {
             node_down: vec![false; n],
             repair_due: vec![false; n],
             impaired_prev: vec![false; n],
+            impaired_scratch: vec![false; n],
             events: cond.events.clone(),
             repair_every: cond.repair_every,
             rng: Rng::new(cond.seed),
@@ -363,7 +506,7 @@ impl Network {
                 Event::Link { a, b, from, until } => {
                     if t >= from && t < until {
                         for (x, y) in [(a, b), (b, a)] {
-                            if let Some(&e) = self.edge_ids.get(&(x, y)) {
+                            if let Some(e) = edge_id_in(&self.out, &self.out_off, x, y) {
                                 c.link_down[e] = true;
                             }
                         }
@@ -376,27 +519,28 @@ impl Network {
         // whether) the receiver polls — unlike node churn, where in-flight
         // traffic stays buffered on the in-edges until the node rejoins
         for (eid, down) in c.link_down.iter().enumerate() {
-            if *down && !self.queues[eid].is_empty() {
-                self.acct.dropped_messages += self.queues[eid].len() as u64;
-                self.in_flight -= self.queues[eid].len();
-                self.queues[eid].clear();
+            if *down && self.pool.queued(eid) > 0 {
+                let purged = self.pool.purge(eid);
+                self.acct.dropped_messages += purged as u64;
+                self.in_flight -= purged;
             }
         }
         // per-node impairment — exactly the local knowledge a real client
-        // has: itself offline, a neighbor offline, or an incident link down
+        // has: itself offline, a neighbor offline, or an incident link
+        // down. Computed into the reusable scratch (no per-step alloc),
+        // then swapped into impaired_prev.
         let n = self.topo.n;
-        let mut impaired = vec![false; n];
-        for (i, imp) in impaired.iter_mut().enumerate() {
+        for (i, imp) in c.impaired_scratch.iter_mut().enumerate() {
             *imp = c.node_down[i]
-                || self.edge_index[i]
+                || self.out[self.out_off[i]..self.out_off[i + 1]]
                     .iter()
                     .any(|&(dst, eid)| c.node_down[dst] || c.link_down[eid]);
         }
         let periodic = c.repair_every > 0 && t > 0 && t % c.repair_every == 0;
         for i in 0..n {
-            c.repair_due[i] = (c.impaired_prev[i] && !impaired[i]) || periodic;
+            c.repair_due[i] = (c.impaired_prev[i] && !c.impaired_scratch[i]) || periodic;
         }
-        c.impaired_prev = impaired;
+        std::mem::swap(&mut c.impaired_prev, &mut c.impaired_scratch);
     }
 
     /// Advance the delivery clock one communication round (delayed
@@ -441,13 +585,14 @@ impl Network {
         self.topo.n
     }
 
-    /// Out-edges of `src` as (dst, flat edge id), dst ascending.
+    /// Out-edges of `src` as (dst, flat edge id), dst ascending — a slice
+    /// of the CSR table.
     pub fn out_edges(&self, src: usize) -> &[(usize, usize)] {
-        &self.edge_index[src]
+        &self.out[self.out_off[src]..self.out_off[src + 1]]
     }
 
     fn edge_id(&self, src: usize, dst: usize) -> Option<usize> {
-        self.edge_ids.get(&(src, dst)).copied()
+        edge_id_in(&self.out, &self.out_off, src, dst)
     }
 
     /// Send to one neighbor. Panics if (src,dst) is not an edge — the
@@ -461,6 +606,12 @@ impl Network {
         let eid = self
             .edge_id(src, dst)
             .unwrap_or_else(|| panic!("({src},{dst}) is not an edge of {}", self.topo.kind));
+        self.send_on_edge(src, dst, eid, payload);
+    }
+
+    /// [`Self::send`] with the edge id already in hand (the broadcast fast
+    /// path — no per-neighbor binary search).
+    fn send_on_edge(&mut self, src: usize, dst: usize, eid: usize, payload: Payload) {
         if let Some(c) = self.cond.as_ref() {
             if c.node_down[src] {
                 return;
@@ -489,22 +640,23 @@ impl Network {
             None => self.now,
         };
         self.in_flight += 1;
-        self.queues[eid].push_back((deliver_at, Message { from: src, payload }));
+        self.pool.push(eid, deliver_at, Message { from: src, payload });
     }
 
     /// Send the same payload to every neighbor of `src` (clone-per-edge is
-    /// cheap: payloads are Arc or small vectors).
+    /// cheap: payloads are Arc or small vectors). Iterates the CSR row in
+    /// place — no neighbor-list clone on this per-client-per-round path.
     pub fn broadcast(&mut self, src: usize, payload: &Payload) {
-        let neighbors: Vec<usize> = self.topo.neighbors(src).to_vec();
-        for dst in neighbors {
-            self.send(src, dst, payload.clone());
+        for k in self.out_off[src]..self.out_off[src + 1] {
+            let (dst, eid) = self.out[k];
+            self.send_on_edge(src, dst, eid, payload.clone());
         }
     }
 
     /// Drain every *due* queued message destined for `dst` — O(in-degree)
-    /// via the precomputed reverse-adjacency table, sources in ascending
-    /// order. Messages whose delivery round is still in the future stay
-    /// queued (per-edge delay is constant, so FIFO order is preserved).
+    /// via the reverse CSR table, sources in ascending order. Messages
+    /// whose delivery round is still in the future stay queued (per-edge
+    /// delay is constant, so FIFO order is preserved).
     ///
     /// Faults: an offline receiver drains nothing — its in-flight traffic
     /// stays buffered until it rejoins (nodes buffer). Down *links* never
@@ -518,9 +670,10 @@ impl Network {
             }
         }
         let mut out = vec![];
-        for &(_, eid) in &self.in_edges[dst] {
-            while self.queues[eid].front().is_some_and(|&(at, _)| at <= self.now) {
-                out.push(self.queues[eid].pop_front().unwrap().1);
+        for k in self.in_off[dst]..self.in_off[dst + 1] {
+            let eid = self.inc[k].1;
+            while let Some(msg) = self.pool.pop_due(eid, self.now) {
+                out.push(msg);
             }
         }
         self.acct.delivered_messages += out.len() as u64;

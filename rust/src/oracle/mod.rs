@@ -345,6 +345,65 @@ pub fn synthetic_manifest() -> Manifest {
     }
 }
 
+/// In-code manifest for `--model cheap`: the same transformer-shaped
+/// parameter list and loss-surface API as [`synthetic_manifest`], shrunk
+/// (~6k parameters vs ~58k, seq 8, batch 2) until a local step costs
+/// microseconds. Massive-scale runs (10k–100k clients) use it so the
+/// limiting axis is client count and topology, not model math — loss
+/// values are learnable-but-toy, exactly like the synthetic oracle's.
+pub fn cheap_manifest() -> Manifest {
+    let (vocab, seq, dim) = (160usize, 8usize, 16usize);
+    let (layers, heads, batch) = (1usize, 2usize, 2usize);
+    let lora_rank = 2usize;
+    let mlp = 4 * dim;
+    let mut params: Vec<TensorSpec> = vec![spec("embed.tok", &[vocab, dim])];
+    let mut lora_params: Vec<TensorSpec> = vec![];
+    let mut params2d: Vec<String> = vec!["embed.tok".to_string()];
+    for l in 0..layers {
+        let p = |suffix: &str| format!("block{l}.{suffix}");
+        params.push(spec(&p("ln1.scale"), &[dim]));
+        params.push(spec(&p("ln1.bias"), &[dim]));
+        for w in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"] {
+            params.push(spec(&p(w), &[dim, dim]));
+            params2d.push(p(w));
+        }
+        params.push(spec(&p("ln2.scale"), &[dim]));
+        params.push(spec(&p("ln2.bias"), &[dim]));
+        params.push(spec(&p("mlp.w1"), &[dim, mlp]));
+        params2d.push(p("mlp.w1"));
+        params.push(spec(&p("mlp.b1"), &[mlp]));
+        params.push(spec(&p("mlp.w2"), &[mlp, dim]));
+        params2d.push(p("mlp.w2"));
+        params.push(spec(&p("mlp.b2"), &[dim]));
+        for w in ["attn.wq", "attn.wv"] {
+            lora_params.push(spec(&format!("{}.lora_a", p(w)), &[dim, lora_rank]));
+            lora_params.push(spec(&format!("{}.lora_b", p(w)), &[lora_rank, dim]));
+        }
+    }
+    params.push(spec("final.ln.scale", &[dim]));
+    params.push(spec("final.ln.bias", &[dim]));
+    let num_params = params.iter().map(|s| s.numel()).sum();
+    Manifest {
+        config: ModelConfig {
+            name: "cheap".to_string(),
+            vocab,
+            seq,
+            dim,
+            layers,
+            heads,
+            batch,
+            num_classes: 2,
+            lora_rank,
+            subcge_rank: 16,
+            num_params,
+        },
+        params,
+        lora_params,
+        params2d,
+        artifacts: vec![],
+    }
+}
+
 fn spec(name: &str, shape: &[usize]) -> TensorSpec {
     TensorSpec { name: name.to_string(), shape: shape.to_vec() }
 }
@@ -376,6 +435,29 @@ mod tests {
         let d_lora: usize = m.lora_params.iter().map(|s| s.numel()).sum();
         assert!(d_lora >= FEAT, "lora dim {d_lora} must cover the feature head");
         assert!(d_lora * 10 < m.config.num_params);
+    }
+
+    #[test]
+    fn cheap_manifest_is_well_formed_and_much_smaller() {
+        let m = cheap_manifest();
+        // same structural contracts as the synthetic manifest…
+        assert_eq!(m.param2d_indices().len(), m.params2d.len());
+        for &i in &m.param2d_indices() {
+            assert_eq!(m.params[i].shape.len(), 2);
+        }
+        // …at a fraction of the size (the point of --model cheap), and
+        // with a vocab the planted-lexicon task generator can still use
+        assert!(m.config.num_params * 5 < synthetic_manifest().config.num_params);
+        assert!(m.config.vocab as i32 > crate::data::FILLER_BASE + 16);
+        // the oracle API works on it end-to-end
+        let o = SyntheticOracle::new(&m, 7);
+        let p = ParamStore::init(&m, 0);
+        let (b, s) = (m.config.batch, m.config.seq);
+        let ids: Vec<i32> = (0..b * s).map(|i| ((i * 131) % m.config.vocab) as i32).collect();
+        let labels: Vec<i32> = (0..b).map(|i| (i % 2) as i32).collect();
+        let (loss, grads) = o.grad(&p, &ids, &labels, s);
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(grads.num_elements(), p.num_elements());
     }
 
     #[test]

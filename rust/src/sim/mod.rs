@@ -159,8 +159,12 @@ impl EnvCore {
         if key.clients == 0 {
             bail!("clients must be >= 1");
         }
-        let (manifest, backend) = if key.model == "synthetic" {
-            let manifest = crate::oracle::synthetic_manifest();
+        let (manifest, backend) = if key.model == "synthetic" || key.model == "cheap" {
+            let manifest = if key.model == "cheap" {
+                crate::oracle::cheap_manifest()
+            } else {
+                crate::oracle::synthetic_manifest()
+            };
             let backend =
                 Backend::Synthetic(SyntheticOracle::new(&manifest, SYNTHETIC_ORACLE_SEED));
             (manifest, backend)
@@ -172,7 +176,21 @@ impl EnvCore {
         };
         let spec = TaskSpec::named(&key.task)
             .with_context(|| format!("unknown task {:?}", key.task))?;
-        let dataset = Dataset::generate(&spec, manifest.config.vocab, manifest.config.seq);
+        let dataset = if key.model == "cheap" {
+            // massive-scale mode: grow the train split with the client
+            // count (partition() needs ≥ 1 example per client) and keep
+            // the eval splits small so per-eval cost stays trivial
+            Dataset::generate_sized(
+                &spec,
+                manifest.config.vocab,
+                manifest.config.seq,
+                key.clients.max(1024),
+                128,
+                256,
+            )
+        } else {
+            Dataset::generate(&spec, manifest.config.vocab, manifest.config.seq)
+        };
         let uniform_partitions = dataset.partition(key.clients);
         let b = manifest.config.batch;
         let test_batches = batchify(&dataset.test, b);

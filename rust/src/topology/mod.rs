@@ -2,11 +2,20 @@
 //!
 //! The communication structure is an undirected, connected, static graph
 //! `G = (V, E)`; clients talk only to `N(i)`.  The paper evaluates ring and
-//! meshgrid; we additionally provide torus, complete, star, Erdős–Rényi and
-//! Watts–Strogatz small-world graphs for ablations, plus the graph
-//! quantities the algorithms need: BFS diameter, Metropolis–Hastings mixing
-//! weights (doubly-stochastic, the `w_ij` of Eq. 2) and a spectral-gap
-//! estimate (consensus-rate diagnostic).
+//! meshgrid; we additionally provide torus, complete, star, Erdős–Rényi,
+//! Watts–Strogatz small-world, Barabási–Albert scale-free, hierarchical
+//! cluster-of-rings and hub-and-spoke graphs for ablations and
+//! massive-scale runs, plus the graph quantities the algorithms need: BFS
+//! diameter, Metropolis–Hastings mixing weights (doubly-stochastic, the
+//! `w_ij` of Eq. 2) and a spectral-gap estimate (consensus-rate
+//! diagnostic).
+//!
+//! Construction is O(m): edge lists are deduplicated by sort+dedup, G(n,p)
+//! uses Batagelj–Brandes geometric skip sampling, and preferential
+//! attachment uses the repeated-nodes target list.  [`Topology::diameter`]
+//! is exact all-pairs BFS up to [`EXACT_DIAMETER_LIMIT`] nodes and a
+//! certified double-sweep/iFUB-style upper bound beyond that (never an
+//! underestimate, so flooding still covers the graph).
 //!
 //! ```
 //! use seedflood::topology::Topology;
@@ -39,6 +48,9 @@ pub enum Kind {
     Star,
     ErdosRenyi,
     SmallWorld,
+    ScaleFree,
+    Hierarchical,
+    HubSpoke,
 }
 
 impl Kind {
@@ -51,6 +63,9 @@ impl Kind {
             "star" => Kind::Star,
             "erdos" | "erdos-renyi" | "er" => Kind::ErdosRenyi,
             "smallworld" | "small-world" | "ws" => Kind::SmallWorld,
+            "scalefree" | "scale-free" | "ba" => Kind::ScaleFree,
+            "hierarchical" | "hier" | "clusters" => Kind::Hierarchical,
+            "hubspoke" | "hub-spoke" | "hub" => Kind::HubSpoke,
             _ => return None,
         })
     }
@@ -67,9 +82,17 @@ impl Kind {
             Kind::Star => "star",
             Kind::ErdosRenyi => "erdos-renyi",
             Kind::SmallWorld => "small-world",
+            Kind::ScaleFree => "scale-free",
+            Kind::Hierarchical => "hierarchical",
+            Kind::HubSpoke => "hub-spoke",
         }
     }
 }
+
+/// Largest n for which [`Topology::diameter`] computes the exact all-pairs
+/// BFS diameter; beyond it the certified upper bound from
+/// [`Topology::diameter_bounds`] is used.
+pub const EXACT_DIAMETER_LIMIT: usize = 1024;
 
 impl Topology {
     pub fn build(kind: Kind, n: usize, seed: u64) -> Topology {
@@ -85,17 +108,34 @@ impl Topology {
             Kind::Star => Self::star(n),
             Kind::ErdosRenyi => Self::erdos_renyi(n, seed),
             Kind::SmallWorld => Self::small_world(n, 4, 0.1, seed),
+            Kind::ScaleFree => Self::scale_free(n, 2, seed),
+            Kind::Hierarchical => Self::hierarchical(n),
+            Kind::HubSpoke => Self::hub_spoke(n),
         }
     }
 
+    /// Build from an undirected edge list, deduplicating repeats in either
+    /// orientation. Sort+dedup over normalized pairs — O(m log m), with no
+    /// per-edge `contains` scan (which made dense generators O(m·deg)).
     fn from_edges(n: usize, edges: &[(usize, usize)], kind: &str) -> Topology {
-        let mut adj = vec![vec![]; n];
-        for &(a, b) in edges {
-            assert!(a != b && a < n && b < n, "bad edge ({a},{b}) of {n}");
-            if !adj[a].contains(&b) {
-                adj[a].push(b);
-                adj[b].push(a);
-            }
+        let mut norm: Vec<(usize, usize)> = edges
+            .iter()
+            .map(|&(a, b)| {
+                assert!(a != b && a < n && b < n, "bad edge ({a},{b}) of {n}");
+                (a.min(b), a.max(b))
+            })
+            .collect();
+        norm.sort_unstable();
+        norm.dedup();
+        let mut deg = vec![0usize; n];
+        for &(a, b) in &norm {
+            deg[a] += 1;
+            deg[b] += 1;
+        }
+        let mut adj: Vec<Vec<usize>> = deg.iter().map(|&d| Vec::with_capacity(d)).collect();
+        for &(a, b) in &norm {
+            adj[a].push(b);
+            adj[b].push(a);
         }
         for l in &mut adj {
             l.sort_unstable();
@@ -164,23 +204,104 @@ impl Topology {
     }
 
     /// G(n, p) with p chosen ≈ 2 ln n / n, re-sampled until connected.
+    /// Batagelj–Brandes geometric skip sampling: O(n + m) expected draws
+    /// instead of the n(n−1)/2 Bernoulli trials of the naive sampler.
     pub fn erdos_renyi(n: usize, seed: u64) -> Topology {
         let p = (2.0 * (n as f64).ln() / n as f64).min(1.0);
         let mut rng = Rng::new(seed);
         loop {
-            let mut edges = vec![];
-            for a in 0..n {
-                for b in a + 1..n {
-                    if rng.next_f64() < p {
-                        edges.push((a, b));
-                    }
-                }
-            }
-            let t = Self::from_edges(n, &edges, "erdos-renyi");
+            let t = Self::from_edges(n, &gnp_edges(n, p, &mut rng), "erdos-renyi");
             if t.is_connected() {
                 return t;
             }
         }
+    }
+
+    /// Barabási–Albert scale-free graph: each new node attaches `m` edges
+    /// preferentially (P ∝ degree) via the repeated-nodes target list —
+    /// every node appears once per unit of degree, so a uniform draw from
+    /// the list is degree-proportional. O(m·n) total; connected by
+    /// construction (growth from an (m+1)-clique), power-law degree tail.
+    pub fn scale_free(n: usize, m: usize, seed: u64) -> Topology {
+        assert!(n >= 2);
+        let m = m.clamp(1, n - 1);
+        let mut rng = Rng::new(seed);
+        let mut edges: Vec<(usize, usize)> = Vec::with_capacity(m * n);
+        let mut targets: Vec<u32> = Vec::with_capacity(2 * m * n);
+        for a in 0..=m {
+            for b in a + 1..=m {
+                edges.push((a, b));
+                targets.push(a as u32);
+                targets.push(b as u32);
+            }
+        }
+        let mut picked: Vec<usize> = Vec::with_capacity(m);
+        for v in m + 1..n {
+            // m distinct degree-proportional targets; rejection of repeats
+            // is O(1) expected since m ≪ Σdeg
+            picked.clear();
+            while picked.len() < m {
+                let t = targets[rng.next_below(targets.len() as u64) as usize] as usize;
+                if !picked.contains(&t) {
+                    picked.push(t);
+                }
+            }
+            for &t in &picked {
+                edges.push((t, v));
+                targets.push(t as u32);
+                targets.push(v as u32);
+            }
+        }
+        Self::from_edges(n, &edges, "scale-free")
+    }
+
+    /// Hierarchical cluster-of-rings: ~√n local rings of ~√n clients whose
+    /// gateway nodes (each cluster's first member) form a top-level ring —
+    /// the shape of region/rack-organized deployments. Deterministic,
+    /// O(n) edges, diameter Θ(√n).
+    pub fn hierarchical(n: usize) -> Topology {
+        assert!(n >= 2);
+        let clusters = (n as f64).sqrt().ceil() as usize;
+        let base = n / clusters;
+        let extra = n % clusters; // first `extra` clusters get one more node
+        let mut edges = Vec::with_capacity(n + clusters);
+        let mut gateways = Vec::with_capacity(clusters);
+        let mut start = 0;
+        for c in 0..clusters {
+            let size = base + usize::from(c < extra);
+            gateways.push(start);
+            for k in 0..size {
+                // ring within the cluster (a 2-ring is a single edge)
+                if size >= 2 && (size > 2 || k == 0) {
+                    edges.push((start + k, start + (k + 1) % size));
+                }
+            }
+            start += size;
+        }
+        for (c, &g) in gateways.iter().enumerate() {
+            if clusters >= 2 && (clusters > 2 || c == 0) {
+                edges.push((g, gateways[(c + 1) % clusters]));
+            }
+        }
+        Self::from_edges(n, &edges, "hierarchical")
+    }
+
+    /// Hub-and-spoke: ~√n hubs in a clique, every other node a leaf
+    /// attached round-robin to one hub — the centralized extreme of the
+    /// family. Deterministic, O(n) edges, diameter ≤ 3 at any scale.
+    pub fn hub_spoke(n: usize) -> Topology {
+        assert!(n >= 2);
+        let hubs = ((n as f64).sqrt().ceil() as usize).min(n);
+        let mut edges = Vec::with_capacity(hubs * hubs / 2 + n);
+        for a in 0..hubs {
+            for b in a + 1..hubs {
+                edges.push((a, b));
+            }
+        }
+        for v in hubs..n {
+            edges.push(((v - hubs) % hubs, v));
+        }
+        Self::from_edges(n, &edges, "hub-spoke")
     }
 
     /// Watts–Strogatz: ring lattice with k nearest neighbours, rewired with
@@ -256,13 +377,84 @@ impl Topology {
         self.n == 0 || self.bfs(0).iter().all(|&d| d != usize::MAX)
     }
 
-    /// Exact diameter (max over all-pairs BFS). Paper: flooding runs for
-    /// `D` steps so every message reaches every client within an iteration.
+    /// Flood depth D (paper: flooding runs for `D` steps so every message
+    /// reaches every client within an iteration). Exact all-pairs BFS for
+    /// n ≤ [`EXACT_DIAMETER_LIMIT`]; beyond that, the certified upper
+    /// bound from [`Topology::diameter_bounds`] — an overestimate at worst
+    /// (never under-floods), computed in O(k·(n+m)) for a small sweep
+    /// budget k instead of O(n·(n+m)).
     pub fn diameter(&self) -> usize {
+        if self.n <= EXACT_DIAMETER_LIMIT {
+            self.diameter_exact()
+        } else {
+            self.diameter_bounds().1
+        }
+    }
+
+    /// Exact diameter (max over all-pairs BFS), O(n·(n+m)) — ground truth
+    /// for [`Topology::diameter_bounds`] and small graphs.
+    pub fn diameter_exact(&self) -> usize {
         (0..self.n)
             .map(|s| self.bfs(s).into_iter().max().unwrap())
             .max()
             .unwrap_or(0)
+    }
+
+    /// Certified diameter bounds `(lb, ub)` with `lb ≤ D ≤ ub`, from a
+    /// constant number of BFS sweeps (double-sweep / iFUB style):
+    /// eccentricities of sweep endpoints lower-bound D; twice the
+    /// eccentricity of a shortest-path midpoint upper-bounds it
+    /// (`d(x,y) ≤ d(x,mid) + d(mid,y) ≤ 2·ecc(mid)`). Panics on a
+    /// disconnected graph (eccentricities are infinite there).
+    pub fn diameter_bounds(&self) -> (usize, usize) {
+        if self.n <= 1 {
+            return (0, 0);
+        }
+        let bfs_ecc = |s: usize| -> (Vec<usize>, usize, usize) {
+            let d = self.bfs(s);
+            let (mut e, mut far) = (0, s);
+            for (v, &dv) in d.iter().enumerate() {
+                assert!(dv != usize::MAX, "diameter_bounds on a disconnected graph");
+                if dv > e {
+                    e = dv;
+                    far = v;
+                }
+            }
+            (d, e, far)
+        };
+        // iFUB's heuristic root: sweeps from a max-degree vertex land on
+        // peripheral vertices fast
+        let root = (0..self.n).max_by_key(|&v| self.adj[v].len()).unwrap();
+        let (_, e_root, mut a) = bfs_ecc(root);
+        let mut lb = e_root;
+        let mut ub = 2 * e_root;
+        for _ in 0..3 {
+            let (da, ea, b) = bfs_ecc(a);
+            lb = lb.max(ea);
+            let (db, eb, _) = bfs_ecc(b);
+            lb = lb.max(eb);
+            // midpoint: a vertex on a shortest a–b path (d_a + d_b = d(a,b))
+            // as close to halfway as possible
+            let mut mid = a;
+            let mut best = usize::MAX;
+            for (v, (&dav, &dbv)) in da.iter().zip(&db).enumerate() {
+                if dav + dbv == ea {
+                    let off = dav.abs_diff(ea / 2);
+                    if off < best {
+                        best = off;
+                        mid = v;
+                    }
+                }
+            }
+            let (_, em, next) = bfs_ecc(mid);
+            lb = lb.max(em);
+            ub = ub.min(2 * em);
+            if lb == ub {
+                break;
+            }
+            a = next; // restart the sweep from the midpoint's periphery
+        }
+        (lb, ub)
     }
 
     /// Metropolis–Hastings mixing weights: symmetric, doubly stochastic —
@@ -322,6 +514,37 @@ impl Topology {
         }
         1.0 - lambda.abs()
     }
+}
+
+/// Sample the edge set of G(n, p) by Batagelj–Brandes geometric skip
+/// sampling: walk the linearized upper triangle jumping `1 + ⌊ln(1−r) /
+/// ln(1−p)⌋` cells per draw — one RNG draw per *edge* (plus O(n) row
+/// crossings), not per pair.
+fn gnp_edges(n: usize, p: f64, rng: &mut Rng) -> Vec<(usize, usize)> {
+    if p <= 0.0 || n < 2 {
+        return vec![];
+    }
+    if p >= 1.0 {
+        return (0..n).flat_map(|a| (a + 1..n).map(move |b| (a, b))).collect();
+    }
+    let lq = (1.0 - p).ln(); // < 0
+    let expect = (p * (n * (n - 1) / 2) as f64) as usize;
+    let mut edges = Vec::with_capacity(expect + expect / 8 + 16);
+    let mut v: usize = 1;
+    let mut w: i64 = -1;
+    while v < n {
+        // 1 − r ∈ (0, 1], so the skip is a non-negative integer
+        let skip = ((1.0 - rng.next_f64()).ln() / lq) as i64;
+        w += 1 + skip;
+        while w >= v as i64 && v < n {
+            w -= v as i64;
+            v += 1;
+        }
+        if v < n {
+            edges.push((w as usize, v));
+        }
+    }
+    edges
 }
 
 /// Factor n as r×c with r ≤ c and r as large as possible.
@@ -450,6 +673,146 @@ mod tests {
     fn kind_parse() {
         assert_eq!(Kind::parse("ring"), Some(Kind::Ring));
         assert_eq!(Kind::parse("mesh"), Some(Kind::Meshgrid));
+        assert_eq!(Kind::parse("scale-free"), Some(Kind::ScaleFree));
+        assert_eq!(Kind::parse("ba"), Some(Kind::ScaleFree));
+        assert_eq!(Kind::parse("hierarchical"), Some(Kind::Hierarchical));
+        assert_eq!(Kind::parse("hub-spoke"), Some(Kind::HubSpoke));
         assert_eq!(Kind::parse("nope"), None);
+    }
+
+    #[test]
+    fn kind_name_roundtrips_through_parse() {
+        for k in [
+            Kind::Ring, Kind::Meshgrid, Kind::Torus, Kind::Complete, Kind::Star,
+            Kind::ErdosRenyi, Kind::SmallWorld, Kind::ScaleFree, Kind::Hierarchical,
+            Kind::HubSpoke,
+        ] {
+            assert_eq!(Kind::parse(k.name()), Some(k), "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn from_edges_dedups_both_orientations() {
+        let t = Topology::from_edges(3, &[(0, 1), (1, 0), (0, 1), (1, 2)], "t");
+        assert_eq!(t.num_edges(), 2);
+        assert_eq!(t.neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn scale_free_connected_heavy_tail_and_deterministic() {
+        let t = Topology::scale_free(2000, 2, 7);
+        assert!(t.is_connected());
+        // m edges per new node (minus clique overlap dedup is impossible:
+        // targets are distinct), so |E| = C(3,2) + 2·(n-3)
+        assert_eq!(t.num_edges(), 3 + 2 * (2000 - 3));
+        // preferential attachment concentrates degree: the hub's degree
+        // dwarfs the mean (≈ 4) — the power-law tail in one number
+        let mean = 2.0 * t.num_edges() as f64 / t.n as f64;
+        assert!(
+            t.max_degree() as f64 > 8.0 * mean,
+            "no heavy tail: max {} mean {mean:.1}",
+            t.max_degree()
+        );
+        let t2 = Topology::scale_free(2000, 2, 7);
+        assert_eq!(t.adj, t2.adj);
+        assert_ne!(t.adj, Topology::scale_free(2000, 2, 8).adj);
+    }
+
+    #[test]
+    fn hierarchical_structure() {
+        let t = Topology::hierarchical(100);
+        assert!(t.is_connected());
+        // ring-in-ring: local degree 2, gateways at most 4
+        assert!(t.max_degree() <= 4, "max degree {}", t.max_degree());
+        // Θ(√n) diameter: two half-rings of ~√n each
+        let d = t.diameter();
+        assert!(d >= 5 && d <= 30, "diameter {d}");
+        assert_eq!(t.adj, Topology::hierarchical(100).adj);
+    }
+
+    #[test]
+    fn hub_spoke_short_diameter() {
+        let t = Topology::hub_spoke(1000);
+        assert!(t.is_connected());
+        assert!(t.diameter() <= 3, "diameter {}", t.diameter());
+        // every leaf has degree 1; hubs carry clique + leaf share
+        let hubs = (1000f64).sqrt().ceil() as usize;
+        assert!((hubs..1000).all(|v| t.degree(v) == 1));
+        assert!(t.max_degree() >= hubs - 1);
+    }
+
+    #[test]
+    fn small_ns_construct_for_every_kind() {
+        for k in [
+            Kind::Ring, Kind::Meshgrid, Kind::Torus, Kind::Complete, Kind::Star,
+            Kind::ErdosRenyi, Kind::SmallWorld, Kind::ScaleFree, Kind::Hierarchical,
+            Kind::HubSpoke,
+        ] {
+            for n in [1usize, 2, 3, 5, 8] {
+                let t = Topology::build(k, n, 3);
+                assert!(t.is_connected(), "{} n={n}", k.name());
+                assert_eq!(t.n, n);
+            }
+        }
+    }
+
+    #[test]
+    fn gnp_skip_sampler_matches_expected_density() {
+        let n = 400;
+        let p = 0.05;
+        let mut rng = Rng::new(11);
+        let edges = gnp_edges(n, p, &mut rng);
+        let pairs = (n * (n - 1) / 2) as f64;
+        let got = edges.len() as f64 / pairs;
+        assert!((got - p).abs() < 0.01, "density {got:.4} vs p={p}");
+        // all edges in range, upper-triangular, unique
+        let mut seen = std::collections::HashSet::new();
+        for &(a, b) in &edges {
+            assert!(a < b && b < n);
+            assert!(seen.insert((a, b)));
+        }
+        // degenerate ps
+        assert!(gnp_edges(10, 0.0, &mut rng).is_empty());
+        assert_eq!(gnp_edges(10, 1.0, &mut rng).len(), 45);
+    }
+
+    #[test]
+    fn diameter_bounds_sandwich_exact_for_every_kind() {
+        // the acceptance contract: lb ≤ D ≤ ub on every kind, across sizes
+        // up to EXACT_DIAMETER_LIMIT (sparse kinds; dense kinds capped so
+        // the exact all-pairs reference stays fast)
+        for k in [
+            Kind::Ring, Kind::Meshgrid, Kind::Torus, Kind::Star, Kind::ErdosRenyi,
+            Kind::SmallWorld, Kind::ScaleFree, Kind::Hierarchical, Kind::HubSpoke,
+        ] {
+            for n in [2usize, 3, 17, 64, 257, EXACT_DIAMETER_LIMIT] {
+                let t = Topology::build(k, n, 5);
+                let exact = t.diameter_exact();
+                let (lb, ub) = t.diameter_bounds();
+                assert!(
+                    lb <= exact && exact <= ub,
+                    "{} n={n}: bounds [{lb},{ub}] miss exact {exact}",
+                    k.name()
+                );
+                // diameter() takes the exact path at these sizes
+                assert_eq!(t.diameter(), exact, "{} n={n}", k.name());
+            }
+        }
+        for n in [2usize, 17, 128] {
+            let t = Topology::complete(n);
+            let (lb, ub) = t.diameter_bounds();
+            assert!(lb <= 1 && ub >= 1 && lb <= ub);
+        }
+    }
+
+    #[test]
+    fn diameter_estimate_used_above_exact_limit_is_safe() {
+        // above the cutoff, diameter() must return a certified ≥-D value
+        let t = Topology::hierarchical(EXACT_DIAMETER_LIMIT + 500);
+        let exact = t.diameter_exact(); // still affordable on a sparse graph
+        let d = t.diameter();
+        assert!(d >= exact, "estimate {d} under-floods exact {exact}");
+        let (lb, ub) = t.diameter_bounds();
+        assert!(lb <= exact && exact <= ub);
     }
 }

@@ -2,12 +2,13 @@
 //! flooding, mixing, aggregation) using the in-repo proptest-lite harness
 //! (`util::prop`; this offline image vendors no proptest crate).
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet, VecDeque};
 
 use seedflood::config::{ExperimentConfig, Method};
 use seedflood::flood::{flood_rounds, FloodDedup, FloodState};
-use seedflood::net::{MsgId, Network, SeedUpdate};
-use seedflood::netcond::NetCond;
+use seedflood::net::{Message, MsgId, Network, Payload, SeedUpdate};
+use seedflood::netcond::{Event, NetCond};
+use seedflood::rng::Rng;
 use seedflood::sched::TimeModel;
 use seedflood::sim::{self, Env};
 use seedflood::subcge::{apply_uavt, CoeffAccum, SubspaceBasis};
@@ -17,10 +18,21 @@ use seedflood::util::json::Json;
 use seedflood::util::prop::{check, Gen};
 use seedflood::zo;
 
+const ALL_KINDS: [Kind; 10] = [
+    Kind::Ring,
+    Kind::Meshgrid,
+    Kind::Torus,
+    Kind::Complete,
+    Kind::Star,
+    Kind::ErdosRenyi,
+    Kind::SmallWorld,
+    Kind::ScaleFree,
+    Kind::Hierarchical,
+    Kind::HubSpoke,
+];
+
 fn random_topology(g: &mut Gen) -> Topology {
-    let kinds = [Kind::Ring, Kind::Meshgrid, Kind::Torus, Kind::Complete,
-                 Kind::Star, Kind::ErdosRenyi, Kind::SmallWorld];
-    let kind = *g.choose(&kinds);
+    let kind = *g.choose(&ALL_KINDS);
     let n = g.usize_in(2, 40);
     Topology::build(kind, n, g.rng.next_u64())
 }
@@ -548,6 +560,301 @@ fn prop_runrecord_to_json_from_json_roundtrip() {
         let back2 = RunRecord::from_json(&reparsed).map_err(|e| e.to_string())?;
         if back2.to_json() != j {
             return Err("textual roundtrip changed the record".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_diameter_bounds_sandwich_exact() {
+    // the double-sweep estimator must produce certified bounds on every
+    // topology kind — lb ≤ exact ≤ ub, with exact from all-pairs BFS
+    // (cheap here: random_topology keeps n ≤ 40)
+    check("diameter-bounds", 60, |g| {
+        let topo = random_topology(g);
+        let (lb, ub) = topo.diameter_bounds();
+        let exact = topo.diameter_exact();
+        if !(lb <= exact && exact <= ub) {
+            return Err(format!(
+                "{} n={}: bounds [{lb},{ub}] miss exact {exact}",
+                topo.kind, topo.n
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Behavioral oracle for the CSR [`Network`]: the pre-CSR layout —
+/// `HashMap<(src,dst), eid>` edge index plus one `VecDeque` per directed
+/// edge — with identical edge-id assignment (src-ascending, dst-ascending),
+/// identical fault-RNG draw order (one draw per send, only when loss > 0),
+/// and the ascending-source drain in `recv_all`.
+struct RefNet {
+    n: usize,
+    neighbors: Vec<Vec<usize>>,
+    ids: HashMap<(usize, usize), usize>,
+    queues: Vec<VecDeque<(u64, Message)>>,
+    edge_bytes: Vec<u64>,
+    total_bytes: u64,
+    total_messages: u64,
+    delivered_messages: u64,
+    dropped_messages: u64,
+    now: u64,
+    in_flight: usize,
+    loss: f64,
+    delay: u64,
+    link_down: Vec<bool>,
+    node_down: Vec<bool>,
+    events: Vec<Event>,
+    rng: Rng,
+}
+
+impl RefNet {
+    fn new(topo: &Topology, cond: &NetCond) -> RefNet {
+        let n = topo.n;
+        let mut ids = HashMap::new();
+        let mut m = 0usize;
+        for src in 0..n {
+            for &dst in topo.neighbors(src) {
+                ids.insert((src, dst), m);
+                m += 1;
+            }
+        }
+        RefNet {
+            n,
+            neighbors: (0..n).map(|i| topo.neighbors(i).to_vec()).collect(),
+            ids,
+            queues: vec![VecDeque::new(); m],
+            edge_bytes: vec![0; m],
+            total_bytes: 0,
+            total_messages: 0,
+            delivered_messages: 0,
+            dropped_messages: 0,
+            now: 0,
+            in_flight: 0,
+            loss: cond.loss,
+            delay: cond.delay,
+            link_down: vec![false; m],
+            node_down: vec![false; n],
+            events: cond.events.clone(),
+            rng: Rng::new(cond.seed),
+        }
+    }
+
+    fn set_step(&mut self, t: usize) {
+        for v in self.link_down.iter_mut() {
+            *v = false;
+        }
+        for v in self.node_down.iter_mut() {
+            *v = false;
+        }
+        let events = self.events.clone();
+        for ev in events {
+            match ev {
+                Event::Node { id, from, until } => {
+                    if t >= from && t < until {
+                        self.node_down[id] = true;
+                    }
+                }
+                Event::Link { a, b, from, until } => {
+                    if t >= from && t < until {
+                        for (x, y) in [(a, b), (b, a)] {
+                            if let Some(&e) = self.ids.get(&(x, y)) {
+                                self.link_down[e] = true;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for eid in 0..self.queues.len() {
+            if self.link_down[eid] && !self.queues[eid].is_empty() {
+                let purged = self.queues[eid].len();
+                self.queues[eid].clear();
+                self.dropped_messages += purged as u64;
+                self.in_flight -= purged;
+            }
+        }
+    }
+
+    fn tick(&mut self) {
+        self.now += 1;
+    }
+
+    fn send(&mut self, src: usize, dst: usize, payload: Payload) {
+        let eid = self.ids[&(src, dst)];
+        if self.node_down[src] {
+            return;
+        }
+        let bytes = payload.wire_bytes();
+        self.edge_bytes[eid] += bytes;
+        self.total_bytes += bytes;
+        self.total_messages += 1;
+        if self.node_down[dst] || self.link_down[eid] {
+            self.dropped_messages += 1;
+            return;
+        }
+        if self.loss > 0.0 && self.rng.next_f64() < self.loss {
+            self.dropped_messages += 1;
+            return;
+        }
+        let at = self.now + self.delay;
+        self.in_flight += 1;
+        self.queues[eid].push_back((at, Message { from: src, payload }));
+    }
+
+    fn broadcast(&mut self, src: usize, payload: &Payload) {
+        for dst in self.neighbors[src].clone() {
+            self.send(src, dst, payload.clone());
+        }
+    }
+
+    fn recv_all(&mut self, dst: usize) -> Vec<Message> {
+        if self.node_down[dst] {
+            return vec![];
+        }
+        let mut out = vec![];
+        for src in 0..self.n {
+            if let Some(&eid) = self.ids.get(&(src, dst)) {
+                while self.queues[eid].front().is_some_and(|&(at, _)| at <= self.now) {
+                    out.push(self.queues[eid].pop_front().unwrap().1);
+                }
+            }
+        }
+        self.delivered_messages += out.len() as u64;
+        self.in_flight -= out.len();
+        out
+    }
+}
+
+fn msg_key(m: &Message) -> (usize, u64, Vec<MsgId>) {
+    let ids = match &m.payload {
+        Payload::Seeds(v) | Payload::SeedsQuantized(v) => v.iter().map(|u| u.id).collect(),
+        _ => vec![],
+    };
+    (m.from, m.payload.wire_bytes(), ids)
+}
+
+#[test]
+fn prop_csr_network_matches_hashmap_reference() {
+    // bit-for-bit equivalence of the CSR Network with the historical
+    // HashMap + VecDeque-per-edge implementation: same delivery order,
+    // same byte accounting, same fault behavior — under random
+    // topologies, random op scripts, and netcond faults (loss, delay,
+    // link/node down-windows)
+    check("csr-vs-hashmap-net", 30, |g| {
+        let kind = *g.choose(&ALL_KINDS);
+        let topo = Topology::build(kind, g.usize_in(2, 30), g.rng.next_u64());
+        let n = topo.n;
+        let mut events = vec![];
+        for _ in 0..g.usize_in(0, 3) {
+            let from = g.usize_in(0, 4);
+            let until = from + g.usize_in(1, 3);
+            if g.bool() {
+                events.push(Event::Node { id: g.usize_in(0, n - 1), from, until });
+            } else {
+                let a = g.usize_in(0, n - 1);
+                let nbrs = topo.neighbors(a);
+                if nbrs.is_empty() {
+                    continue;
+                }
+                let b = nbrs[g.usize_in(0, nbrs.len() - 1)];
+                events.push(Event::Link { a, b, from, until });
+            }
+        }
+        let cond = NetCond {
+            seed: g.rng.next_u64(),
+            loss: if g.bool() { g.f32_in(0.0, 0.4) as f64 } else { 0.0 },
+            delay: g.usize_in(0, 2) as u64,
+            events,
+            ..Default::default()
+        };
+        let mut net = Network::new(topo.clone());
+        net.install(&cond).map_err(|e| e.to_string())?;
+        let mut reference = RefNet::new(&topo, &cond);
+        let payload_for = |g: &mut Gen, src: usize, t: usize| {
+            Payload::Seeds(
+                (0..g.usize_in(1, 3))
+                    .map(|k| SeedUpdate {
+                        id: MsgId { origin: src as u32, step: (t * 10 + k) as u32 },
+                        seed: src as u64,
+                        coeff: 1.0,
+                    })
+                    .collect(),
+            )
+        };
+        for t in 0..g.usize_in(2, 5) {
+            net.set_step(t);
+            reference.set_step(t);
+            for _ in 0..g.usize_in(0, 10) {
+                match g.usize_in(0, 3) {
+                    0 => {
+                        let src = g.usize_in(0, n - 1);
+                        let nbrs = topo.neighbors(src);
+                        if nbrs.is_empty() {
+                            continue;
+                        }
+                        let dst = nbrs[g.usize_in(0, nbrs.len() - 1)];
+                        let payload = payload_for(g, src, t);
+                        net.send(src, dst, payload.clone());
+                        reference.send(src, dst, payload);
+                    }
+                    1 => {
+                        let src = g.usize_in(0, n - 1);
+                        let payload = payload_for(g, src, t);
+                        net.broadcast(src, &payload);
+                        reference.broadcast(src, &payload);
+                    }
+                    2 => {
+                        let dst = g.usize_in(0, n - 1);
+                        let a: Vec<_> = net.recv_all(dst).iter().map(msg_key).collect();
+                        let b: Vec<_> = reference.recv_all(dst).iter().map(msg_key).collect();
+                        if a != b {
+                            return Err(format!("recv order diverged at client {dst}"));
+                        }
+                    }
+                    _ => {
+                        net.tick();
+                        reference.tick();
+                    }
+                }
+            }
+        }
+        // fault windows over, clocks past every delay: drain everything
+        net.set_step(1 << 20);
+        reference.set_step(1 << 20);
+        for _ in 0..4 {
+            net.tick();
+            reference.tick();
+        }
+        for dst in 0..n {
+            let a: Vec<_> = net.recv_all(dst).iter().map(msg_key).collect();
+            let b: Vec<_> = reference.recv_all(dst).iter().map(msg_key).collect();
+            if a != b {
+                return Err(format!("final drain diverged at client {dst}"));
+            }
+        }
+        if net.acct.total_bytes != reference.total_bytes
+            || net.acct.total_messages != reference.total_messages
+            || net.acct.delivered_messages != reference.delivered_messages
+            || net.acct.dropped_messages != reference.dropped_messages
+            || net.acct.edge_bytes != reference.edge_bytes
+            || net.in_flight() != reference.in_flight
+        {
+            return Err(format!(
+                "accounting diverged: bytes {}/{} msgs {}/{} delivered {}/{} \
+                 dropped {}/{} in-flight {}/{}",
+                net.acct.total_bytes,
+                reference.total_bytes,
+                net.acct.total_messages,
+                reference.total_messages,
+                net.acct.delivered_messages,
+                reference.delivered_messages,
+                net.acct.dropped_messages,
+                reference.dropped_messages,
+                net.in_flight(),
+                reference.in_flight
+            ));
         }
         Ok(())
     });
