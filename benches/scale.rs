@@ -1,8 +1,11 @@
 //! Massive-scale benchmark and tracked perf ledger (ISSUE 6): O(m)
 //! topology construction at 100k clients, the double-sweep diameter
 //! estimator vs the old all-pairs BFS, CSR network build cost, bounded
-//! flooding throughput from 1k to 100k clients, and a short cheap-model
-//! SeedFlood segment through the event-driven engine.
+//! flooding throughput from 1k to 100k clients, the origin-sparse dedup
+//! memory comparison (PR 7: sparse filter vs the dense `Vec<StepSet>`
+//! projection), a *full* all-origin flood at n = 100k — impossible under
+//! the dense representation (~320 GB of dedup tables) — and a short
+//! cheap-model SeedFlood segment through the event-driven engine.
 //!
 //! Headline comparison — "flood-ready construction": everything the
 //! simulator does before the first flood round (build the topology, then
@@ -10,7 +13,9 @@
 //! reproduced verbatim below (`naive_erdos_renyi`, `naive_diameter`) so
 //! the speedup rows measure the real before/after, not a strawman.
 //!
-//! Run: cargo bench --bench scale               (full grid, ~1 min;
+//! Run: cargo bench --bench scale               (full grid, a few min —
+//!                                               the 100k all-origin
+//!                                               flood dominates;
 //!                                               writes BENCH_scale.json)
 //!      cargo bench --bench scale -- --smoke    (CI grid, a few seconds;
 //!                                               writes nothing)
@@ -26,7 +31,7 @@ use std::hint::black_box;
 use std::time::Instant;
 
 use seedflood::config::{ExperimentConfig, Method};
-use seedflood::flood::{flood_rounds, FloodState};
+use seedflood::flood::{flood_rounds, FloodDedup, FloodState};
 use seedflood::net::{MsgId, Network, SeedUpdate};
 use seedflood::rng::Rng;
 use seedflood::sched::TimeModel;
@@ -157,14 +162,19 @@ struct FloodRow {
     secs: f64,
     delivered: u64,
     ns_per_delivery: f64,
+    /// Largest per-client dedup filter after the flood, in bytes.
+    dedup_bytes: usize,
 }
 
-/// Bounded SeedFlood segment on a scale-free graph: clients 0..64 inject
-/// one update each, then `diameter()` synchronous flood rounds carry all
-/// 64 to every client. Capping the origin set keeps per-client dedup
-/// state at 64 `StepSet`s (~2 KB) so even n = 100k fits comfortably in
-/// memory, while the per-event machinery (CSR fan-out, pooled FIFOs,
-/// windowed dedup) is exercised at full scale.
+/// Bounded SeedFlood segment on a scale-free graph: 64 clients *spread
+/// across the id space* inject one update each (origin = their own
+/// client id), then `diameter()` synchronous flood rounds carry all 64
+/// to every client. Spreading the origins makes every client's dedup
+/// filter face origin ids up to ~n — the access pattern that cost the
+/// dense `Vec<StepSet>` table O(max origin) per client — while the
+/// origin *count* stays bounded, so the per-event machinery (CSR
+/// fan-out, pooled FIFOs, windowed dedup) is exercised at full scale
+/// without an O(n²) flood.
 fn bounded_flood(n: usize, origins: usize) -> FloodRow {
     let topo = Topology::build(Kind::ScaleFree, n, 42);
     let depth = topo.diameter().max(1);
@@ -173,14 +183,17 @@ fn bounded_flood(n: usize, origins: usize) -> FloodRow {
         .map(|_| {
             let mut st = FloodState::new();
             st.retain = 8;
+            st.seen.reserve_origins(n);
             st
         })
         .collect();
     let want = origins.min(n);
-    for (i, st) in states.iter_mut().take(want).enumerate() {
-        st.inject(SeedUpdate {
-            id: MsgId { origin: i as u32, step: 0 },
-            seed: 0x5eed ^ i as u64,
+    let stride = (n / want).max(1);
+    for i in 0..want {
+        let client = i * stride;
+        states[client].inject(SeedUpdate {
+            id: MsgId { origin: client as u32, step: 0 },
+            seed: 0x5eed ^ client as u64,
             coeff: 1.0,
         });
     }
@@ -196,7 +209,83 @@ fn bounded_flood(n: usize, origins: usize) -> FloodRow {
     }
     let delivered = net.acct.delivered_messages;
     assert!(delivered > 0, "flood at n={n} delivered nothing");
-    FloodRow { secs, delivered, ns_per_delivery: secs * 1e9 / delivered as f64 }
+    let dedup_bytes = states.iter().map(|s| s.seen.mem_bytes()).max().unwrap_or(0);
+    FloodRow { secs, delivered, ns_per_delivery: secs * 1e9 / delivered as f64, dedup_bytes }
+}
+
+/// Bytes the historical dense `Vec<StepSet>` dedup table needs for the
+/// same per-client knowledge as [`bounded_flood`] leaves behind: replay
+/// one covered client's ids into a filter pinned to the dense
+/// representation. The dense table is origin-id-indexed, so spread
+/// origins cost O(max origin id) — the n²-wall side of the comparison.
+fn dense_dedup_projection_bytes(n: usize, origins: usize) -> usize {
+    let want = origins.min(n);
+    let stride = (n / want).max(1);
+    let mut dense = FloodDedup::with_crossover(u32::MAX);
+    for i in 0..want {
+        dense.insert(MsgId { origin: (i * stride) as u32, step: 0 });
+    }
+    dense.mem_bytes()
+}
+
+struct FullFloodRow {
+    rounds: usize,
+    secs: f64,
+    /// Simulation-wide dedup bytes after full coverage (every floor
+    /// advanced: the steady-state footprint).
+    end_bytes: u64,
+    /// Largest simulation-wide dedup total observed (sampled every 8
+    /// rounds — mid-flood, when the per-client bump bitsets are live).
+    peak_bytes: u64,
+}
+
+/// The PR 7 acceptance segment: a *full* all-origin flood — every client
+/// an origin — on the hierarchical topology, one synchronous round at a
+/// time until every client has heard every origin. Under the dense
+/// representation this was out of reach at n = 100k (O(n) `StepSet`s per
+/// client = O(n²) simulation-wide, ~320 GB); the origin-sparse filter
+/// peaks at a bitset per client (n/8 bytes, ~1.3 GB total) and collapses
+/// to a few hundred bytes per client at the floor advance. The measured
+/// round count is certified against `diameter_bounds()`.
+fn full_flood(n: usize) -> FullFloodRow {
+    let topo = Topology::build(Kind::Hierarchical, n, 42);
+    let (lb, ub) = topo.diameter_bounds();
+    let mut net = Network::new(topo);
+    let mut states: Vec<FloodState> = (0..n)
+        .map(|_| {
+            let mut st = FloodState::new();
+            st.retain = 8;
+            st.seen.reserve_origins(n);
+            st
+        })
+        .collect();
+    for (i, st) in states.iter_mut().enumerate() {
+        st.inject(SeedUpdate {
+            id: MsgId { origin: i as u32, step: 0 },
+            seed: 0x5eed ^ i as u64,
+            coeff: 1.0,
+        });
+    }
+    let dedup_total =
+        |states: &[FloodState]| states.iter().map(|s| s.seen.mem_bytes() as u64).sum::<u64>();
+    let t0 = Instant::now();
+    let mut rounds = 0usize;
+    let mut peak_bytes = dedup_total(&states);
+    while !states.iter().all(|s| s.seen.len() == n) {
+        assert!(rounds < ub, "full flood at n={n} not covered after ub={ub} rounds");
+        flood_rounds(&mut states, &mut net, 1, |_, _| {});
+        rounds += 1;
+        if rounds % 8 == 0 {
+            peak_bytes = peak_bytes.max(dedup_total(&states));
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    assert!(
+        lb <= rounds && rounds <= ub,
+        "full flood rounds {rounds} outside certified bounds [{lb},{ub}] at n={n}"
+    );
+    let end_bytes = dedup_total(&states);
+    FullFloodRow { rounds, secs, end_bytes, peak_bytes: peak_bytes.max(end_bytes) }
 }
 
 /// Short cheap-model SeedFlood run through the event-driven engine: the
@@ -337,8 +426,8 @@ fn main() {
     println!("  CSR Network::new on scale-free n={nd}: {:.2} ms", 1e3 * net_secs);
     timings.push((format!("network_build_s_scale-free_{nd}"), net_secs));
 
-    // -- 4. bounded flooding throughput ------------------------------------
-    println!("\n== bounded flood (64 origins, scale-free, full coverage asserted) ==");
+    // -- 4. bounded flooding throughput + dedup memory ---------------------
+    println!("\n== bounded flood (64 spread origins, scale-free, coverage asserted) ==");
     let flood_ns: &[usize] = if smoke { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
     let mut per_delivery: Vec<(usize, f64)> = Vec::new();
     for &n in flood_ns {
@@ -352,13 +441,48 @@ fn main() {
         );
         metrics.push((format!("per_delivery_ns_{}k", n / 1000), row.ns_per_delivery));
         per_delivery.push((n, row.ns_per_delivery));
+        if n > 1_024 {
+            // above the dense/sparse crossover: compare the sparse filter
+            // against the dense Vec<StepSet> projection of the same state
+            let dense = dense_dedup_projection_bytes(n, 64) as f64;
+            let ratio = dense / row.dedup_bytes.max(1) as f64;
+            println!(
+                "  n={:<7} dedup {:>7.1} KB sparse vs {:>9.1} KB dense projection \
+                 -> {:>6.0}x smaller",
+                n,
+                row.dedup_bytes as f64 / 1024.0,
+                dense / 1024.0,
+                ratio
+            );
+            metrics.push((format!("dedup_sparse_vs_dense_ratio_{}k", n / 1000), ratio));
+        }
     }
     let base_ns = per_delivery[0].1;
     for &(n, ns) in per_delivery.iter().skip(1) {
         metrics.push((format!("per_delivery_growth_{}k_vs_1k", n / 1000), ns / base_ns));
     }
 
-    // -- 5. event-driven cheap-model segment (full grid only) --------------
+    // -- 5. full all-origin flood: the n² dedup wall, removed --------------
+    let mb = |b: u64| b as f64 / (1024.0 * 1024.0);
+    println!("\n== full all-origin flood (hierarchical, every client an origin) ==");
+    let full_ns: &[usize] = if smoke { &[4_096] } else { &[4_096, 100_000] };
+    for &n in full_ns {
+        let row = full_flood(n);
+        println!(
+            "  n={:<7} {:>4} rounds in {:>7.1} s, dedup {:>7.2} MB end / {:>8.2} MB peak",
+            n,
+            row.rounds,
+            row.secs,
+            mb(row.end_bytes),
+            mb(row.peak_bytes)
+        );
+        metrics.push((format!("full_flood_rounds_{n}"), row.rounds as f64));
+        metrics.push((format!("full_flood_end_dedup_mb_{n}"), mb(row.end_bytes)));
+        metrics.push((format!("full_flood_peak_dedup_mb_{n}"), mb(row.peak_bytes)));
+        timings.push((format!("full_flood_s_{n}"), row.secs));
+    }
+
+    // -- 6. event-driven cheap-model segment (full grid only) --------------
     if !smoke {
         println!("\n== event-driven SeedFlood segment, cheap oracle ==");
         metrics.push(("event_segment_s".into(), event_segment(2048)));
@@ -381,6 +505,14 @@ fn main() {
             get("per_delivery_growth_10k_vs_1k") <= 8.0,
             "per-delivery flood work grew super-linearly from 1k to 10k clients"
         );
+        assert!(
+            get("dedup_sparse_vs_dense_ratio_10k") >= 20.0,
+            "sparse dedup no longer beats the dense projection by 20x at n=10k"
+        );
+        assert!(
+            get("full_flood_end_dedup_mb_4096") <= 50.0,
+            "all-origin flood left more than 50 MB of dedup state at n=4096"
+        );
     } else {
         assert!(
             get("construct_speedup_flood_ready_10k") >= 10.0,
@@ -389,6 +521,14 @@ fn main() {
         assert!(
             get("per_delivery_growth_100k_vs_1k") <= 8.0,
             "per-delivery flood work grew super-linearly from 1k to 100k clients"
+        );
+        assert!(
+            get("dedup_sparse_vs_dense_ratio_100k") >= 50.0,
+            "sparse dedup fell below the 50x acceptance floor vs dense at n=100k"
+        );
+        assert!(
+            get("full_flood_end_dedup_mb_100000") <= 1000.0,
+            "the 100k all-origin flood no longer settles under 1 GB of dedup state"
         );
         assert!(get("event_segment_s") <= 60.0, "cheap event segment no longer runs in seconds");
     }

@@ -92,14 +92,19 @@ impl SeedFlood {
             WireFormat::Full
         };
         let space = Space::Full;
-        let states = init_states(env, &space, |_| Scratch::Flood {
-            accum: CoeffAccum::new(&basis),
-            flood: FloodState {
+        let states = init_states(env, &space, |_| {
+            let mut flood = FloodState {
                 wire,
                 retain: env.cfg.flood_retain,
                 repair_mode: env.cfg.repair_mode,
                 ..FloodState::new()
-            },
+            };
+            // every client is an origin: sizing the dedup filter's floor
+            // universe up front is what lets the origin-sparse
+            // representation compress steady-state flooding at large n
+            // (a no-op reservation below the dense crossover)
+            flood.seen.reserve_origins(n);
+            Scratch::Flood { accum: CoeffAccum::new(&basis), flood }
         });
         let flood_steps = if env.cfg.flood_steps == 0 {
             topo.diameter().max(1)

@@ -1,0 +1,293 @@
+//! `seedflood experiment hopgrid` — flooding vs gossip
+//! message-rounds-to-consensus across topology families.
+//!
+//! The paper's information-decay argument says gossip averaging needs
+//! Θ(1/spectral-gap) rounds to mix while flooding covers the graph in
+//! diameter rounds. This experiment measures both empirically on the
+//! same graphs: every client originates one update, flooding runs until
+//! every client has heard every origin (round count certified against
+//! [`Topology::diameter_bounds`] — the loop refuses to run past the
+//! upper bound), and gossip runs scalar Metropolis averaging until the
+//! worst-case deviation from the (preserved) mean falls below `eps` of
+//! the initial spread. Where gossip does not converge within the round
+//! cap the spectral estimate `ln(1/eps)/gap` stands in, flagged `est` —
+//! on a 4096-ring that is millions of rounds, which is exactly the
+//! point: the hop advantage `gossip/flood` grows with the graph, and
+//! the table shows it growing alongside the certified diameter bounds.
+
+use anyhow::Result;
+
+use crate::flood::{flood_rounds, FloodState};
+use crate::net::{MsgId, Network, SeedUpdate};
+use crate::rng::Rng;
+use crate::topology::{Kind, Topology};
+use crate::util::json::Json;
+
+/// One (topology kind, n) cell of the grid.
+#[derive(Clone, Debug)]
+pub struct HopCell {
+    pub kind: String,
+    pub n: usize,
+    /// Certified diameter bounds `(lb, ub)` from BFS double sweeps.
+    pub diam_lb: usize,
+    pub diam_ub: usize,
+    /// Empirical synchronous flood rounds until every client has seen
+    /// every origin. Always within `[diam_lb, diam_ub]`.
+    pub flood_rounds: usize,
+    /// Messages the flood put on the wire in total.
+    pub flood_messages: u64,
+    /// Gossip rounds until max deviation ≤ eps × initial spread; when
+    /// `gossip_est` is set, the cap was hit and this is the spectral
+    /// estimate `ln(1/eps)/gap` instead of a measured count.
+    pub gossip_rounds: usize,
+    pub gossip_est: bool,
+}
+
+impl HopCell {
+    /// Rounds-to-consensus ratio gossip/flood — the "hop advantage" of
+    /// flooding one update everywhere over averaging it in.
+    pub fn advantage(&self) -> f64 {
+        self.gossip_rounds as f64 / self.flood_rounds.max(1) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(&self.kind)),
+            ("n", Json::Num(self.n as f64)),
+            ("diam_lb", Json::Num(self.diam_lb as f64)),
+            ("diam_ub", Json::Num(self.diam_ub as f64)),
+            ("flood_rounds", Json::Num(self.flood_rounds as f64)),
+            ("flood_messages", Json::Num(self.flood_messages as f64)),
+            ("gossip_rounds", Json::Num(self.gossip_rounds as f64)),
+            ("gossip_est", Json::Bool(self.gossip_est)),
+            ("advantage", Json::Num(self.advantage())),
+        ])
+    }
+}
+
+/// The grid's default topology families: one short-diameter extreme
+/// (hub-spoke), one long (ring), and the three in between.
+pub fn default_kinds() -> Vec<Kind> {
+    vec![Kind::Ring, Kind::SmallWorld, Kind::ScaleFree, Kind::Hierarchical, Kind::HubSpoke]
+}
+
+/// All-origin flood on `topo` until full coverage, one synchronous round
+/// at a time. Returns (rounds, total messages). The round loop is capped
+/// by the certified diameter upper bound — flooding that has not covered
+/// the graph by then indicates a broken graph or dedup filter, and the
+/// cell errors rather than spinning.
+pub fn flood_consensus_rounds(topo: &Topology) -> Result<(usize, u64)> {
+    let n = topo.n;
+    let (_, ub) = topo.diameter_bounds();
+    let mut net = Network::new(topo.clone());
+    let mut states: Vec<FloodState> = (0..n)
+        .map(|_| {
+            let mut st = FloodState::new();
+            st.retain = 8;
+            // every client is an origin: size the dedup floor universe
+            // up front so the sparse filter compresses (flood/mod.rs)
+            st.seen.reserve_origins(n);
+            st
+        })
+        .collect();
+    for (i, st) in states.iter_mut().enumerate() {
+        st.inject(SeedUpdate {
+            id: MsgId { origin: i as u32, step: 0 },
+            seed: 0x5eed ^ i as u64,
+            coeff: 1.0,
+        });
+    }
+    let covered = |states: &[FloodState]| states.iter().all(|s| s.seen.len() == n);
+    let mut rounds = 0;
+    while !covered(&states) {
+        anyhow::ensure!(
+            rounds < ub,
+            "flood on {} n={n} not covered after ub={ub} rounds",
+            topo.kind
+        );
+        flood_rounds(&mut states, &mut net, 1, |_, _| {});
+        rounds += 1;
+    }
+    Ok((rounds, net.acct.total_messages))
+}
+
+/// Scalar Metropolis gossip on `topo`: client i starts from a seeded
+/// uniform draw, each round averages with neighbors under
+/// [`Topology::mixing_weights`] (doubly stochastic, so the mean is
+/// invariant). Returns (rounds, est): rounds until the max deviation
+/// from the mean is ≤ `eps` × the initial spread, or — when `cap`
+/// rounds do not get there — the spectral estimate `ln(1/eps)/gap`
+/// with `est = true`.
+pub fn gossip_consensus_rounds(topo: &Topology, seed: u64, eps: f64, cap: usize) -> (usize, bool) {
+    let n = topo.n;
+    let w = topo.mixing_weights();
+    let mut x: Vec<f64> = (0..n).map(|i| Rng::new(seed ^ i as u64).next_f64()).collect();
+    let mean = x.iter().sum::<f64>() / n as f64;
+    let spread = |x: &[f64]| x.iter().map(|v| (v - mean).abs()).fold(0.0, f64::max);
+    let spread0 = spread(&x);
+    if spread0 <= 0.0 {
+        return (0, false);
+    }
+    for rounds in 0..=cap {
+        if spread(&x) <= eps * spread0 {
+            return (rounds, false);
+        }
+        if rounds == cap {
+            break;
+        }
+        let mut y = vec![0.0; n];
+        for (i, row) in w.iter().enumerate() {
+            for &(j, wij) in row {
+                y[i] += wij as f64 * x[j];
+            }
+        }
+        x = y;
+    }
+    // cap hit: certify the order of magnitude spectrally instead. The
+    // estimate is at least the cap — the measured rounds already proved
+    // the true count exceeds it.
+    let gap = topo.spectral_gap();
+    let est = if gap > 1e-12 { ((1.0 / eps).ln() / gap).ceil() as usize } else { usize::MAX };
+    (est.max(cap), true)
+}
+
+/// Run one grid cell. n must be ≥ 2 (n = 1 has no rounds to count).
+pub fn run_cell(kind: Kind, n: usize, seed: u64, eps: f64, cap: usize) -> Result<HopCell> {
+    anyhow::ensure!(n >= 2, "hopgrid needs n >= 2, got {n}");
+    let topo = Topology::build(kind, n, seed);
+    let (diam_lb, diam_ub) = topo.diameter_bounds();
+    let (flood, flood_messages) = flood_consensus_rounds(&topo)?;
+    anyhow::ensure!(
+        diam_lb <= flood && flood <= diam_ub,
+        "{} n={n}: flood rounds {flood} outside certified bounds [{diam_lb},{diam_ub}]",
+        kind.name()
+    );
+    let (gossip, gossip_est) = gossip_consensus_rounds(&topo, seed, eps, cap);
+    Ok(HopCell {
+        kind: kind.name().to_string(),
+        n,
+        diam_lb,
+        diam_ub,
+        flood_rounds: flood,
+        flood_messages,
+        gossip_rounds: gossip,
+        gossip_est,
+    })
+}
+
+/// Run the full kinds × ns grid.
+pub fn run(kinds: &[Kind], ns: &[usize], seed: u64, eps: f64, cap: usize) -> Result<Vec<HopCell>> {
+    let mut cells = Vec::with_capacity(kinds.len() * ns.len());
+    for &kind in kinds {
+        for &n in ns {
+            let cell = run_cell(kind, n, seed, eps, cap)?;
+            log::info!(
+                "hopgrid {} n={}: flood {} gossip {}{}",
+                cell.kind,
+                cell.n,
+                cell.flood_rounds,
+                cell.gossip_rounds,
+                if cell.gossip_est { " (est)" } else { "" }
+            );
+            cells.push(cell);
+        }
+    }
+    Ok(cells)
+}
+
+pub fn print_table(cells: &[HopCell]) {
+    println!(
+        "\n{:<14} {:>8} {:>12} {:>8} {:>12} {:>12} {:>10}",
+        "topology", "n", "diam lb..ub", "flood", "gossip", "flood msgs", "advantage"
+    );
+    for c in cells {
+        println!(
+            "{:<14} {:>8} {:>12} {:>8} {:>12} {:>12} {:>9.1}x",
+            c.kind,
+            c.n,
+            format!("{}..{}", c.diam_lb, c.diam_ub),
+            c.flood_rounds,
+            format!("{}{}", c.gossip_rounds, if c.gossip_est { "*" } else { "" }),
+            c.flood_messages,
+            c.advantage(),
+        );
+    }
+    if cells.iter().any(|c| c.gossip_est) {
+        println!("(* gossip cap hit — spectral estimate ln(1/eps)/gap)");
+    }
+}
+
+pub fn save(cells: &[HopCell], path: &str) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let j = Json::Arr(cells.iter().map(HopCell::to_json).collect());
+    std::fs::write(path, j.to_string_pretty() + "\n")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_flood_rounds_equal_the_exact_diameter() {
+        let cell = run_cell(Kind::Ring, 16, 0, 1e-3, 20_000).unwrap();
+        // synchronous flooding covers a graph in exactly diameter rounds
+        assert_eq!(cell.flood_rounds, 8);
+        assert!(cell.diam_lb <= 8 && 8 <= cell.diam_ub);
+        assert!(!cell.gossip_est);
+        // gossip on a ring is much slower than flooding
+        assert!(cell.gossip_rounds > cell.flood_rounds);
+        assert!(cell.advantage() > 1.0);
+    }
+
+    #[test]
+    fn hub_spoke_floods_in_at_most_three_rounds() {
+        let cell = run_cell(Kind::HubSpoke, 100, 0, 1e-3, 20_000).unwrap();
+        assert!(cell.flood_rounds <= 3, "hub-spoke flood took {}", cell.flood_rounds);
+        assert!(cell.flood_messages > 0);
+    }
+
+    #[test]
+    fn gossip_cap_falls_back_to_the_spectral_estimate() {
+        let topo = Topology::ring(64);
+        let (rounds, est) = gossip_consensus_rounds(&topo, 0, 1e-6, 3);
+        assert!(est, "a 3-round cap cannot mix a 64-ring to 1e-6");
+        // the estimate is never below the cap the measurement disproved
+        assert!(rounds >= 3);
+        // uncapped, the same cell measures for real
+        let (measured, est) = gossip_consensus_rounds(&topo, 0, 1e-2, 1_000_000);
+        assert!(!est);
+        assert!(measured > topo.diameter());
+    }
+
+    #[test]
+    fn gossip_identical_values_converge_in_zero_rounds() {
+        // spread0 == 0 short-circuit: every client draws from the same
+        // seed when n-xor collapses (n=1 singleton has one client)
+        let topo = Topology::build(Kind::Ring, 1, 0);
+        let (rounds, est) = gossip_consensus_rounds(&topo, 7, 1e-3, 100);
+        assert_eq!((rounds, est), (0, false));
+    }
+
+    #[test]
+    fn hierarchical_above_the_exact_diameter_limit_stays_certified() {
+        // n = 1025 crosses EXACT_DIAMETER_LIMIT: Topology::diameter()
+        // switches to the upper bound, and the hopgrid contract (lb ≤
+        // flood ≤ ub) must hold on the bounds-only path too
+        let cell = run_cell(Kind::Hierarchical, 1025, 0, 1e-3, 10).unwrap();
+        assert!(cell.diam_lb <= cell.flood_rounds && cell.flood_rounds <= cell.diam_ub);
+        let exact = Topology::hierarchical(1025).diameter_exact();
+        assert_eq!(cell.flood_rounds, exact);
+    }
+
+    #[test]
+    fn cells_roundtrip_through_json() {
+        let cell = run_cell(Kind::SmallWorld, 32, 3, 1e-3, 20_000).unwrap();
+        let j = cell.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), cell.kind);
+        assert_eq!(j.get("flood_rounds").unwrap().as_usize().unwrap(), cell.flood_rounds);
+        assert_eq!(j.get("advantage").unwrap().as_f64().unwrap(), cell.advantage());
+    }
+}

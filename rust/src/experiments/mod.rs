@@ -2,6 +2,7 @@
 //! per-experiment index). Each prints the paper's rows and writes
 //! `results/<id>.json`.
 
+pub mod hopgrid;
 pub mod sweep;
 
 use anyhow::Result;
@@ -393,9 +394,29 @@ pub fn dispatch(id: &str, base: ExperimentConfig, args: &crate::util::cli::Args)
             let p = save_records(id, &records)?;
             println!("saved {p}");
         }
+        "hopgrid" => {
+            let kind_names = args.get_list(
+                "topologies",
+                &["ring", "small-world", "scale-free", "hierarchical", "hub-spoke"],
+            );
+            let kinds: Vec<Kind> = kind_names
+                .iter()
+                .map(|s| {
+                    Kind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown topology {s:?}"))
+                })
+                .collect::<Result<_>>()?;
+            let ns = args.get_parse_list("hop-ns", &[64usize, 256, 1024, 4096])?;
+            let eps: f64 = args.get_parse("gossip-eps", 1e-3)?;
+            let cap: usize = args.get_parse("gossip-cap", 20_000)?;
+            let cells = hopgrid::run(&kinds, &ns, base.topology_seed, eps, cap)?;
+            hopgrid::print_table(&cells);
+            let path = "results/hopgrid.json";
+            hopgrid::save(&cells, path)?;
+            println!("saved {path}");
+        }
         other => anyhow::bail!(
             "unknown experiment {other:?}; have fig1, fig3/table8, scaling/fig4/table2, \
-             table3, fig6, fig7, churn"
+             table3, fig6, fig7, churn, hopgrid"
         ),
     }
     Ok(())

@@ -9,16 +9,22 @@
 //! iteration; the outbox persists across iterations so messages keep
 //! propagating with a bounded delay of ≤ ⌈D/k⌉ iterations.
 //!
-//! # Dedup in O(n + window), not O(T·n)
+//! # Dedup in O(origins off the floor), not O(T·n)
 //!
 //! Message ids are `(origin, step)` pairs and every origin emits exactly
 //! one message per step, so the dedup filter ([`FloodDedup`]) stores, per
 //! origin, a contiguous high-water mark (all steps below it seen) plus a
-//! small tail bitset for out-of-order arrivals ([`StepSet`]) — per-client
-//! memory is O(n) plus the transient reorder gap, instead of one hash
-//! entry per message ever received. A million-step flood retains a few
-//! words per origin. Accept/duplicate decisions are bit-identical to a
-//! reference `HashSet<MsgId>` (property-tested in
+//! small tail bitset for out-of-order arrivals ([`StepSet`]) — instead of
+//! one hash entry per message ever received. A million-step flood retains
+//! a few words per origin. Below [`DENSE_ORIGIN_CROSSOVER`] the per-origin
+//! sets live in a dense table; past it the filter switches to an
+//! origin-sparse representation that compresses the flood's steady state
+//! ("every origin at step t") to a floor scalar plus a bitset, so
+//! per-client memory is O(n) *bits* transiently and O(stragglers) between
+//! iterations rather than O(n) sets — the change that makes full
+//! 100k-client floods simulable (ARCHITECTURE.md, "The n² memory wall").
+//! Accept/duplicate decisions are bit-identical to a reference
+//! `HashSet<MsgId>` and representation-independent (property-tested in
 //! `rust/tests/properties.rs`).
 //!
 //! # Unreliable networks
@@ -226,25 +232,139 @@ impl StepSet {
     }
 }
 
-/// The flooding dedup filter: one [`StepSet`] per origin, replacing the
-/// historical `HashSet<MsgId>`. Same accept/duplicate decisions, O(n +
-/// reorder gap) memory instead of O(T·n) (property-tested against the
-/// hash-set reference in `rust/tests/properties.rs`).
-#[derive(Clone, Debug, Default)]
+/// Origin ids below this stay in the dense per-origin table; the first
+/// insert at or above it switches the filter to the origin-sparse
+/// representation (see [`FloodDedup`]). Small simulations therefore keep
+/// the historical dense layout bit-for-bit, while 100k-client runs pay
+/// only for origins actually off the floor.
+pub const DENSE_ORIGIN_CROSSOVER: u32 = 1024;
+
+/// The flooding dedup filter, replacing the historical `HashSet<MsgId>`:
+/// same accept/duplicate decisions (property-tested against the hash-set
+/// reference in `rust/tests/properties.rs`), memory proportional to the
+/// origins that deviate from the flood's steady state instead of O(T·n).
+///
+/// Two representations, switched adaptively on the origin id space:
+///
+/// * **dense** — one [`StepSet`] per origin id, indexed directly; used
+///   while every origin id is below [`DENSE_ORIGIN_CROSSOVER`]. Identical
+///   to the pre-sparse layout, so small-n paths stay bit-for-bit
+///   unchanged (decisions *and* allocation pattern).
+/// * **origin-sparse** — entered on the first insert past the crossover
+///   (or a large [`Self::reserve_origins`] hint). The steady state of a
+///   healthy flood — "every origin exactly at step `floor`" — is one
+///   scalar; origins whose message for the current step has arrived are
+///   one *bump* bit each; only origins with reorder gaps or that ran
+///   ahead hold a real [`StepSet`], in a compact open-addressing map
+///   ([`OriginMap`]). When every origin passes the floor it advances and
+///   the bumped population collapses back to the default state en masse —
+///   per-client memory is O(n) bits transiently and O(stragglers) between
+///   iterations, instead of the O(n) `StepSet`s whose simulation-wide n²
+///   total was the 100k-client memory wall (ARCHITECTURE.md).
+///
+/// The sparse path reuses its allocations (map slab, bump bitset, rebuild
+/// scratch) the way [`crate::net::Network`]'s `MsgPool` pools message
+/// slots: the per-message path never allocates, and floor advances cost
+/// O(deviating origins) moves through pooled buffers.
+#[derive(Clone, Debug)]
 pub struct FloodDedup {
-    origins: Vec<StepSet>,
+    /// dense representation: `dense[o]` is origin `o`'s step set
+    dense: Vec<StepSet>,
+    /// sparse representation; `dense` is empty once this is set
+    sparse: Option<Box<SparseDedup>>,
+    /// dense→sparse switch point on the origin id space
+    crossover: u32,
     total: u64,
 }
 
+impl Default for FloodDedup {
+    fn default() -> Self {
+        FloodDedup {
+            dense: vec![],
+            sparse: None,
+            crossover: DENSE_ORIGIN_CROSSOVER,
+            total: 0,
+        }
+    }
+}
+
 impl FloodDedup {
+    /// A filter with a non-default dense→sparse crossover: `0` forces the
+    /// origin-sparse representation from the first insert, `u32::MAX`
+    /// pins the dense table forever. Decisions and summaries are
+    /// representation-invariant (property-tested in
+    /// `rust/tests/properties.rs`); tests and benches use this to compare
+    /// the two representations on identical streams.
+    pub fn with_crossover(crossover: u32) -> FloodDedup {
+        FloodDedup { crossover, ..FloodDedup::default() }
+    }
+
+    /// Hint the expected origin population (the client count). On the
+    /// sparse path this sizes the floor universe up front, which is what
+    /// lets the floor advance once *all* n origins pass it — without the
+    /// hint the universe is learned from the stream, which is still
+    /// correct but can freeze early and strand late-arriving origins on
+    /// the uncompressed map path. On the dense path this is a plain
+    /// capacity reservation. Observable behavior (decisions, `hwms()`,
+    /// summaries) never changes.
+    pub fn reserve_origins(&mut self, n: usize) {
+        let n32 = n.min(u32::MAX as usize) as u32;
+        if n32 > self.crossover {
+            if self.sparse.is_none() {
+                self.to_sparse();
+            }
+            let sp = self.sparse.as_deref_mut().unwrap();
+            if sp.floor == 0 && (n32 as u64) > sp.universe {
+                sp.grow_universe(n32 as u64);
+            }
+        } else if self.sparse.is_none() {
+            self.dense.reserve(n.saturating_sub(self.dense.len()));
+        }
+    }
+
+    /// Migrate dense → sparse: at most `crossover` entries move, once per
+    /// filter lifetime (triggered by the first past-the-crossover origin
+    /// or an explicit [`Self::reserve_origins`]).
+    fn to_sparse(&mut self) {
+        let dense = std::mem::take(&mut self.dense);
+        let mut sp = Box::new(SparseDedup::default());
+        sp.universe = dense.len() as u64;
+        sp.max_origin = dense.len() as u64;
+        for (o, set) in dense.into_iter().enumerate() {
+            if set.is_empty() {
+                continue;
+            }
+            // floor is 0, so anything with a mark is past it
+            if set.hwm > 0 {
+                sp.map_above += 1;
+                if set.hwm == 1 && set.tail.is_empty() {
+                    sp.map_bumps += 1;
+                }
+            }
+            sp.map.insert_new(o as u32, set);
+        }
+        // no floor-advance check here: the universe is still being
+        // learned mid-stream, and freezing it now would strand every
+        // later origin on the map path — the next insert re-checks
+        self.sparse = Some(sp);
+    }
+
     /// Record `id` as seen; returns true iff it was new (the exact
     /// contract of `HashSet::insert`).
     pub fn insert(&mut self, id: MsgId) -> bool {
-        let o = id.origin as usize;
-        if self.origins.len() <= o {
-            self.origins.resize_with(o + 1, StepSet::default);
+        if self.sparse.is_none() && id.origin >= self.crossover {
+            self.to_sparse();
         }
-        let fresh = self.origins[o].insert(id.step);
+        let fresh = match self.sparse.as_deref_mut() {
+            Some(sp) => sp.insert(id.origin, id.step),
+            None => {
+                let o = id.origin as usize;
+                if self.dense.len() <= o {
+                    self.dense.resize_with(o + 1, StepSet::default);
+                }
+                self.dense[o].insert(id.step)
+            }
+        };
         if fresh {
             self.total += 1;
         }
@@ -252,7 +372,12 @@ impl FloodDedup {
     }
 
     pub fn contains(&self, id: &MsgId) -> bool {
-        self.origins.get(id.origin as usize).is_some_and(|s| s.contains(id.step))
+        match self.sparse.as_deref() {
+            Some(sp) => sp.contains(id.origin, id.step),
+            None => {
+                self.dense.get(id.origin as usize).is_some_and(|s| s.contains(id.step))
+            }
+        }
     }
 
     /// Total messages seen (what `HashSet::len` used to report).
@@ -264,9 +389,22 @@ impl FloodDedup {
         self.total == 0
     }
 
+    /// 1 + the highest origin id ever inserted — the length of
+    /// [`Self::hwms`] / [`Self::summary`], exactly the dense table length
+    /// of the historical representation.
+    pub fn num_origins(&self) -> usize {
+        match self.sparse.as_deref() {
+            Some(sp) => sp.max_origin as usize,
+            None => self.dense.len(),
+        }
+    }
+
     /// Contiguous high-water mark for one origin (0 if never heard from).
     pub fn hwm(&self, origin: u32) -> u64 {
-        self.origins.get(origin as usize).map_or(0, |s| s.hwm())
+        match self.sparse.as_deref() {
+            Some(sp) => sp.hwm_of(origin),
+            None => self.dense.get(origin as usize).map_or(0, |s| s.hwm()),
+        }
     }
 
     /// Per-origin high-water marks, origin-indexed — the O(n)-byte state
@@ -284,17 +422,461 @@ impl FloodDedup {
     /// vector per neighbor per repair round (at n = 100k that allocation
     /// was the gap-protocol hot path).
     pub fn hwms(&self) -> impl Iterator<Item = u64> + '_ {
-        self.origins.iter().map(|s| s.hwm())
+        (0..self.num_origins() as u64).map(move |o| self.hwm(o as u32))
     }
 
     /// Out-of-order entries retained above the high-water marks.
     pub fn tail_entries(&self) -> u64 {
-        self.origins.iter().map(|s| s.tail_entries()).sum()
+        match self.sparse.as_deref() {
+            Some(sp) => sp.map.values().map(|s| s.tail_entries()).sum(),
+            None => self.dense.iter().map(|s| s.tail_entries()).sum(),
+        }
     }
 
     /// Bitset words currently allocated across all origins.
     pub fn tail_words(&self) -> usize {
-        self.origins.iter().map(|s| s.tail_words()).sum()
+        match self.sparse.as_deref() {
+            Some(sp) => sp.map.values().map(|s| s.tail_words()).sum(),
+            None => self.dense.iter().map(|s| s.tail_words()).sum(),
+        }
+    }
+
+    /// Resident footprint of the filter in bytes, from allocation
+    /// capacities — the dedup-memory metric behind
+    /// [`crate::metrics::RunRecord::flood_dedup_bytes`] and the
+    /// `benches/scale.rs` ledger gate. Dense: the origin table plus tail
+    /// bitsets, O(max origin id). Sparse: bump bitset + map slab + rebuild
+    /// scratch, O(origins off the floor).
+    pub fn mem_bytes(&self) -> usize {
+        let heap = match self.sparse.as_deref() {
+            Some(sp) => sp.mem_bytes(),
+            None => {
+                self.dense.capacity() * std::mem::size_of::<StepSet>()
+                    + self.dense.iter().map(|s| s.tail.capacity() * 8).sum::<usize>()
+            }
+        };
+        std::mem::size_of::<Self>() + heap
+    }
+}
+
+/// The origin-sparse dedup state (see [`FloodDedup`]): the flood's steady
+/// state compressed to a floor scalar plus a bitset, with a compact map
+/// for the origins that deviate.
+///
+/// Every origin `o < universe` is in exactly one of three states:
+///
+/// * **default** — not in `map`, bump bit clear: hwm = `floor`, no tail.
+///   Zero bytes; the state almost every origin is in between iterations
+///   of a healthy flood.
+/// * **bumped** — bump bit set: hwm = `floor + 1`, no tail (the origin's
+///   one message for the current step arrived in order). One bit.
+/// * **mapped** — entry in `map`: any other [`StepSet`], stored with its
+///   absolute mark. Reorder gaps, origins that ran ahead, and — once the
+///   floor has advanced, freezing `universe` — origins first heard
+///   beyond it.
+///
+/// The floor advances only when every origin in `0..universe` is past it
+/// (`bump_count + map_above == universe`), collapsing the bumped
+/// population back to the default state en masse.
+#[derive(Clone, Debug, Default)]
+struct SparseDedup {
+    /// every step `< floor` seen from every origin `< universe`
+    floor: u64,
+    /// origin population the floor quantifies over: learned from the
+    /// stream (or hinted via [`FloodDedup::reserve_origins`]) while
+    /// `floor == 0`, frozen once it advances — widening it afterwards
+    /// would silently claim the new origins' history below the floor
+    universe: u64,
+    /// 1 + highest origin id ever inserted (`hwms()` length); ≥ universe
+    /// whenever the floor has advanced
+    max_origin: u64,
+    /// lazily allocated bitset over `0..universe`: bit `o` ⇔ origin `o`
+    /// bumped. Empty until the bumped population outgrows its map cost
+    /// ([`Self::maybe_spill`]) and freed at every floor advance, so a
+    /// small active set (the 64-origin bounded floods) never pays n bits
+    bump: Vec<u64>,
+    /// bumped origins currently held in the bitset
+    bump_count: u64,
+    /// origin → [`StepSet`] for the deviating origins
+    map: OriginMap,
+    /// map entries with key `< universe` and hwm past the floor
+    map_above: u64,
+    /// map entries that are exactly bump-shaped (hwm == floor+1, empty
+    /// tail) — bitset candidates; always 0 while the bitset is live
+    map_bumps: u64,
+    /// pooled rebuild buffer for floor advances and bitset spills
+    scratch: Vec<(u32, StepSet)>,
+}
+
+impl SparseDedup {
+    fn bit(&self, o: u32) -> bool {
+        !self.bump.is_empty() && self.bump[(o / 64) as usize] >> (o % 64) & 1 == 1
+    }
+
+    /// Record `(o, step)`; returns true iff new. Decision-for-decision
+    /// identical to `StepSet::insert` on a dense table: the default and
+    /// bumped states are exact encodings (hwm = floor / floor + 1, empty
+    /// tail), so reconstructing a real [`StepSet`] on demand reproduces
+    /// the dense transition precisely.
+    fn insert(&mut self, o: u32, step: u32) -> bool {
+        let o64 = o as u64;
+        if o64 >= self.max_origin {
+            self.max_origin = o64 + 1;
+        }
+        if o64 >= self.universe {
+            if self.floor == 0 {
+                self.grow_universe(o64 + 1);
+            } else {
+                // late origin outside the frozen universe: a plain
+                // absolute StepSet in the map, no floor accounting
+                return match self.map.get_mut(o) {
+                    Some(set) => set.insert(step),
+                    None => {
+                        let mut set = StepSet::default();
+                        set.insert(step);
+                        self.map.insert_new(o, set);
+                        true
+                    }
+                };
+            }
+        }
+        let s = step as u64;
+        if !self.map.is_empty() {
+            if let Some(set) = self.map.get_mut(o) {
+                let was_above = set.hwm > self.floor;
+                let was_bump = set.hwm == self.floor + 1 && set.tail.is_empty();
+                let fresh = set.insert(step);
+                if fresh {
+                    let now_above = set.hwm > self.floor;
+                    let now_bump = set.hwm == self.floor + 1 && set.tail.is_empty();
+                    match (was_bump, now_bump) {
+                        (false, true) => self.map_bumps += 1,
+                        (true, false) => self.map_bumps -= 1,
+                        _ => {}
+                    }
+                    if !was_above && now_above {
+                        self.map_above += 1;
+                        self.maybe_advance_floor();
+                    }
+                }
+                return fresh;
+            }
+        }
+        if self.bit(o) {
+            // bumped: hwm == floor + 1, empty tail
+            if s <= self.floor {
+                return false;
+            }
+            let mut set = StepSet { hwm: self.floor + 1, tail: vec![] };
+            set.insert(step);
+            // the origin leaves the bitset for the map; it stays past the
+            // floor either way, so the advance condition is untouched
+            self.clear_bit(o);
+            self.bump_count -= 1;
+            self.map_above += 1;
+            self.map.insert_new(o, set);
+            return true;
+        }
+        // default: hwm == floor, empty tail
+        if s < self.floor {
+            return false;
+        }
+        if s == self.floor {
+            // the steady-state path: the origin's next in-order step
+            if !self.bump.is_empty() {
+                self.set_bit(o);
+                self.bump_count += 1;
+                self.maybe_advance_floor();
+            } else {
+                self.map.insert_new(o, StepSet { hwm: self.floor + 1, tail: vec![] });
+                self.map_bumps += 1;
+                self.map_above += 1;
+                self.maybe_advance_floor();
+                self.maybe_spill();
+            }
+        } else {
+            // out-of-order arrival above the floor: a real reorder gap
+            let mut set = StepSet { hwm: self.floor, tail: vec![] };
+            set.insert(step);
+            self.map.insert_new(o, set);
+            // hwm stays at the floor (the gap below `step` is open):
+            // neither bumped nor above
+        }
+        true
+    }
+
+    fn contains(&self, o: u32, step: u32) -> bool {
+        if let Some(set) = self.map.get(o) {
+            return set.contains(step);
+        }
+        let s = step as u64;
+        if (o as u64) < self.universe {
+            if self.bit(o) {
+                s <= self.floor
+            } else {
+                s < self.floor
+            }
+        } else {
+            false
+        }
+    }
+
+    fn hwm_of(&self, o: u32) -> u64 {
+        if let Some(set) = self.map.get(o) {
+            return set.hwm;
+        }
+        if (o as u64) < self.universe {
+            if self.bit(o) {
+                self.floor + 1
+            } else {
+                self.floor
+            }
+        } else {
+            0
+        }
+    }
+
+    /// Widen the floor universe (stream growth while `floor == 0`, or the
+    /// [`FloodDedup::reserve_origins`] hint). The bitset, if live, grows
+    /// with it so bit indices stay in range.
+    fn grow_universe(&mut self, to: u64) {
+        debug_assert_eq!(self.floor, 0, "the universe is frozen once the floor moves");
+        self.universe = to;
+        if !self.bump.is_empty() {
+            self.bump.resize((to as usize).div_ceil(64), 0);
+        }
+    }
+
+    /// Bitset slots are worth paying for once the bumped population's map
+    /// cost exceeds the whole bitset — below that the map alone is
+    /// smaller (a 64-origin bounded flood at n = 100k keeps a ~64-entry
+    /// map instead of a 12.5 KB bitset).
+    fn spill_threshold(&self) -> u64 {
+        let slot = (std::mem::size_of::<u64>() + std::mem::size_of::<StepSet>()) as u64;
+        (self.universe / 8 / slot).clamp(32, 4096)
+    }
+
+    /// Move the bump-shaped map entries into a freshly allocated bitset
+    /// once they outgrow it ([`Self::spill_threshold`]).
+    fn maybe_spill(&mut self) {
+        if !self.bump.is_empty() || self.map_bumps < self.spill_threshold() {
+            return;
+        }
+        self.bump = vec![0u64; (self.universe as usize).div_ceil(64)];
+        let mut scratch = std::mem::take(&mut self.scratch);
+        self.map.drain_into(&mut scratch);
+        self.map_bumps = 0;
+        for (k, set) in scratch.drain(..) {
+            if (k as u64) < self.universe
+                && set.hwm == self.floor + 1
+                && set.tail.is_empty()
+            {
+                self.set_bit(k);
+                self.bump_count += 1;
+                self.map_above -= 1;
+            } else {
+                self.map.insert_new(k, set);
+            }
+        }
+        self.retire_scratch(scratch);
+    }
+
+    /// Advance the floor while every origin in the universe is past it.
+    fn maybe_advance_floor(&mut self) {
+        while self.universe > 0 && self.bump_count + self.map_above == self.universe {
+            self.advance_floor();
+        }
+    }
+
+    /// One floor advance: bumped origins collapse to the default state,
+    /// the bitset is released (holding n/8 bytes per client across the
+    /// whole simulation is exactly the wall this representation removes;
+    /// the next spill re-allocates it — one bounded allocation per
+    /// advance, never one per message), and the map is rebuilt against
+    /// the new floor through the pooled scratch buffer.
+    fn advance_floor(&mut self) {
+        self.floor += 1;
+        self.bump_count = 0;
+        self.bump = Vec::new();
+        let mut scratch = std::mem::take(&mut self.scratch);
+        self.map.drain_into(&mut scratch);
+        self.map_above = 0;
+        self.map_bumps = 0;
+        for (k, set) in scratch.drain(..) {
+            if (k as u64) < self.universe {
+                debug_assert!(set.hwm >= self.floor, "advance requires everyone past");
+                if set.hwm == self.floor && set.tail.is_empty() {
+                    continue; // collapsed into the floor
+                }
+                if set.hwm > self.floor {
+                    self.map_above += 1;
+                }
+                if set.hwm == self.floor + 1 && set.tail.is_empty() {
+                    self.map_bumps += 1;
+                }
+            }
+            self.map.insert_new(k, set);
+        }
+        self.retire_scratch(scratch);
+        self.maybe_spill();
+    }
+
+    /// Return the rebuild buffer to the pool — unless a spike grew it
+    /// past what steady state ever needs, in which case it is released
+    /// (same policy as [`OriginMap::KEEP_SLOTS`]): the end-of-run
+    /// footprint must reflect the steady state, not the worst transient.
+    fn retire_scratch(&mut self, scratch: Vec<(u32, StepSet)>) {
+        if scratch.capacity() <= OriginMap::KEEP_SLOTS {
+            self.scratch = scratch;
+        }
+    }
+
+    fn set_bit(&mut self, o: u32) {
+        self.bump[(o / 64) as usize] |= 1 << (o % 64);
+    }
+
+    fn clear_bit(&mut self, o: u32) {
+        self.bump[(o / 64) as usize] &= !(1 << (o % 64));
+    }
+
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.bump.capacity() * 8
+            + self.map.mem_bytes()
+            + self.scratch.capacity() * std::mem::size_of::<(u32, StepSet)>()
+    }
+}
+
+/// Vacant-slot marker for [`OriginMap`]. Keys are stored widened to u64
+/// so every u32 origin id (including `u32::MAX`) is distinguishable from
+/// an empty slot.
+const ORIGIN_MAP_EMPTY: u64 = u64::MAX;
+
+/// Open-addressing origin → [`StepSet`] map behind [`SparseDedup`]:
+/// linear probing over a power-of-two table with Fibonacci-hashed keys
+/// and parallel key/value slabs. There is deliberately no single-key
+/// removal — entries only leave through whole-table rebuilds (floor
+/// advances, bitset spills, [`Self::drain_into`]), which sidesteps
+/// tombstones and backward-shift deletion entirely and keeps probe
+/// sequences trivially correct. Lookup order never affects observable
+/// results (hwms are read origin-indexed), so iteration order is free to
+/// be table order.
+#[derive(Clone, Debug, Default)]
+struct OriginMap {
+    /// slot keys, [`ORIGIN_MAP_EMPTY`] = vacant; length is a power of two
+    keys: Vec<u64>,
+    /// slot values, parallel to `keys` (vacant slots hold empty sets)
+    vals: Vec<StepSet>,
+    len: usize,
+}
+
+impl OriginMap {
+    /// Tables at or below this many slots are kept across
+    /// [`Self::drain_into`] (pooled for the next build-up); larger ones
+    /// are released so a transient spike cannot pin memory for the rest
+    /// of the run.
+    const KEEP_SLOTS: usize = 64;
+
+    fn hash(k: u32) -> usize {
+        // Fibonacci multiplicative hash; the table mask takes the low
+        // bits, so fold the high half down where the entropy lands
+        let h = (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        (h >> 32) as usize
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn slot_of(&self, k: u32) -> Option<usize> {
+        if self.len == 0 {
+            return None;
+        }
+        let mask = self.keys.len() - 1;
+        let mut i = Self::hash(k) & mask;
+        loop {
+            match self.keys[i] {
+                ORIGIN_MAP_EMPTY => return None,
+                kk if kk == k as u64 => return Some(i),
+                _ => i = (i + 1) & mask,
+            }
+        }
+    }
+
+    fn get(&self, k: u32) -> Option<&StepSet> {
+        self.slot_of(k).map(|i| &self.vals[i])
+    }
+
+    fn get_mut(&mut self, k: u32) -> Option<&mut StepSet> {
+        self.slot_of(k).map(|i| &mut self.vals[i])
+    }
+
+    /// Insert a key that is not present (callers always look up first;
+    /// enforced in debug builds). Grows at 7/8 load.
+    fn insert_new(&mut self, k: u32, v: StepSet) {
+        if (self.len + 1) * 8 > self.keys.len() * 7 {
+            self.grow();
+        }
+        let mask = self.keys.len() - 1;
+        let mut i = Self::hash(k) & mask;
+        while self.keys[i] != ORIGIN_MAP_EMPTY {
+            debug_assert_ne!(self.keys[i], k as u64, "insert_new on a present key");
+            i = (i + 1) & mask;
+        }
+        self.keys[i] = k as u64;
+        self.vals[i] = v;
+        self.len += 1;
+    }
+
+    fn grow(&mut self) {
+        let cap = (self.keys.len() * 2).max(16);
+        let old_keys = std::mem::replace(&mut self.keys, vec![ORIGIN_MAP_EMPTY; cap]);
+        let old_vals =
+            std::mem::replace(&mut self.vals, vec![StepSet::default(); cap]);
+        let mask = cap - 1;
+        for (k, v) in old_keys.into_iter().zip(old_vals) {
+            if k == ORIGIN_MAP_EMPTY {
+                continue;
+            }
+            let mut i = Self::hash(k as u32) & mask;
+            while self.keys[i] != ORIGIN_MAP_EMPTY {
+                i = (i + 1) & mask;
+            }
+            self.keys[i] = k;
+            self.vals[i] = v;
+        }
+    }
+
+    /// Move every entry into `out` (cleared first) and empty the table,
+    /// keeping small tables pooled ([`Self::KEEP_SLOTS`]) and releasing
+    /// large ones.
+    fn drain_into(&mut self, out: &mut Vec<(u32, StepSet)>) {
+        out.clear();
+        for i in 0..self.keys.len() {
+            if self.keys[i] != ORIGIN_MAP_EMPTY {
+                out.push((self.keys[i] as u32, std::mem::take(&mut self.vals[i])));
+                self.keys[i] = ORIGIN_MAP_EMPTY;
+            }
+        }
+        self.len = 0;
+        if self.keys.len() > Self::KEEP_SLOTS {
+            self.keys = Vec::new();
+            self.vals = Vec::new();
+        }
+    }
+
+    fn values(&self) -> impl Iterator<Item = &StepSet> + '_ {
+        self.keys
+            .iter()
+            .zip(&self.vals)
+            .filter(|(k, _)| **k != ORIGIN_MAP_EMPTY)
+            .map(|(_, v)| v)
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.keys.capacity() * std::mem::size_of::<u64>()
+            + self.vals.capacity() * std::mem::size_of::<StepSet>()
+            + self.vals.iter().map(|s| s.tail.capacity() * 8).sum::<usize>()
     }
 }
 
@@ -995,5 +1577,166 @@ mod tests {
         assert_eq!(RepairMode::parse("Reflood"), Some(RepairMode::Reflood));
         assert_eq!(RepairMode::parse("full-log"), None);
         assert_eq!(RepairMode::default().name(), "gap");
+    }
+
+    #[test]
+    fn step_set_gap_closes_across_full_word_blocks() {
+        // exercise compact()'s run == 64 whole-word removal: fill three
+        // full words above the mark, then close the gap last
+        let mut s = StepSet::default();
+        for step in 64..192 {
+            assert!(s.insert(step));
+        }
+        for step in (0..64).rev() {
+            assert!(s.insert(step), "step {step}");
+        }
+        assert_eq!(s.hwm(), 192, "three full words must compact at once");
+        assert_eq!(s.tail_words(), 0);
+        assert_eq!(s.len(), 192);
+    }
+
+    #[test]
+    fn step_set_hwm_saturates_at_the_u32_step_ceiling() {
+        // steps are u32, so the mark tops out at 2^32: walk the last few
+        // steps of the id space (the mark itself is u64, so no overflow)
+        let top = u32::MAX as u64 + 1;
+        let mut s = StepSet { hwm: top - 3, tail: vec![] };
+        assert!(s.insert(u32::MAX - 2));
+        assert!(s.insert(u32::MAX));
+        assert_eq!(s.hwm(), top - 1, "gap at MAX-1 still open");
+        assert!(s.insert(u32::MAX - 1), "closing the last gap");
+        assert_eq!(s.hwm(), top, "the mark saturates the u32 step space");
+        assert_eq!(s.tail_words(), 0);
+        assert!(s.contains(u32::MAX));
+        assert!(!s.insert(u32::MAX), "duplicate at the ceiling");
+    }
+
+    #[test]
+    fn dedup_summary_clamps_saturated_marks_to_u32() {
+        // a fully saturated origin advertises u32::MAX (not a wrapped 0)
+        let d = FloodDedup {
+            dense: vec![StepSet { hwm: u32::MAX as u64 + 1, tail: vec![] }],
+            ..FloodDedup::default()
+        };
+        assert_eq!(d.summary(), vec![u32::MAX]);
+        assert_eq!(d.hwms().collect::<Vec<_>>(), vec![u32::MAX as u64 + 1]);
+    }
+
+    #[test]
+    fn sparse_dedup_matches_dense_on_an_interleaved_stream() {
+        // in-module smoke for the representation equivalence (the heavy
+        // randomized version lives in rust/tests/properties.rs): mixed
+        // small/huge origins, duplicates, reorder gaps
+        let stream: Vec<(u32, u32)> = vec![
+            (0, 0), (3, 2), (3, 0), (90_000, 5), (0, 0), (3, 1), (7, 0),
+            (90_000, 0), (1024, 0), (1023, 9), (3, 3), (90_000, 5), (7, 1),
+            (0, 1), (1024, 1), (90_000, 1), (1023, 0), (7, 0),
+        ];
+        let mut auto = FloodDedup::default(); // converts at origin 90_000
+        let mut sparse = FloodDedup::with_crossover(0);
+        let mut dense = FloodDedup::with_crossover(u32::MAX);
+        let mut reference = HashSet::new();
+        for &(origin, step) in &stream {
+            let id = MsgId { origin, step };
+            let expect = reference.insert(id);
+            assert_eq!(auto.insert(id), expect, "auto {id:?}");
+            assert_eq!(sparse.insert(id), expect, "sparse {id:?}");
+            assert_eq!(dense.insert(id), expect, "dense {id:?}");
+        }
+        assert_eq!(auto.len(), reference.len());
+        assert_eq!(sparse.len(), reference.len());
+        assert_eq!(dense.len(), reference.len());
+        assert_eq!(auto.num_origins(), dense.num_origins());
+        assert_eq!(sparse.num_origins(), dense.num_origins());
+        let hwms: Vec<u64> = dense.hwms().collect();
+        assert_eq!(auto.hwms().collect::<Vec<_>>(), hwms);
+        assert_eq!(sparse.hwms().collect::<Vec<_>>(), hwms);
+        assert_eq!(auto.summary(), dense.summary());
+        assert_eq!(sparse.summary(), dense.summary());
+        assert_eq!(sparse.tail_entries(), dense.tail_entries());
+        for &(origin, step) in &stream {
+            let id = MsgId { origin, step };
+            assert!(auto.contains(&id) && sparse.contains(&id) && dense.contains(&id));
+        }
+        assert!(!sparse.contains(&MsgId { origin: 90_000, step: 2 }));
+        assert!(!sparse.contains(&MsgId { origin: 50_000, step: 0 }));
+    }
+
+    #[test]
+    fn sparse_floor_advance_collapses_steady_state_memory() {
+        // full-population flood, sparse representation: after every
+        // origin delivers step t, per-origin state must collapse into the
+        // floor — memory stays bounded by the transient bitset, not O(n)
+        // StepSets, and decisions stay exact
+        let n: u32 = 50_000;
+        let mut d = FloodDedup::with_crossover(0);
+        d.reserve_origins(n as usize);
+        for step in 0..3u32 {
+            for origin in 0..n {
+                assert!(d.insert(MsgId { origin, step }));
+                assert!(!d.insert(MsgId { origin, step }), "duplicate accepted");
+            }
+        }
+        assert_eq!(d.len(), 3 * n as usize);
+        assert_eq!(d.hwm(0), 3);
+        assert_eq!(d.hwm(n - 1), 3);
+        assert!(!d.contains(&MsgId { origin: 17, step: 3 }));
+        assert!(d.contains(&MsgId { origin: 17, step: 2 }));
+        // after the collapse: no bitset, no map entries — just the floor.
+        // The whole filter fits in a few hundred bytes where the dense
+        // table holds n StepSets (~32 B each).
+        assert!(
+            d.mem_bytes() < 8 * 1024,
+            "steady-state sparse footprint leaked: {} B",
+            d.mem_bytes()
+        );
+        assert_eq!(d.tail_entries(), 0);
+    }
+
+    #[test]
+    fn sparse_universe_freezes_once_the_floor_moves() {
+        // origins first heard after the floor advanced must not inherit
+        // the floor's history: they live on the absolute map path
+        let mut d = FloodDedup::with_crossover(0);
+        d.reserve_origins(4);
+        for origin in 0..4 {
+            d.insert(MsgId { origin, step: 0 });
+        }
+        // floor is now 1 for origins 0..4; a brand-new origin appears
+        assert!(d.insert(MsgId { origin: 9, step: 0 }));
+        assert_eq!(d.hwm(9), 1);
+        assert_eq!(d.hwm(5), 0, "never-heard origin must stay at 0");
+        assert!(!d.contains(&MsgId { origin: 5, step: 0 }));
+        assert_eq!(d.num_origins(), 10);
+        assert_eq!(d.summary(), vec![1, 1, 1, 1, 0, 0, 0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn gap_repair_answers_a_requester_that_never_saw_the_origin() {
+        // satellite: Summary/GapFill against a sparse filter that has no
+        // entry at all for the requested origin — the requester's summary
+        // advertises hwm 0 (or is too short), and the responder's window
+        // replay must still deliver the whole retained history
+        let topo = Topology::ring(2);
+        let mut net = Network::new(topo);
+        let mut states: Vec<FloodState> = (0..2).map(|_| FloodState::new()).collect();
+        // requester 1 runs the sparse representation from the start
+        states[1].seen = FloodDedup::with_crossover(0);
+        for step in 0..6 {
+            states[0].inject(msg(0, step));
+        }
+        states[0].outbox.clear(); // outage: the flood never reached 1
+        states[1].repair();
+        let mut fresh_at_1 = vec![];
+        flood_rounds(&mut states, &mut net, 2, |i, fresh| {
+            if i == 1 {
+                fresh_at_1.extend_from_slice(fresh);
+            }
+        });
+        let got: Vec<u32> = fresh_at_1.iter().map(|m| m.id.step).collect();
+        assert_eq!(got, (0..6).collect::<Vec<u32>>());
+        assert_eq!(states[1].seen.len(), 6);
+        assert_eq!(states[1].seen.hwm(0), 6);
+        assert_eq!(states[0].gap_misses, 0, "nothing was evicted");
     }
 }

@@ -5,7 +5,7 @@
 //!   sweep        run a methods × topologies × netconds × rates × seeds
 //!                grid in parallel, aggregate mean±std per group
 //!   experiment   regenerate a paper table/figure (fig1, fig3/table8,
-//!                scaling/fig4/table2, table3, fig6, fig7, churn)
+//!                scaling/fig4/table2, table3, fig6, fig7, churn, hopgrid)
 //!   topo         inspect a topology (diameter, spectral gap, edges)
 //!   info         print manifest / artifact info
 //!
@@ -134,10 +134,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             record.max_staleness
         );
         println!(
-            "repair: {} in {} messages | flood retained {} entries/client max",
+            "repair: {} in {} messages | flood retained {} entries/client max | \
+             dedup {} /client max",
             human_bytes(record.repair_bytes),
             record.repair_messages,
-            record.flood_retained
+            record.flood_retained,
+            human_bytes(record.flood_dedup_bytes)
         );
     }
     for (phase, ms) in &record.phase_ms {
@@ -264,8 +266,12 @@ sweep        run a config grid in parallel and aggregate mean±std per
              --config sweep.toml (root table = experiment keys, [sweep]
              table = the axes above; CLI overrides TOML)
              plus any train option as the base config for every cell
-experiment   <fig1|fig3|table8|scaling|fig4|table2|table3|fig6|fig7|churn>
+experiment   <fig1|fig3|table8|scaling|fig4|table2|table3|fig6|fig7|churn|
+             hopgrid>
              [--tasks a,b] [--scenarios lossy-ring,flaky-torus,churn-er]
+             hopgrid: flooding vs gossip message-rounds-to-consensus across
+             topology families (--topologies a,b --hop-ns 64,256,...
+             --gossip-eps F --gossip-cap N)
 pretrain     --model tiny [--steps N --lr F --target-acc F] -> checkpoints/
 report       [results/foo.json ...]   re-render tables from saved records
 topo         --topology K --clients N

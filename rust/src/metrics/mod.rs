@@ -72,6 +72,15 @@ pub struct RunRecord {
     /// repair-window entries + out-of-order dedup tail entries — the
     /// O(n + window) bound (SeedFlood only)
     pub flood_retained: u64,
+    /// worst per-client dedup-filter footprint at run end, in bytes
+    /// (allocation capacities, `FloodDedup::mem_bytes`) — the metric the
+    /// origin-sparse representation exists to keep flat where the dense
+    /// table was O(n) per client / O(n²) simulation-wide (SeedFlood only)
+    pub flood_dedup_bytes: u64,
+    /// high-water mark of wire bytes simultaneously in flight on the
+    /// network over the whole run (`Accounting::peak_in_flight_bytes`) —
+    /// the other half of the large-n memory story
+    pub peak_in_flight_bytes: u64,
     /// which execution engine drove the loop: "lockstep" or "event"
     pub time_model: String,
     /// the client speed-model spec ("uniform" on the lockstep clock)
@@ -161,6 +170,8 @@ impl RunRecord {
             ("repair_messages", Json::num(self.repair_messages as f64)),
             ("repair_gap_misses", Json::num(self.repair_gap_misses as f64)),
             ("flood_retained", Json::num(self.flood_retained as f64)),
+            ("flood_dedup_bytes", Json::num(self.flood_dedup_bytes as f64)),
+            ("peak_in_flight_bytes", Json::num(self.peak_in_flight_bytes as f64)),
             ("time_model", Json::str(&self.time_model)),
             ("rates", Json::str(&self.rates)),
             ("virtual_makespan", Json::num(self.virtual_makespan)),
@@ -272,6 +283,8 @@ impl RunRecord {
             repair_messages: opt_u64("repair_messages"),
             repair_gap_misses: opt_u64("repair_gap_misses"),
             flood_retained: opt_u64("flood_retained"),
+            flood_dedup_bytes: opt_u64("flood_dedup_bytes"),
+            peak_in_flight_bytes: opt_u64("peak_in_flight_bytes"),
             time_model: opt_str("time_model", "lockstep"),
             rates: opt_str("rates", "uniform"),
             virtual_makespan: opt_f64("virtual_makespan", 0.0),
@@ -311,6 +324,8 @@ mod tests {
             max_staleness: 3,
             repair_bytes: 1234,
             flood_retained: 96,
+            flood_dedup_bytes: 5888,
+            peak_in_flight_bytes: 40_960,
             time_model: "event".into(),
             rates: "stragglers:0.25,4".into(),
             virtual_makespan: 481.5,
@@ -338,6 +353,8 @@ mod tests {
         assert_eq!(back.get("max_staleness").unwrap().as_f64().unwrap(), 3.0);
         assert_eq!(back.get("repair_bytes").unwrap().as_f64().unwrap(), 1234.0);
         assert_eq!(back.get("flood_retained").unwrap().as_f64().unwrap(), 96.0);
+        assert_eq!(back.get("flood_dedup_bytes").unwrap().as_f64().unwrap(), 5888.0);
+        assert_eq!(back.get("peak_in_flight_bytes").unwrap().as_f64().unwrap(), 40960.0);
         assert_eq!(back.get("time_model").unwrap().as_str().unwrap(), "event");
         assert_eq!(back.get("rates").unwrap().as_str().unwrap(), "stragglers:0.25,4");
         assert_eq!(back.get("virtual_makespan").unwrap().as_f64().unwrap(), 481.5);

@@ -209,6 +209,16 @@ pub struct Accounting {
     pub repair_bytes: u64,
     /// transmissions attributable to repair (same attribution rules)
     pub repair_messages: u64,
+    /// wire bytes currently queued on edges (delayed, or buffered for an
+    /// offline receiver) — the payload-memory gauge behind
+    /// [`Self::peak_in_flight_bytes`]. Zero whenever the network is
+    /// drained.
+    pub in_flight_bytes: u64,
+    /// high-water mark of [`Self::in_flight_bytes`] over the run: the
+    /// network-side half of the simulation's memory story (the dedup-side
+    /// half is `RunRecord::flood_dedup_bytes`) — at 100k clients the
+    /// in-flight payload volume, not the graph, is what bounds a round
+    pub peak_in_flight_bytes: u64,
 }
 
 impl Accounting {
@@ -326,14 +336,17 @@ impl MsgPool {
         msg
     }
 
-    /// Drop everything queued on `eid`; returns how many messages died.
-    /// Payloads are released immediately, not at slot reuse.
-    fn purge(&mut self, eid: usize) -> usize {
+    /// Drop everything queued on `eid`; returns (messages, wire bytes)
+    /// killed. Payloads are released immediately, not at slot reuse.
+    fn purge(&mut self, eid: usize) -> (usize, u64) {
         let mut h = self.head[eid];
         let mut killed = 0;
+        let mut bytes = 0u64;
         while h != NIL {
             let node = &mut self.nodes[h as usize];
-            node.msg = None;
+            if let Some(msg) = node.msg.take() {
+                bytes += msg.payload.wire_bytes();
+            }
             self.free.push(h);
             h = node.next;
             killed += 1;
@@ -341,7 +354,7 @@ impl MsgPool {
         self.head[eid] = NIL;
         self.tail[eid] = NIL;
         self.len[eid] = 0;
-        killed
+        (killed, bytes)
     }
 
     fn queued(&self, eid: usize) -> usize {
@@ -520,9 +533,10 @@ impl Network {
         // traffic stays buffered on the in-edges until the node rejoins
         for (eid, down) in c.link_down.iter().enumerate() {
             if *down && self.pool.queued(eid) > 0 {
-                let purged = self.pool.purge(eid);
+                let (purged, purged_bytes) = self.pool.purge(eid);
                 self.acct.dropped_messages += purged as u64;
                 self.in_flight -= purged;
+                self.acct.in_flight_bytes -= purged_bytes;
             }
         }
         // per-node impairment — exactly the local knowledge a real client
@@ -640,6 +654,9 @@ impl Network {
             None => self.now,
         };
         self.in_flight += 1;
+        self.acct.in_flight_bytes += bytes;
+        self.acct.peak_in_flight_bytes =
+            self.acct.peak_in_flight_bytes.max(self.acct.in_flight_bytes);
         self.pool.push(eid, deliver_at, Message { from: src, payload });
     }
 
@@ -678,6 +695,8 @@ impl Network {
         }
         self.acct.delivered_messages += out.len() as u64;
         self.in_flight -= out.len();
+        let delivered_bytes: u64 = out.iter().map(|m| m.payload.wire_bytes()).sum();
+        self.acct.in_flight_bytes -= delivered_bytes;
         out
     }
 
@@ -727,6 +746,27 @@ mod tests {
         // queue drained
         assert!(net.recv_all(1).is_empty());
         assert_eq!(net.acct.delivered_messages, 1);
+        // and nothing left on the payload-memory gauge
+        assert_eq!(net.acct.in_flight_bytes, 0);
+    }
+
+    #[test]
+    fn in_flight_gauge_tracks_queued_payload_bytes() {
+        let mut net = Network::new(Topology::ring(4));
+        net.install(&crate::netcond::NetCond::parse("delay=2;seed=1").unwrap()).unwrap();
+        net.send(0, 1, seed_payload(3));
+        let queued = net.acct.in_flight_bytes;
+        assert_eq!(queued, seed_payload(3).wire_bytes());
+        assert_eq!(net.acct.peak_in_flight_bytes, queued);
+        // the payload waits out its delay on the edge: the gauge holds
+        assert!(net.recv_all(1).is_empty());
+        assert_eq!(net.acct.in_flight_bytes, queued);
+        net.tick();
+        net.tick();
+        assert_eq!(net.recv_all(1).len(), 1);
+        // drained: the gauge returns to zero, the high-water mark stays
+        assert_eq!(net.acct.in_flight_bytes, 0);
+        assert_eq!(net.acct.peak_in_flight_bytes, queued);
         assert_eq!(net.acct.delivery_ratio(), 1.0);
     }
 

@@ -717,6 +717,7 @@ impl<'e> RunCtx<'e> {
         self.record.delivery_ratio = self.net.acct.delivery_ratio();
         self.record.repair_bytes = self.net.acct.repair_bytes;
         self.record.repair_messages = self.net.acct.repair_messages;
+        self.record.peak_in_flight_bytes = self.net.acct.peak_in_flight_bytes;
         let mut stale_hist = vec![0u64; STALE_BUCKETS];
         for s in &self.states {
             if let Scratch::Flood { flood, .. } = &s.scratch {
@@ -726,6 +727,8 @@ impl<'e> RunCtx<'e> {
                 self.record.repair_gap_misses += flood.gap_misses;
                 self.record.flood_retained =
                     self.record.flood_retained.max(flood.retained_entries() as u64);
+                self.record.flood_dedup_bytes =
+                    self.record.flood_dedup_bytes.max(flood.seen.mem_bytes() as u64);
                 for (b, &c) in flood.stale_hist.iter().enumerate() {
                     stale_hist[b] += c;
                 }

@@ -806,6 +806,31 @@ mod tests {
     }
 
     #[test]
+    fn diameter_switches_representation_exactly_at_the_limit() {
+        // the n = 1023 / 1024 / 1025 boundary: diameter() must take the
+        // exact all-pairs path up to EXACT_DIAMETER_LIMIT inclusive and
+        // the certified upper bound strictly above it — on a long-diameter
+        // kind (ring: estimate and exact can disagree) and a clustered
+        // one (hierarchical: the hopgrid families cross this boundary)
+        for build in [Topology::ring, Topology::hierarchical] {
+            for n in [EXACT_DIAMETER_LIMIT - 1, EXACT_DIAMETER_LIMIT] {
+                let t = build(n);
+                assert_eq!(t.diameter(), t.diameter_exact(), "{} n={n}", t.kind);
+            }
+            let t = build(EXACT_DIAMETER_LIMIT + 1);
+            let (lb, ub) = t.diameter_bounds();
+            assert_eq!(t.diameter(), ub, "{} above the limit", t.kind);
+            let exact = t.diameter_exact();
+            assert!(lb <= exact && exact <= ub, "{}: [{lb},{ub}] miss {exact}", t.kind);
+        }
+        // ring bounds happen to be tight (a sweep endpoint realizes the
+        // diameter), so the switch is invisible there — which is the
+        // acceptance property: never an underestimate either side
+        let r = Topology::ring(EXACT_DIAMETER_LIMIT + 1);
+        assert!(r.diameter() >= r.diameter_exact());
+    }
+
+    #[test]
     fn diameter_estimate_used_above_exact_limit_is_safe() {
         // above the cutoff, diameter() must return a certified ≥-D value
         let t = Topology::hierarchical(EXACT_DIAMETER_LIMIT + 500);

@@ -528,6 +528,8 @@ fn prop_runrecord_to_json_from_json_roundtrip() {
             max_staleness: g.usize_in(0, 40) as u64,
             repair_bytes: g.usize_in(0, 9999) as u64,
             flood_retained: g.usize_in(0, 4096) as u64,
+            flood_dedup_bytes: g.usize_in(0, 1 << 24) as u64,
+            peak_in_flight_bytes: g.usize_in(0, 1 << 28) as u64,
             time_model: (*g.choose(&["lockstep", "event"])).to_string(),
             rates: (*g.choose(&["uniform", "stragglers:0.25,4"])).to_string(),
             virtual_makespan: g.f32_in(0.0, 1e4) as f64,
@@ -886,6 +888,184 @@ fn prop_delayed_flooding_eventually_covers() {
         }
         if !states.iter().all(|s| s.seen.len() == 1) {
             return Err("message count mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+/// The dedup filters that must be indistinguishable (PR 7 tentpole): the
+/// auto filter (dense below [`seedflood::flood::DENSE_ORIGIN_CROSSOVER`],
+/// sparse above), the same filter forced sparse from the first insert,
+/// and forced dense forever.
+fn dedup_variants() -> Vec<(&'static str, FloodDedup)> {
+    vec![
+        ("auto", FloodDedup::default()),
+        ("sparse", FloodDedup::with_crossover(0)),
+        ("dense", FloodDedup::with_crossover(u32::MAX)),
+    ]
+}
+
+/// Everything observable about a dedup filter, for cross-representation
+/// comparison.
+fn dedup_view(d: &FloodDedup) -> (usize, usize, Vec<u64>, Vec<u32>, u64) {
+    (d.len(), d.num_origins(), d.hwms().collect(), d.summary(), d.tail_entries())
+}
+
+#[test]
+fn prop_sparse_dedup_matches_dense_and_hashset() {
+    // decision-for-decision equivalence of the origin-sparse dedup with
+    // the dense representation and a HashSet reference, on adversarial
+    // streams: contiguous low origins, a band straddling the crossover,
+    // and far-out stragglers, with duplicates and random arrival order —
+    // with and without the reserve_origins sizing hint (the hint affects
+    // compression only, never decisions)
+    check("sparse-vs-dense-vs-hashset", 40, |g| {
+        let mut stream: Vec<MsgId> = vec![];
+        let low = g.usize_in(1, 6) as u32;
+        let steps = g.usize_in(1, 30) as u32;
+        for o in 0..low {
+            for s in 0..steps {
+                stream.push(MsgId { origin: o, step: s });
+            }
+        }
+        // a band straddling DENSE_ORIGIN_CROSSOVER, and far stragglers
+        for _ in 0..g.usize_in(0, 12) {
+            let origin = 1020 + g.usize_in(0, 8) as u32;
+            stream.push(MsgId { origin, step: g.usize_in(0, steps as usize) as u32 });
+        }
+        for _ in 0..g.usize_in(0, 4) {
+            let origin = g.usize_in(2000, 90_000) as u32;
+            stream.push(MsgId { origin, step: g.usize_in(0, 3) as u32 });
+        }
+        for _ in 0..g.usize_in(0, 30) {
+            let dup = stream[g.usize_in(0, stream.len() - 1)];
+            stream.push(dup);
+        }
+        let perm = g.rng.permutation(stream.len());
+        let mut variants = dedup_variants();
+        if g.bool() {
+            let hint = g.usize_in(0, 100_000);
+            for (_, d) in &mut variants {
+                d.reserve_origins(hint);
+            }
+        }
+        let mut reference: HashSet<MsgId> = HashSet::new();
+        for &k in &perm {
+            let id = stream[k as usize];
+            let expect = reference.insert(id);
+            for (name, d) in &mut variants {
+                if d.insert(id) != expect {
+                    return Err(format!("{name} diverged from HashSet on {id:?}"));
+                }
+            }
+        }
+        let dense_view = dedup_view(&variants[2].1);
+        for (name, d) in &variants[..2] {
+            if dedup_view(d) != dense_view {
+                return Err(format!(
+                    "{name} view {:?} != dense {:?}",
+                    dedup_view(d),
+                    dense_view
+                ));
+            }
+        }
+        for &id in &stream {
+            for (name, d) in &variants {
+                if !d.contains(&id) {
+                    return Err(format!("{name} lost {id:?} after insert"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Observable per-client flooding state, for the run-twice equivalence
+/// property: dedup views, retention-window contents, and repair/duplicate
+/// counters.
+fn flood_view(st: &FloodState) -> (Vec<u64>, Vec<u32>, usize, Vec<MsgId>, u64, u64) {
+    (
+        st.seen.hwms().collect(),
+        st.seen.summary(),
+        st.seen.len(),
+        st.window.iter().map(|m| m.id).collect(),
+        st.duplicates,
+        st.gap_misses,
+    )
+}
+
+#[test]
+fn prop_sparse_dedup_is_invisible_to_netcond_flooding() {
+    // run the *same* faulty flood twice — once with the default (dense at
+    // these n) dedup filter, once forced sparse from the first insert —
+    // and require identical per-client trajectories and identical network
+    // accounting, including the new in-flight payload gauge. Retention
+    // eviction runs live (random small retain), so the sparse filter also
+    // backs gap-repair decisions identically.
+    check("sparse-dedup-netcond-equivalence", 15, |g| {
+        let topo = random_topology(g);
+        let n = topo.n;
+        let d = topo.diameter().max(1);
+        let retain = g.usize_in(2, 16);
+        let spec = format!(
+            "loss={:.2};delay={};repair=2;seed={}",
+            g.f32_in(0.0, 0.3),
+            g.usize_in(0, 2),
+            g.rng.next_u64() % 1000
+        );
+        let run = |crossover: Option<u32>| {
+            let mut net = Network::new(topo.clone());
+            net.install(&NetCond::parse(&spec).unwrap()).unwrap();
+            let mut states: Vec<FloodState> = (0..n)
+                .map(|_| {
+                    let mut st = FloodState { retain, ..FloodState::new() };
+                    if let Some(c) = crossover {
+                        st.seen = FloodDedup::with_crossover(c);
+                    }
+                    st.seen.reserve_origins(n);
+                    st
+                })
+                .collect();
+            for t in 0..4u32 {
+                net.set_step(t as usize);
+                for (i, st) in states.iter_mut().enumerate() {
+                    if net.should_repair(i) {
+                        st.repair();
+                    }
+                    st.inject(SeedUpdate {
+                        id: MsgId { origin: i as u32, step: t },
+                        seed: 0,
+                        coeff: 1.0,
+                    });
+                }
+                flood_rounds(&mut states, &mut net, d, |_, _| {});
+            }
+            let views: Vec<_> = states.iter().map(flood_view).collect();
+            let acct = (
+                net.acct.total_bytes,
+                net.acct.total_messages,
+                net.acct.delivered_messages,
+                net.acct.dropped_messages,
+                net.acct.in_flight_bytes,
+                net.acct.peak_in_flight_bytes,
+            );
+            (views, acct)
+        };
+        let (default_views, default_acct) = run(None);
+        let (sparse_views, sparse_acct) = run(Some(0));
+        for (i, (a, b)) in default_views.iter().zip(&sparse_views).enumerate() {
+            if a != b {
+                return Err(format!("client {i} diverged: {a:?} vs {b:?}"));
+            }
+        }
+        if default_acct != sparse_acct {
+            return Err(format!("accounting diverged: {default_acct:?} vs {sparse_acct:?}"));
+        }
+        for st in run(Some(0)).0 {
+            // the sparse filter still bounds retention
+            if st.3.len() > retain {
+                return Err(format!("window {} > retain {retain}", st.3.len()));
+            }
         }
         Ok(())
     });
