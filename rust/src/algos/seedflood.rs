@@ -142,6 +142,7 @@ impl SeedFlood {
         if self.use_artifact && self.device_cache.is_none() {
             self.device_cache = env.make_device_cache(&self.basis)?;
         }
+        // sflint: allow(wall-clock, reason = "phase-timing metric (SharedClock -> RunRecord::phase_ms); never feeds training results")
         let t0 = Instant::now();
         let (params, accum) = state.accum_parts();
         if self.use_artifact {
@@ -199,6 +200,7 @@ impl Algorithm for SeedFlood {
         let basis = &self.basis;
         let mut probe_err = None;
         let mut first_loss = None;
+        // sflint: allow(wall-clock, reason = "phase-timing metric (SharedClock -> RunRecord::phase_ms); never feeds training results")
         let t0 = Instant::now();
         let alpha = zo::spsa_alpha(
             &mut state.params,
@@ -230,6 +232,7 @@ impl Algorithm for SeedFlood {
         // apply the same rounded coefficient every other client will see
         let (_, accum, flood) = state.flood_parts();
         let msg = flood.inject(msg);
+        // sflint: allow(wall-clock, reason = "phase-timing metric (SharedClock -> RunRecord::phase_ms); never feeds training results")
         let t1 = Instant::now();
         accum.accumulate(basis, &msg); // own update
         self.clock.add("MA", t1.elapsed());
@@ -273,6 +276,7 @@ impl Algorithm for SeedFlood {
             |st, _i, fresh| {
                 let (_, accum, flood) = st.flood_parts();
                 flood.note_staleness(step, fresh);
+                // sflint: allow(wall-clock, reason = "phase-timing metric (SharedClock -> RunRecord::phase_ms); never feeds training results")
                 let t0 = Instant::now();
                 for m in fresh {
                     accum.accumulate(basis, m);
@@ -371,6 +375,7 @@ impl Algorithm for SeedFlood {
             return Ok(());
         }
         flood.note_staleness(step, &fresh);
+        // sflint: allow(wall-clock, reason = "phase-timing metric (SharedClock -> RunRecord::phase_ms); never feeds training results")
         let t0 = Instant::now();
         for m in &fresh {
             accum.accumulate(basis, m);

@@ -79,6 +79,7 @@ impl Algorithm for SingleZo {
         let mut probe_err = None;
         let mut first_loss = None;
         let basis = &self.basis;
+        // sflint: allow(wall-clock, reason = "phase-timing metric (SharedClock -> RunRecord::phase_ms); never feeds training results")
         let t0 = Instant::now();
         let alpha = zo::spsa_alpha(
             &mut state.params,
@@ -102,6 +103,7 @@ impl Algorithm for SingleZo {
         if let Some(e) = probe_err {
             return Err(e);
         }
+        // sflint: allow(wall-clock, reason = "phase-timing metric (SharedClock -> RunRecord::phase_ms); never feeds training results")
         let t1 = Instant::now();
         match &self.basis {
             Some(basis) => {

@@ -1,0 +1,11 @@
+//! Standalone entry point for the determinism & accounting lint pass —
+//! identical to `seedflood lint`, for CI steps and editors that want the
+//! linter without the full CLI. See `seedflood::lint` for the rules.
+
+use seedflood::lint;
+use seedflood::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    lint::cli_main(&args)
+}

@@ -27,7 +27,9 @@
 //!
 //! See `ARCHITECTURE.md` for the module map and a message-lifecycle
 //! walkthrough, and `EXPERIMENTS.md` for the measurement conventions
-//! behind every number the binary reports.
+//! behind every number the binary reports. The determinism guarantees
+//! those documents claim are statically enforced by the in-repo
+//! [`lint`] pass (`seedflood lint`, CI-enforcing).
 //!
 //! ## Quick start (synthetic backend, no artifacts)
 //!
@@ -59,6 +61,7 @@ pub mod config;
 pub mod data;
 pub mod experiments;
 pub mod flood;
+pub mod lint;
 pub mod metrics;
 pub mod model;
 pub mod net;

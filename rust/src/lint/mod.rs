@@ -1,0 +1,298 @@
+//! `sflint` — the in-repo determinism & accounting static-analysis pass.
+//!
+//! Every headline claim in this reproduction rests on bit-for-bit
+//! determinism (parallel ≡ sequential, event+uniform ≡ lockstep, sweep
+//! aggregates thread-invariant, CSR ≡ hashmap reference, sparse ≡ dense
+//! dedup). Those guarantees are property-tested dynamically, but a
+//! dynamic test can miss a nondeterministic path it never executes.
+//! `sflint` is the static twin: a small line-oriented analysis (built on
+//! the comment/string-aware lexer in [`scan`]) that forbids the source
+//! patterns which historically cause silent nondeterminism or dropped
+//! accounting. The image has no crate registry, so — like the vendored
+//! `anyhow` shim — the scanner is hand-rolled rather than `syn`-based.
+//!
+//! Rules (see [`rules`] for the precise semantics):
+//!
+//! * `unordered-iter` — no iteration/drain over `HashMap`/`HashSet`
+//!   bindings in result-bearing modules.
+//! * `wall-clock` — `Instant::now`/`SystemTime` only in `util/{timer,bench}`
+//!   or behind an allow.
+//! * `thread-escape` — thread primitives only in `util/par`.
+//! * `unsafe-audit` — every `unsafe` line needs its own adjacent
+//!   `SAFETY:` comment.
+//! * `accounting-conservation` — every `net::Accounting` field must be
+//!   serialized, parsed, and consumed by the results pipeline (or carry
+//!   an allow explaining why not).
+//!
+//! Findings are suppressed by an inline annotation written as a line
+//! comment: the marker `sflint:` followed by `allow(<rule-name>,
+//! reason = "<why this site is sound>")`. The reason is mandatory —
+//! an annotation without one (or naming an unknown rule) is itself
+//! reported as `invalid-allow`, which cannot be suppressed. An allow
+//! covers its own line and the line directly below, so both trailing
+//! comments and comment-above style work.
+//!
+//! Entry points: `seedflood lint [--root DIR]` or the standalone
+//! `sflint` binary; both exit non-zero on any unsuppressed finding.
+
+pub mod rules;
+pub mod scan;
+
+use crate::util::cli::Args;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// The rule a finding or allow-annotation refers to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    UnorderedIter,
+    WallClock,
+    ThreadEscape,
+    UnsafeAudit,
+    AccountingConservation,
+    /// Malformed allow annotation — reported, never suppressible.
+    InvalidAllow,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::UnorderedIter => "unordered-iter",
+            Rule::WallClock => "wall-clock",
+            Rule::ThreadEscape => "thread-escape",
+            Rule::UnsafeAudit => "unsafe-audit",
+            Rule::AccountingConservation => "accounting-conservation",
+            Rule::InvalidAllow => "invalid-allow",
+        }
+    }
+
+    /// Rules that may be named in an allow annotation.
+    pub fn from_name(s: &str) -> Option<Rule> {
+        match s {
+            "unordered-iter" => Some(Rule::UnorderedIter),
+            "wall-clock" => Some(Rule::WallClock),
+            "thread-escape" => Some(Rule::ThreadEscape),
+            "unsafe-audit" => Some(Rule::UnsafeAudit),
+            "accounting-conservation" => Some(Rule::AccountingConservation),
+            _ => None,
+        }
+    }
+}
+
+/// One reported violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Repo-relative path, forward slashes.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {}: {}",
+            self.path,
+            self.line,
+            self.rule.name(),
+            self.msg
+        )
+    }
+}
+
+/// A parsed, well-formed allow annotation.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// Line the annotation sits on; it suppresses this line and the next.
+    pub line: usize,
+    pub rule: Rule,
+}
+
+const ALLOW_MARKER: &str = "sflint: allow(";
+
+/// Parse every allow annotation in a file's comment channel. Returns the
+/// well-formed allows plus `invalid-allow` findings for malformed ones.
+pub(crate) fn parse_allows(path: &str, lines: &[scan::Line]) -> (Vec<Allow>, Vec<Finding>) {
+    let mut allows = Vec::new();
+    let mut findings = Vec::new();
+    for line in lines {
+        let mut from = 0usize;
+        while let Some(rel) = line.comment[from..].find(ALLOW_MARKER) {
+            let start = from + rel + ALLOW_MARKER.len();
+            from = start;
+            let rest = &line.comment[start..];
+            match parse_allow_body(rest) {
+                Ok(rule) => allows.push(Allow { line: line.number, rule }),
+                Err(why) => findings.push(Finding {
+                    path: path.to_string(),
+                    line: line.number,
+                    rule: Rule::InvalidAllow,
+                    msg: why,
+                }),
+            }
+        }
+    }
+    (allows, findings)
+}
+
+/// Parse `<rule>, reason = "<text>")` — the body following the marker.
+fn parse_allow_body(rest: &str) -> Result<Rule, String> {
+    let name_end = rest
+        .find(|c: char| c == ',' || c == ')')
+        .ok_or_else(|| "unterminated allow annotation".to_string())?;
+    let name = rest[..name_end].trim();
+    let rule = Rule::from_name(name)
+        .ok_or_else(|| format!("unknown rule `{name}` in allow annotation"))?;
+    if rest.as_bytes()[name_end] == b')' {
+        return Err(format!(
+            "allow({name}) is missing its mandatory `reason = \"...\"`"
+        ));
+    }
+    let after = rest[name_end + 1..].trim_start();
+    let after = after
+        .strip_prefix("reason")
+        .ok_or_else(|| format!("allow({name}) must give `reason = \"...\"` after the rule"))?
+        .trim_start();
+    let after = after
+        .strip_prefix('=')
+        .ok_or_else(|| format!("allow({name}): expected `=` after `reason`"))?
+        .trim_start();
+    let after = after
+        .strip_prefix('"')
+        .ok_or_else(|| format!("allow({name}): reason must be a quoted string"))?;
+    let close = after
+        .find('"')
+        .ok_or_else(|| format!("allow({name}): unterminated reason string"))?;
+    if after[..close].trim().is_empty() {
+        return Err(format!(
+            "allow({name}): reason must not be empty — say why the site is sound"
+        ));
+    }
+    Ok(rule)
+}
+
+/// Result of a lint pass.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+/// Lint a set of in-memory files: `(repo-relative path, source)` pairs.
+/// This is the seam the fixture tests drive; [`run_repo`] feeds it from
+/// disk. Findings come back sorted by (path, line, rule).
+pub fn lint_files(files: &[(String, String)]) -> Vec<Finding> {
+    let scanned: Vec<(String, Vec<scan::Line>)> = files
+        .iter()
+        .map(|(path, src)| (path.clone(), scan::scan(src)))
+        .collect();
+
+    let mut findings = Vec::new();
+    let mut allows_by_path: Vec<(&str, Vec<Allow>)> = Vec::new();
+    for (path, lines) in &scanned {
+        let (allows, invalid) = parse_allows(path, lines);
+        findings.extend(invalid);
+        findings.extend(rules::check_file(path, lines));
+        allows_by_path.push((path.as_str(), allows));
+    }
+    findings.extend(rules::check_accounting(&scanned));
+
+    findings.retain(|f| {
+        if f.rule == Rule::InvalidAllow {
+            return true;
+        }
+        let allowed = allows_by_path
+            .iter()
+            .find(|(p, _)| *p == f.path)
+            .map(|(_, allows)| {
+                allows.iter().any(|a| {
+                    a.rule == f.rule && (f.line == a.line || f.line == a.line + 1)
+                })
+            })
+            .unwrap_or(false);
+        !allowed
+    });
+
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule.name()).cmp(&(b.path.as_str(), b.line, b.rule.name()))
+    });
+    findings
+}
+
+/// Directories scanned relative to the repo root (when present).
+const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "benches", "examples"];
+
+/// Lint the repository rooted at `root`. Errors if `root` does not look
+/// like the seedflood repo (no `rust/src`).
+pub fn run_repo(root: &Path) -> crate::Result<LintReport> {
+    if !root.join("rust/src").is_dir() {
+        anyhow::bail!(
+            "sflint: `{}` has no rust/src — pass the repo root via --root",
+            root.display()
+        );
+    }
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut paths)?;
+        }
+    }
+    let mut files: Vec<(String, String)> = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = fs::read_to_string(p)?;
+        files.push((rel, src));
+    }
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(LintReport {
+        findings: lint_files(&files),
+        files_scanned: files.len(),
+    })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> crate::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// `seedflood lint [--root DIR]` — print findings, error when any exist
+/// so CI fails the build.
+pub fn cli_main(args: &Args) -> crate::Result<()> {
+    let root = PathBuf::from(args.get_or("root", "."));
+    let report = run_repo(&root)?;
+    for f in &report.findings {
+        println!("{f}");
+    }
+    if report.findings.is_empty() {
+        println!("sflint: {} file(s) scanned, no findings", report.files_scanned);
+        Ok(())
+    } else {
+        anyhow::bail!(
+            "sflint: {} finding(s) in {} file(s) scanned",
+            report.findings.len(),
+            report.files_scanned
+        )
+    }
+}

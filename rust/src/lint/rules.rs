@@ -1,0 +1,931 @@
+//! Rule implementations for `sflint`.
+//!
+//! All per-line rules match against the code channel produced by
+//! [`super::scan`], so pattern text inside string literals or comments
+//! never triggers a finding (which is also what lets this file define
+//! the patterns as string constants and still scan itself cleanly).
+//!
+//! Scope conventions:
+//! * `unordered-iter`, `wall-clock`, `thread-escape` apply to library
+//!   code only (paths under `rust/src/`) and skip `#[cfg(test)] mod`
+//!   regions — tests may time, thread, and hash-iterate freely.
+//! * `unsafe-audit` applies to every scanned file including tests,
+//!   benches and examples: a SAFETY argument is documentation, and
+//!   documentation is owed everywhere.
+//! * `accounting-conservation` is a cross-file structural check over
+//!   the fixed trio net/mod.rs ↔ metrics/mod.rs ↔ sim/mod.rs; it is
+//!   skipped when the trio is absent so fixture sets can opt in.
+
+use super::scan::{find_word, has_word, Line};
+use super::{Finding, Rule};
+
+/// Modules whose output feeds reported results: any nondeterministic
+/// iteration here can change a published number.
+pub const RESULT_MODULES: &[&str] = &[
+    "algos",
+    "experiments",
+    "flood",
+    "net",
+    "netcond",
+    "sched",
+    "sim",
+    "topology",
+];
+
+/// The only library files allowed to read wall-clock time without an
+/// allow annotation.
+pub const WALLCLOCK_ALLOWED: &[&str] = &["rust/src/util/bench.rs", "rust/src/util/timer.rs"];
+
+/// The only library file allowed to use thread primitives: everything
+/// else must go through `util::par` so the parallel ≡ sequential
+/// property has a single seam to guard.
+pub const THREAD_ALLOWED: &[&str] = &["rust/src/util/par.rs"];
+
+const WALLCLOCK_PATTERNS: &[&str] = &["Instant::now", "SystemTime"];
+const THREAD_PATTERNS: &[&str] = &[
+    "thread::spawn",
+    "thread::scope",
+    "thread::Builder",
+    "rayon",
+];
+const HASH_TYPES: &[&str] = &["HashMap", "HashSet"];
+/// Method calls that observe a collection in iteration order.
+const ITER_SUFFIXES: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".into_iter()",
+    ".drain(",
+    ".keys(",
+    ".values(",
+    ".values_mut(",
+];
+
+/// Run every per-file rule on one scanned file.
+pub fn check_file(path: &str, lines: &[Line]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    check_unsafe_audit(path, lines, &mut out);
+    if path.starts_with("rust/src/") {
+        check_wall_clock(path, lines, &mut out);
+        check_thread_escape(path, lines, &mut out);
+        check_unordered_iter(path, lines, &mut out);
+    }
+    out
+}
+
+fn push(out: &mut Vec<Finding>, path: &str, line: usize, rule: Rule, msg: String) {
+    out.push(Finding {
+        path: path.to_string(),
+        line,
+        rule,
+        msg,
+    });
+}
+
+// ---------------------------------------------------------------- wall-clock
+
+fn check_wall_clock(path: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    if WALLCLOCK_ALLOWED.contains(&path) {
+        return;
+    }
+    for line in lines {
+        if line.in_test {
+            continue;
+        }
+        for pat in WALLCLOCK_PATTERNS {
+            if has_word(&line.code, pat) {
+                push(
+                    out,
+                    path,
+                    line.number,
+                    Rule::WallClock,
+                    format!(
+                        "wall-clock source `{pat}` outside util/timer|bench — \
+                         timing may never feed results"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- thread-escape
+
+fn check_thread_escape(path: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    if THREAD_ALLOWED.contains(&path) {
+        return;
+    }
+    for line in lines {
+        if line.in_test {
+            continue;
+        }
+        for pat in THREAD_PATTERNS {
+            if has_word(&line.code, pat) {
+                push(
+                    out,
+                    path,
+                    line.number,
+                    Rule::ThreadEscape,
+                    format!(
+                        "thread primitive `{pat}` outside util/par — all parallelism \
+                         must go through the order-preserving par seam"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ unordered-iter
+
+/// True when `path` is inside one of [`RESULT_MODULES`].
+fn in_result_module(path: &str) -> bool {
+    let Some(rest) = path.strip_prefix("rust/src/") else {
+        return false;
+    };
+    RESULT_MODULES.iter().any(|m| {
+        rest.strip_prefix(m)
+            .is_some_and(|r| r.starts_with('/') || r == ".rs")
+    })
+}
+
+/// Byte offsets of every word-boundary occurrence of `needle` in `hay`.
+fn word_positions(hay: &str, needle: &str) -> Vec<usize> {
+    let mut at = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = find_word(&hay[from..], needle) {
+        at.push(from + p);
+        from += p + 1;
+    }
+    at
+}
+
+fn is_ident(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().all(|c| c.is_alphanumeric() || c == '_')
+        && !s.starts_with(|c: char| c.is_ascii_digit())
+}
+
+/// The identifier ending at the end of `s`, if any.
+fn trailing_ident(s: &str) -> Option<String> {
+    let end = s.len();
+    let start = s
+        .char_indices()
+        .rev()
+        .take_while(|(_, c)| c.is_alphanumeric() || *c == '_')
+        .last()
+        .map(|(i, _)| i)?;
+    let id = &s[start..end];
+    if is_ident(id) {
+        Some(id.to_string())
+    } else {
+        None
+    }
+}
+
+/// The identifier starting at the beginning of `s`, if any.
+fn leading_ident(s: &str) -> Option<String> {
+    let end = s
+        .char_indices()
+        .take_while(|(_, c)| c.is_alphanumeric() || *c == '_')
+        .last()
+        .map(|(i, c)| i + c.len_utf8())?;
+    let id = &s[..end];
+    if is_ident(id) {
+        Some(id.to_string())
+    } else {
+        None
+    }
+}
+
+/// Given a `HashMap`/`HashSet` type mention at `type_pos`, recover the
+/// identifier it is declared for in `NAME: [&][mut] [path::]Hash…`
+/// (struct fields, fn params, let-with-ascription).
+fn binding_before_type(code: &str, type_pos: usize) -> Option<String> {
+    let mut b = code[..type_pos].trim_end();
+    // Strip a leading type path such as `std::collections::`.
+    while b.ends_with("::") {
+        b = b[..b.len() - 2].trim_end();
+        b = b.trim_end_matches(|c: char| c.is_alphanumeric() || c == '_');
+        b = b.trim_end();
+    }
+    b = b.trim_end_matches(['&', '<', '(']).trim_end();
+    if let Some(stripped) = b.strip_suffix("mut") {
+        b = stripped.trim_end().trim_end_matches('&').trim_end();
+    }
+    let b = b.strip_suffix(':')?;
+    // `::` would have been consumed above, so a remaining ':' suffix
+    // means this really was an ascription, not a path.
+    if b.ends_with(':') {
+        return None;
+    }
+    trailing_ident(b.trim_end())
+}
+
+/// Names bound to hash collections anywhere in the (non-test) file.
+fn tracked_hash_bindings(lines: &[Line]) -> Vec<String> {
+    let mut tracked: Vec<String> = Vec::new();
+    for line in lines {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        let mut mentions = Vec::new();
+        for t in HASH_TYPES {
+            mentions.extend(word_positions(code, t));
+        }
+        if mentions.is_empty() {
+            continue;
+        }
+        // `let [mut] NAME = …HashMap…` — NAME now holds a hash collection.
+        if let Some(p) = find_word(code, "let") {
+            let rest = code[p + 3..].trim_start();
+            let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+            if let Some(name) = leading_ident(rest) {
+                tracked.push(name);
+            }
+        }
+        // `NAME: HashMap<…>` — field, param, or ascribed binding.
+        for p in mentions {
+            if let Some(name) = binding_before_type(code, p) {
+                tracked.push(name);
+            }
+        }
+    }
+    tracked.sort();
+    tracked.dedup();
+    tracked
+}
+
+fn check_unordered_iter(path: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    if !in_result_module(path) {
+        return;
+    }
+    let tracked = tracked_hash_bindings(lines);
+    if tracked.is_empty() {
+        return;
+    }
+    for line in lines {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        for name in &tracked {
+            let mut hit = false;
+            for suf in ITER_SUFFIXES {
+                if has_word(code, &format!("{name}{suf}")) {
+                    hit = true;
+                    break;
+                }
+            }
+            // `for x in [&[mut ]]NAME {` — direct loop over the collection.
+            if !hit && has_word(code, "for") {
+                if let Some(p) = find_word(code, "in") {
+                    let rest = code[p + 2..].trim_end();
+                    let rest = rest.trim_end_matches('{').trim_end();
+                    let boundary_ok = rest.strip_suffix(name.as_str()).is_some_and(|r| {
+                        r.is_empty() || r.ends_with(|c: char| !c.is_alphanumeric() && c != '_')
+                    });
+                    if boundary_ok {
+                        hit = true;
+                    }
+                }
+            }
+            if hit {
+                push(
+                    out,
+                    path,
+                    line.number,
+                    Rule::UnorderedIter,
+                    format!(
+                        "iteration over unordered hash collection `{name}` in a \
+                         result-bearing module — order can differ between runs; \
+                         use BTreeMap/BTreeSet, sort first, or allow with a reason \
+                         if the sink is order-insensitive"
+                    ),
+                );
+                break; // one finding per line is enough
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- unsafe-audit
+
+fn check_unsafe_audit(path: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    for (idx, line) in lines.iter().enumerate() {
+        if !has_word(&line.code, "unsafe") {
+            continue;
+        }
+        if line.comment.contains("SAFETY:") {
+            continue; // same-line trailing safety comment
+        }
+        // Walk upward through contiguous comment-only lines.
+        let mut justified = false;
+        let mut j = idx;
+        while j > 0 {
+            j -= 1;
+            let prev = &lines[j];
+            let is_comment_only = prev.code.trim().is_empty() && !prev.comment.trim().is_empty();
+            if !is_comment_only {
+                break;
+            }
+            if prev.comment.contains("SAFETY:") {
+                justified = true;
+                break;
+            }
+        }
+        if !justified {
+            push(
+                out,
+                path,
+                line.number,
+                Rule::UnsafeAudit,
+                "`unsafe` without its own immediately-preceding `// SAFETY:` comment \
+                 — every unsafe site must argue its soundness adjacent to the code"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// --------------------------------------------------- accounting-conservation
+
+/// The fixed file trio the conservation rule audits.
+pub const ACCT_FILE: &str = "rust/src/net/mod.rs";
+pub const RECORD_FILE: &str = "rust/src/metrics/mod.rs";
+pub const CONSUME_FILE: &str = "rust/src/sim/mod.rs";
+
+struct StructInfo {
+    decl_line: usize,
+    derives_default: bool,
+    /// (field name, 1-based declaration line)
+    fields: Vec<(String, usize)>,
+}
+
+/// Parse a `struct <name>` declaration: derive list and public fields.
+fn parse_struct(lines: &[Line], name: &str) -> Option<StructInfo> {
+    let decl_idx = lines
+        .iter()
+        .position(|l| has_word(&l.code, "struct") && has_word(&l.code, name))?;
+
+    // Derives: contiguous attribute lines directly above the declaration.
+    let mut derives_default = false;
+    let mut j = decl_idx;
+    while j > 0 {
+        j -= 1;
+        let code = lines[j].code.trim();
+        let comment_only = code.is_empty() && !lines[j].comment.trim().is_empty();
+        if code.starts_with("#[") {
+            if code.contains("derive") && has_word(code, "Default") {
+                derives_default = true;
+            }
+        } else if !comment_only {
+            break;
+        }
+    }
+
+    let mut fields = Vec::new();
+    let mut depth = 0i32;
+    let mut started = false;
+    for line in &lines[decl_idx..] {
+        let depth_at_start = depth;
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    started = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if started && depth_at_start == 1 {
+            let t = line.code.trim();
+            if let Some(rest) = t.strip_prefix("pub ") {
+                if let Some(colon) = rest.find(':') {
+                    let fname = rest[..colon].trim();
+                    if is_ident(fname) {
+                        fields.push((fname.to_string(), line.number));
+                    }
+                }
+            }
+        }
+        if started && depth <= 0 {
+            break;
+        }
+    }
+
+    Some(StructInfo {
+        decl_line: lines[decl_idx].number,
+        derives_default,
+        fields,
+    })
+}
+
+/// Index (inclusive) of the line closing the brace block opened at or
+/// after `start`.
+fn region_end(lines: &[Line], start: usize) -> usize {
+    let mut depth = 0i32;
+    let mut started = false;
+    for (i, line) in lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    started = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if started && depth <= 0 {
+            return i;
+        }
+    }
+    lines.len().saturating_sub(1)
+}
+
+/// Raw text of `fn <fn_name>` inside any `impl <type_name>` block.
+fn fn_body_text(lines: &[Line], type_name: &str, fn_name: &str) -> String {
+    for (i, line) in lines.iter().enumerate() {
+        if !(has_word(&line.code, "impl") && has_word(&line.code, type_name)) {
+            continue;
+        }
+        let end = region_end(lines, i);
+        let mut j = i + 1;
+        while j <= end {
+            if has_word(&lines[j].code, "fn") && has_word(&lines[j].code, fn_name) {
+                let fend = region_end(lines, j);
+                let mut body = String::new();
+                for l in &lines[j..=fend.min(end)] {
+                    body.push_str(&l.raw);
+                    body.push('\n');
+                }
+                return body;
+            }
+            j += 1;
+        }
+    }
+    String::new()
+}
+
+/// Cross-file conservation audit: every `Accounting` field must flow
+/// into the results pipeline — a same-named `RunRecord` mirror that is
+/// serialized by `to_json`, parsed by `from_json`, and filled from
+/// `acct.<field>` in sim — or carry an allow saying how it is consumed.
+/// The reset leg is `Accounting: Default` (sim builds a fresh `Network`,
+/// hence fresh zeroed counters, per run).
+pub fn check_accounting(files: &[(String, Vec<Line>)]) -> Vec<Finding> {
+    let get = |p: &str| {
+        files
+            .iter()
+            .find(|(q, _)| q == p)
+            .map(|(_, l)| l.as_slice())
+    };
+    let (Some(net), Some(metrics), Some(sim)) =
+        (get(ACCT_FILE), get(RECORD_FILE), get(CONSUME_FILE))
+    else {
+        return Vec::new(); // fixture set without the trio: rule opts out
+    };
+
+    let mut out = Vec::new();
+    let Some(acct) = parse_struct(net, "Accounting") else {
+        push(
+            &mut out,
+            ACCT_FILE,
+            1,
+            Rule::AccountingConservation,
+            "could not locate `struct Accounting`".to_string(),
+        );
+        return out;
+    };
+    if !acct.derives_default {
+        push(
+            &mut out,
+            ACCT_FILE,
+            acct.decl_line,
+            Rule::AccountingConservation,
+            "Accounting must derive Default — Network::new zero-fills it, which is \
+             the per-run reset leg of conservation"
+                .to_string(),
+        );
+    }
+
+    let record_fields: Vec<String> = parse_struct(metrics, "RunRecord")
+        .map(|s| s.fields.into_iter().map(|(n, _)| n).collect())
+        .unwrap_or_default();
+    let to_json = fn_body_text(metrics, "RunRecord", "to_json");
+    let from_json = fn_body_text(metrics, "RunRecord", "from_json");
+    let sim_raw: String = sim.iter().map(|l| l.raw.as_str()).collect::<Vec<_>>().join("\n");
+
+    for (name, line) in &acct.fields {
+        if record_fields.iter().any(|f| f == name) {
+            let mut missing = Vec::new();
+            if !has_word(&to_json, name) {
+                missing.push("RunRecord::to_json");
+            }
+            if !has_word(&from_json, name) {
+                missing.push("RunRecord::from_json");
+            }
+            if !has_word(&sim_raw, &format!("acct.{name}")) {
+                missing.push("sim (no `acct.<field>` consumption)");
+            }
+            if !missing.is_empty() {
+                push(
+                    &mut out,
+                    ACCT_FILE,
+                    *line,
+                    Rule::AccountingConservation,
+                    format!(
+                        "Accounting field `{name}` is mirrored by RunRecord but not \
+                         covered by: {}",
+                        missing.join(", ")
+                    ),
+                );
+            }
+        } else {
+            push(
+                &mut out,
+                ACCT_FILE,
+                *line,
+                Rule::AccountingConservation,
+                format!(
+                    "Accounting field `{name}` has no same-named RunRecord mirror — \
+                     new counters must reach the results pipeline (to_json/from_json/\
+                     sim consumption) or carry an allow explaining how they are \
+                     consumed"
+                ),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{lint_files, parse_allows, scan};
+
+    fn lint_one(path: &str, src: &str) -> Vec<Finding> {
+        lint_files(&[(path.to_string(), src.to_string())])
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<Rule> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ---------------------------------------------------------- wall-clock
+
+    #[test]
+    fn wall_clock_flagged_in_lib_code() {
+        let f = lint_one(
+            "rust/src/algos/x.rs",
+            "fn f() { let t = std::time::Instant::now(); }\n",
+        );
+        assert_eq!(rules_of(&f), vec![Rule::WallClock]);
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn wall_clock_system_time_flagged() {
+        let f = lint_one(
+            "rust/src/sim/x.rs",
+            "use std::time::SystemTime;\nfn f() { let t = SystemTime::now(); }\n",
+        );
+        assert_eq!(rules_of(&f), vec![Rule::WallClock, Rule::WallClock]);
+    }
+
+    #[test]
+    fn wall_clock_clean_in_timer_bench_tests_and_nonlib() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert!(lint_one("rust/src/util/timer.rs", src).is_empty());
+        assert!(lint_one("rust/src/util/bench.rs", src).is_empty());
+        assert!(lint_one("benches/x.rs", src).is_empty());
+        let in_test = "#[cfg(test)]\n\
+                       mod tests {\n    \
+                       fn f() { let t = std::time::Instant::now(); }\n\
+                       }\n";
+        assert!(lint_one("rust/src/algos/x.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_allow_with_reason_suppresses() {
+        let src = "// sflint: allow(wall-clock, reason = \"fixture timing\")\n\
+                   fn f() { let t = std::time::Instant::now(); }\n";
+        assert!(lint_one("rust/src/algos/x.rs", src).is_empty());
+        let trailing = "fn f() { let t = std::time::Instant::now(); } // sflint: allow(wall-clock, \
+                        reason = \"fixture timing\")\n";
+        assert!(lint_one("rust/src/algos/x.rs", trailing).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_allow_without_reason_rejected() {
+        let src = "// sflint: allow(wall-clock)\nfn f() { let t = std::time::Instant::now(); }\n";
+        let f = lint_one("rust/src/algos/x.rs", src);
+        // The malformed allow is reported AND does not suppress.
+        assert_eq!(rules_of(&f), vec![Rule::InvalidAllow, Rule::WallClock]);
+    }
+
+    #[test]
+    fn allow_with_empty_reason_rejected() {
+        let src = "// sflint: allow(wall-clock, reason = \"\")\n\
+                   fn f() { let t = std::time::Instant::now(); }\n";
+        let f = lint_one("rust/src/algos/x.rs", src);
+        assert_eq!(rules_of(&f), vec![Rule::InvalidAllow, Rule::WallClock]);
+    }
+
+    #[test]
+    fn allow_with_unknown_rule_rejected() {
+        let lines = scan::scan("// sflint: allow(no-such-rule, reason = \"x\")\n");
+        let (allows, invalid) = parse_allows("rust/src/algos/x.rs", &lines);
+        assert!(allows.is_empty());
+        assert_eq!(invalid.len(), 1);
+        assert!(invalid[0].msg.contains("unknown rule"));
+    }
+
+    #[test]
+    fn allow_only_covers_its_rule() {
+        // A wall-clock allow must not suppress a thread-escape finding.
+        let src = "// sflint: allow(wall-clock, reason = \"fixture\")\n\
+                   fn f() { std::thread::spawn(|| {}); }\n";
+        let f = lint_one("rust/src/sim/x.rs", src);
+        assert_eq!(rules_of(&f), vec![Rule::ThreadEscape]);
+    }
+
+    // ------------------------------------------------------- thread-escape
+
+    #[test]
+    fn thread_escape_flagged_outside_par() {
+        let f = lint_one("rust/src/sim/x.rs", "fn f() { std::thread::spawn(|| {}); }\n");
+        assert_eq!(rules_of(&f), vec![Rule::ThreadEscape]);
+        let f = lint_one("rust/src/flood/x.rs", "fn f() { std::thread::scope(|s| {}); }\n");
+        assert_eq!(rules_of(&f), vec![Rule::ThreadEscape]);
+    }
+
+    #[test]
+    fn thread_escape_clean_in_par_and_tests() {
+        let src = "fn f() { std::thread::scope(|s| {}); }\n";
+        assert!(lint_one("rust/src/util/par.rs", src).is_empty());
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn f() { std::thread::spawn(|| {}); }\n}\n";
+        assert!(lint_one("rust/src/util/timer.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn thread_escape_allow_with_reason_suppresses() {
+        let src = "// sflint: allow(thread-escape, reason = \"fixture\")\n\
+                   fn f() { std::thread::spawn(|| {}); }\n";
+        assert!(lint_one("rust/src/sim/x.rs", src).is_empty());
+    }
+
+    // ------------------------------------------------------ unordered-iter
+
+    #[test]
+    fn unordered_iter_flags_method_iteration() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f() {\n    \
+                   let mut m: HashMap<u32, u32> = HashMap::new();\n    \
+                   let s: u32 = m.keys().sum();\n\
+                   }\n";
+        let f = lint_one("rust/src/flood/x.rs", src);
+        assert_eq!(rules_of(&f), vec![Rule::UnorderedIter]);
+        assert_eq!(f[0].line, 4);
+        assert!(f[0].msg.contains('m'));
+    }
+
+    #[test]
+    fn unordered_iter_flags_for_loop() {
+        let src = "use std::collections::HashSet;\n\
+                   fn f(seen: &HashSet<u64>) {\n    \
+                   for x in seen {\n        \
+                   sink(x);\n    \
+                   }\n\
+                   }\n";
+        let f = lint_one("rust/src/net/x.rs", src);
+        assert_eq!(rules_of(&f), vec![Rule::UnorderedIter]);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn unordered_iter_flags_drain_on_field() {
+        let src = "use std::collections::HashMap;\n\
+                   struct S { pending: HashMap<u64, u64> }\n\
+                   impl S {\n    \
+                   fn f(&mut self) {\n        \
+                   for (k, v) in self.pending.drain() {\n            \
+                   sink(k, v);\n        \
+                   }\n    \
+                   }\n\
+                   }\n";
+        let f = lint_one("rust/src/sched/x.rs", src);
+        assert_eq!(rules_of(&f), vec![Rule::UnorderedIter]);
+        assert_eq!(f[0].line, 5);
+    }
+
+    #[test]
+    fn unordered_iter_clean_cases() {
+        // Order-insensitive use: membership tests only.
+        let contains = "use std::collections::HashSet;\n\
+                        fn f(seen: &HashSet<u64>, x: u64) -> bool { seen.contains(&x) }\n";
+        assert!(lint_one("rust/src/flood/x.rs", contains).is_empty());
+        // Ordered collection.
+        let btree = "use std::collections::BTreeMap;\n\
+                     fn f(m: &BTreeMap<u32, u32>) -> u32 { m.keys().sum() }\n";
+        assert!(lint_one("rust/src/algos/x.rs", btree).is_empty());
+        // Outside result-bearing modules.
+        let util = "use std::collections::HashMap;\n\
+                    fn f(m: &HashMap<u32, u32>) -> u32 { m.keys().sum() }\n";
+        assert!(lint_one("rust/src/util/x.rs", util).is_empty());
+        // Inside #[cfg(test)].
+        let in_test = "use std::collections::HashSet;\n\
+                       #[cfg(test)]\n\
+                       mod tests {\n    \
+                       fn f(s: &HashSet<u64>) { for x in s { sink(x); } }\n\
+                       }\n";
+        assert!(lint_one("rust/src/topology/x.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn unordered_iter_allow_with_reason_suppresses() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<u32, u32>) -> u32 {\n    \
+                   // sflint: allow(unordered-iter, reason = \"sum is order-insensitive\")\n    \
+                   m.values().sum()\n\
+                   }\n";
+        assert!(lint_one("rust/src/flood/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unordered_iter_allow_without_reason_rejected() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<u32, u32>) -> u32 {\n    \
+                   // sflint: allow(unordered-iter)\n    \
+                   m.values().sum()\n\
+                   }\n";
+        let f = lint_one("rust/src/flood/x.rs", src);
+        assert_eq!(rules_of(&f), vec![Rule::InvalidAllow, Rule::UnorderedIter]);
+    }
+
+    // -------------------------------------------------------- unsafe-audit
+
+    #[test]
+    fn unsafe_audit_flags_bare_unsafe() {
+        let f = lint_one("rust/src/runtime/x.rs", "unsafe impl Send for X {}\n");
+        assert_eq!(rules_of(&f), vec![Rule::UnsafeAudit]);
+    }
+
+    #[test]
+    fn unsafe_audit_applies_in_tests_too() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { let p = unsafe { danger() }; }\n}\n";
+        let f = lint_one("rust/tests/x.rs", src);
+        assert_eq!(rules_of(&f), vec![Rule::UnsafeAudit]);
+    }
+
+    #[test]
+    fn unsafe_audit_satisfied_by_adjacent_safety() {
+        let above = "// SAFETY: fixture justification\nunsafe impl Send for X {}\n";
+        assert!(lint_one("rust/src/runtime/x.rs", above).is_empty());
+        let trailing = "unsafe impl Send for X {} // SAFETY: fixture justification\n";
+        assert!(lint_one("rust/src/runtime/x.rs", trailing).is_empty());
+        let multi = "// SAFETY: part one\n// continues here\nunsafe impl Send for X {}\n";
+        assert!(lint_one("rust/src/runtime/x.rs", multi).is_empty());
+    }
+
+    #[test]
+    fn unsafe_audit_requires_one_comment_per_impl() {
+        // One shared SAFETY comment must NOT cover a second impl below it.
+        let src = "// SAFETY: covers only the next line\n\
+                   unsafe impl Send for X {}\n\
+                   unsafe impl Sync for X {}\n";
+        let f = lint_one("rust/src/runtime/x.rs", src);
+        assert_eq!(rules_of(&f), vec![Rule::UnsafeAudit]);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn unsafe_audit_allow_with_reason_suppresses() {
+        let src = "// sflint: allow(unsafe-audit, reason = \"fixture\")\n\
+                   unsafe impl Send for X {}\n";
+        assert!(lint_one("rust/src/runtime/x.rs", src).is_empty());
+    }
+
+    // ------------------------------------------- accounting-conservation
+
+    fn net_fixture(extra_field: &str) -> String {
+        format!(
+            "#[derive(Clone, Debug, Default)]\n\
+             pub struct Accounting {{\n    \
+             pub total_bytes: u64,\n\
+             {extra_field}}}\n"
+        )
+    }
+
+    const METRICS_FIXTURE: &str = "pub struct RunRecord {\n    \
+                                   pub total_bytes: u64,\n\
+                                   }\n\
+                                   impl RunRecord {\n    \
+                                   pub fn to_json(&self) -> String {\n        \
+                                   format!(\"total_bytes={}\", self.total_bytes)\n    \
+                                   }\n    \
+                                   pub fn from_json(s: &str) -> Self {\n        \
+                                   let total_bytes = parse(s);\n        \
+                                   RunRecord { total_bytes }\n    \
+                                   }\n\
+                                   }\n";
+
+    const SIM_FIXTURE: &str = "pub fn finalize(net: &Network, rec: &mut RunRecord) {\n    \
+                               rec.total_bytes = net.acct.total_bytes;\n\
+                               }\n";
+
+    fn trio(net: String, metrics: &str, sim: &str) -> Vec<(String, String)> {
+        vec![
+            (ACCT_FILE.to_string(), net),
+            (RECORD_FILE.to_string(), metrics.to_string()),
+            (CONSUME_FILE.to_string(), sim.to_string()),
+        ]
+    }
+
+    #[test]
+    fn accounting_covered_field_passes() {
+        let files = trio(net_fixture(""), METRICS_FIXTURE, SIM_FIXTURE);
+        assert!(lint_files(&files).is_empty());
+    }
+
+    #[test]
+    fn accounting_uncovered_new_field_fails() {
+        let files = trio(
+            net_fixture("    pub new_gauge: u64,\n"),
+            METRICS_FIXTURE,
+            SIM_FIXTURE,
+        );
+        let f = lint_files(&files);
+        assert_eq!(rules_of(&f), vec![Rule::AccountingConservation]);
+        assert!(f[0].msg.contains("new_gauge"));
+        assert_eq!(f[0].path, ACCT_FILE);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn accounting_missing_from_json_leg_fails() {
+        // Mirror exists but from_json never reads the key.
+        let metrics = "pub struct RunRecord {\n    \
+                       pub total_bytes: u64,\n\
+                       }\n\
+                       impl RunRecord {\n    \
+                       pub fn to_json(&self) -> String {\n        \
+                       format!(\"total_bytes={}\", self.total_bytes)\n    \
+                       }\n    \
+                       pub fn from_json(s: &str) -> Self {\n        \
+                       todo!()\n    \
+                       }\n\
+                       }\n";
+        let f = lint_files(&trio(net_fixture(""), metrics, SIM_FIXTURE));
+        assert_eq!(rules_of(&f), vec![Rule::AccountingConservation]);
+        assert!(f[0].msg.contains("from_json"));
+    }
+
+    #[test]
+    fn accounting_missing_sim_consumption_fails() {
+        let sim = "pub fn finalize(net: &Network, rec: &mut RunRecord) {}\n";
+        let f = lint_files(&trio(net_fixture(""), METRICS_FIXTURE, sim));
+        assert_eq!(rules_of(&f), vec![Rule::AccountingConservation]);
+        assert!(f[0].msg.contains("sim"));
+    }
+
+    #[test]
+    fn accounting_missing_default_derive_fails() {
+        let net = "#[derive(Clone, Debug)]\n\
+                   pub struct Accounting {\n    \
+                   pub total_bytes: u64,\n\
+                   }\n";
+        let f = lint_files(&trio(net.to_string(), METRICS_FIXTURE, SIM_FIXTURE));
+        assert_eq!(rules_of(&f), vec![Rule::AccountingConservation]);
+        assert!(f[0].msg.contains("Default"));
+    }
+
+    #[test]
+    fn accounting_allow_with_reason_suppresses() {
+        let net = net_fixture(
+            "    // sflint: allow(accounting-conservation, reason = \"fixture gauge, consumed via \
+             peak\")\n    \
+             pub new_gauge: u64,\n",
+        );
+        assert!(lint_files(&trio(net, METRICS_FIXTURE, SIM_FIXTURE)).is_empty());
+    }
+
+    #[test]
+    fn accounting_skipped_without_the_trio() {
+        // A fixture set without net/metrics/sim must not fire the rule.
+        assert!(lint_one("rust/src/flood/x.rs", "fn f() {}\n").is_empty());
+    }
+
+    // ------------------------------------------------------- repo self-run
+
+    #[test]
+    fn repo_tree_is_clean() {
+        // cargo test runs with cwd = package root.
+        let report = crate::lint::run_repo(std::path::Path::new(".")).expect("repo scan");
+        assert!(report.files_scanned >= 40, "scanned {}", report.files_scanned);
+        let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+        assert!(rendered.is_empty(), "tree findings:\n{}", rendered.join("\n"));
+    }
+}

@@ -1,0 +1,475 @@
+//! Comment- and string-aware line scanner for sflint.
+//!
+//! The image ships no crate registry, so sflint cannot lean on `syn` or
+//! `clippy-driver`. Instead this module implements a small hand-rolled
+//! lexer that is just precise enough for line-oriented pattern rules:
+//! for every source line it produces the raw text, the *code* text with
+//! string/char-literal contents and comments blanked out, and the
+//! *comment* text with everything else blanked out. Rules match patterns
+//! against the code channel (so pattern constants inside string literals
+//! never self-trigger) and parse allow-annotations from the comment
+//! channel only.
+//!
+//! The lexer understands:
+//! - line comments (`//`) and nested block comments (`/* /* */ */`),
+//! - normal string literals with escapes, raw strings `r"…"`/`r#"…"#`
+//!   (any number of hashes), and byte-string variants,
+//! - char literals vs. lifetimes (`'a'` vs `'a`),
+//! - `#[cfg(test)] mod …` regions, tracked by brace depth on the code
+//!   channel so test-only code can be exempted from library rules.
+
+/// One scanned source line, split into channels.
+#[derive(Clone, Debug)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// The unmodified source line.
+    pub raw: String,
+    /// Code channel: comments and literal *contents* replaced by spaces.
+    /// Quote characters are kept so token boundaries stay visible.
+    pub code: String,
+    /// Comment channel: comment text only, everything else blanked.
+    pub comment: String,
+    /// True when the line sits inside a `#[cfg(test)] mod` region.
+    pub in_test: bool,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Code,
+    LineComment,
+    BlockComment,
+    Str,
+    RawStr,
+    Char,
+}
+
+/// Pending test-region bookkeeping: we saw `#[cfg(test)]` and are waiting
+/// for the `mod` item it decorates (possibly with more attributes or a
+/// doc comment in between).
+#[derive(Clone, Copy, PartialEq)]
+enum TestPending {
+    No,
+    /// Saw the cfg(test) attribute; waiting for `mod` / `{`.
+    Armed,
+}
+
+/// Scan a whole source file into per-line channel records.
+pub fn scan(source: &str) -> Vec<Line> {
+    let mut lines: Vec<Line> = Vec::new();
+
+    let mut mode = Mode::Code;
+    // Depth of nested block comments (only meaningful in BlockComment).
+    let mut block_depth = 0usize;
+    // Number of hashes for the raw string currently open.
+    let mut raw_hashes = 0usize;
+
+    // Test-region tracking.
+    let mut brace_depth = 0i64;
+    // Stack of brace depths at which a #[cfg(test)] mod body was opened.
+    let mut test_region_starts: Vec<i64> = Vec::new();
+    let mut pending = TestPending::No;
+
+    for (idx, raw_line) in source.lines().enumerate() {
+        let chars: Vec<char> = raw_line.chars().collect();
+        let mut code = String::with_capacity(chars.len());
+        let mut comment = String::with_capacity(chars.len());
+        let in_test_at_start = !test_region_starts.is_empty();
+
+        // LineComment never survives a newline.
+        if mode == Mode::LineComment {
+            mode = Mode::Code;
+        }
+        // Unterminated Str/Char across a newline: normal strings can
+        // continue across lines (with or without a trailing backslash),
+        // so keep Str mode; char literals cannot, reset them.
+        if mode == Mode::Char {
+            mode = Mode::Code;
+        }
+        // Escape flag inside Str/Char; never meaningful across lines.
+        let mut escaped = false;
+
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            let next = chars.get(i + 1).copied();
+            match mode {
+                Mode::Code => match c {
+                    '/' if next == Some('/') => {
+                        mode = Mode::LineComment;
+                        code.push(' ');
+                        code.push(' ');
+                        comment.push('/');
+                        comment.push('/');
+                        i += 2;
+                    }
+                    '/' if next == Some('*') => {
+                        mode = Mode::BlockComment;
+                        block_depth = 1;
+                        code.push(' ');
+                        code.push(' ');
+                        comment.push('/');
+                        comment.push('*');
+                        i += 2;
+                    }
+                    '"' => {
+                        mode = Mode::Str;
+                        escaped = false;
+                        code.push('"');
+                        comment.push(' ');
+                        i += 1;
+                    }
+                    'r' | 'b' => {
+                        // Possible raw / byte string start: r", r#", br", b".
+                        // Look past an optional second prefix char and hashes.
+                        let mut j = i + 1;
+                        if c == 'b' && chars.get(j) == Some(&'r') {
+                            j += 1;
+                        }
+                        let mut hashes = 0usize;
+                        while chars.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        let is_raw = (c == 'r' || chars.get(i + 1) == Some(&'r'))
+                            && chars.get(j) == Some(&'"');
+                        let is_plain_bstr =
+                            c == 'b' && hashes == 0 && chars.get(i + 1) == Some(&'"');
+                        // Reject identifiers like `for r in ...` followed by
+                        // nothing string-like, and `number` chars before: only
+                        // treat as a literal prefix when the previous code
+                        // char is not identifier-ish.
+                        let prev_ident = i > 0
+                            && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+                        if !prev_ident && (is_raw || is_plain_bstr) {
+                            if is_raw {
+                                mode = Mode::RawStr;
+                                raw_hashes = hashes;
+                                for &pc in &chars[i..=j] {
+                                    code.push(if pc == '"' { '"' } else { ' ' });
+                                    comment.push(' ');
+                                }
+                                i = j + 1;
+                            } else {
+                                // b"..."
+                                mode = Mode::Str;
+                                escaped = false;
+                                code.push(' ');
+                                code.push('"');
+                                comment.push(' ');
+                                comment.push(' ');
+                                i += 2;
+                            }
+                        } else {
+                            code.push(c);
+                            comment.push(' ');
+                            i += 1;
+                        }
+                    }
+                    '\'' => {
+                        // Char literal vs lifetime. Heuristic: 'X' where the
+                        // closing quote follows one char (or an escape) is a
+                        // char literal; otherwise a lifetime.
+                        if next == Some('\\') {
+                            mode = Mode::Char;
+                            escaped = false;
+                            code.push('\'');
+                            comment.push(' ');
+                            i += 1;
+                        } else if chars.get(i + 2) == Some(&'\'') {
+                            // 'a'
+                            code.push('\'');
+                            code.push(' ');
+                            code.push('\'');
+                            comment.push(' ');
+                            comment.push(' ');
+                            comment.push(' ');
+                            i += 3;
+                        } else {
+                            // Lifetime: keep as code.
+                            code.push('\'');
+                            comment.push(' ');
+                            i += 1;
+                        }
+                    }
+                    '{' => {
+                        brace_depth += 1;
+                        code.push('{');
+                        comment.push(' ');
+                        i += 1;
+                    }
+                    '}' => {
+                        brace_depth -= 1;
+                        if let Some(&start) = test_region_starts.last() {
+                            if brace_depth < start {
+                                test_region_starts.pop();
+                            }
+                        }
+                        code.push('}');
+                        comment.push(' ');
+                        i += 1;
+                    }
+                    _ => {
+                        code.push(c);
+                        comment.push(' ');
+                        i += 1;
+                    }
+                },
+                Mode::LineComment => {
+                    code.push(' ');
+                    comment.push(c);
+                    i += 1;
+                }
+                Mode::BlockComment => {
+                    if c == '*' && next == Some('/') {
+                        block_depth -= 1;
+                        comment.push('*');
+                        comment.push('/');
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                        if block_depth == 0 {
+                            mode = Mode::Code;
+                        }
+                    } else if c == '/' && next == Some('*') {
+                        block_depth += 1;
+                        comment.push('/');
+                        comment.push('*');
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                    } else {
+                        code.push(' ');
+                        comment.push(c);
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    comment.push(' ');
+                    if escaped {
+                        escaped = false;
+                        code.push(' ');
+                    } else if c == '\\' {
+                        escaped = true;
+                        code.push(' ');
+                    } else if c == '"' {
+                        code.push('"');
+                        mode = Mode::Code;
+                    } else {
+                        code.push(' ');
+                    }
+                    i += 1;
+                }
+                Mode::RawStr => {
+                    comment.push(' ');
+                    if c == '"' {
+                        // Check for closing hashes.
+                        let mut ok = true;
+                        for k in 0..raw_hashes {
+                            if chars.get(i + 1 + k) != Some(&'#') {
+                                ok = false;
+                                break;
+                            }
+                        }
+                        if ok {
+                            code.push('"');
+                            for _ in 0..raw_hashes {
+                                code.push(' ');
+                                comment.push(' ');
+                            }
+                            i += 1 + raw_hashes;
+                            mode = Mode::Code;
+                        } else {
+                            code.push(' ');
+                            i += 1;
+                        }
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::Char => {
+                    comment.push(' ');
+                    if escaped {
+                        escaped = false;
+                        code.push(' ');
+                    } else if c == '\\' {
+                        escaped = true;
+                        code.push(' ');
+                    } else if c == '\'' {
+                        code.push('\'');
+                        mode = Mode::Code;
+                    } else {
+                        code.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+        }
+
+        // Test-region detection works on the finished code channel so
+        // attributes inside strings/comments are ignored. When a region
+        // body opens on this line, record the depth just inside its
+        // first opening brace: depth-before-line + 1, reconstructed from
+        // the line's net brace delta.
+        let code_trim = code.trim();
+        let opens = code.matches('{').count() as i64;
+        let closes = code.matches('}').count() as i64;
+        let depth_inside = brace_depth - (opens - closes) + 1;
+        match pending {
+            TestPending::No => {
+                if code_trim.contains("#[cfg(test)]") {
+                    pending = TestPending::Armed;
+                    // Same-line `#[cfg(test)] mod x { ... }` support.
+                    if let Some(pos) = code_trim.find("#[cfg(test)]") {
+                        let rest = &code_trim[pos + "#[cfg(test)]".len()..];
+                        if has_word(rest, "mod") && rest.contains('{') && opens > closes {
+                            test_region_starts.push(depth_inside);
+                            pending = TestPending::No;
+                        }
+                    }
+                }
+            }
+            TestPending::Armed => {
+                if has_word(code_trim, "mod") || has_word(code_trim, "fn") {
+                    let is_mod = has_word(code_trim, "mod");
+                    if code_trim.contains('{') {
+                        if is_mod && opens > closes {
+                            test_region_starts.push(depth_inside);
+                        }
+                        // `#[cfg(test)] fn …` guards a single item; the
+                        // line rules don't need region tracking for it.
+                        pending = TestPending::No;
+                    } else if code_trim.ends_with(';') {
+                        // `#[cfg(test)] mod tests;` — out-of-line module.
+                        pending = TestPending::No;
+                    }
+                } else if !code_trim.is_empty()
+                    && !code_trim.starts_with("#[")
+                    && !code_trim.starts_with("#!")
+                {
+                    // Some other item was decorated (use, struct, …);
+                    // treat conservatively as not a region.
+                    pending = TestPending::No;
+                }
+            }
+        }
+
+        lines.push(Line {
+            number: idx + 1,
+            raw: raw_line.to_string(),
+            code,
+            comment,
+            in_test: in_test_at_start || !test_region_starts.is_empty(),
+        });
+    }
+
+    lines
+}
+
+/// True when `needle` occurs in `hay` delimited by non-identifier chars.
+pub fn has_word(hay: &str, needle: &str) -> bool {
+    find_word(hay, needle).is_some()
+}
+
+/// Byte offset of the first word-boundary occurrence of `needle`.
+pub fn find_word(hay: &str, needle: &str) -> Option<usize> {
+    if needle.is_empty() {
+        return None;
+    }
+    let hb = hay.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = hay[from..].find(needle) {
+        let start = from + rel;
+        let end = start + needle.len();
+        let before_ok = start == 0 || !is_ident_byte(hb[start - 1]);
+        let after_ok = end >= hb.len() || !is_ident_byte(hb[end]);
+        if before_ok && after_ok {
+            return Some(start);
+        }
+        from = start + 1;
+    }
+    None
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_are_blanked() {
+        let src = "let s = \"Instant::now inside\"; s.len();\n";
+        let lines = scan(src);
+        assert!(!lines[0].code.contains("Instant::now"));
+        assert!(lines[0].code.contains("s.len()"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "let s = r#\"HashMap::new() \"quoted\" \"#; foo();\n";
+        let lines = scan(src);
+        assert!(!lines[0].code.contains("HashMap"));
+        assert!(lines[0].code.contains("foo()"));
+    }
+
+    #[test]
+    fn multiline_raw_string() {
+        let src = "let s = r#\"line one\nInstant::now()\n\"#;\nbar();\n";
+        let lines = scan(src);
+        assert!(!lines[1].code.contains("Instant::now"));
+        assert!(lines[3].code.contains("bar()"));
+    }
+
+    #[test]
+    fn comments_split_channels() {
+        let src = "foo(); // sflint: allow(wall-clock, reason = \"x\")\n";
+        let lines = scan(src);
+        assert!(lines[0].code.contains("foo()"));
+        assert!(!lines[0].code.contains("allow"));
+        assert!(lines[0].comment.contains("sflint: allow(wall-clock"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still */ code();\n";
+        let lines = scan(src);
+        assert!(lines[0].code.contains("code()"));
+        assert!(!lines[0].code.contains("outer"));
+        assert!(!lines[0].code.contains("still"));
+    }
+
+    #[test]
+    fn lifetimes_survive_char_blanking() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }\n";
+        let lines = scan(src);
+        assert!(lines[0].code.contains("<'a>"));
+        assert!(!lines[0].code.contains("'x'") || lines[0].code.contains("' '"));
+    }
+
+    #[test]
+    fn escaped_quote_char_literal() {
+        let src = "let q = '\\''; after();\n";
+        let lines = scan(src);
+        assert!(lines[0].code.contains("after()"));
+    }
+
+    #[test]
+    fn cfg_test_region_tracked() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn lib2() {}\n";
+        let lines = scan(src);
+        assert!(!lines[0].in_test);
+        assert!(lines[3].in_test, "body of test mod is in_test");
+        assert!(!lines[5].in_test, "code after test mod is not in_test");
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("a in_flight b", "in_flight"));
+        assert!(!has_word("peak_in_flight_bytes", "in_flight_bytes"));
+        assert!(has_word("x.in_flight_bytes", "in_flight_bytes"));
+    }
+}

@@ -8,6 +8,8 @@
 //!                scaling/fig4/table2, table3, fig6, fig7, churn, hopgrid)
 //!   topo         inspect a topology (diameter, spectral gap, edges)
 //!   info         print manifest / artifact info
+//!   lint         run sflint, the determinism & accounting static
+//!                analysis (CI-enforcing; also built as `sflint`)
 //!
 //! Examples:
 //!   seedflood train --method seedflood --clients 16 --topology ring \
@@ -90,6 +92,7 @@ fn main() -> Result<()> {
         }
         "topo" => cmd_topo(&args),
         "info" => cmd_info(&args),
+        "lint" => seedflood::lint::cli_main(&args),
         _ => {
             print_help();
             Ok(())
@@ -221,7 +224,7 @@ fn print_help() {
     println!(
         "seedflood — decentralized training via flooded seed-reconstructible ZO updates
 
-USAGE: seedflood <train|sweep|experiment|pretrain|report|topo|info> [--options]
+USAGE: seedflood <train|sweep|experiment|pretrain|report|topo|info|lint> [--options]
 
 train        --method <dsgd|choco|dsgd-lora|choco-lora|dzsgd|dzsgd-lora|seedflood|mezo|subcge>
              --model <tiny|small|base|synthetic|cheap> (cheap = shrunk
@@ -275,6 +278,10 @@ experiment   <fig1|fig3|table8|scaling|fig4|table2|table3|fig6|fig7|churn|
 pretrain     --model tiny [--steps N --lr F --target-acc F] -> checkpoints/
 report       [results/foo.json ...]   re-render tables from saved records
 topo         --topology K --clients N
-info         --model tiny [--artifacts DIR]"
+info         --model tiny [--artifacts DIR]
+lint         [--root DIR]   sflint static analysis: unordered-iter,
+             wall-clock, thread-escape, unsafe-audit,
+             accounting-conservation; exits non-zero on any finding
+             without an inline allow-with-reason annotation"
     );
 }

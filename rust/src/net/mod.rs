@@ -194,10 +194,13 @@ pub struct Message {
 #[derive(Clone, Debug, Default)]
 pub struct Accounting {
     /// bytes sent over each directed edge, indexed by flat edge id
+    // sflint: allow(accounting-conservation, reason = "aggregated into RunRecord::per_edge_bytes by Network::per_edge_bytes; total_bytes carries the serialized sum")
     pub edge_bytes: Vec<u64>,
     pub total_bytes: u64,
+    // sflint: allow(accounting-conservation, reason = "denominator of Accounting::delivery_ratio, which sim stores as RunRecord::delivery_ratio")
     pub total_messages: u64,
     /// messages actually handed to a receiver by [`Network::recv_all`]
+    // sflint: allow(accounting-conservation, reason = "numerator of Accounting::delivery_ratio, which sim stores as RunRecord::delivery_ratio")
     pub delivered_messages: u64,
     /// messages killed by fault injection (loss, down links, down nodes);
     /// their bytes stay counted — transmission is what costs
@@ -213,6 +216,7 @@ pub struct Accounting {
     /// offline receiver) — the payload-memory gauge behind
     /// [`Self::peak_in_flight_bytes`]. Zero whenever the network is
     /// drained.
+    // sflint: allow(accounting-conservation, reason = "transient gauge, asserted zero on drain by Network::debug_check_conservation; peak_in_flight_bytes is its serialized summary")
     pub in_flight_bytes: u64,
     /// high-water mark of [`Self::in_flight_bytes`] over the run: the
     /// network-side half of the simulation's memory story (the dedup-side
@@ -555,6 +559,7 @@ impl Network {
             c.repair_due[i] = (c.impaired_prev[i] && !c.impaired_scratch[i]) || periodic;
         }
         std::mem::swap(&mut c.impaired_prev, &mut c.impaired_scratch);
+        self.debug_check_conservation();
     }
 
     /// Advance the delivery clock one communication round (delayed
@@ -643,10 +648,12 @@ impl Network {
             Some(c) => {
                 if c.node_down[dst] || c.link_down[eid] {
                     self.acct.dropped_messages += 1;
+                    self.debug_check_conservation();
                     return;
                 }
                 if c.loss[eid] > 0.0 && c.rng.next_f64() < c.loss[eid] {
                     self.acct.dropped_messages += 1;
+                    self.debug_check_conservation();
                     return;
                 }
                 self.now + c.delay[eid]
@@ -658,6 +665,7 @@ impl Network {
         self.acct.peak_in_flight_bytes =
             self.acct.peak_in_flight_bytes.max(self.acct.in_flight_bytes);
         self.pool.push(eid, deliver_at, Message { from: src, payload });
+        self.debug_check_conservation();
     }
 
     /// Send the same payload to every neighbor of `src` (clone-per-edge is
@@ -697,6 +705,7 @@ impl Network {
         self.in_flight -= out.len();
         let delivered_bytes: u64 = out.iter().map(|m| m.payload.wire_bytes()).sum();
         self.acct.in_flight_bytes -= delivered_bytes;
+        self.debug_check_conservation();
         out
     }
 
@@ -705,6 +714,26 @@ impl Network {
     /// delivery round cannot do anything and skip its scans.
     pub fn in_flight(&self) -> usize {
         self.in_flight
+    }
+
+    /// Debug-build conservation invariant — the dynamic complement of
+    /// sflint's accounting-conservation rule: every transmission ever
+    /// counted is delivered, dropped, or still in flight, and a drained
+    /// network holds zero in-flight payload bytes (one-directional
+    /// because zero-byte payloads exist). Called after every ledger
+    /// mutation; `cargo test` builds with debug_assertions enabled, so
+    /// the whole suite exercises it.
+    #[inline]
+    fn debug_check_conservation(&self) {
+        debug_assert_eq!(
+            self.acct.total_messages,
+            self.acct.delivered_messages + self.acct.dropped_messages + self.in_flight as u64,
+            "message ledger out of balance: total != delivered + dropped + in-flight"
+        );
+        debug_assert!(
+            self.in_flight > 0 || self.acct.in_flight_bytes == 0,
+            "in-flight byte gauge nonzero on a drained network"
+        );
     }
 
     /// Paper convention: "total transmitted volume over the training per

@@ -38,6 +38,9 @@ pub struct Executable {
 // handles. The engine invokes `Executable::run` concurrently from
 // worker threads during the local-step fan-out (ISSUE 1 tentpole item 2).
 unsafe impl Send for Executable {}
+// SAFETY: same argument as Send directly above — shared references only
+// reach the thread-safe PJRT handles; `Executable` holds no rust-side
+// mutable state at all.
 unsafe impl Sync for Executable {}
 
 impl Executable {
@@ -135,6 +138,9 @@ pub struct Runtime {
 // SAFETY: see `Executable` above — the client handle is thread-safe per the
 // PJRT contract; all rust-side mutable state is behind Mutex/atomics.
 unsafe impl Send for Runtime {}
+// SAFETY: same argument as Send directly above — the executable cache is
+// behind a Mutex and the execution counter is atomic, so `&Runtime` is
+// safe to share across the worker threads.
 unsafe impl Sync for Runtime {}
 
 impl Runtime {

@@ -254,6 +254,9 @@ pub struct DeviceBasisCache {
 // executions afterwards; PJRT buffers may be shared across threads per the
 // PJRT C API contract (see runtime::Executable).
 unsafe impl Send for DeviceBasisCache {}
+// SAFETY: same argument as Send directly above — after upload the cache is
+// read-only (epoch and buffers never mutate through `&self`), so sharing
+// references across threads cannot race.
 unsafe impl Sync for DeviceBasisCache {}
 
 impl DeviceBasisCache {

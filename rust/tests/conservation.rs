@@ -1,0 +1,142 @@
+//! Conservation-ledger tests (ISSUE 8 satellite): the dynamic complement
+//! of sflint's `accounting-conservation` rule. `Network` carries
+//! `debug_assert!` invariants (`total_messages == delivered + dropped +
+//! in_flight`; a drained network holds zero in-flight payload bytes)
+//! checked after every ledger mutation — `cargo test` builds with
+//! `debug_assertions`, so every test in the suite exercises them. This
+//! file additionally drives loss + delay + churn + link cuts to a *full
+//! drain* and re-states the balance as release-style `assert!`s, so the
+//! invariant is enforced even in builds where `debug_assert!` compiles
+//! out.
+
+use seedflood::config::{ExperimentConfig, Method};
+use seedflood::net::{MsgId, Network, Payload, SeedUpdate};
+use seedflood::netcond::NetCond;
+use seedflood::sim::{self, Env};
+use seedflood::topology::{Kind, Topology};
+
+fn payload(origin: u32, step: u32) -> Payload {
+    Payload::Seeds(vec![SeedUpdate {
+        id: MsgId { origin, step },
+        seed: ((origin as u64) << 32) | step as u64,
+        coeff: 1e-4,
+    }])
+}
+
+/// Tick + poll every client until nothing is queued on any edge.
+/// Bounded: per-edge delay is constant, so `extra_ticks` rounds past the
+/// last fault window is enough for every buffered message to come due.
+fn drain(net: &mut Network, n: usize, extra_ticks: usize) {
+    for _ in 0..extra_ticks {
+        net.tick();
+        for i in 0..n {
+            let _ = net.recv_all(i);
+        }
+        if net.in_flight() == 0 {
+            break;
+        }
+    }
+}
+
+/// Loss + delay + node churn + a link cut, driven to a full drain: the
+/// message ledger must balance exactly and the byte gauge must return to
+/// zero. Node 2's down-window guarantees deterministic drops (sends to
+/// an offline receiver), independent of the seeded loss draws.
+#[test]
+fn ledgers_balance_after_full_drain_under_faults() {
+    let n = 8usize;
+    let topo = Topology::ring(n);
+    let cond =
+        NetCond::parse("loss=0.2;delay=2;repair=2;node:2@2..5;link:0-1@3..6;seed=9").unwrap();
+    let mut net = Network::new(topo);
+    net.install(&cond).unwrap();
+
+    let steps = 10u32;
+    for t in 0..steps {
+        net.set_step(t as usize);
+        for i in 0..n {
+            net.broadcast(i, &payload(i as u32, t));
+        }
+        net.tick();
+        for i in 0..n {
+            let _ = net.recv_all(i);
+        }
+    }
+
+    // Every fault window ends by t = 6: step far past them, then drain
+    // the delay=2 tail (node 2's buffered in-edges included).
+    net.set_step(steps as usize + 10);
+    drain(&mut net, n, 16);
+
+    assert_eq!(net.in_flight(), 0, "network failed to drain");
+    let acct = &net.acct;
+    assert!(acct.total_messages > 0);
+    assert!(
+        acct.dropped_messages > 0,
+        "node 2's down-window must have dropped sends addressed to it"
+    );
+    assert_eq!(
+        acct.total_messages,
+        acct.delivered_messages + acct.dropped_messages,
+        "drained ledger must balance: total == delivered + dropped"
+    );
+    assert_eq!(acct.in_flight_bytes, 0, "drained byte gauge must be zero");
+    assert!(
+        acct.peak_in_flight_bytes > 0,
+        "delay=2 must have queued payload bytes at some point"
+    );
+    let expect = acct.delivered_messages as f64 / acct.total_messages as f64;
+    assert!((acct.delivery_ratio() - expect).abs() < 1e-12);
+    assert!(acct.delivery_ratio() < 1.0, "seeded loss must cost something");
+}
+
+/// Same balance on the reliable network: no drops, ratio exactly 1,
+/// gauge zero after the drain.
+#[test]
+fn reliable_network_ledger_is_lossless() {
+    let n = 6usize;
+    let mut net = Network::new(Topology::ring(n));
+    for t in 0..4u32 {
+        net.set_step(t as usize);
+        for i in 0..n {
+            net.broadcast(i, &payload(i as u32, t));
+        }
+        net.tick();
+        for i in 0..n {
+            let _ = net.recv_all(i);
+        }
+    }
+    drain(&mut net, n, 4);
+    assert_eq!(net.in_flight(), 0);
+    assert_eq!(net.acct.dropped_messages, 0);
+    assert_eq!(net.acct.total_messages, net.acct.delivered_messages);
+    assert_eq!(net.acct.in_flight_bytes, 0);
+    assert_eq!(net.acct.delivery_ratio(), 1.0);
+}
+
+/// End-to-end: a full training run under the churn-er preset completes
+/// with the debug-build conservation asserts live on every network
+/// mutation, and the derived record stays consistent.
+#[test]
+fn e2e_churn_run_upholds_conservation() {
+    let cfg = ExperimentConfig {
+        method: Method::SeedFlood,
+        clients: 8,
+        topology: Kind::Ring, // churn-er pins its own topology
+        steps: 8,
+        local_steps: 2,
+        lr: 1e-2,
+        task: "sst2".into(),
+        eval_every: 4,
+        netcond: "churn-er".into(),
+        ..Default::default()
+    };
+    let env = Env::synthetic(cfg).unwrap();
+    let record = sim::run_with_env(&env).unwrap();
+    assert!(record.total_bytes > 0);
+    assert!(record.delivery_ratio > 0.0 && record.delivery_ratio <= 1.0);
+    assert!(
+        record.dropped_messages > 0,
+        "churn-er must exercise the drop path"
+    );
+}
