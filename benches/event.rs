@@ -1,0 +1,446 @@
+//! Event-engine hot-path benchmark and tracked perf ledger (ISSUE 9):
+//! raw queue throughput (sequential pops vs the cohort drain), the
+//! per-delivery flood scan cost behind the engine's `Round` events,
+//! end-to-end events/sec of the cheap-model SeedFlood run at 2048–10k
+//! clients, the cohort-parallel speedup over `--threads 1` (uniform
+//! rates, where every instant holds a full step cohort), and the
+//! seed-reconstruction fast path (fill throughput; multi-seed one-sweep
+//! and chunk-parallel apply vs the historical k-pass loop at k = 16).
+//!
+//! Every speedup pair is asserted bit-identical before it is timed — the
+//! fast paths are only interesting because they change *nothing* about
+//! the results.
+//!
+//! Run: cargo bench --bench event               (full grid, ~a minute;
+//!                                               writes BENCH_event.json)
+//!      cargo bench --bench event -- --smoke    (CI grid, seconds;
+//!                                               writes nothing)
+//!      cargo bench --bench event -- --smoke --check BENCH_event.json
+//!                                              (CI regression gate)
+//!
+//! The ≥ 2× floors (cohort parallelism at 8 threads, multi-seed parallel
+//! apply at k = 16) are asserted only when the machine has ≥ 8 cores —
+//! on smaller CI boxes they degrade to a WARN, and the wide `--check`
+//! band against the committed ledger still catches order-of-magnitude
+//! regressions (the same convention as table4's thread-scaling number).
+
+use std::collections::BTreeMap;
+use std::hint::black_box;
+use std::time::Instant;
+
+use seedflood::config::{ExperimentConfig, Method};
+use seedflood::flood::{flood_rounds, FloodState};
+use seedflood::metrics::RunRecord;
+use seedflood::net::{MsgId, Network, SeedUpdate};
+use seedflood::rng::Rng;
+use seedflood::sched::{EventQueue, TimeModel};
+use seedflood::sim::{self, Env};
+use seedflood::tensor::{ParamVec, Tensor};
+use seedflood::topology::{Kind, Topology};
+use seedflood::util::json::Json;
+use seedflood::zo;
+
+/// Multiplicative tolerance band for `--check`: a metric regresses when
+/// it leaves `[baseline/8, baseline*8]`. Wide on purpose — the ledger
+/// tracks order-of-magnitude drift, not machine-to-machine noise.
+const TOLERANCE: f64 = 8.0;
+
+/// Median wall-clock seconds over `reps` runs of `f`.
+fn median_time(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut samples: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(f64::total_cmp);
+    samples[samples.len() / 2]
+}
+
+fn cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+// ---------------------------------------------------------------------------
+// 1. queue ops: sequential pops vs the cohort drain
+// ---------------------------------------------------------------------------
+
+/// Ops/sec (each push and each pop counts as one op) through the engine's
+/// priority queue on a clustered-time workload: many events share an
+/// instant, as step cohorts do.
+fn queue_ops_sequential(events: usize) -> f64 {
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let mut rng = Rng::new(7);
+    let t0 = Instant::now();
+    for i in 0..events {
+        q.push(rng.next_below(events as u64 / 16), (i % 3) as u8, i as u64);
+    }
+    let mut sink = 0u64;
+    while let Some(e) = q.pop() {
+        sink ^= e.payload;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    black_box(sink);
+    (2 * events) as f64 / secs
+}
+
+/// Same workload drained through [`EventQueue::pop_cohort`] — the cohort
+/// API must not cost queue throughput.
+fn queue_ops_cohort(events: usize) -> f64 {
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let mut rng = Rng::new(7);
+    let t0 = Instant::now();
+    for i in 0..events {
+        q.push(rng.next_below(events as u64 / 16), (i % 3) as u8, i as u64);
+    }
+    let mut cohort = Vec::new();
+    let mut sink = 0u64;
+    while q.pop_cohort(&mut cohort) > 0 {
+        for e in &cohort {
+            sink ^= e.payload;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    black_box(sink);
+    (2 * events) as f64 / secs
+}
+
+// ---------------------------------------------------------------------------
+// 2. per-delivery flood scan — the Round-event workload
+// ---------------------------------------------------------------------------
+
+/// ns per delivered message of a bounded flood on the hierarchical
+/// topology: the exact send/collect scan the engine's `Round` events run,
+/// without the rest of the simulator around it.
+fn round_scan_ns_per_delivery(n: usize, origins: usize) -> f64 {
+    let topo = Topology::build(Kind::Hierarchical, n, 42);
+    let depth = topo.diameter().max(1);
+    let mut net = Network::new(topo);
+    let mut states: Vec<FloodState> = (0..n)
+        .map(|_| {
+            let mut st = FloodState::new();
+            st.retain = 8;
+            st.seen.reserve_origins(n);
+            st
+        })
+        .collect();
+    let want = origins.min(n);
+    let stride = (n / want).max(1);
+    for i in 0..want {
+        let client = i * stride;
+        states[client].inject(SeedUpdate {
+            id: MsgId { origin: client as u32, step: 0 },
+            seed: 0x5eed ^ client as u64,
+            coeff: 1.0,
+        });
+    }
+    let t0 = Instant::now();
+    flood_rounds(&mut states, &mut net, depth, |_, _| {});
+    let secs = t0.elapsed().as_secs_f64();
+    let delivered = net.acct.delivered_messages;
+    assert!(delivered > 0, "round scan at n={n} delivered nothing");
+    secs * 1e9 / delivered as f64
+}
+
+// ---------------------------------------------------------------------------
+// 3. end-to-end event engine: events/sec and cohort-parallel speedup
+// ---------------------------------------------------------------------------
+
+/// One cheap-model SeedFlood run through the event engine (uniform rates:
+/// the bit-for-bit reduction regime). Returns (sim seconds, record) —
+/// environment construction is excluded so the number is the engine, not
+/// the model build.
+fn event_run(clients: usize, steps: usize, threads: usize) -> (f64, RunRecord) {
+    let cfg = ExperimentConfig {
+        method: Method::SeedFlood,
+        model: "cheap".into(),
+        task: "sst2".into(),
+        clients,
+        topology: Kind::Hierarchical,
+        steps,
+        local_steps: 1,
+        flood_steps: 1,
+        flood_retain: 64,
+        eval_every: 0,
+        time_model: TimeModel::Event,
+        threads,
+        ..Default::default()
+    };
+    let env = Env::new(cfg).expect("cheap-model env");
+    let t0 = Instant::now();
+    let record = sim::run_with_env(&env).expect("event-driven cheap run");
+    let secs = t0.elapsed().as_secs_f64();
+    assert!(record.final_loss.is_finite(), "cheap event run diverged");
+    (secs, record)
+}
+
+/// Thread-count invariance, asserted bitwise — the cohort fan-out's
+/// contract, checked on the very runs being timed.
+fn assert_same_trajectory(a: &RunRecord, b: &RunRecord, what: &str) {
+    assert_eq!(a.train_losses.len(), b.train_losses.len(), "{what}: train loss count");
+    for (i, (x, y)) in a.train_losses.iter().zip(b.train_losses.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: train loss diverged at step {i}");
+    }
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{what}: final loss");
+    assert_eq!(a.gmp.to_bits(), b.gmp.to_bits(), "{what}: gmp");
+    assert_eq!(a.total_bytes, b.total_bytes, "{what}: wire bytes");
+}
+
+// ---------------------------------------------------------------------------
+// 4. seed-reconstruction fast path
+// ---------------------------------------------------------------------------
+
+/// ~2M-element parameter vector with an odd 1D tail, so every code path
+/// (blocked bulk, scalar tail) is on the clock.
+fn bench_params() -> ParamVec {
+    ParamVec::new(
+        vec!["wq".into(), "wk".into(), "ln".into()],
+        vec![
+            Tensor::from_vec(&[1024, 1024], vec![0.1; 1 << 20]),
+            Tensor::from_vec(&[1024, 1024], vec![-0.1; 1 << 20]),
+            Tensor::from_vec(&[4097], vec![0.5; 4097]),
+        ],
+    )
+}
+
+fn assert_params_bits_eq(a: &ParamVec, b: &ParamVec, what: &str) {
+    for (ta, tb) in a.tensors.iter().zip(b.tensors.iter()) {
+        for (x, y) in ta.data.iter().zip(tb.data.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what} diverged");
+        }
+    }
+}
+
+/// Multi-seed flush at k = 16: one-sweep and chunk-parallel apply vs the
+/// historical per-message k-pass loop. Returns
+/// (kpass_s, sweep_speedup, par_speedup) — both variants bit-identical
+/// to the k-pass reference, asserted before timing.
+fn multi_seed_flush(threads: usize) -> (f64, f64, f64) {
+    const K: usize = 16;
+    let updates: Vec<(u64, f32)> =
+        (0..K).map(|i| (0x5eed_f100d + i as u64 * 13, 1e-3 * (i as f32 + 1.0))).collect();
+    let base = bench_params();
+
+    let mut reference = base.clone();
+    for &(seed, coeff) in &updates {
+        zo::apply_dense_update(&mut reference, seed, coeff);
+    }
+    let mut sweep = base.clone();
+    zo::apply_dense_updates(&mut sweep, &updates);
+    assert_params_bits_eq(&reference, &sweep, "one-sweep vs k-pass");
+    let mut par = base.clone();
+    zo::apply_dense_updates_par(&mut par, &updates, threads);
+    assert_params_bits_eq(&reference, &par, "parallel vs k-pass");
+
+    let kpass_s = median_time(3, || {
+        let mut p = base.clone();
+        for &(seed, coeff) in &updates {
+            zo::apply_dense_update(&mut p, seed, coeff);
+        }
+        black_box(&p);
+    });
+    let sweep_s = median_time(3, || {
+        let mut p = base.clone();
+        zo::apply_dense_updates(&mut p, &updates);
+        black_box(&p);
+    });
+    let par_s = median_time(3, || {
+        let mut p = base.clone();
+        zo::apply_dense_updates_par(&mut p, &updates, threads);
+        black_box(&p);
+    });
+    (kpass_s, kpass_s / sweep_s.max(1e-9), kpass_s / par_s.max(1e-9))
+}
+
+/// Raw reconstruction throughput: million normals/sec out of the blocked
+/// `fill_normal` (the per-message O(d) regeneration cost).
+fn reconstruct_melems_per_sec() -> f64 {
+    let mut buf = vec![0f32; 1 << 21];
+    let mut rng = Rng::new(99);
+    let secs = median_time(3, || {
+        rng.fill_normal(&mut buf);
+        black_box(&buf);
+    });
+    (buf.len() as f64 / 1e6) / secs.max(1e-9)
+}
+
+// ---------------------------------------------------------------------------
+// ledger machinery (same shape as benches/scale.rs)
+// ---------------------------------------------------------------------------
+
+/// Regression gate: every metric measured this run that also exists in
+/// the committed ledger must lie within the tolerance band. Metrics
+/// present on only one side are reported but never fail the check (the
+/// smoke grid measures a subset of the full grid).
+fn run_check(path: &str, metrics: &[(String, f64)]) {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("cannot read baseline {path}: {e}"));
+    let base = Json::parse(&text).unwrap_or_else(|e| panic!("unparseable baseline {path}: {e}"));
+    let base_metrics = base
+        .get("metrics")
+        .and_then(|m| m.as_obj().cloned())
+        .unwrap_or_else(|e| panic!("baseline {path} has no metrics object: {e}"));
+    println!("\n== regression check vs {path} (tolerance {TOLERANCE}x) ==");
+    let mut failures = 0;
+    for (name, value) in metrics {
+        match base_metrics.get(name.as_str()) {
+            Some(b) => {
+                let b = b.as_f64().unwrap_or_else(|e| panic!("baseline metric {name}: {e}"));
+                let ok = b > 0.0 && *value >= b / TOLERANCE && *value <= b * TOLERANCE;
+                println!(
+                    "  {:<38} {:>12.4} vs baseline {:>10.4}  [{}]",
+                    name,
+                    value,
+                    b,
+                    if ok { "ok" } else { "REGRESSION" }
+                );
+                if !ok {
+                    failures += 1;
+                }
+            }
+            None => println!("  {name:<38} {value:>12.4} (no baseline entry — skipped)"),
+        }
+    }
+    for name in base_metrics.keys() {
+        if !metrics.iter().any(|(k, _)| k == name) {
+            println!("  {name:<38} (baseline-only — not measured in this mode)");
+        }
+    }
+    assert_eq!(failures, 0, "{failures} metric(s) left the {TOLERANCE}x tolerance band");
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let check_path = argv.iter().position(|a| a == "--check").map(|i| {
+        argv.get(i + 1).unwrap_or_else(|| panic!("--check needs a baseline path")).clone()
+    });
+    let cores = cores();
+
+    let mut timings: Vec<(String, f64)> = Vec::new();
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+
+    // -- 1. queue ops ------------------------------------------------------
+    let events = if smoke { 200_000 } else { 1_000_000 };
+    println!("== event queue ({events} events, clustered instants) ==");
+    let seq_ops = queue_ops_sequential(events);
+    let coh_ops = queue_ops_cohort(events);
+    println!("  sequential pops: {:>10.0} ops/s", seq_ops);
+    println!("  cohort drain:    {:>10.0} ops/s", coh_ops);
+    metrics.push(("queue_push_pop_ops_per_sec".into(), seq_ops));
+    metrics.push(("cohort_drain_ops_per_sec".into(), coh_ops));
+
+    // -- 2. per-delivery flood scan ----------------------------------------
+    println!("\n== per-delivery flood scan (hierarchical, 64 spread origins) ==");
+    let scan_ns = round_scan_ns_per_delivery(2048, 64);
+    println!("  n=2048   {scan_ns:>7.1} ns/delivery");
+    metrics.push(("round_scan_ns_per_delivery_2048".into(), scan_ns));
+
+    // -- 3. events/sec through the engine ----------------------------------
+    println!("\n== event engine end to end (cheap model, uniform rates) ==");
+    let event_ns: &[usize] = if smoke { &[2_048] } else { &[2_048, 10_240] };
+    for &n in event_ns {
+        let steps = 2;
+        let (secs, record) = event_run(n, steps, 1);
+        let eps = (n * steps) as f64 / secs.max(1e-9);
+        println!(
+            "  n={:<6} {} steps in {:>6.2} s -> {:>8.0} step-events/s (loss {:.4})",
+            n, steps, secs, eps, record.final_loss
+        );
+        timings.push((format!("event_run_s_{n}"), secs));
+        metrics.push((format!("step_events_per_sec_{n}"), eps));
+    }
+
+    // -- 4. cohort-parallel speedup (uniform rates = full cohorts) ---------
+    println!("\n== cohort parallelism: --threads 8 vs --threads 1 ==");
+    let (nc, ns) = (128, 8);
+    let (t1, rec1) = event_run(nc, ns, 1);
+    let (t8, rec8) = event_run(nc, ns, 8);
+    assert_same_trajectory(&rec1, &rec8, "threads 8 vs 1");
+    let cohort_speedup = t1 / t8.max(1e-9);
+    println!(
+        "  n={nc}, {ns} steps: {:.2} s @1t  {:.2} s @8t  -> {cohort_speedup:.2}x \
+         (trajectories bit-identical)",
+        t1, t8
+    );
+    timings.push(("cohort_run_s_1t".into(), t1));
+    timings.push(("cohort_run_s_8t".into(), t8));
+    metrics.push(("cohort_speedup_8t".into(), cohort_speedup));
+
+    // -- 5. seed-reconstruction fast path ----------------------------------
+    println!("\n== seed reconstruction (2M params) ==");
+    let fill_rate = reconstruct_melems_per_sec();
+    println!("  fill_normal: {fill_rate:>8.1} M normals/s");
+    metrics.push(("reconstruct_melems_per_sec".into(), fill_rate));
+    let (kpass_s, sweep_speedup, par_speedup) = multi_seed_flush(0);
+    println!(
+        "  k=16 flush: k-pass {:.0} ms, one-sweep {sweep_speedup:.2}x, \
+         parallel {par_speedup:.2}x (all bit-identical)",
+        1e3 * kpass_s
+    );
+    timings.push(("multi_seed_kpass_s_k16".into(), kpass_s));
+    metrics.push(("multi_seed_sweep_speedup_k16".into(), sweep_speedup));
+    metrics.push(("multi_seed_par_speedup_k16".into(), par_speedup));
+
+    // -- hard floors -------------------------------------------------------
+    let get = |name: &str| -> f64 {
+        metrics
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("metric {name} was not measured"))
+    };
+    assert!(
+        get("queue_push_pop_ops_per_sec") >= 1e6,
+        "event queue fell below 1M ops/s — O(log n) pops regressed"
+    );
+    assert!(
+        get("cohort_drain_ops_per_sec") >= get("queue_push_pop_ops_per_sec") / 4.0,
+        "pop_cohort costs more than 4x the sequential pop path"
+    );
+    if cores >= 8 {
+        assert!(
+            get("cohort_speedup_8t") >= 2.0,
+            "cohort parallelism below the 2x acceptance floor at 8 threads \
+             ({} cores available)",
+            cores
+        );
+        assert!(
+            get("multi_seed_par_speedup_k16") >= 2.0,
+            "parallel multi-seed flush below the 2x acceptance floor at k=16 \
+             ({} cores available)",
+            cores
+        );
+    } else {
+        println!(
+            "\nWARN: only {cores} cores — the 2x cohort/multi-seed floors are not \
+             asserted on this machine (the --check band still applies)"
+        );
+    }
+
+    // -- ledger + regression gate ------------------------------------------
+    if !smoke {
+        let mut tobj = BTreeMap::new();
+        for (k, v) in &timings {
+            tobj.insert(k.clone(), Json::Num(*v));
+        }
+        let mut mobj = BTreeMap::new();
+        for (k, v) in &metrics {
+            mobj.insert(k.clone(), Json::Num(*v));
+        }
+        let doc = Json::obj(vec![
+            ("schema", Json::str("seedflood-event-bench-v1")),
+            ("timings", Json::Obj(tobj)),
+            ("metrics", Json::Obj(mobj)),
+        ]);
+        std::fs::write("BENCH_event.json", doc.to_string_pretty() + "\n")
+            .expect("cannot write BENCH_event.json");
+        let (nt, nm) = (timings.len(), metrics.len());
+        println!("\nwrote BENCH_event.json ({nt} timings, {nm} metrics)");
+    }
+    if let Some(path) = check_path {
+        run_check(&path, &metrics);
+    }
+    println!("\nevent bench OK ({})", if smoke { "smoke grid" } else { "full grid" });
+}

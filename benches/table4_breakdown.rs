@@ -12,8 +12,15 @@
 //!   MeZO-style dense updates vs SubCGE — gradient estimation (GE) and
 //!   message applying (MA), the paper's 51x MA claim on our substrate.
 //!
-//! Run: cargo bench --bench table4_breakdown
+//! The headline thread-scaling number is a tracked ledger entry (same
+//! convention as benches/scale.rs and benches/event.rs): the full run
+//! writes BENCH_table4.json, and `--smoke --check BENCH_table4.json`
+//! gates it in CI within a wide multiplicative band.
+//!
+//! Run: cargo bench --bench table4_breakdown             (writes ledger)
+//!      cargo bench --bench table4_breakdown -- --smoke --check BENCH_table4.json
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use seedflood::algos;
@@ -24,11 +31,18 @@ use seedflood::runtime::Runtime;
 use seedflood::sim::Env;
 use seedflood::subcge::{CoeffAccum, DeviceBasisCache, SubspaceBasis};
 use seedflood::topology::{Kind, Topology};
+use seedflood::util::json::Json;
 use seedflood::zo;
 
-fn parallel_local_step_scaling() -> anyhow::Result<()> {
+/// Same wide band as the other ledgers: catches order-of-magnitude
+/// drift, tolerates loaded CI runners (a 1x measurement on a busy or
+/// small machine stays inside an 8x band around a ~3-4x baseline).
+const TOLERANCE: f64 = 8.0;
+
+/// Returns (1-thread wall ms, best speedup over 1 thread) — the
+/// headline number the ledger tracks.
+fn parallel_local_step_scaling(iters: usize) -> anyhow::Result<(f64, f64)> {
     let clients = 16;
-    let iters = 30;
     let cfg = ExperimentConfig {
         method: Method::SeedFlood,
         clients,
@@ -80,7 +94,41 @@ fn parallel_local_step_scaling() -> anyhow::Result<()> {
             best.0
         );
     }
-    Ok(())
+    Ok((base_ms, speedup))
+}
+
+/// Regression gate against the committed ledger — the benches/scale.rs
+/// convention: only metrics present on both sides are compared.
+fn run_check(path: &str, metrics: &[(String, f64)]) {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("cannot read baseline {path}: {e}"));
+    let base = Json::parse(&text).unwrap_or_else(|e| panic!("unparseable baseline {path}: {e}"));
+    let base_metrics = base
+        .get("metrics")
+        .and_then(|m| m.as_obj().cloned())
+        .unwrap_or_else(|e| panic!("baseline {path} has no metrics object: {e}"));
+    println!("\n== regression check vs {path} (tolerance {TOLERANCE}x) ==");
+    let mut failures = 0;
+    for (name, value) in metrics {
+        match base_metrics.get(name.as_str()) {
+            Some(b) => {
+                let b = b.as_f64().unwrap_or_else(|e| panic!("baseline metric {name}: {e}"));
+                let ok = b > 0.0 && *value >= b / TOLERANCE && *value <= b * TOLERANCE;
+                println!(
+                    "  {:<38} {:>12.4} vs baseline {:>10.4}  [{}]",
+                    name,
+                    value,
+                    b,
+                    if ok { "ok" } else { "REGRESSION" }
+                );
+                if !ok {
+                    failures += 1;
+                }
+            }
+            None => println!("  {name:<38} {value:>12.4} (no baseline entry — skipped)"),
+        }
+    }
+    assert_eq!(failures, 0, "{failures} metric(s) left the {TOLERANCE}x tolerance band");
 }
 
 fn artifact_ge_ma_breakdown() -> anyhow::Result<()> {
@@ -191,18 +239,46 @@ fn artifact_ge_ma_breakdown() -> anyhow::Result<()> {
 }
 
 fn main() -> anyhow::Result<()> {
-    parallel_local_step_scaling()?;
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let check_path = argv.iter().position(|a| a == "--check").map(|i| {
+        argv.get(i + 1).unwrap_or_else(|| panic!("--check needs a baseline path")).clone()
+    });
+
+    let iters = if smoke { 10 } else { 30 };
+    let (base_ms, speedup) = parallel_local_step_scaling(iters)?;
+    let metrics: Vec<(String, f64)> = vec![("local_step_speedup_best".into(), speedup)];
 
     let have_artifacts = ["artifacts/tiny_manifest.json", "../artifacts/tiny_manifest.json"]
         .iter()
         .any(|p| std::path::Path::new(p).exists());
     // Runtime::cpu errors on the in-repo PJRT stub — probe before diving in
-    if have_artifacts && Runtime::cpu("artifacts").is_ok() {
+    if !smoke && have_artifacts && Runtime::cpu("artifacts").is_ok() {
         artifact_ge_ma_breakdown()?;
     } else {
         println!(
             "\nskipping GE/MA artifact breakdown (needs real PJRT bindings and `make artifacts`)"
         );
+    }
+
+    if !smoke {
+        let mut tobj = BTreeMap::new();
+        tobj.insert("local_step_s_1t".to_string(), Json::Num(base_ms / 1e3));
+        let mut mobj = BTreeMap::new();
+        for (k, v) in &metrics {
+            mobj.insert(k.clone(), Json::Num(*v));
+        }
+        let doc = Json::obj(vec![
+            ("schema", Json::str("seedflood-table4-bench-v1")),
+            ("timings", Json::Obj(tobj)),
+            ("metrics", Json::Obj(mobj)),
+        ]);
+        std::fs::write("BENCH_table4.json", doc.to_string_pretty() + "\n")
+            .expect("cannot write BENCH_table4.json");
+        println!("\nwrote BENCH_table4.json");
+    }
+    if let Some(path) = check_path {
+        run_check(&path, &metrics);
     }
     println!("table4 OK");
     Ok(())

@@ -222,9 +222,13 @@ pub trait Algorithm: Send + Sync {
     /// Async mode: `client` is about to run local step `step` — catch up
     /// on everything delivered since its last step (e.g. flush a pending
     /// coefficient accumulator so the probe sees current params). Must be
-    /// a no-op when nothing was delivered in between.
+    /// a no-op when nothing was delivered in between. `&self` (like
+    /// [`Self::local_step`]): the event driver fans a same-instant cohort
+    /// of clients out over worker threads, each running its
+    /// `on_step_begin` + `local_step` concurrently — shared mutation only
+    /// through thread-safe interior mutability.
     fn on_step_begin(
-        &mut self,
+        &self,
         _state: &mut ClientState,
         _client: usize,
         _step: usize,

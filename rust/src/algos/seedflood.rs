@@ -39,6 +39,7 @@
 //! keep τ ≫ `staleness_p99`. Epoch-stamped messages that make the caveat
 //! structural are a ROADMAP item.
 
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -65,8 +66,13 @@ pub struct SeedFlood {
     /// false falls back to the pure-rust kernel — used by tests/benches;
     /// the synthetic backend always takes the pure-rust path)
     pub use_artifact: bool,
-    /// device-resident basis factors (rebuilt on subspace refresh)
-    device_cache: Option<DeviceBasisCache>,
+    /// device-resident basis factors (rebuilt on subspace refresh).
+    /// Mutex, not a plain Option: `on_step_begin` runs concurrently
+    /// across a same-instant event cohort (`&self`), and any member may
+    /// need the catch-up flush. The lock is only taken when coefficients
+    /// are pending — zero in the uniform-rate steady state, so the common
+    /// path never contends.
+    device_cache: Mutex<Option<DeviceBasisCache>>,
 }
 
 impl SeedFlood {
@@ -120,7 +126,7 @@ impl SeedFlood {
             n,
             clock: SharedClock::new(),
             use_artifact: true,
-            device_cache: None,
+            device_cache: Mutex::new(None),
         };
         Ok((Box::new(algo), states))
     }
@@ -131,7 +137,7 @@ impl SeedFlood {
     /// applies coefficients ([`Self::flush_all`], the event engine's
     /// per-client catch-up in `on_step_begin`, the pre-refresh settle in
     /// `begin_step`), so all of them perform identical float operations.
-    fn flush_one(&mut self, state: &mut ClientState, env: &Env) -> Result<()> {
+    fn flush_one(&self, state: &mut ClientState, env: &Env) -> Result<()> {
         let pending = match &state.scratch {
             Scratch::Flood { accum, .. } => accum.pending,
             _ => 0,
@@ -139,14 +145,19 @@ impl SeedFlood {
         if pending == 0 {
             return Ok(());
         }
-        if self.use_artifact && self.device_cache.is_none() {
-            self.device_cache = env.make_device_cache(&self.basis)?;
+        // The cache lock is held across the whole flush, so concurrent
+        // cohort members with pending coefficients serialize here — fine:
+        // the artifact runtime serializes executions anyway, and with
+        // uniform rates pending == 0 and nobody reaches this line.
+        let mut cache = self.device_cache.lock().expect("device cache lock poisoned");
+        if self.use_artifact && cache.is_none() {
+            *cache = env.make_device_cache(&self.basis)?;
         }
         // sflint: allow(wall-clock, reason = "phase-timing metric (SharedClock -> RunRecord::phase_ms); never feeds training results")
         let t0 = Instant::now();
         let (params, accum) = state.accum_parts();
         if self.use_artifact {
-            env.subcge_flush(&self.basis, accum, params, self.device_cache.as_mut())?;
+            env.subcge_flush(&self.basis, accum, params, cache.as_mut())?;
         } else {
             accum.flush_rust(&self.basis, params);
         }
@@ -157,7 +168,7 @@ impl SeedFlood {
     /// [`Self::flush_one`] over every client — the tail of every lockstep
     /// iteration and the event driver's barrier settle
     /// ([`Algorithm::on_barrier`]).
-    fn flush_all(&mut self, states: &mut [ClientState], env: &Env) -> Result<()> {
+    fn flush_all(&self, states: &mut [ClientState], env: &Env) -> Result<()> {
         for st in states.iter_mut() {
             self.flush_one(st, env)?;
         }
@@ -179,8 +190,8 @@ impl Algorithm for SeedFlood {
             if self.basis.maybe_refresh(step) {
                 // device copies are stale; DeviceBasisCache::sync would
                 // catch the epoch bump too, dropping keeps the invariant
-                // obvious
-                self.device_cache = None;
+                // obvious (&mut self here, so get_mut skips the lock)
+                *self.device_cache.get_mut().expect("device cache lock poisoned") = None;
             }
         }
         Ok(())
@@ -321,7 +332,7 @@ impl Algorithm for SeedFlood {
     }
 
     fn on_step_begin(
-        &mut self,
+        &self,
         state: &mut ClientState,
         _client: usize,
         _step: usize,
@@ -331,7 +342,9 @@ impl Algorithm for SeedFlood {
         // applies everything delivered since its last flush, so the SPSA
         // probe sees current params. Pending is zero whenever the last
         // barrier flush already caught up — then this is a strict no-op,
-        // preserving the uniform-rate reduction contract.
+        // preserving the uniform-rate reduction contract. May run
+        // concurrently across a cohort (`&self`); the device cache behind
+        // its Mutex is the only shared mutable state it can touch.
         self.flush_one(state, env)
     }
 

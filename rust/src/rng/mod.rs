@@ -8,6 +8,23 @@
 //! message reconstructs bit-identically everywhere — the shared-randomness
 //! assumption holds by construction.
 
+/// The splitmix64 state increment: draw j after state S outputs
+/// `finalize(S + (j+1)·GAMMA)` — a pure function of the counter, which is
+/// what makes the stream block-generable and jumpable ([`Rng::advance`]).
+const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The splitmix64 output function (stateless avalanche).
+#[inline]
+fn finalize(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Uniforms generated per block in the bulk normal path. Even (Box–Muller
+/// pairs never straddle a block) and small enough to live on the stack.
+const NORMAL_BLOCK: usize = 128;
+
 /// Mix a seed with an index through the splitmix64 finalizer: a stateless
 /// avalanche in which every input bit flips each output bit with
 /// probability ~1/2. Use this to derive per-entity seeds (per-client
@@ -15,12 +32,7 @@
 /// index, adjacent indices yield uncorrelated streams.
 #[inline]
 pub fn mix(seed: u64, index: u64) -> u64 {
-    let mut z = seed
-        .wrapping_add(0x9E37_79B9_7F4A_7C15)
-        .wrapping_add(index.wrapping_mul(0xA076_1D64_78BD_642F));
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^ (z >> 31)
+    finalize(seed.wrapping_add(GAMMA).wrapping_add(index.wrapping_mul(0xA076_1D64_78BD_642F)))
 }
 
 /// Splitmix64 PRNG. Small state, splittable by construction (`fold_in`),
@@ -35,7 +47,7 @@ impl Rng {
     /// Create from a seed. Equal seeds ⇒ identical streams (the paper's
     /// seed-reconstructibility contract).
     pub fn new(seed: u64) -> Self {
-        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+        Rng { state: seed.wrapping_add(GAMMA) }
     }
 
     /// Derive an independent stream from this seed and an index
@@ -48,11 +60,20 @@ impl Rng {
 
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
-        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        let mut z = self.state;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-        z ^ (z >> 31)
+        self.state = self.state.wrapping_add(GAMMA);
+        finalize(self.state)
+    }
+
+    /// Jump the stream forward by `draws` u64 outputs without generating
+    /// them. Splitmix64's state is a counter (`state += GAMMA` per draw),
+    /// so `advance(k)` lands bit-exactly where k `next_u64` calls would —
+    /// the random-access property the chunk-parallel reconstruction path
+    /// ([`crate::zo::apply_dense_updates_par`]) is built on. Only valid
+    /// for rejection-free draw sequences (the bulk normal path qualifies:
+    /// it clamps `u1` instead of rejecting).
+    #[inline]
+    pub fn advance(&mut self, draws: u64) {
+        self.state = self.state.wrapping_add(draws.wrapping_mul(GAMMA));
     }
 
     /// Uniform in [0, 1).
@@ -88,22 +109,78 @@ impl Rng {
         }
     }
 
-    /// Fill a slice with iid standard normals.
-    pub fn fill_normal(&mut self, out: &mut [f32]) {
-        // Box–Muller pairwise: both outputs used (2× fewer u64 draws than
-        // next_normal in the bulk path).
-        let mut i = 0;
-        while i + 1 < out.len() {
-            let u1 = self.next_f64().max(1e-300);
-            let u2 = self.next_f64();
-            let r = (-2.0 * u1.ln()).sqrt();
-            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
-            out[i] = (r * c) as f32;
-            out[i + 1] = (r * s) as f32;
-            i += 2;
+    /// Generate the next `buf.len()` uniform draws in one pass. The state
+    /// is a counter, so draw j of the block is `finalize(state + (j+1)·Γ)`
+    /// — a branch-free loop with no loop-carried dependency, which the
+    /// compiler can unroll/vectorize (the sequential `next_f64` chain
+    /// serializes on the state update). Bit-identical to `buf.len()`
+    /// `next_f64` calls, including the final state.
+    #[inline]
+    fn uniform_block(&mut self, buf: &mut [f64]) {
+        let base = self.state;
+        for (j, u) in buf.iter_mut().enumerate() {
+            let s = base.wrapping_add((j as u64 + 1).wrapping_mul(GAMMA));
+            *u = (finalize(s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
         }
-        if i < out.len() {
-            out[i] = self.next_normal();
+        self.advance(buf.len() as u64);
+    }
+
+    /// Even-length bulk of [`Self::fill_normal`]: blocked uniform
+    /// generation + pairwise Box–Muller. `out.len()` must be even so pair
+    /// parity is preserved across consecutive calls on one stream.
+    fn fill_normal_pairs(&mut self, out: &mut [f32]) {
+        debug_assert_eq!(out.len() % 2, 0, "bulk normal path needs an even length");
+        let mut uni = [0f64; NORMAL_BLOCK];
+        for chunk in out.chunks_mut(NORMAL_BLOCK) {
+            let u = &mut uni[..chunk.len()];
+            self.uniform_block(u);
+            for (pair, uu) in chunk.chunks_exact_mut(2).zip(u.chunks_exact(2)) {
+                let u1 = uu[0].max(1e-300);
+                let r = (-2.0 * u1.ln()).sqrt();
+                let (s, c) = (2.0 * std::f64::consts::PI * uu[1]).sin_cos();
+                pair[0] = (r * c) as f32;
+                pair[1] = (r * s) as f32;
+            }
+        }
+    }
+
+    /// Fill a slice with iid standard normals — Box–Muller pairwise (both
+    /// outputs used) over block-generated uniforms; odd lengths take one
+    /// trailing [`Self::next_normal`]. Bit-identical to the historical
+    /// scalar loop: same u64 draws, same f64 math, same f32 casts
+    /// (property-tested against the element-at-a-time reference).
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        let even = out.len() & !1;
+        let (bulk, tail) = out.split_at_mut(even);
+        self.fill_normal_pairs(bulk);
+        if let [last] = tail {
+            *last = self.next_normal();
+        }
+    }
+
+    /// Fused fill+axpy: `out[i] += scale · z_i` with `z ~ N(0, I)` drawn
+    /// from this stream — one pass, no intermediate buffer. Bit-identical
+    /// to [`Self::fill_normal`] into a scratch slice followed by a
+    /// separate `out[i] += scale * z[i]` loop (same draws, same
+    /// per-element f32 operation order) — the contract the dense
+    /// reconstruct-and-apply fast path hangs on.
+    pub fn axpy_normal(&mut self, out: &mut [f32], scale: f32) {
+        let even = out.len() & !1;
+        let (bulk, tail) = out.split_at_mut(even);
+        let mut uni = [0f64; NORMAL_BLOCK];
+        for chunk in bulk.chunks_mut(NORMAL_BLOCK) {
+            let u = &mut uni[..chunk.len()];
+            self.uniform_block(u);
+            for (pair, uu) in chunk.chunks_exact_mut(2).zip(u.chunks_exact(2)) {
+                let u1 = uu[0].max(1e-300);
+                let r = (-2.0 * u1.ln()).sqrt();
+                let (s, c) = (2.0 * std::f64::consts::PI * uu[1]).sin_cos();
+                pair[0] += scale * ((r * c) as f32);
+                pair[1] += scale * ((r * s) as f32);
+            }
+        }
+        if let [last] = tail {
+            *last += scale * self.next_normal();
         }
     }
 
@@ -170,6 +247,89 @@ mod tests {
             buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / buf.len() as f64;
         assert!(mean.abs() < 0.01, "mean {mean}");
         assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    /// The historical element-at-a-time fill loop, kept verbatim as the
+    /// bit-identity oracle for the blocked/fused bulk paths.
+    fn fill_normal_reference(rng: &mut Rng, out: &mut [f32]) {
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let u1 = rng.next_f64().max(1e-300);
+            let u2 = rng.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            out[i] = (r * c) as f32;
+            out[i + 1] = (r * s) as f32;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = rng.next_normal();
+        }
+    }
+
+    #[test]
+    fn blocked_fill_normal_is_bit_identical_to_scalar_reference() {
+        // block boundaries, odd tails, and continuing streams across
+        // multiple calls (the SubspaceBasis::regenerate pattern)
+        for seed in [0u64, 1, 42, u64::MAX / 2] {
+            for lens in [vec![7usize], vec![1000, 3], vec![129, 128, 1], vec![2], vec![255, 257]]
+            {
+                let (mut a, mut b) = (Rng::new(seed), Rng::new(seed));
+                for &len in &lens {
+                    let mut want = vec![0f32; len];
+                    let mut got = vec![0f32; len];
+                    fill_normal_reference(&mut a, &mut want);
+                    b.fill_normal(&mut got);
+                    assert!(
+                        want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "seed {seed} lens {lens:?}"
+                    );
+                }
+                // streams stay aligned after mixed even/odd fills
+                assert_eq!(a.next_u64(), b.next_u64(), "seed {seed} lens {lens:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_normal_is_bit_identical_to_fill_then_axpy() {
+        for len in [0usize, 1, 2, 7, 128, 129, 513] {
+            let (mut a, mut b) = (Rng::new(77), Rng::new(77));
+            let mut x1: Vec<f32> = (0..len).map(|i| 0.25 * i as f32).collect();
+            let mut x2 = x1.clone();
+            let mut z = vec![0f32; len];
+            a.fill_normal(&mut z);
+            for (x, &zz) in x1.iter_mut().zip(z.iter()) {
+                *x += -0.3 * zz;
+            }
+            b.axpy_normal(&mut x2, -0.3);
+            assert!(
+                x1.iter().zip(&x2).all(|(p, q)| p.to_bits() == q.to_bits()),
+                "len {len}"
+            );
+            assert_eq!(a.next_u64(), b.next_u64(), "len {len}: streams diverged");
+        }
+    }
+
+    #[test]
+    fn advance_matches_sequential_draws() {
+        let mut seq = Rng::new(9);
+        for _ in 0..1000 {
+            seq.next_u64();
+        }
+        let mut jump = Rng::new(9);
+        jump.advance(1000);
+        assert_eq!(seq.next_u64(), jump.next_u64());
+        // jumping by an even draw count preserves the bulk fill prefix:
+        // the random-access property of the chunk-parallel apply
+        let mut whole = Rng::new(5);
+        let mut full = vec![0f32; 64];
+        whole.fill_normal(&mut full);
+        let mut part = Rng::new(5);
+        part.advance(32); // 32 draws = 32 normals in the paired bulk path
+        let mut tail = vec![0f32; 32];
+        part.fill_normal(&mut tail);
+        assert!(full[32..].iter().zip(&tail).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

@@ -300,6 +300,28 @@ impl<T> EventQueue<T> {
         self.heap.pop()
     }
 
+    /// `(time, prio)` of the earliest pending event, without popping it.
+    pub fn peek_key(&self) -> Option<(u64, u8)> {
+        self.heap.peek().map(|e| (e.time, e.prio))
+    }
+
+    /// Drain every event sharing the earliest `(time, prio)` instant into
+    /// `out` — the same-instant **cohort** the event engine fans out over
+    /// worker threads. `out` is cleared first and filled in pop order
+    /// (ascending `seq`, i.e. insertion order), so a caller replaying the
+    /// cohort sequentially sees exactly the order `pop` would have
+    /// produced. Returns the number of events drained (0 on empty queue).
+    pub fn pop_cohort(&mut self, out: &mut Vec<Event<T>>) -> usize {
+        out.clear();
+        let Some(key) = self.peek_key() else {
+            return 0;
+        };
+        while self.peek_key() == Some(key) {
+            out.push(self.heap.pop().expect("peeked event vanished"));
+        }
+        out.len()
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -336,6 +358,49 @@ mod tests {
             std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect::<Vec<_>>()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn pop_cohort_drains_exactly_one_instant_in_insertion_order() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.push(5, 0, 10);
+        q.push(5, 1, 20); // same tick, lower priority class: NOT in the cohort
+        q.push(5, 0, 11);
+        q.push(9, 0, 30);
+        q.push(5, 0, 12);
+        let mut cohort = Vec::new();
+        assert_eq!(q.peek_key(), Some((5, 0)));
+        assert_eq!(q.pop_cohort(&mut cohort), 3);
+        assert_eq!(cohort.iter().map(|e| e.payload).collect::<Vec<_>>(), vec![10, 11, 12]);
+        assert!(cohort.iter().all(|e| e.time == 5 && e.prio == 0));
+        // next instant is the prio-1 event at the same tick
+        assert_eq!(q.pop_cohort(&mut cohort), 1);
+        assert_eq!(cohort[0].payload, 20);
+        assert_eq!(q.pop_cohort(&mut cohort), 1);
+        assert_eq!(cohort[0].payload, 30);
+        assert_eq!(q.pop_cohort(&mut cohort), 0);
+        assert!(cohort.is_empty());
+    }
+
+    #[test]
+    fn cohort_drain_equals_sequential_pops() {
+        let fill = || {
+            let mut q: EventQueue<usize> = EventQueue::new();
+            for i in 0..200 {
+                q.push((i * 37) as u64 % 13, (i % 3) as u8, i);
+            }
+            q
+        };
+        let mut seq_q = fill();
+        let sequential: Vec<usize> =
+            std::iter::from_fn(|| seq_q.pop().map(|e| e.payload)).collect();
+        let mut coh_q = fill();
+        let mut cohort = Vec::new();
+        let mut drained: Vec<usize> = Vec::new();
+        while coh_q.pop_cohort(&mut cohort) > 0 {
+            drained.extend(cohort.iter().map(|e| e.payload));
+        }
+        assert_eq!(drained, sequential);
     }
 
     #[test]

@@ -20,7 +20,12 @@
 //!   has completed step `t`: settle via `on_barrier`, record the train
 //!   loss, run the evaluation bookkeeping). The nominal schedule clock
 //!   (`virtual time / step span`) drives [`crate::net::Network::set_step`]
-//!   and the netcond repair triggers.
+//!   and the netcond repair triggers. Step events sharing one virtual
+//!   instant form a **cohort** whose compute phase fans out over the
+//!   `--threads` worker pool while every network-visible effect replays
+//!   sequentially in canonical order — see [`run_async`] for why the
+//!   trajectory is thread-count-invariant, and ARCHITECTURE.md for the
+//!   full determinism argument.
 //! * **Barrier** (DSGD, ChocoSGD, DZSGD and the LoRA variants) — the
 //!   lockstep adapter: dense/sparse gossip mixes simultaneous snapshots
 //!   of all clients and has no barrier-free formulation, so the driver
@@ -51,12 +56,15 @@
 //! staleness percentiles (`staleness_p50/p90/p99`), measured on the
 //! nominal iteration clock.
 
+use std::collections::VecDeque;
+
 use anyhow::Result;
 
 use super::{Driver, Env, RunCtx};
 use crate::algos::TimePolicy;
 use crate::metrics::RunRecord;
-use crate::sched::{EventQueue, RateSpec, SpeedModel, TICKS_PER_ROUND};
+use crate::sched::{Event, EventQueue, RateSpec, SpeedModel, TICKS_PER_ROUND};
+use crate::util::par::par_map_mut_idx;
 
 /// Event kinds of the async engine; the listed order is also the
 /// same-tick priority (completions before the round that forwards them,
@@ -130,27 +138,93 @@ fn run_barrier(mut ctx: RunCtx<'_>, speed: &SpeedModel) -> Result<RunRecord> {
     let (mut now, mut compute) = (0u64, 0u64);
     for t in 0..steps {
         ctx.lockstep_iteration(t)?;
-        let durs: Vec<u64> = (0..n).map(|i| speed.duration(i, t, s)).collect();
-        now += durs.iter().copied().max().unwrap_or(0);
-        compute += durs.iter().sum::<u64>();
+        // single accumulation pass, no per-iteration buffer — steady-state
+        // event stepping allocates nothing (the net/flood contract)
+        let (mut slowest, mut total) = (0u64, 0u64);
+        for i in 0..n {
+            let d = speed.duration(i, t, s);
+            slowest = slowest.max(d);
+            total += d;
+        }
+        now += slowest;
+        compute += total;
     }
     time_metrics(&mut ctx.record, now, compute, s, n, steps);
     ctx.finalize()
 }
 
+/// Rolling per-(step, client) loss rows for the async engine: only steps
+/// that some client has completed but whose barrier has not yet settled
+/// are resident (bounded by the fastest–slowest step spread), replacing
+/// the up-front dense `steps × n` matrix (400 MB at n = 100k,
+/// steps = 1000). Retired rows recycle through a free pool, so once the
+/// spread peaks, steady-state stepping allocates nothing.
+struct LossWindow {
+    n: usize,
+    /// lowest un-settled step — `rows[0]` is its row
+    base: usize,
+    rows: VecDeque<Vec<f32>>,
+    pool: Vec<Vec<f32>>,
+}
+
+impl LossWindow {
+    fn new(n: usize) -> LossWindow {
+        LossWindow { n, base: 0, rows: VecDeque::new(), pool: vec![] }
+    }
+
+    /// Record client's step loss, growing the window as needed. A write
+    /// below `base` would mean an unsettled row was evicted — impossible
+    /// by construction (a barrier settles step t only after all n clients
+    /// completed it, so no step-t write can follow it), and asserted.
+    fn set(&mut self, step: usize, client: usize, loss: f32) {
+        assert!(step >= self.base, "loss write to step {step} after its barrier settled");
+        let idx = step - self.base;
+        while self.rows.len() <= idx {
+            let mut row = self.pool.pop().unwrap_or_default();
+            row.clear();
+            row.resize(self.n, 0.0);
+            self.rows.push_back(row);
+        }
+        self.rows[idx][client] = loss;
+    }
+
+    /// The complete row for the settling barrier (client-order mean).
+    fn row(&self, step: usize) -> &[f32] {
+        assert_eq!(step, self.base, "barriers must settle in step order");
+        &self.rows[0]
+    }
+
+    /// Retire the settled row into the recycle pool and advance the base.
+    fn retire(&mut self, step: usize) {
+        assert_eq!(step, self.base, "barriers must settle in step order");
+        if let Some(row) = self.rows.pop_front() {
+            self.pool.push(row);
+        }
+        self.base += 1;
+    }
+}
+
 /// The fully asynchronous engine for [`TimePolicy::Async`] methods.
 ///
-/// Local steps execute lazily at their completion events (sequentially —
-/// event interleavings are inherently serial; per-client results are
-/// independent of execution order by the engine's determinism contract,
-/// so this agrees with the threaded lockstep fan-out). The schedule
-/// clock, `begin_step`, and the repair triggers advance with the nominal
-/// iteration (`virtual time / step span`), mirroring their lockstep
-/// positions.
+/// Local steps execute lazily at their completion events. Every `Ev::Step`
+/// sharing one `(time, priority)` instant is drained into a **cohort**
+/// ([`EventQueue::pop_cohort`]) and canonicalized to (step, client) order;
+/// each step group then runs `on_step_begin` + `local_step` for all its
+/// clients through the worker pool ([`par_map_mut_idx`]) and replays the
+/// per-client completion effects (`on_step_complete` flood sends, counts,
+/// next-event pushes) sequentially in client-id order. The fan-out is
+/// sound because `local_step` touches only its own `ClientState` (never
+/// the network) and the replay reproduces the sequential message order,
+/// so accounting and trajectories are independent of the thread count —
+/// and under uniform rates every instant holds all n clients, recovering
+/// lockstep's thread scaling exactly. The schedule clock, `begin_step`,
+/// and the repair triggers advance with the nominal iteration
+/// (`virtual time / step span`), mirroring their lockstep positions.
 fn run_async(mut ctx: RunCtx<'_>, speed: &SpeedModel) -> Result<RunRecord> {
     let steps = ctx.env.cfg.steps;
     let n = ctx.env.cfg.clients;
     let s = step_ticks(&ctx);
+    let threads = ctx.env.cfg.threads;
     if steps == 0 || n == 0 {
         return ctx.finalize();
     }
@@ -164,11 +238,11 @@ fn run_async(mut ctx: RunCtx<'_>, speed: &SpeedModel) -> Result<RunRecord> {
     }
     q.push(TICKS_PER_ROUND, PRIO_ROUND, Ev::Round);
 
-    // per-step completion counts and per-(step, client) losses; the loss
-    // matrix keeps the barrier's mean a client-order sum regardless of
-    // the completion order, preserving the reduction contract
+    // per-step completion counts and the rolling loss window; the window
+    // keeps the barrier's mean a client-order sum regardless of the
+    // completion order, preserving the reduction contract
     let mut completed = vec![0usize; steps];
-    let mut losses = vec![0f32; steps * n];
+    let mut losses = LossWindow::new(n);
     let mut finish = vec![0u64; n];
     let mut begun: Option<usize> = None; // highest step begin_step has seen
     let mut sched: Option<usize> = None; // last Network::set_step argument
@@ -178,9 +252,12 @@ fn run_async(mut ctx: RunCtx<'_>, speed: &SpeedModel) -> Result<RunRecord> {
     // is in flight, and no step/barrier/schedule event happened since —
     // lets Round events skip their O(n·deg) scans while stragglers crawl
     let mut active = true;
+    // reusable cohort scratch — steady-state stepping allocates nothing
+    let mut cohort: Vec<Event<Ev>> = Vec::new();
+    let mut order: Vec<(usize, usize)> = Vec::new(); // canonical (step, client)
+    let mut group: Vec<usize> = Vec::new(); // one step group's client ids
 
-    while let Some(ev) = q.pop() {
-        let now = ev.time;
+    while let Some((now, prio)) = q.peek_key() {
         // delivery clock: one round per TICKS_PER_ROUND of virtual time,
         // advanced *before* any event at this instant. A completion's
         // send and the coincident round's sends therefore stamp the same
@@ -198,7 +275,9 @@ fn run_async(mut ctx: RunCtx<'_>, speed: &SpeedModel) -> Result<RunRecord> {
         // aligning the schedule clock and staleness accounting with
         // lockstep. The clock keeps running past `steps` while stragglers
         // catch up (anti-entropy heartbeats continue; every scheduled
-        // down-window is over by then).
+        // down-window is over by then). Both advance loops are monotone
+        // guards, so running them once per *instant* (here) is identical
+        // to the historical once per *event*.
         let nominal = ((now / s).saturating_sub(1)) as usize;
         while sched.map_or(true, |g| g < nominal) {
             let g = sched.map_or(0, |g| g + 1);
@@ -208,8 +287,31 @@ fn run_async(mut ctx: RunCtx<'_>, speed: &SpeedModel) -> Result<RunRecord> {
             active = true; // churn flips, repair arming: rounds matter again
         }
 
-        match ev.payload {
-            Ev::Step { client, step } => {
+        if prio == PRIO_STEP {
+            // --- the same-instant step cohort (see the fn docs) ---
+            q.pop_cohort(&mut cohort);
+            order.clear();
+            for e in &cohort {
+                match &e.payload {
+                    Ev::Step { client, step } => order.push((*step, *client)),
+                    _ => unreachable!("PRIO_STEP cohort holds only step events"),
+                }
+            }
+            // canonical replay order: ascending step, then client id.
+            // Under uniform rates (the bit-for-bit reduction case) a
+            // cohort is exactly one full step group already in client ==
+            // insertion order, so this sort is the identity permutation.
+            order.sort_unstable();
+            let mut lo = 0usize;
+            while lo < order.len() {
+                let step = order[lo].0;
+                group.clear();
+                let mut hi = lo;
+                while hi < order.len() && order[hi].0 == step {
+                    group.push(order[hi].1);
+                    hi += 1;
+                }
+                lo = hi;
                 if begun.map_or(true, |b| step > b) {
                     // shared-state hook (e.g. the τ-periodic basis
                     // refresh) follows the most advanced client; it
@@ -219,35 +321,68 @@ fn run_async(mut ctx: RunCtx<'_>, speed: &SpeedModel) -> Result<RunRecord> {
                     ctx.algo.begin_step(&mut ctx.states, step, ctx.env)?;
                     begun = Some(step);
                 }
-                ctx.algo.on_step_begin(&mut ctx.states[client], client, step, ctx.env)?;
-                let loss = ctx.algo.local_step(&mut ctx.states[client], client, step, ctx.env)?;
-                losses[step * n + client] = loss;
-                if ctx.net.is_online(client) {
-                    ctx.algo.on_step_complete(
-                        &mut ctx.states[client],
-                        client,
-                        step,
-                        ctx.env,
-                        &mut ctx.net,
-                    )?;
-                }
-                completed[step] += 1;
-                if step + 1 < steps {
-                    let d = speed.duration(client, step + 1, s);
-                    compute += d;
-                    q.push(now + d, PRIO_STEP, Ev::Step { client, step: step + 1 });
+                // compute phase: on_step_begin + local_step touch only
+                // their own ClientState (never the network), so the whole
+                // group fans out over the worker pool; a singleton group
+                // (the heterogeneous steady state) runs inline with zero
+                // fan-out overhead. Losses land in client order and the
+                // lowest-client error wins — exactly the sequential
+                // outcome for every thread count.
+                if group.len() == 1 {
+                    let c = group[0];
+                    ctx.algo.on_step_begin(&mut ctx.states[c], c, step, ctx.env)?;
+                    let loss =
+                        ctx.algo.local_step(&mut ctx.states[c], c, step, ctx.env)?;
+                    losses.set(step, c, loss);
                 } else {
-                    finish[client] = now;
+                    let algo = &ctx.algo;
+                    let env = ctx.env;
+                    let results = par_map_mut_idx(&mut ctx.states, &group, threads, |c, st| {
+                        algo.on_step_begin(st, c, step, env)?;
+                        algo.local_step(st, c, step, env)
+                    });
+                    for (j, res) in results.into_iter().enumerate() {
+                        losses.set(step, group[j], res?);
+                    }
                 }
-                if completed[step] == n {
-                    // settle after the remaining rounds of this nominal
-                    // step (k rounds total follow a full cohort — the
-                    // lockstep iteration's communication depth)
-                    let settle = (s / TICKS_PER_ROUND - 1) * TICKS_PER_ROUND;
-                    q.push(now + settle, PRIO_BARRIER, Ev::Barrier { step });
+                // replay phase: per-client completion effects in client-id
+                // order — flood sends hit the network in the sequential
+                // order, and next-step events get the sequential insertion
+                // (seq) order, keeping accounting and trajectories intact
+                for &c in group.iter() {
+                    if ctx.net.is_online(c) {
+                        ctx.algo.on_step_complete(
+                            &mut ctx.states[c],
+                            c,
+                            step,
+                            ctx.env,
+                            &mut ctx.net,
+                        )?;
+                    }
+                    completed[step] += 1;
+                    if step + 1 < steps {
+                        let d = speed.duration(c, step + 1, s);
+                        compute += d;
+                        q.push(now + d, PRIO_STEP, Ev::Step { client: c, step: step + 1 });
+                    } else {
+                        finish[c] = now;
+                    }
+                    if completed[step] == n {
+                        // settle after the remaining rounds of this
+                        // nominal step (k rounds total follow a full
+                        // cohort — the lockstep communication depth)
+                        let settle = (s / TICKS_PER_ROUND - 1) * TICKS_PER_ROUND;
+                        q.push(now + settle, PRIO_BARRIER, Ev::Barrier { step });
+                    }
                 }
-                active = true;
             }
+            active = true;
+            continue;
+        }
+
+        let ev = q.pop().expect("peeked event vanished");
+        match ev.payload {
+            Ev::Step { .. } => unreachable!("PRIO_STEP events take the cohort path"),
             Ev::Round => {
                 // scans are skipped while provably quiescent: an idle
                 // round's send_round/collect cannot change any state, so
@@ -280,10 +415,10 @@ fn run_async(mut ctx: RunCtx<'_>, speed: &SpeedModel) -> Result<RunRecord> {
             }
             Ev::Barrier { step } => {
                 debug_assert_eq!(step, barriers, "barriers must settle in step order");
-                let row: Vec<f32> = losses[step * n..(step + 1) * n].to_vec();
-                ctx.push_train_loss(&row);
+                ctx.push_train_loss(losses.row(step));
                 ctx.algo.on_barrier(&mut ctx.states, step, ctx.env, &mut ctx.net)?;
                 ctx.after_step(step)?;
+                losses.retire(step);
                 barriers += 1;
                 if barriers == steps {
                     break;

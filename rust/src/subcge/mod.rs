@@ -210,25 +210,35 @@ impl CoeffAccum {
     }
 
     /// Reconstruct + apply the queued dense 1D components (tiny fraction
-    /// of d; LN scales/biases only).
+    /// of d; LN scales/biases only). The whole queue is applied in one
+    /// sweep over the non-2D tensors via [`crate::zo::apply_dense_multi`]
+    /// — bit-identical to the historical per-message full passes (the
+    /// per-element f32 operation order is preserved; see that function's
+    /// contract), but each tensor is pulled through cache once instead of
+    /// `k` times.
     fn apply_dense_tail(&mut self, basis: &SubspaceBasis, params: &mut ParamVec) {
+        if self.dense_queue.is_empty() {
+            return;
+        }
         let is2d: Vec<bool> = (0..params.tensors.len())
             .map(|i| basis.param_indices.contains(&i))
             .collect();
-        let mut buf: Vec<f32> = vec![];
-        for &(seed, coeff) in &self.dense_queue {
-            let mut rng = Rng::new(seed ^ 0x1D1D_1D1D);
-            for (idx, t) in params.tensors.iter_mut().enumerate() {
-                if is2d[idx] {
-                    continue;
-                }
-                buf.resize(t.data.len(), 0.0);
-                rng.fill_normal(&mut buf);
-                for (x, &z) in t.data.iter_mut().zip(buf.iter()) {
-                    *x -= coeff * z;
-                }
-            }
-        }
+        let mut rngs: Vec<Rng> = self
+            .dense_queue
+            .iter()
+            .map(|&(seed, _)| Rng::new(seed ^ 0x1D1D_1D1D))
+            .collect();
+        let scales: Vec<f32> = self.dense_queue.iter().map(|&(_, coeff)| -coeff).collect();
+        crate::zo::apply_dense_multi(
+            params
+                .tensors
+                .iter_mut()
+                .enumerate()
+                .filter(|(idx, _)| !is2d[*idx])
+                .map(|(_, t)| t.data.as_mut_slice()),
+            &mut rngs,
+            &scales,
+        );
     }
 
     fn clear(&mut self) {

@@ -55,6 +55,36 @@ where
     out.into_iter().flatten().collect()
 }
 
+/// Apply `f(idx[j], &mut items[idx[j]])` for every `j`, fanning the subset
+/// out over up to `threads` scoped workers while the elements *not* named
+/// in `idx` stay untouched (and unborrowed — the compiler-checked disjoint
+/// `&mut` extraction below is what lets the event engine run a same-instant
+/// cohort of clients in parallel while the driver retains the rest of the
+/// state slice). `idx` must be strictly increasing and in bounds. Results
+/// come back in `idx` order for any thread count, same contract as
+/// [`par_map_mut`].
+pub fn par_map_mut_idx<T, R, F>(items: &mut [T], idx: &[usize], threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    // peel disjoint &mut references off the slice front-to-back; strict
+    // monotonicity of idx makes each split land past the previous pick
+    let mut picks: Vec<(usize, &mut T)> = Vec::with_capacity(idx.len());
+    let mut rest = items;
+    let mut base = 0usize;
+    for &i in idx {
+        debug_assert!(i >= base, "par_map_mut_idx: idx must be strictly increasing");
+        let (_, tail) = rest.split_at_mut(i - base);
+        let (it, tail) = tail.split_first_mut().expect("par_map_mut_idx: idx out of bounds");
+        picks.push((i, it));
+        rest = tail;
+        base = i + 1;
+    }
+    par_map_mut(&mut picks, threads, |_, pick| f(pick.0, pick.1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,6 +118,42 @@ mod tests {
         let mut items = vec![1u32, 2, 3];
         let out = par_map_mut(&mut items, 64, |_, x| *x * 10);
         assert_eq!(out, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn idx_variant_touches_only_the_subset_in_idx_order() {
+        for threads in [1, 2, 3, 8] {
+            let mut items: Vec<u64> = (0..20).collect();
+            let idx = [1usize, 4, 5, 11, 19];
+            let out = par_map_mut_idx(&mut items, &idx, threads, |i, x| {
+                *x += 100;
+                (i, *x)
+            });
+            assert_eq!(out.len(), idx.len());
+            for (j, &(i, val)) in out.iter().enumerate() {
+                assert_eq!(i, idx[j]);
+                assert_eq!(val, i as u64 + 100);
+            }
+            for (i, &x) in items.iter().enumerate() {
+                let expect = if idx.contains(&i) { i as u64 + 100 } else { i as u64 };
+                assert_eq!(x, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn idx_variant_empty_full_and_singleton() {
+        let mut items: Vec<u32> = (0..5).collect();
+        assert!(par_map_mut_idx(&mut items, &[], 4, |_, _| 0).is_empty());
+        let all = [0usize, 1, 2, 3, 4];
+        let out = par_map_mut_idx(&mut items, &all, 4, |i, x| (i, *x));
+        assert_eq!(out, (0..5).map(|i| (i, i as u32)).collect::<Vec<_>>());
+        let out = par_map_mut_idx(&mut items, &[3], 4, |i, x| {
+            *x = 99;
+            i
+        });
+        assert_eq!(out, vec![3]);
+        assert_eq!(items[3], 99);
     }
 
     #[test]

@@ -17,18 +17,17 @@
 use crate::rng::Rng;
 use crate::subcge::SubspaceBasis;
 use crate::tensor::ParamVec;
+use crate::util::par::{num_threads, par_map_mut};
 
 /// Draw the dense perturbation stream for seed and apply θ += scale·z.
 /// One fresh Rng per call ⇒ identical z for identical seed, always.
+/// Fused fill+axpy ([`Rng::axpy_normal`]): one pass over the params, no
+/// intermediate buffer, no per-tensor resize — bit-identical to the
+/// historical fill-into-scratch-then-axpy loop.
 pub fn perturb_dense(params: &mut ParamVec, seed: u64, scale: f32) {
     let mut rng = Rng::new(seed);
-    let mut buf: Vec<f32> = vec![];
     for t in &mut params.tensors {
-        buf.resize(t.data.len(), 0.0);
-        rng.fill_normal(&mut buf);
-        for (x, &z) in t.data.iter_mut().zip(buf.iter()) {
-            *x += scale * z;
-        }
+        rng.axpy_normal(&mut t.data, scale);
     }
 }
 
@@ -36,6 +35,115 @@ pub fn perturb_dense(params: &mut ParamVec, seed: u64, scale: f32) {
 /// This is the O(d)-per-message MeZO apply (Fig 5 baseline).
 pub fn apply_dense_update(params: &mut ParamVec, seed: u64, coeff: f32) {
     perturb_dense(params, seed, -coeff);
+}
+
+/// Even length of the parameter chunk the one-sweep multi-seed apply
+/// keeps cache-hot across the seed loop (16 KiB of f32).
+const SWEEP_CHUNK: usize = 4096;
+
+/// One-sweep multi-seed dense apply over raw tensor slices: for every
+/// `(rngs[k], scales[k])` pair, `x += scales[k] · z_k(x)` — the shared
+/// core behind [`apply_dense_updates`] and the SubCGE dense-tail flush
+/// (which feeds a filtered tensor set and `seed ^ 0x1D1D_1D1D` streams).
+///
+/// Bit-identity contract: per element, the k updates apply in queue order
+/// with the exact z values and f32 operation order of k separate full
+/// passes — chunking only reorders *across* elements, which no per-element
+/// float sequence can observe. Each rng is left exactly where k sequential
+/// passes would leave it.
+pub fn apply_dense_multi<'a>(
+    tensors: impl IntoIterator<Item = &'a mut [f32]>,
+    rngs: &mut [Rng],
+    scales: &[f32],
+) {
+    debug_assert_eq!(rngs.len(), scales.len());
+    for data in tensors {
+        let even = data.len() & !1;
+        let (bulk, tail) = data.split_at_mut(even);
+        for chunk in bulk.chunks_mut(SWEEP_CHUNK) {
+            for (rng, &scale) in rngs.iter_mut().zip(scales.iter()) {
+                rng.axpy_normal(chunk, scale);
+            }
+        }
+        for x in tail {
+            for (rng, &scale) in rngs.iter_mut().zip(scales.iter()) {
+                *x += scale * rng.next_normal();
+            }
+        }
+    }
+}
+
+/// Apply a batch of dense seed–scalar messages in **one parameter sweep**
+/// instead of k full passes: θ ← θ − Σ_k coeff_k·z(seed_k), each chunk of
+/// θ touched once while all k streams visit it. Bit-identical to calling
+/// [`apply_dense_update`] per message in order (property-tested).
+pub fn apply_dense_updates(params: &mut ParamVec, updates: &[(u64, f32)]) {
+    if updates.is_empty() {
+        return;
+    }
+    let mut rngs: Vec<Rng> = updates.iter().map(|&(seed, _)| Rng::new(seed)).collect();
+    let scales: Vec<f32> = updates.iter().map(|&(_, coeff)| -coeff).collect();
+    apply_dense_multi(params.tensors.iter_mut().map(|t| t.data.as_mut_slice()), &mut rngs, &scales);
+}
+
+/// Tensors below this size are not worth a thread fan-out.
+const PAR_MIN_ELEMS: usize = 1 << 14;
+
+/// [`apply_dense_updates`], fanned out over the `util::par` pool: each
+/// tensor's even bulk is split into even-length spans, and every worker
+/// jumps its k streams to its span offset with [`Rng::advance`] (splitmix
+/// is a counter, so the jump is bit-exact random access into the stream).
+/// Per-element float sequences are untouched by the partition, so the
+/// result is bit-identical to the sequential sweep — and to the k-pass
+/// reference — for **any** thread count (property-tested). Only for
+/// sequential contexts (a barrier flush, the benches); never nest it
+/// inside a `par_map_mut` worker.
+pub fn apply_dense_updates_par(params: &mut ParamVec, updates: &[(u64, f32)], threads: usize) {
+    if updates.is_empty() {
+        return;
+    }
+    let workers = num_threads(threads);
+    let mut masters: Vec<(Rng, f32)> =
+        updates.iter().map(|&(seed, coeff)| (Rng::new(seed), -coeff)).collect();
+    for t in &mut params.tensors {
+        let even = t.data.len() & !1;
+        let (bulk, tail) = t.data.split_at_mut(even);
+        if workers <= 1 || even < PAR_MIN_ELEMS {
+            let mut rngs: Vec<Rng> = masters.iter().map(|(r, _)| r.clone()).collect();
+            let scales: Vec<f32> = masters.iter().map(|&(_, s)| s).collect();
+            apply_dense_multi(std::iter::once(bulk), &mut rngs, &scales);
+        } else {
+            // even-length spans, each worker owning a disjoint slice of θ
+            let span = (even.div_ceil(workers) + 1) & !1;
+            let mut spans: Vec<(usize, &mut [f32])> = Vec::with_capacity(workers);
+            let mut off = 0usize;
+            for piece in bulk.chunks_mut(span) {
+                let len = piece.len();
+                spans.push((off, piece));
+                off += len;
+            }
+            let masters_ref = &masters;
+            par_map_mut(&mut spans, threads, |_, span| {
+                let start = span.0 as u64;
+                for (rng, scale) in masters_ref.iter() {
+                    let mut r = rng.clone();
+                    r.advance(start); // draw index == element index in the even bulk
+                    r.axpy_normal(span.1, *scale);
+                }
+            });
+        }
+        // master streams advance past the bulk they delegated, then take
+        // the odd tail sequentially (next_normal may reject-loop, so the
+        // tail draw count is not statically jumpable)
+        for (rng, _) in masters.iter_mut() {
+            rng.advance(even as u64);
+        }
+        for x in tail {
+            for (rng, scale) in masters.iter_mut() {
+                *x += *scale * rng.next_normal();
+            }
+        }
+    }
 }
 
 /// The SubCGE coordinates drawn from a message seed: one (i, j) per 2D
@@ -63,18 +171,13 @@ pub fn perturb_subcge(params: &mut ParamVec, sub: &SubspaceBasis, seed: u64, sca
         let v = sub.v_col(l, j as usize);
         params.tensors[pi].rank1_update(scale, &u, &v);
     }
-    // dense part for 1D tensors
+    // dense part for 1D tensors — fused fill+axpy, same stream, no scratch
     let mut rng = Rng::new(seed ^ 0x1D1D_1D1D);
-    let mut buf: Vec<f32> = vec![];
     for (idx, t) in params.tensors.iter_mut().enumerate() {
         if sub.param_indices.contains(&idx) {
             continue;
         }
-        buf.resize(t.data.len(), 0.0);
-        rng.fill_normal(&mut buf);
-        for (x, &z) in t.data.iter_mut().zip(buf.iter()) {
-            *x += scale * z;
-        }
+        rng.axpy_normal(&mut t.data, scale);
     }
 }
 
@@ -166,6 +269,78 @@ mod tests {
             (alpha - expected).abs() < 0.05 * expected.abs().max(1.0),
             "alpha {alpha} expected {expected}"
         );
+    }
+
+    /// Odd-length tensors on purpose: the one-sweep path must hit the
+    /// scalar tail branch as well as the blocked bulk.
+    fn big_params() -> ParamVec {
+        ParamVec::new(
+            vec!["w".into(), "b".into(), "c".into()],
+            vec![
+                Tensor::from_vec(&[31, 33], (0..31 * 33).map(|i| (i as f32).sin()).collect()),
+                Tensor::from_vec(&[257], (0..257).map(|i| 1.0 / (i as f32 + 1.0)).collect()),
+                Tensor::from_vec(&[2], vec![0.5, -0.5]),
+            ],
+        )
+    }
+
+    fn assert_bits_eq(a: &ParamVec, b: &ParamVec, what: &str) {
+        for (ta, tb) in a.tensors.iter().zip(b.tensors.iter()) {
+            for (x, y) in ta.data.iter().zip(tb.data.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_seed_sweep_is_bit_identical_to_k_pass() {
+        for k in [1usize, 2, 5, 16] {
+            let updates: Vec<(u64, f32)> =
+                (0..k).map(|i| (1000 + i as u64 * 7, 0.01 * (i as f32 + 1.0))).collect();
+            let mut reference = big_params();
+            for &(seed, coeff) in &updates {
+                apply_dense_update(&mut reference, seed, coeff);
+            }
+            let mut sweep = big_params();
+            apply_dense_updates(&mut sweep, &updates);
+            assert_bits_eq(&reference, &sweep, "one-sweep vs k-pass");
+        }
+    }
+
+    #[test]
+    fn par_apply_is_bit_identical_for_any_thread_count() {
+        let updates: Vec<(u64, f32)> = (0..7).map(|i| (42 + i, 0.02 * (i as f32 - 3.0))).collect();
+        // big enough to clear PAR_MIN_ELEMS so the fan-out branch runs
+        let make = || {
+            ParamVec::new(
+                vec!["w".into(), "b".into()],
+                vec![
+                    Tensor::from_vec(
+                        &[1 << 15],
+                        (0..1usize << 15).map(|i| (i as f32).cos()).collect(),
+                    ),
+                    Tensor::from_vec(&[129], vec![0.25; 129]),
+                ],
+            )
+        };
+        let mut reference = make();
+        for &(seed, coeff) in &updates {
+            apply_dense_update(&mut reference, seed, coeff);
+        }
+        for threads in [1usize, 2, 3, 8] {
+            let mut p = make();
+            apply_dense_updates_par(&mut p, &updates, threads);
+            assert_bits_eq(&reference, &p, "par apply vs k-pass");
+        }
+    }
+
+    #[test]
+    fn empty_update_batch_is_a_no_op() {
+        let mut p = params();
+        let orig = p.clone();
+        apply_dense_updates(&mut p, &[]);
+        apply_dense_updates_par(&mut p, &[], 8);
+        assert_bits_eq(&p, &orig, "empty batch");
     }
 
     #[test]

@@ -238,6 +238,106 @@ fn lockstep_rejects_non_uniform_rates() {
     assert!(sim::run_with_env(&env).is_err());
 }
 
+// ---------------------------------------------------------------------------
+// Cohort parallelism (ISSUE 9): the async engine drains every same-instant
+// step cohort at once and fans the client computations over the thread
+// pool, replaying completions in canonical (step, client) order. The
+// contract is bit-for-bit thread invariance — `--threads` may only change
+// the wall clock, never a single float.
+// ---------------------------------------------------------------------------
+
+fn run_event_threads(method: Method, rates: &str, threads: usize) -> RunRecord {
+    let cfg = ExperimentConfig {
+        time_model: TimeModel::Event,
+        rates: rates.into(),
+        threads,
+        ..base_cfg(method)
+    };
+    run(cfg)
+}
+
+#[test]
+fn cohort_parallelism_is_thread_invariant_for_seedflood() {
+    // uniform rates: every instant holds the full 8-client cohort (maximum
+    // fan-out); lognormal and stragglers fragment the instants into
+    // smaller, mixed-step cohorts (exercising the grouped replay and the
+    // singleton inline path)
+    for rates in ["uniform", "lognormal:0.7", "stragglers:0.25,4"] {
+        let sequential = run_event_threads(Method::SeedFlood, rates, 1);
+        for threads in [2usize, 8] {
+            let parallel = run_event_threads(Method::SeedFlood, rates, threads);
+            assert_trajectory_identical(
+                &sequential,
+                &parallel,
+                &format!("seedflood {rates}: {threads} threads vs 1"),
+            );
+            assert_eq!(sequential.virtual_makespan, parallel.virtual_makespan, "{rates}");
+            assert_eq!(sequential.idle_frac, parallel.idle_frac, "{rates}");
+            assert_eq!(sequential.client_steps, parallel.client_steps, "{rates}");
+        }
+    }
+}
+
+#[test]
+fn cohort_parallelism_preserves_the_lockstep_reduction() {
+    // the headline identity (uniform event ≡ lockstep) must survive the
+    // parallel cohort path, not just --threads 1
+    let lockstep = run(base_cfg(Method::SeedFlood));
+    let parallel = run_event_threads(Method::SeedFlood, "uniform", 8);
+    assert_trajectory_identical(&lockstep, &parallel, "lockstep vs event/uniform @8t");
+}
+
+#[test]
+fn cohort_parallelism_is_thread_invariant_under_netcond_faults() {
+    // delays, drops, churn and repair all mutate shared network state —
+    // none of that runs inside the fan-out, so faults cannot break the
+    // invariance
+    let mk = |threads| {
+        let cfg = ExperimentConfig {
+            time_model: TimeModel::Event,
+            rates: "stragglers:0.25,3".into(),
+            netcond: "loss=0.05;delay=1;node:3@2..4;repair=2;seed=11".into(),
+            threads,
+            ..base_cfg(Method::SeedFlood)
+        };
+        run(cfg)
+    };
+    let sequential = mk(1);
+    assert!(sequential.dropped_messages > 0, "faults must actually fire");
+    for threads in [2usize, 8] {
+        let parallel = mk(threads);
+        assert_trajectory_identical(
+            &sequential,
+            &parallel,
+            &format!("netcond: {threads} threads vs 1"),
+        );
+    }
+}
+
+#[test]
+fn cohort_parallelism_is_thread_invariant_for_single_client_methods() {
+    // clients = 1: every cohort is a singleton, so the engine must take
+    // the inline path and still match across thread counts
+    let mk = |threads| {
+        let cfg = ExperimentConfig {
+            clients: 1,
+            time_model: TimeModel::Event,
+            rates: "lognormal:0.5".into(),
+            threads,
+            ..base_cfg(Method::SubCge)
+        };
+        run(cfg)
+    };
+    let sequential = mk(1);
+    for threads in [2usize, 8] {
+        assert_trajectory_identical(
+            &sequential,
+            &mk(threads),
+            &format!("subcge single-client: {threads} threads vs 1"),
+        );
+    }
+}
+
 #[test]
 fn single_client_methods_run_under_the_event_engine() {
     let cfg = ExperimentConfig {
