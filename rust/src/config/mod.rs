@@ -220,6 +220,8 @@ impl ExperimentConfig {
         c.refresh = args.get_parse("refresh", c.refresh)?;
         c.flood_steps = args.get_parse("flood-steps", c.flood_steps)?;
         c.topk_ratio = args.get_parse("topk-ratio", c.topk_ratio)?;
+        c.consensus_lr = args.get_parse("consensus-lr", c.consensus_lr)?;
+        c.lora_rank = args.get_parse("lora-rank", c.lora_rank)?;
         c.seed = args.get_parse("seed", c.seed)?;
         c.eval_every = args.get_parse("eval-every", c.eval_every)?;
         c.artifacts_dir = args.get_or("artifacts", &c.artifacts_dir).to_string();
@@ -290,8 +292,10 @@ impl ExperimentConfig {
                 "lora_rank" => self.lora_rank = v.as_int()? as usize,
                 "seed" => self.seed = v.as_int()? as u64,
                 "eval_every" => self.eval_every = v.as_int()? as usize,
+                // sflint: allow(cli-doc-drift, reason = "the CLI spells this flag --artifacts")
                 "artifacts_dir" => self.artifacts_dir = v.as_str()?.to_string(),
                 "init_from" => self.init_from = v.as_str()?.to_string(),
+                // sflint: allow(cli-doc-drift, reason = "the CLI spells this boolean flag --quantize")
                 "quantize_msgs" => self.quantize_msgs = v.as_bool()?,
                 "dirichlet_alpha" => self.dirichlet_alpha = v.as_float()?,
                 "netcond" => self.netcond = v.as_str()?.to_string(),
@@ -337,6 +341,7 @@ mod tests {
             [
                 "--method", "dsgd", "--clients", "32", "--topology", "mesh", "--lr", "0.0001",
                 "--steps", "50", "--threads", "4", "--netcond", "loss=0.1;delay=1",
+                "--consensus-lr", "0.5", "--lora-rank", "16",
             ]
             .iter()
             .map(|s| s.to_string()),
@@ -350,6 +355,8 @@ mod tests {
         assert_eq!(c.steps, 50);
         assert_eq!(c.threads, 4);
         assert_eq!(c.netcond, "loss=0.1;delay=1");
+        assert_eq!(c.consensus_lr, 0.5);
+        assert_eq!(c.lora_rank, 16);
         // default: the reliable network
         assert!(ExperimentConfig::default().netcond.is_empty());
     }

@@ -185,7 +185,7 @@ impl Dataset {
     /// client is guaranteed at least one example of some class.
     pub fn partition_dirichlet(&self, n: usize, alpha: f64, seed: u64) -> Vec<Vec<Example>> {
         assert!(n <= self.train.len());
-        let mut rng = Rng::new(seed ^ 0xD1B1);
+        let mut rng = Rng::new(crate::rng::mix(seed, 0xD1B1));
         // split train pool by label
         let mut by_label: [Vec<&Example>; 2] = [vec![], vec![]];
         for ex in &self.train {

@@ -121,7 +121,9 @@ pub fn flood_consensus_rounds(topo: &Topology) -> Result<(usize, u64)> {
 pub fn gossip_consensus_rounds(topo: &Topology, seed: u64, eps: f64, cap: usize) -> (usize, bool) {
     let n = topo.n;
     let w = topo.mixing_weights();
-    let mut x: Vec<f64> = (0..n).map(|i| Rng::new(seed ^ i as u64).next_f64()).collect();
+    let mut x: Vec<f64> = (0..n)
+        .map(|i| Rng::new(crate::rng::mix(seed, i as u64)).next_f64())
+        .collect();
     let mean = x.iter().sum::<f64>() / n as f64;
     let spread = |x: &[f64]| x.iter().map(|v| (v - mean).abs()).fold(0.0, f64::max);
     let spread0 = spread(&x);
@@ -264,8 +266,8 @@ mod tests {
 
     #[test]
     fn gossip_identical_values_converge_in_zero_rounds() {
-        // spread0 == 0 short-circuit: every client draws from the same
-        // seed when n-xor collapses (n=1 singleton has one client)
+        // spread0 == 0 short-circuit: an n=1 singleton has a single
+        // client, so its one draw equals the mean exactly
         let topo = Topology::build(Kind::Ring, 1, 0);
         let (rounds, est) = gossip_consensus_rounds(&topo, 7, 1e-3, 100);
         assert_eq!((rounds, est), (0, false));

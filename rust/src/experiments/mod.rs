@@ -462,7 +462,7 @@ pub fn pretrain(
     }
     let _ = mix_tasks; // per-task lexicon blocks are fixed; the corpus is
                        // the six task distributions on the pretrain stream
-    let mut sampler = BatchSampler::new(train, seed ^ 0x9E7A);
+    let mut sampler = BatchSampler::new(train, crate::rng::mix(seed, 0x9E7A));
     let mut params = ParamStore::init(&manifest, seed);
     let mut momentum = params.zeros_like();
     let b = manifest.config.batch;

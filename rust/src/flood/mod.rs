@@ -1050,7 +1050,9 @@ impl FloodState {
     /// Wrap a seed batch in this client's wire encoding.
     fn wire_payload(&self, batch: Vec<SeedUpdate>) -> Payload {
         match self.wire {
+            // sflint: allow(wire-conservation, reason = "wire_payload results are always broadcast by send_round")
             WireFormat::Full => Payload::Seeds(batch),
+            // sflint: allow(wire-conservation, reason = "wire_payload results are always broadcast by send_round")
             WireFormat::Quantized(_) => Payload::SeedsQuantized(batch),
         }
     }

@@ -1,0 +1,486 @@
+//! Repo-wide symbol/reference index for the cross-file sflint rules.
+//!
+//! The per-line channel scanner ([`super::scan`]) sees one file at a
+//! time; every drift bug this repo has actually shipped was a fact
+//! stated in one module silently diverging from its mirror in another
+//! (the PR 4 `seed ^ i` sampler streams, the PR 5 fig6 grid-shift from
+//! unparsed JSON fields). This module builds the cheap structural index
+//! those rules need — still no `syn` in the image, so everything is
+//! extracted from the scanner's code/literal channels:
+//!
+//! * enum declarations with their variants (`wire-conservation` checks
+//!   every `Payload` variant against the `wire_bytes` match),
+//! * string literals with line/column positions (help text, JSON keys,
+//!   `format!` templates, match-arm keys),
+//! * `pub fn` names,
+//! * CLI flag occurrences — string keys passed to `args.get(..)` /
+//!   `get_or` / `get_parse` / `get_parse_list` / `get_list` / `has`,
+//!   matched by the receiver being literally named `args` (the codebase
+//!   convention), so `Json::get("key")` never pollutes the flag set,
+//! * function line-ranges inside `impl` blocks, so rules can scope a
+//!   query to e.g. `RunRecord::from_json` or
+//!   `ExperimentConfig::apply_toml`.
+//!
+//! [`RepoIndex`] borrows the scanned lines owned by the lint driver; it
+//! is built once per `lint_files` call and shared by every cross-file
+//! rule.
+
+use super::scan::{find_word, Line};
+
+/// Getter methods whose first string argument names a CLI flag when the
+/// receiver is the conventional `args` binding.
+pub const FLAG_GETTERS: &[&str] =
+    &["get", "get_or", "get_parse", "get_parse_list", "get_list", "has"];
+
+/// One `enum` declaration.
+#[derive(Clone, Debug)]
+pub struct EnumInfo {
+    pub name: String,
+    /// 1-based line of the `enum` keyword.
+    pub decl_line: usize,
+    /// `(variant name, 1-based declaration line)`.
+    pub variants: Vec<(String, usize)>,
+}
+
+/// One CLI flag read site: `args.<getter>("<flag>")`.
+#[derive(Clone, Debug)]
+pub struct FlagUse {
+    pub flag: String,
+    /// 1-based line of the getter call.
+    pub line: usize,
+    pub in_test: bool,
+}
+
+/// Per-file slice of the index.
+pub struct FileIndex<'a> {
+    pub path: &'a str,
+    pub lines: &'a [Line],
+    pub enums: Vec<EnumInfo>,
+    pub flags: Vec<FlagUse>,
+    /// `(fn name, 1-based declaration line)` for every `pub fn`.
+    pub pub_fns: Vec<(String, usize)>,
+}
+
+/// The whole scanned tree, indexed. Files keep the deterministic order
+/// the driver scanned them in (sorted by path).
+pub struct RepoIndex<'a> {
+    pub files: Vec<FileIndex<'a>>,
+}
+
+impl<'a> RepoIndex<'a> {
+    pub fn build(scanned: &'a [(String, Vec<Line>)]) -> RepoIndex<'a> {
+        RepoIndex {
+            files: scanned
+                .iter()
+                .map(|(path, lines)| FileIndex::build(path, lines))
+                .collect(),
+        }
+    }
+
+    pub fn get(&self, path: &str) -> Option<&FileIndex<'a>> {
+        self.files.iter().find(|f| f.path == path)
+    }
+}
+
+impl<'a> FileIndex<'a> {
+    pub fn build(path: &'a str, lines: &'a [Line]) -> FileIndex<'a> {
+        FileIndex {
+            path,
+            lines,
+            enums: extract_enums(lines),
+            flags: extract_flags(lines),
+            pub_fns: extract_pub_fns(lines),
+        }
+    }
+
+    /// Every string literal in the file joined by newlines — the
+    /// "rendered text" of the file (help screens, println templates).
+    pub fn literal_text(&self) -> String {
+        let mut out = String::new();
+        for line in self.lines {
+            for (_, t) in &line.lits {
+                out.push_str(t);
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// 0-based inclusive line-index range of `fn <fn_name>` inside any
+    /// `impl <type_name>` block.
+    pub fn fn_range(&self, type_name: &str, fn_name: &str) -> Option<(usize, usize)> {
+        fn_range(self.lines, type_name, fn_name)
+    }
+
+    /// Match-arm key literals inside a 0-based line range: literals that
+    /// appear left of a `=>` on their line (TOML/JSON dispatch keys).
+    pub fn arm_keys(&self, range: (usize, usize)) -> Vec<(String, usize)> {
+        let mut out = Vec::new();
+        for line in &self.lines[range.0..=range.1.min(self.lines.len() - 1)] {
+            let Some(arrow) = line.code.find("=>") else {
+                continue;
+            };
+            let arrow_col = line.code[..arrow].chars().count();
+            for (col, t) in &line.lits {
+                if *col < arrow_col {
+                    out.push((t.clone(), line.number));
+                }
+            }
+        }
+        out
+    }
+
+    /// Key literals read through getter calls inside a 0-based line
+    /// range: a literal counts when it is the first argument of a call
+    /// whose callee is `get`, `opt_*`, or `*_arr` (the record-parsing
+    /// helpers), so default-value literals never register as keys.
+    pub fn getter_keys(&self, range: (usize, usize)) -> Vec<(String, usize)> {
+        let mut out = Vec::new();
+        for line in &self.lines[range.0..=range.1.min(self.lines.len() - 1)] {
+            for (col, t) in &line.lits {
+                if *col == 0 {
+                    continue; // continuation of a multi-line literal
+                }
+                let Some(callee) = callee_before(&line.code, *col) else {
+                    continue;
+                };
+                if callee == "get" || callee.starts_with("opt_") || callee.ends_with("_arr") {
+                    out.push((t.clone(), line.number));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// `[a-z0-9_]+` starting with a letter — the shape of a JSON/TOML key.
+pub fn is_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.starts_with(|c: char| c.is_ascii_lowercase())
+        && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// `[a-z0-9-]+` starting with a letter — the shape of a CLI flag name.
+pub fn is_flag(s: &str) -> bool {
+    !s.is_empty()
+        && s.starts_with(|c: char| c.is_ascii_lowercase())
+        && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-')
+}
+
+/// True when `text` documents `--<flag>` at a flag boundary (so
+/// `--seeds` never satisfies a `--seed` lookup).
+pub fn doc_has_flag(text: &str, flag: &str) -> bool {
+    let needle = format!("--{flag}");
+    let bytes = text.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = text[from..].find(&needle) {
+        let end = from + rel + needle.len();
+        let boundary = match bytes.get(end) {
+            Some(b) => !(b.is_ascii_lowercase() || b.is_ascii_digit() || *b == b'-'),
+            None => true,
+        };
+        if boundary {
+            return true;
+        }
+        from = from + rel + 1;
+    }
+    false
+}
+
+/// The callee of the call whose first argument is the literal starting
+/// at char column `content_col`: walks back over the opening quote and
+/// optional spaces, requires a `(`, and returns the identifier before
+/// it — `None` when the literal is not a call's first argument.
+fn callee_before(code: &str, content_col: usize) -> Option<String> {
+    let chars: Vec<char> = code.chars().collect();
+    let mut j = content_col.checked_sub(1)?; // opening quote
+    if chars.get(j) != Some(&'"') {
+        return None;
+    }
+    while j > 0 && chars[j - 1] == ' ' {
+        j -= 1;
+    }
+    if j == 0 || chars[j - 1] != '(' {
+        return None;
+    }
+    j -= 1; // the paren
+    while j > 0 && chars[j - 1] == ' ' {
+        j -= 1;
+    }
+    let end = j;
+    while j > 0 && (chars[j - 1].is_alphanumeric() || chars[j - 1] == '_') {
+        j -= 1;
+    }
+    if j == end {
+        return None;
+    }
+    Some(chars[j..end].iter().collect())
+}
+
+/// The argument span of a call whose `(` sits at char column
+/// `open_col`: text between the parens, balanced on this line, falling
+/// back to the rest of the line for multi-line calls.
+pub fn call_arg_span(code: &str, open_col: usize) -> String {
+    let chars: Vec<char> = code.chars().collect();
+    if chars.get(open_col) != Some(&'(') {
+        return String::new();
+    }
+    let mut depth = 0i32;
+    for (k, &c) in chars.iter().enumerate().skip(open_col) {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return chars[open_col + 1..k].iter().collect();
+                }
+            }
+            _ => {}
+        }
+    }
+    chars[open_col + 1..].iter().collect()
+}
+
+fn extract_enums(lines: &[Line]) -> Vec<EnumInfo> {
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let Some(p) = find_word(&line.code, "enum") else {
+            continue;
+        };
+        let Some(name) = super::rules::leading_ident(line.code[p + 4..].trim_start()) else {
+            continue;
+        };
+        if !name.starts_with(|c: char| c.is_ascii_uppercase()) {
+            continue;
+        }
+        // Variants: depth-1 lines of the enum body, leading identifier
+        // (skipping attributes and doc comments, which the code channel
+        // already blanks or leaves as `#[...]`).
+        let mut variants = Vec::new();
+        let mut depth = 0i32;
+        let mut started = false;
+        for body in &lines[i..] {
+            let depth_at_start = depth;
+            for c in body.code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if started && depth_at_start == 1 {
+                let t = body.code.trim();
+                if !t.starts_with('#') {
+                    if let Some(v) = super::rules::leading_ident(t) {
+                        if v.starts_with(|c: char| c.is_ascii_uppercase()) {
+                            variants.push((v, body.number));
+                        }
+                    }
+                }
+            }
+            if started && depth <= 0 {
+                break;
+            }
+        }
+        out.push(EnumInfo { name, decl_line: line.number, variants });
+    }
+    out
+}
+
+fn extract_flags(lines: &[Line]) -> Vec<FlagUse> {
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        for getter in FLAG_GETTERS {
+            let needle = format!("args.{getter}(");
+            let mut from = 0usize;
+            while let Some(rel) = line.code[from..].find(&needle) {
+                let at = from + rel;
+                from = at + 1;
+                // Word boundary on the receiver: `margs.get(` is not a
+                // flag read.
+                let before_ok = at == 0
+                    || !line.code[..at]
+                        .ends_with(|c: char| c.is_alphanumeric() || c == '_');
+                if !before_ok {
+                    continue;
+                }
+                let open_col = line.code[..at + needle.len()].chars().count() - 1;
+                // First literal after the opening paren — on this line,
+                // or (multi-line call) the first literal on the next.
+                let lit = line
+                    .lits
+                    .iter()
+                    .find(|(col, _)| *col > open_col)
+                    .or_else(|| lines.get(i + 1).and_then(|l| l.lits.first()));
+                if let Some((_, flag)) = lit {
+                    if is_flag(flag) {
+                        out.push(FlagUse {
+                            flag: flag.clone(),
+                            line: line.number,
+                            in_test: line.in_test,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn extract_pub_fns(lines: &[Line]) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for line in lines {
+        let Some(p) = find_word(&line.code, "fn") else {
+            continue;
+        };
+        if find_word(&line.code[..p], "pub").is_none() {
+            continue;
+        }
+        if let Some(name) = super::rules::leading_ident(line.code[p + 2..].trim_start()) {
+            out.push((name, line.number));
+        }
+    }
+    out
+}
+
+/// 0-based inclusive line range of the brace block opened at or after
+/// line `start`.
+pub fn region_end(lines: &[Line], start: usize) -> usize {
+    let mut depth = 0i32;
+    let mut started = false;
+    for (i, line) in lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    started = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if started && depth <= 0 {
+            return i;
+        }
+    }
+    lines.len().saturating_sub(1)
+}
+
+/// 0-based inclusive line range of `fn <fn_name>` inside any
+/// `impl <type_name>` block.
+pub fn fn_range(lines: &[Line], type_name: &str, fn_name: &str) -> Option<(usize, usize)> {
+    use super::scan::has_word;
+    for (i, line) in lines.iter().enumerate() {
+        if !(has_word(&line.code, "impl") && has_word(&line.code, type_name)) {
+            continue;
+        }
+        let end = region_end(lines, i);
+        let mut j = i + 1;
+        while j <= end {
+            if has_word(&lines[j].code, "fn") && has_word(&lines[j].code, fn_name) {
+                return Some((j, region_end(lines, j).min(end)));
+            }
+            j += 1;
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan::scan;
+
+    #[test]
+    fn enum_variants_extracted_with_lines() {
+        let src = "/// doc\npub enum Payload {\n    /// seeds\n    Seeds(Vec<u8>),\n    \
+                   GapFill { msgs: Vec<u8>, quantized: bool },\n}\n";
+        let lines = scan(src);
+        let enums = extract_enums(&lines);
+        assert_eq!(enums.len(), 1);
+        assert_eq!(enums[0].name, "Payload");
+        assert_eq!(enums[0].decl_line, 2);
+        let names: Vec<&str> = enums[0].variants.iter().map(|(v, _)| v.as_str()).collect();
+        assert_eq!(names, vec!["Seeds", "GapFill"]);
+        assert_eq!(enums[0].variants[1].1, 5);
+    }
+
+    #[test]
+    fn flags_extracted_only_from_args_receiver() {
+        let src = "fn f(args: &Args, j: &Json) {\n    \
+                   let a = args.get_or(\"alpha\", \"x\");\n    \
+                   let b = j.get(\"not_a_flag\");\n    \
+                   let c = margs.get(\"also_not\");\n    \
+                   let d = args.has(\"beta\");\n\
+                   }\n";
+        let lines = scan(src);
+        let flags = extract_flags(&lines);
+        let names: Vec<&str> = flags.iter().map(|f| f.flag.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "beta"]);
+        assert_eq!(flags[0].line, 2);
+    }
+
+    #[test]
+    fn multiline_getter_takes_next_line_literal() {
+        let src = "fn f(args: &Args) {\n    let k = args.get_list(\n        \
+                   \"topologies\",\n        &[\"ring\"],\n    );\n}\n";
+        let lines = scan(src);
+        let flags = extract_flags(&lines);
+        assert_eq!(flags.len(), 1);
+        assert_eq!(flags[0].flag, "topologies");
+    }
+
+    #[test]
+    fn fn_range_scopes_to_impl_block() {
+        let src = "impl Other {\n    pub fn to_json(&self) {}\n}\n\
+                   impl RunRecord {\n    pub fn to_json(&self) {\n        body();\n    }\n}\n";
+        let lines = scan(src);
+        let (a, b) = fn_range(&lines, "RunRecord", "to_json").unwrap();
+        assert_eq!((a, b), (4, 6));
+        assert!(fn_range(&lines, "Missing", "to_json").is_none());
+    }
+
+    #[test]
+    fn arm_and_getter_keys() {
+        let src = "impl C {\n    fn apply(&mut self, v: &V) {\n        match k {\n            \
+                   \"alpha_rate\" => self.a = v.as_f64()?,\n            \
+                   other => bail!(\"unknown {other}\"),\n        }\n        \
+                   let x = r.get(\"gmp\")?;\n        \
+                   let y = opt_str(\"rates\", \"uniform\");\n    }\n}\n";
+        let lines = scan(src);
+        let idx = FileIndex::build("rust/src/config/mod.rs", &lines);
+        let range = idx.fn_range("C", "apply").unwrap();
+        let arms: Vec<&str> = idx.arm_keys(range).iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>();
+        assert_eq!(arms, vec!["alpha_rate"]);
+        let gets: Vec<String> = idx.getter_keys(range).into_iter().map(|(k, _)| k).collect();
+        // default value "uniform" is not a key; "unknown {other}" is not
+        // a getter first-arg
+        assert_eq!(gets, vec!["gmp".to_string(), "rates".to_string()]);
+    }
+
+    #[test]
+    fn flag_doc_lookup_is_boundary_aware() {
+        assert!(doc_has_flag("use --seed N to pin it", "seed"));
+        assert!(!doc_has_flag("use --seeds 0,1,2", "seed"));
+        assert!(doc_has_flag("both --seeds and --seed", "seed"));
+        assert!(doc_has_flag("(--flood-steps)", "flood-steps"));
+    }
+
+    #[test]
+    fn key_and_flag_shapes() {
+        assert!(is_key("total_bytes"));
+        assert!(!is_key("total_bytes={}"));
+        assert!(!is_key(""));
+        assert!(is_flag("flood-steps"));
+        assert!(!is_flag("Flood"));
+    }
+
+    #[test]
+    fn call_spans_balance_parens() {
+        assert_eq!(call_arg_span("Rng::new(mix(seed, 1))", 8), "mix(seed, 1)");
+        assert_eq!(call_arg_span("Rng::new(seed ^", 8), "seed ^");
+    }
+}

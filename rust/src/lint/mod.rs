@@ -24,6 +24,22 @@
 //!   serialized, parsed, and consumed by the results pipeline (or carry
 //!   an allow explaining why not).
 //!
+//! The v2 rules work cross-file, over a repo-wide symbol/reference
+//! index ([`index`]) built from the same scanner output:
+//!
+//! * `wire-conservation` — every `Payload` variant has a `wire_bytes`
+//!   arm, and every non-test construction site reaches a
+//!   send/broadcast call.
+//! * `rng-hygiene` — outside `rng/`, seeds fed to `Rng::new`/`fold_in`
+//!   must be derived via `rng::mix`, never raw `seed ^ …` arithmetic.
+//! * `cli-doc-drift` — every dispatched `--flag` appears in the
+//!   main.rs help text and in EXPERIMENTS.md; every TOML key has a CLI
+//!   counterpart.
+//! * `json-parity` — `RunRecord::to_json` and `from_json` agree on the
+//!   exact key set.
+//! * `bench-ledger-drift` — every `BENCH_*.json` ledger key is emitted
+//!   by a bench and its `--check` gate runs in CI.
+//!
 //! Findings are suppressed by an inline annotation written as a line
 //! comment: the marker `sflint:` followed by `allow(<rule-name>,
 //! reason = "<why this site is sound>")`. The reason is mandatory —
@@ -32,9 +48,12 @@
 //! covers its own line and the line directly below, so both trailing
 //! comments and comment-above style work.
 //!
-//! Entry points: `seedflood lint [--root DIR]` or the standalone
-//! `sflint` binary; both exit non-zero on any unsuppressed finding.
+//! Entry points: `seedflood lint [--root DIR] [--format text|json]
+//! [--rule NAME]` or the standalone `sflint` binary. Exit codes: 0 for
+//! a clean tree, 1 when unsuppressed findings exist, 2 on usage errors
+//! (unknown format or rule name).
 
+pub mod index;
 pub mod rules;
 pub mod scan;
 
@@ -51,6 +70,11 @@ pub enum Rule {
     ThreadEscape,
     UnsafeAudit,
     AccountingConservation,
+    WireConservation,
+    RngHygiene,
+    CliDocDrift,
+    JsonParity,
+    BenchLedgerDrift,
     /// Malformed allow annotation — reported, never suppressible.
     InvalidAllow,
 }
@@ -63,6 +87,11 @@ impl Rule {
             Rule::ThreadEscape => "thread-escape",
             Rule::UnsafeAudit => "unsafe-audit",
             Rule::AccountingConservation => "accounting-conservation",
+            Rule::WireConservation => "wire-conservation",
+            Rule::RngHygiene => "rng-hygiene",
+            Rule::CliDocDrift => "cli-doc-drift",
+            Rule::JsonParity => "json-parity",
+            Rule::BenchLedgerDrift => "bench-ledger-drift",
             Rule::InvalidAllow => "invalid-allow",
         }
     }
@@ -75,6 +104,11 @@ impl Rule {
             "thread-escape" => Some(Rule::ThreadEscape),
             "unsafe-audit" => Some(Rule::UnsafeAudit),
             "accounting-conservation" => Some(Rule::AccountingConservation),
+            "wire-conservation" => Some(Rule::WireConservation),
+            "rng-hygiene" => Some(Rule::RngHygiene),
+            "cli-doc-drift" => Some(Rule::CliDocDrift),
+            "json-parity" => Some(Rule::JsonParity),
+            "bench-ledger-drift" => Some(Rule::BenchLedgerDrift),
             _ => None,
         }
     }
@@ -186,6 +220,14 @@ pub struct LintReport {
 /// This is the seam the fixture tests drive; [`run_repo`] feeds it from
 /// disk. Findings come back sorted by (path, line, rule).
 pub fn lint_files(files: &[(String, String)]) -> Vec<Finding> {
+    lint_files_with_docs(files, &[])
+}
+
+/// Like [`lint_files`], with non-Rust doc inputs (`EXPERIMENTS.md`,
+/// `ci.yml`, `BENCH_*.json` ledgers) for the doc-coupled drift rules;
+/// those rules opt out when their inputs are absent, so fixture sets
+/// only engage what they provide.
+pub fn lint_files_with_docs(files: &[(String, String)], docs: &[(String, String)]) -> Vec<Finding> {
     let scanned: Vec<(String, Vec<scan::Line>)> = files
         .iter()
         .map(|(path, src)| (path.clone(), scan::scan(src)))
@@ -200,6 +242,8 @@ pub fn lint_files(files: &[(String, String)]) -> Vec<Finding> {
         allows_by_path.push((path.as_str(), allows));
     }
     findings.extend(rules::check_accounting(&scanned));
+    let idx = index::RepoIndex::build(&scanned);
+    findings.extend(rules::check_cross_file(&idx, docs));
 
     findings.retain(|f| {
         if f.rule == Rule::InvalidAllow {
@@ -225,6 +269,15 @@ pub fn lint_files(files: &[(String, String)]) -> Vec<Finding> {
 
 /// Directories scanned relative to the repo root (when present).
 const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "benches", "examples"];
+
+/// Non-Rust inputs the doc-coupled drift rules read (when present).
+const DOC_INPUTS: &[&str] = &[
+    "EXPERIMENTS.md",
+    ".github/workflows/ci.yml",
+    "BENCH_scale.json",
+    "BENCH_event.json",
+    "BENCH_table4.json",
+];
 
 /// Lint the repository rooted at `root`. Errors if `root` does not look
 /// like the seedflood repo (no `rust/src`).
@@ -255,8 +308,15 @@ pub fn run_repo(root: &Path) -> crate::Result<LintReport> {
         files.push((rel, src));
     }
     files.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut docs: Vec<(String, String)> = Vec::new();
+    for rel in DOC_INPUTS {
+        let p = root.join(rel);
+        if p.is_file() {
+            docs.push((rel.to_string(), fs::read_to_string(&p)?));
+        }
+    }
     Ok(LintReport {
-        findings: lint_files(&files),
+        findings: lint_files_with_docs(&files, &docs),
         files_scanned: files.len(),
     })
 }
@@ -277,16 +337,70 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> crate::Result<()> {
     Ok(())
 }
 
-/// `seedflood lint [--root DIR]` — print findings, error when any exist
-/// so CI fails the build.
+/// `seedflood lint [--root DIR] [--format text|json] [--rule NAME]` —
+/// print findings, error when any exist so CI fails the build.
+///
+/// Exit codes: 0 clean, 1 unsuppressed findings, 2 usage error. The
+/// JSON output is a stable array of objects with fields `rule`, `file`,
+/// `line`, `message`, and `allow_hint` (the annotation that would
+/// suppress the finding) — consumed by the CI annotation step.
 pub fn cli_main(args: &Args) -> crate::Result<()> {
     let root = PathBuf::from(args.get_or("root", "."));
-    let report = run_repo(&root)?;
-    for f in &report.findings {
-        println!("{f}");
+    let format = args.get_or("format", "text");
+    if format != "text" && format != "json" {
+        eprintln!("sflint: unknown --format `{format}` (expected `text` or `json`)");
+        std::process::exit(2);
+    }
+    let rule_filter = match args.get("rule") {
+        None => None,
+        Some(name) => match Rule::from_name(name) {
+            Some(r) => Some(r),
+            None => {
+                eprintln!("sflint: unknown rule `{name}` for --rule");
+                std::process::exit(2);
+            }
+        },
+    };
+
+    let mut report = run_repo(&root)?;
+    if let Some(rule) = rule_filter {
+        // invalid-allow stays visible under any filter: a malformed
+        // annotation can mask findings of the filtered rule itself.
+        report
+            .findings
+            .retain(|f| f.rule == rule || f.rule == Rule::InvalidAllow);
+    }
+
+    if format == "json" {
+        let arr: Vec<crate::util::json::Json> = report
+            .findings
+            .iter()
+            .map(|f| {
+                crate::util::json::Json::obj(vec![
+                    ("rule", crate::util::json::Json::str(f.rule.name())),
+                    ("file", crate::util::json::Json::str(&f.path)),
+                    ("line", crate::util::json::Json::num(f.line as f64)),
+                    ("message", crate::util::json::Json::str(&f.msg)),
+                    (
+                        "allow_hint",
+                        crate::util::json::Json::str(&format!(
+                            "// sflint: allow({}, reason = \"...\")",
+                            f.rule.name()
+                        )),
+                    ),
+                ])
+            })
+            .collect();
+        println!("{}", crate::util::json::Json::Arr(arr).to_string_pretty());
+    } else {
+        for f in &report.findings {
+            println!("{f}");
+        }
+        if report.findings.is_empty() {
+            println!("sflint: {} file(s) scanned, no findings", report.files_scanned);
+        }
     }
     if report.findings.is_empty() {
-        println!("sflint: {} file(s) scanned, no findings", report.files_scanned);
         Ok(())
     } else {
         anyhow::bail!(

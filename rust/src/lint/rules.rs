@@ -9,13 +9,24 @@
 //! * `unordered-iter`, `wall-clock`, `thread-escape` apply to library
 //!   code only (paths under `rust/src/`) and skip `#[cfg(test)] mod`
 //!   regions — tests may time, thread, and hash-iterate freely.
+//! * `rng-hygiene` applies to library code outside `rust/src/rng/`
+//!   (the mixer itself may do raw seed arithmetic) and skips test
+//!   regions.
 //! * `unsafe-audit` applies to every scanned file including tests,
 //!   benches and examples: a SAFETY argument is documentation, and
 //!   documentation is owed everywhere.
 //! * `accounting-conservation` is a cross-file structural check over
 //!   the fixed trio net/mod.rs ↔ metrics/mod.rs ↔ sim/mod.rs; it is
 //!   skipped when the trio is absent so fixture sets can opt in.
+//! * `wire-conservation` and `json-parity` anchor on net/mod.rs and
+//!   metrics/mod.rs respectively and opt out the same way (no
+//!   `enum Payload` / no `RunRecord` json pair present → skipped).
+//! * `cli-doc-drift` and `bench-ledger-drift` additionally consume the
+//!   non-Rust doc inputs (`EXPERIMENTS.md`, CI workflow, `BENCH_*.json`
+//!   ledgers) threaded through [`super::lint_files_with_docs`]; they
+//!   opt out when those inputs are absent.
 
+use super::index::{self, RepoIndex};
 use super::scan::{find_word, has_word, Line};
 use super::{Finding, Rule};
 
@@ -68,7 +79,18 @@ pub fn check_file(path: &str, lines: &[Line]) -> Vec<Finding> {
         check_wall_clock(path, lines, &mut out);
         check_thread_escape(path, lines, &mut out);
         check_unordered_iter(path, lines, &mut out);
+        check_rng_hygiene(path, lines, &mut out);
     }
+    out
+}
+
+/// Run every cross-file rule over the repo index and doc inputs.
+pub fn check_cross_file(idx: &RepoIndex, docs: &[(String, String)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    out.extend(check_wire_conservation(idx));
+    out.extend(check_json_parity(idx));
+    out.extend(check_cli_doc_drift(idx, docs));
+    out.extend(check_bench_ledger_drift(idx, docs));
     out
 }
 
@@ -159,14 +181,14 @@ fn word_positions(hay: &str, needle: &str) -> Vec<usize> {
     at
 }
 
-fn is_ident(s: &str) -> bool {
+pub(crate) fn is_ident(s: &str) -> bool {
     !s.is_empty()
         && s.chars().all(|c| c.is_alphanumeric() || c == '_')
         && !s.starts_with(|c: char| c.is_ascii_digit())
 }
 
 /// The identifier ending at the end of `s`, if any.
-fn trailing_ident(s: &str) -> Option<String> {
+pub(crate) fn trailing_ident(s: &str) -> Option<String> {
     let end = s.len();
     let start = s
         .char_indices()
@@ -183,7 +205,7 @@ fn trailing_ident(s: &str) -> Option<String> {
 }
 
 /// The identifier starting at the beginning of `s`, if any.
-fn leading_ident(s: &str) -> Option<String> {
+pub(crate) fn leading_ident(s: &str) -> Option<String> {
     let end = s
         .char_indices()
         .take_while(|(_, c)| c.is_alphanumeric() || *c == '_')
@@ -346,6 +368,82 @@ fn check_unsafe_audit(path: &str, lines: &[Line], out: &mut Vec<Finding>) {
             );
         }
     }
+}
+
+// --------------------------------------------------------------- rng-hygiene
+
+/// Seed sinks that apply no input mixing of their own: a raw
+/// `seed ^ label` fed here gives correlated streams for nearby labels
+/// (the PR 4 sampler bug). `Rng::fold_in` is itself a mixer with a
+/// decorrelation draw, so literal stream labels (`seed ^ 0x10AA`) are
+/// fine there — but deriving by another *variable* (`seed ^ i`) is the
+/// exact adjacent-stream correlation the mixer exists to prevent.
+const RNG_RAW_SINKS: &[&str] = &["Rng::new", "BatchSampler::new"];
+
+fn check_rng_hygiene(path: &str, lines: &[Line], out: &mut Vec<Finding>) {
+    if path.starts_with("rust/src/rng/") {
+        return; // the mixer itself does raw seed arithmetic
+    }
+    for line in lines {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        for sink in RNG_RAW_SINKS {
+            for p in word_positions(code, sink) {
+                let open = code[..p + sink.len()].chars().count();
+                let span = index::call_arg_span(code, open);
+                if span.contains('^') && !span.contains("mix(") {
+                    push(
+                        out,
+                        path,
+                        line.number,
+                        Rule::RngHygiene,
+                        format!(
+                            "raw `seed ^ …` fed to `{sink}` — xor of a label or index \
+                             gives correlated streams for nearby inputs; derive the \
+                             seed via `rng::mix(seed, label)` instead"
+                        ),
+                    );
+                }
+            }
+        }
+        for p in word_positions(code, "fold_in") {
+            let open = code[..p + "fold_in".len()].chars().count();
+            let span = index::call_arg_span(code, open);
+            if span_has_ident_xor(&span) {
+                push(
+                    out,
+                    path,
+                    line.number,
+                    Rule::RngHygiene,
+                    "variable-by-variable xor (`seed ^ i`) fed to `Rng::fold_in` — \
+                     nearby indices collide across seeds; pass the index as \
+                     `fold_in`'s second argument or derive via `rng::mix`"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// True when `span` contains `a ^ b` with identifiers on both sides
+/// (numeric literals on either side do not count).
+fn span_has_ident_xor(span: &str) -> bool {
+    for (i, c) in span.char_indices() {
+        if c != '^' {
+            continue;
+        }
+        let lhs = trailing_ident(span[..i].trim_end());
+        let rhs = leading_ident(span[i + 1..].trim_start());
+        let ident_side = |s: Option<String>| {
+            s.is_some_and(|id| !id.starts_with(|c: char| c.is_ascii_digit()))
+        };
+        if ident_side(lhs) && ident_side(rhs) {
+            return true;
+        }
+    }
+    false
 }
 
 // --------------------------------------------------- accounting-conservation
@@ -561,10 +659,444 @@ pub fn check_accounting(files: &[(String, Vec<Line>)]) -> Vec<Finding> {
     out
 }
 
+// --------------------------------------------------------- wire-conservation
+
+/// Every `Payload` variant must have a `wire_bytes` match arm (no
+/// uncountable payload kinds), and every non-test construction site
+/// must reach `Network::send`/`broadcast` — on its own line or inside
+/// its enclosing fn — so no payload is built that the byte ledger never
+/// sees. Anchored on `net/mod.rs`; opts out when no `enum Payload` is
+/// present there (fixture sets opt in by providing one).
+fn check_wire_conservation(idx: &RepoIndex) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(net) = idx.get(ACCT_FILE) else {
+        return out;
+    };
+    let Some(payload) = net.enums.iter().find(|e| e.name == "Payload") else {
+        return out;
+    };
+
+    let wire_bytes = fn_body_text(net.lines, "Payload", "wire_bytes");
+    if wire_bytes.is_empty() {
+        push(
+            &mut out,
+            ACCT_FILE,
+            payload.decl_line,
+            Rule::WireConservation,
+            "`enum Payload` has no `wire_bytes` method — every payload kind must \
+             define its on-wire cost"
+                .to_string(),
+        );
+        return out;
+    }
+    for (variant, line) in &payload.variants {
+        if !has_word(&wire_bytes, variant) {
+            push(
+                &mut out,
+                ACCT_FILE,
+                *line,
+                Rule::WireConservation,
+                format!(
+                    "Payload variant `{variant}` has no `wire_bytes` match arm — \
+                     its bytes would never be counted"
+                ),
+            );
+        }
+    }
+
+    for file in &idx.files {
+        if file.path.starts_with("rust/tests/") {
+            continue; // integration tests are test code wholesale
+        }
+        for (i, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for (variant, _) in &payload.variants {
+                let needle = format!("Payload::{variant}");
+                for p in word_positions(&line.code, &needle) {
+                    if is_match_position(&line.code, p, needle.len()) {
+                        continue;
+                    }
+                    if line_sends(&line.code) || enclosing_fn_sends(file.lines, i) {
+                        continue;
+                    }
+                    push(
+                        &mut out,
+                        file.path,
+                        line.number,
+                        Rule::WireConservation,
+                        format!(
+                            "`Payload::{variant}` constructed outside any \
+                             send/broadcast path — bytes built here never reach the \
+                             accounting ledger"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+/// True when the `Payload::<V>` occurrence at byte offset `p` is a
+/// pattern (match arm, `let`-destructure, or-pattern, `matches!`), not
+/// a construction.
+fn is_match_position(code: &str, p: usize, len: usize) -> bool {
+    let before = code[..p].trim_end();
+    if before.ends_with('|') || find_word(code, "matches!").is_some() {
+        return true;
+    }
+    if let Some(id) = trailing_ident(before) {
+        if id == "let" {
+            return true;
+        }
+    }
+    // Skip the payload's own (...) or {...} group, then look for a
+    // match-arm arrow or an or-pattern bar.
+    let after = code[p + len..].trim_start();
+    let after = skip_group(after, '(', ')');
+    let after = skip_group(after, '{', '}');
+    let after = after.trim_start();
+    after.starts_with("=>") || after.starts_with('|')
+}
+
+/// If `s` opens with `open`, drop the balanced group (unterminated
+/// groups drop the rest — multi-line constructions resolve via the
+/// enclosing-fn check instead).
+fn skip_group(s: &str, open: char, close: char) -> &str {
+    let t = s.trim_start();
+    if !t.starts_with(open) {
+        return s;
+    }
+    let mut depth = 0i32;
+    for (i, c) in t.char_indices() {
+        if c == open {
+            depth += 1;
+        } else if c == close {
+            depth -= 1;
+            if depth == 0 {
+                return &t[i + close.len_utf8()..];
+            }
+        }
+    }
+    ""
+}
+
+fn line_sends(code: &str) -> bool {
+    code.contains(".send(") || code.contains(".broadcast(") || code.contains("send_on_edge(")
+}
+
+/// Does the fn enclosing line-index `at` contain a send/broadcast call?
+fn enclosing_fn_sends(lines: &[Line], at: usize) -> bool {
+    let mut j = at;
+    loop {
+        if has_word(&lines[j].code, "fn") {
+            let end = region_end(lines, j);
+            if end >= at {
+                return lines[j..=end].iter().any(|l| line_sends(&l.code));
+            }
+        }
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+    }
+}
+
+// ------------------------------------------------------------- json-parity
+
+/// Every key `RunRecord::to_json` writes must be read back by
+/// `from_json` and vice versa — the whole-record generalization of the
+/// accounting-conservation serialization leg (the PR 5 fig6 grid-shift
+/// was exactly a written-but-never-parsed field). Key extraction:
+/// writes are key-shaped string literals in `to_json`; reads are
+/// first-argument literals of `get`/`opt_*`/`*_arr` calls in
+/// `from_json` (plus `EvalPoint::from_json` for the nested eval
+/// points), so default-value literals never count as keys.
+fn check_json_parity(idx: &RepoIndex) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(metrics) = idx.get(RECORD_FILE) else {
+        return out;
+    };
+    let (Some(to_r), Some(from_r)) = (
+        metrics.fn_range("RunRecord", "to_json"),
+        metrics.fn_range("RunRecord", "from_json"),
+    ) else {
+        return out;
+    };
+
+    let mut written: Vec<(String, usize)> = Vec::new();
+    for line in &metrics.lines[to_r.0..=to_r.1] {
+        for (_, t) in &line.lits {
+            if index::is_key(t) && !written.iter().any(|(k, _)| k == t) {
+                written.push((t.clone(), line.number));
+            }
+        }
+    }
+    let mut read: Vec<(String, usize)> = Vec::new();
+    let mut ranges = vec![from_r];
+    if let Some(er) = metrics.fn_range("EvalPoint", "from_json") {
+        ranges.push(er);
+    }
+    for r in ranges {
+        for (k, line) in metrics.getter_keys(r) {
+            if index::is_key(&k) && !read.iter().any(|(q, _)| *q == k) {
+                read.push((k, line));
+            }
+        }
+    }
+
+    for (k, line) in &written {
+        if !read.iter().any(|(q, _)| q == k) {
+            push(
+                &mut out,
+                RECORD_FILE,
+                *line,
+                Rule::JsonParity,
+                format!(
+                    "RunRecord::to_json writes key `{k}` that from_json never \
+                     reads — the field would silently vanish on reload"
+                ),
+            );
+        }
+    }
+    for (k, line) in &read {
+        if !written.iter().any(|(q, _)| q == k) {
+            push(
+                &mut out,
+                RECORD_FILE,
+                *line,
+                Rule::JsonParity,
+                format!(
+                    "RunRecord::from_json reads key `{k}` that to_json never \
+                     writes — it can only ever see the default"
+                ),
+            );
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------------- cli-doc-drift
+
+const MAIN_FILE: &str = "rust/src/main.rs";
+const CONFIG_FILE: &str = "rust/src/config/mod.rs";
+const EXPERIMENTS_DOC: &str = "EXPERIMENTS.md";
+
+/// Every CLI flag dispatched anywhere in `rust/src` must appear as
+/// `--<flag>` in the `main.rs` help text AND in EXPERIMENTS.md; every
+/// TOML key in `ExperimentConfig::apply_toml` must have a same-named
+/// (underscores → dashes) CLI flag or carry an allow. Opts out when
+/// the EXPERIMENTS.md doc input or main.rs is absent.
+fn check_cli_doc_drift(idx: &RepoIndex, docs: &[(String, String)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some((_, experiments_doc)) = docs.iter().find(|(p, _)| p == EXPERIMENTS_DOC) else {
+        return out;
+    };
+    let Some(main) = idx.get(MAIN_FILE) else {
+        return out;
+    };
+    let help = main.literal_text();
+
+    // First non-test read site per flag, across library code.
+    let mut flags: Vec<(String, &str, usize)> = Vec::new();
+    for file in &idx.files {
+        if !file.path.starts_with("rust/src/") {
+            continue;
+        }
+        for u in &file.flags {
+            if !u.in_test && !flags.iter().any(|(f, _, _)| *f == u.flag) {
+                flags.push((u.flag.clone(), file.path, u.line));
+            }
+        }
+    }
+    flags.sort();
+
+    for (flag, path, line) in &flags {
+        if !index::doc_has_flag(&help, flag) {
+            push(
+                &mut out,
+                path,
+                *line,
+                Rule::CliDocDrift,
+                format!("flag `--{flag}` is dispatched here but missing from the main.rs help text"),
+            );
+        }
+        if !index::doc_has_flag(experiments_doc, flag) {
+            push(
+                &mut out,
+                path,
+                *line,
+                Rule::CliDocDrift,
+                format!("flag `--{flag}` is dispatched here but undocumented in EXPERIMENTS.md"),
+            );
+        }
+    }
+
+    if let Some(cfg) = idx.get(CONFIG_FILE) {
+        if let Some(range) = cfg.fn_range("ExperimentConfig", "apply_toml") {
+            for (key, line) in cfg.arm_keys(range) {
+                if !index::is_key(&key) {
+                    continue;
+                }
+                let flag = key.replace('_', "-");
+                if !flags.iter().any(|(f, _, _)| *f == flag) {
+                    push(
+                        &mut out,
+                        CONFIG_FILE,
+                        line,
+                        Rule::CliDocDrift,
+                        format!(
+                            "TOML key `{key}` has no CLI counterpart `--{flag}` — \
+                             config files can express what the CLI cannot"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------ bench-ledger-drift
+
+/// Every key in a committed `BENCH_*.json` perf ledger must be emitted
+/// by a bench under `benches/` that references that ledger file (exact
+/// literal, or `format!` template prefix), and the CI workflow must
+/// carry the ledger's enforcing `--check` gate — a ledger entry nothing
+/// regenerates, or a gate CI never runs, is drift waiting to be trusted.
+/// Opts out when no `BENCH_*.json` doc inputs are provided.
+fn check_bench_ledger_drift(idx: &RepoIndex, docs: &[(String, String)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let ci = docs.iter().find(|(p, _)| p.ends_with("ci.yml")).map(|(_, t)| t.as_str());
+    for (ledger_path, ledger_text) in docs {
+        if !(ledger_path.starts_with("BENCH_") && ledger_path.ends_with(".json")) {
+            continue;
+        }
+
+        // Benches that own this ledger: any code literal mentions it.
+        let owners: Vec<&index::FileIndex> = idx
+            .files
+            .iter()
+            .filter(|f| {
+                f.path.starts_with("benches/")
+                    && f.lines.iter().any(|l| l.lits.iter().any(|(_, t)| t.contains(ledger_path)))
+            })
+            .collect();
+        let Some(owner) = owners.first() else {
+            push(
+                &mut out,
+                ledger_path,
+                1,
+                Rule::BenchLedgerDrift,
+                format!(
+                    "no bench under benches/ references `{ledger_path}` — nothing \
+                     can regenerate this ledger"
+                ),
+            );
+            continue;
+        };
+        // Anchor per-key findings on the owner's ledger-name mention, so
+        // an allow annotation in the bench can cover them.
+        let anchor = owner
+            .lines
+            .iter()
+            .find(|l| l.lits.iter().any(|(_, t)| t.contains(ledger_path)))
+            .map(|l| l.number)
+            .unwrap_or(1);
+
+        // Candidate emission patterns from every owning bench.
+        let mut exact: Vec<&str> = Vec::new();
+        let mut prefixes: Vec<String> = Vec::new();
+        for o in &owners {
+            for line in o.lines {
+                for (_, t) in &line.lits {
+                    if let Some(cut) = t.find('{') {
+                        let prefix = &t[..cut];
+                        if prefix.len() >= 4 && is_ledger_key_shape(prefix) {
+                            prefixes.push(prefix.to_string());
+                        }
+                    } else if is_ledger_key_shape(t) {
+                        exact.push(t);
+                    }
+                }
+            }
+        }
+
+        for (key, key_line) in parse_ledger_keys(ledger_text) {
+            let emitted = exact.iter().any(|e| *e == key)
+                || prefixes.iter().any(|p| key.starts_with(p.as_str()));
+            if !emitted {
+                push(
+                    &mut out,
+                    owner.path,
+                    anchor,
+                    Rule::BenchLedgerDrift,
+                    format!(
+                        "ledger key `{key}` ({ledger_path}:{key_line}) is not emitted \
+                         by this bench — no literal or format! template produces it"
+                    ),
+                );
+            }
+        }
+
+        let gated = ci.is_some_and(|t| {
+            t.lines().any(|l| l.contains("--check") && l.contains(ledger_path.as_str()))
+        });
+        if !gated {
+            push(
+                &mut out,
+                ledger_path,
+                1,
+                Rule::BenchLedgerDrift,
+                format!(
+                    "no CI step runs this ledger's regression gate — expected a \
+                     `--check {ledger_path}` line in .github/workflows/ci.yml"
+                ),
+            );
+        }
+    }
+    out
+}
+
+/// Ledger key / emission-pattern shape: `[a-z0-9_-]`, letter first
+/// (topology names put `-` inside keys like `construct_s_scale-free_1000`).
+fn is_ledger_key_shape(s: &str) -> bool {
+    !s.is_empty()
+        && s.starts_with(|c: char| c.is_ascii_lowercase())
+        && s.chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '-')
+}
+
+/// `(key, 1-based line)` for every quoted key in a `BENCH_*.json`
+/// ledger, skipping the structural `schema`/`timings`/`metrics` keys.
+fn parse_ledger_keys(text: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let t = line.trim_start();
+        let Some(rest) = t.strip_prefix('"') else {
+            continue;
+        };
+        let Some(end) = rest.find('"') else {
+            continue;
+        };
+        let key = &rest[..end];
+        if !rest[end + 1..].trim_start().starts_with(':') {
+            continue;
+        }
+        if matches!(key, "schema" | "timings" | "metrics") || key.is_empty() {
+            continue;
+        }
+        out.push((key.to_string(), i + 1));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::lint::{lint_files, parse_allows, scan};
+    use crate::lint::{lint_files, lint_files_with_docs, parse_allows, scan};
 
     fn lint_one(path: &str, src: &str) -> Vec<Finding> {
         lint_files(&[(path.to_string(), src.to_string())])
@@ -918,13 +1450,436 @@ mod tests {
         assert!(lint_one("rust/src/flood/x.rs", "fn f() {}\n").is_empty());
     }
 
+    // --------------------------------------------------------- rng-hygiene
+
+    #[test]
+    fn rng_hygiene_flags_raw_xor_into_new() {
+        let f = lint_one(
+            "rust/src/data/x.rs",
+            "fn f(seed: u64) { let r = Rng::new(seed ^ 0xD1B1); }\n",
+        );
+        assert_eq!(rules_of(&f), vec![Rule::RngHygiene]);
+        assert!(f[0].msg.contains("rng::mix"));
+        let f = lint_one(
+            "rust/src/experiments/x.rs",
+            "fn f(seed: u64, t: &[u8]) { let s = BatchSampler::new(t, seed ^ 0x9E7A); }\n",
+        );
+        assert_eq!(rules_of(&f), vec![Rule::RngHygiene]);
+    }
+
+    #[test]
+    fn rng_hygiene_flags_ident_xor_into_fold_in() {
+        let f = lint_one(
+            "rust/src/algos/x.rs",
+            "fn f(seed: u64, i: u64) { let r = Rng::fold_in(seed ^ i, 0); }\n",
+        );
+        assert_eq!(rules_of(&f), vec![Rule::RngHygiene]);
+    }
+
+    #[test]
+    fn rng_hygiene_clean_cases() {
+        // Derived via the mixer.
+        let mixed = "fn f(seed: u64) { let r = Rng::new(crate::rng::mix(seed, 0xD1B1)); }\n";
+        assert!(lint_one("rust/src/data/x.rs", mixed).is_empty());
+        // fold_in with a literal stream label: the sink itself mixes.
+        let label = "fn f(seed: u64, i: u64) { let r = Rng::fold_in(seed ^ 0x10AA, i); }\n";
+        assert!(lint_one("rust/src/flood/x.rs", label).is_empty());
+        // The mixer module may do raw seed arithmetic.
+        let raw = "pub fn fold_in(seed: u64, i: u64) -> Rng { Rng::new(seed ^ i) }\n";
+        assert!(lint_one("rust/src/rng/mod.rs", raw).is_empty());
+        // Tests may seed however they like.
+        let in_test = "#[cfg(test)]\nmod tests {\n    \
+                       fn f(seed: u64) { let r = Rng::new(seed ^ 1); }\n}\n";
+        assert!(lint_one("rust/src/data/x.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn rng_hygiene_allow_with_reason_suppresses() {
+        let src = "// sflint: allow(rng-hygiene, reason = \"protocol-coupled stream\")\n\
+                   fn f(seed: u64) { let r = Rng::new(seed ^ 0x1D1D); }\n";
+        assert!(lint_one("rust/src/zo/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn rng_hygiene_allow_without_reason_rejected() {
+        let src = "// sflint: allow(rng-hygiene)\n\
+                   fn f(seed: u64) { let r = Rng::new(seed ^ 0x1D1D); }\n";
+        let f = lint_one("rust/src/zo/x.rs", src);
+        assert_eq!(rules_of(&f), vec![Rule::InvalidAllow, Rule::RngHygiene]);
+    }
+
+    // --------------------------------------------------- wire-conservation
+
+    const NET_PAYLOAD_FIXTURE: &str = "pub enum Payload {\n    \
+                                       Seeds(Vec<u64>),\n    \
+                                       Summary,\n\
+                                       }\n\
+                                       impl Payload {\n    \
+                                       pub fn wire_bytes(&self) -> u64 {\n        \
+                                       match self {\n            \
+                                       Payload::Seeds(s) => s.len() as u64 * 8,\n            \
+                                       Payload::Summary => 8,\n        \
+                                       }\n    \
+                                       }\n\
+                                       }\n";
+
+    #[test]
+    fn wire_conservation_net_fixture_is_self_clean() {
+        // Match arms inside wire_bytes are patterns, not constructions.
+        let files = vec![(ACCT_FILE.to_string(), NET_PAYLOAD_FIXTURE.to_string())];
+        assert!(lint_files(&files).is_empty());
+    }
+
+    #[test]
+    fn wire_conservation_missing_arm_fails() {
+        let net = NET_PAYLOAD_FIXTURE.replace(
+            "    Summary,\n",
+            "    Summary,\n    Dense(Vec<f64>),\n",
+        );
+        let f = lint_files(&[(ACCT_FILE.to_string(), net)]);
+        assert_eq!(rules_of(&f), vec![Rule::WireConservation]);
+        assert!(f[0].msg.contains("Dense"));
+        assert!(f[0].msg.contains("wire_bytes"));
+    }
+
+    #[test]
+    fn wire_conservation_unsent_construction_fails() {
+        let files = vec![
+            (ACCT_FILE.to_string(), NET_PAYLOAD_FIXTURE.to_string()),
+            (
+                "rust/src/flood/x.rs".to_string(),
+                "fn build(v: Vec<u64>) -> Payload {\n    Payload::Seeds(v)\n}\n".to_string(),
+            ),
+        ];
+        let f = lint_files(&files);
+        assert_eq!(rules_of(&f), vec![Rule::WireConservation]);
+        assert_eq!(f[0].path, "rust/src/flood/x.rs");
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn wire_conservation_clean_cases() {
+        // Construction on the send line itself.
+        let send_line = "fn f(net: &mut Network, v: Vec<u64>) {\n    \
+                         net.broadcast(0, &Payload::Seeds(v));\n}\n";
+        let files = vec![
+            (ACCT_FILE.to_string(), NET_PAYLOAD_FIXTURE.to_string()),
+            ("rust/src/flood/x.rs".to_string(), send_line.to_string()),
+        ];
+        assert!(lint_files(&files).is_empty());
+        // Construction earlier in a fn that sends later.
+        let send_later = "fn f(net: &mut Network, v: Vec<u64>) {\n    \
+                          let p = Payload::Seeds(v);\n    \
+                          net.send(0, 1, &p);\n}\n";
+        let files = vec![
+            (ACCT_FILE.to_string(), NET_PAYLOAD_FIXTURE.to_string()),
+            ("rust/src/flood/x.rs".to_string(), send_later.to_string()),
+        ];
+        assert!(lint_files(&files).is_empty());
+        // Pattern positions: match arms and let-destructures.
+        let patterns = "fn f(p: &Payload) -> bool {\n    \
+                        if let Payload::Seeds(s) = p { return true; }\n    \
+                        matches!(p, Payload::Summary)\n}\n";
+        let files = vec![
+            (ACCT_FILE.to_string(), NET_PAYLOAD_FIXTURE.to_string()),
+            ("rust/src/sim/x.rs".to_string(), patterns.to_string()),
+        ];
+        assert!(lint_files(&files).is_empty());
+        // Test code may construct payloads freely.
+        let in_test = "#[cfg(test)]\nmod tests {\n    \
+                       fn f() { let p = Payload::Summary; }\n}\n";
+        let files = vec![
+            (ACCT_FILE.to_string(), NET_PAYLOAD_FIXTURE.to_string()),
+            ("rust/src/net/x.rs".to_string(), in_test.to_string()),
+        ];
+        assert!(lint_files(&files).is_empty());
+    }
+
+    #[test]
+    fn wire_conservation_allow_with_reason_suppresses() {
+        let allowed = "fn build(v: Vec<u64>) -> Payload {\n    \
+                       // sflint: allow(wire-conservation, reason = \"returned to a sender\")\n    \
+                       Payload::Seeds(v)\n}\n";
+        let files = vec![
+            (ACCT_FILE.to_string(), NET_PAYLOAD_FIXTURE.to_string()),
+            ("rust/src/flood/x.rs".to_string(), allowed.to_string()),
+        ];
+        assert!(lint_files(&files).is_empty());
+    }
+
+    #[test]
+    fn wire_conservation_allow_without_reason_rejected() {
+        let bad = "fn build(v: Vec<u64>) -> Payload {\n    \
+                   // sflint: allow(wire-conservation)\n    \
+                   Payload::Seeds(v)\n}\n";
+        let files = vec![
+            (ACCT_FILE.to_string(), NET_PAYLOAD_FIXTURE.to_string()),
+            ("rust/src/flood/x.rs".to_string(), bad.to_string()),
+        ];
+        let f = lint_files(&files);
+        assert_eq!(rules_of(&f), vec![Rule::InvalidAllow, Rule::WireConservation]);
+    }
+
+    // --------------------------------------------------------- json-parity
+
+    fn metrics_parity_fixture(to_extra: &str, from_extra: &str) -> String {
+        format!(
+            "pub struct RunRecord {{\n    pub step: u64,\n}}\n\
+             impl RunRecord {{\n    \
+             pub fn to_json(&self) -> String {{\n        \
+             w_kv(&mut s, \"step\", self.step);\n\
+             {to_extra}        s\n    \
+             }}\n    \
+             pub fn from_json(r: &Json) -> Self {{\n        \
+             let step = r.get(\"step\")?;\n\
+             {from_extra}        RunRecord {{ step }}\n    \
+             }}\n\
+             }}\n"
+        )
+    }
+
+    #[test]
+    fn json_parity_symmetric_record_is_clean() {
+        let files = vec![(RECORD_FILE.to_string(), metrics_parity_fixture("", ""))];
+        assert!(lint_files(&files).is_empty());
+    }
+
+    #[test]
+    fn json_parity_written_but_never_read_fails() {
+        let fixture = metrics_parity_fixture("        w_kv(&mut s, \"loss\", self.loss);\n", "");
+        let f = lint_files(&[(RECORD_FILE.to_string(), fixture)]);
+        assert_eq!(rules_of(&f), vec![Rule::JsonParity]);
+        assert!(f[0].msg.contains("`loss`"));
+        assert!(f[0].msg.contains("never"));
+    }
+
+    #[test]
+    fn json_parity_read_but_never_written_fails() {
+        let fixture = metrics_parity_fixture("", "        let ghost = r.opt_f64(\"ghost\")?;\n");
+        let f = lint_files(&[(RECORD_FILE.to_string(), fixture)]);
+        assert_eq!(rules_of(&f), vec![Rule::JsonParity]);
+        assert!(f[0].msg.contains("`ghost`"));
+    }
+
+    #[test]
+    fn json_parity_allow_with_reason_suppresses() {
+        let fixture = metrics_parity_fixture(
+            "        // sflint: allow(json-parity, reason = \"write-only debug key\")\n        \
+             w_kv(&mut s, \"loss\", self.loss);\n",
+            "",
+        );
+        assert!(lint_files(&[(RECORD_FILE.to_string(), fixture)]).is_empty());
+    }
+
+    #[test]
+    fn json_parity_allow_without_reason_rejected() {
+        let fixture = metrics_parity_fixture(
+            "        // sflint: allow(json-parity)\n        \
+             w_kv(&mut s, \"loss\", self.loss);\n",
+            "",
+        );
+        let f = lint_files(&[(RECORD_FILE.to_string(), fixture)]);
+        assert_eq!(rules_of(&f), vec![Rule::InvalidAllow, Rule::JsonParity]);
+    }
+
+    // ------------------------------------------------------- cli-doc-drift
+
+    const MAIN_FIXTURE: &str = "fn run(args: &Args) {\n    \
+                                let a = args.get_or(\"alpha\", \"1\");\n    \
+                                let b = args.get(\"beta\");\n\
+                                }\n\
+                                fn print_help() {\n    \
+                                println!(\"--alpha N  sets alpha\");\n\
+                                }\n";
+
+    fn doc(experiments: &str) -> Vec<(String, String)> {
+        vec![("EXPERIMENTS.md".to_string(), experiments.to_string())]
+    }
+
+    #[test]
+    fn cli_doc_drift_flags_missing_help_and_doc_rows() {
+        let files = vec![(MAIN_FILE.to_string(), MAIN_FIXTURE.to_string())];
+        let f = lint_files_with_docs(&files, &doc("only `--alpha` is documented"));
+        // `beta` is missing from both the help text and EXPERIMENTS.md.
+        assert_eq!(rules_of(&f), vec![Rule::CliDocDrift, Rule::CliDocDrift]);
+        assert!(f.iter().all(|x| x.msg.contains("--beta")));
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn cli_doc_drift_documented_flags_are_clean() {
+        let main = "fn run(args: &Args) {\n    let a = args.get_or(\"alpha\", \"1\");\n}\n\
+                    fn print_help() {\n    println!(\"--alpha N  sets alpha\");\n}\n";
+        let files = vec![(MAIN_FILE.to_string(), main.to_string())];
+        assert!(lint_files_with_docs(&files, &doc("use --alpha to set alpha")).is_empty());
+        // Boundary-aware: `--alphabet` must not satisfy `--alpha`.
+        let f = lint_files_with_docs(&files, &doc("use --alphabet instead"));
+        assert_eq!(rules_of(&f), vec![Rule::CliDocDrift]);
+        // Without the EXPERIMENTS.md doc input the rule opts out.
+        assert!(lint_files_with_docs(&files, &[]).is_empty());
+    }
+
+    #[test]
+    fn cli_doc_drift_toml_key_without_cli_counterpart_fails() {
+        let cfg = "impl ExperimentConfig {\n    \
+                   fn apply_toml(&mut self, k: &str, v: &V) -> Result<()> {\n        \
+                   match k {\n            \
+                   \"gamma_rate\" => self.gamma = v.as_f64()?,\n            \
+                   other => bail!(\"unknown key\"),\n        \
+                   }\n        \
+                   Ok(())\n    \
+                   }\n\
+                   }\n";
+        let files = vec![
+            (MAIN_FILE.to_string(), MAIN_FIXTURE.to_string()),
+            (CONFIG_FILE.to_string(), cfg.to_string()),
+        ];
+        let f = lint_files_with_docs(&files, &doc("--alpha and --beta are documented"));
+        let toml: Vec<&Finding> = f.iter().filter(|x| x.msg.contains("TOML")).collect();
+        assert_eq!(toml.len(), 1);
+        assert!(toml[0].msg.contains("gamma_rate"));
+        assert_eq!(toml[0].path, CONFIG_FILE);
+    }
+
+    #[test]
+    fn cli_doc_drift_allow_with_reason_suppresses() {
+        let main = "fn run(args: &Args) {\n    \
+                    // sflint: allow(cli-doc-drift, reason = \"internal debug flag\")\n    \
+                    let b = args.get(\"beta\");\n\
+                    }\n";
+        let files = vec![(MAIN_FILE.to_string(), main.to_string())];
+        assert!(lint_files_with_docs(&files, &doc("no flags documented")).is_empty());
+    }
+
+    #[test]
+    fn cli_doc_drift_allow_without_reason_rejected() {
+        let main = "fn run(args: &Args) {\n    \
+                    // sflint: allow(cli-doc-drift)\n    \
+                    let b = args.get(\"beta\");\n\
+                    }\n";
+        let files = vec![(MAIN_FILE.to_string(), main.to_string())];
+        let f = lint_files_with_docs(&files, &doc("no flags documented"));
+        assert_eq!(
+            rules_of(&f),
+            vec![Rule::InvalidAllow, Rule::CliDocDrift, Rule::CliDocDrift]
+        );
+    }
+
+    // -------------------------------------------------- bench-ledger-drift
+
+    const BENCH_FIXTURE: &str = "fn main() {\n    \
+                                 emit(\"construct_s_ring_1000\", 1.0);\n    \
+                                 emit(&format!(\"flood_s_{n}\"), 2.0);\n    \
+                                 println!(\"wrote BENCH_scale.json\");\n\
+                                 }\n";
+
+    const LEDGER_FIXTURE: &str = "{\n  \
+                                  \"schema\": 1,\n  \
+                                  \"metrics\": {\n    \
+                                  \"construct_s_ring_1000\": 1.0,\n    \
+                                  \"flood_s_1000\": 2.0\n  \
+                                  }\n\
+                                  }\n";
+
+    const CI_GATE: &str = "      - run: cargo bench --bench scale -- --smoke --check BENCH_scale.json\n";
+
+    fn bench_docs(ledger: &str, ci: &str) -> Vec<(String, String)> {
+        vec![
+            ("BENCH_scale.json".to_string(), ledger.to_string()),
+            (".github/workflows/ci.yml".to_string(), ci.to_string()),
+        ]
+    }
+
+    #[test]
+    fn bench_ledger_emitted_and_gated_is_clean() {
+        let files = vec![("benches/scale.rs".to_string(), BENCH_FIXTURE.to_string())];
+        let f = lint_files_with_docs(&files, &bench_docs(LEDGER_FIXTURE, CI_GATE));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn bench_ledger_orphan_key_fails() {
+        let ledger = LEDGER_FIXTURE.replace(
+            "\"flood_s_1000\": 2.0\n",
+            "\"flood_s_1000\": 2.0,\n    \"orphan_key\": 3.0\n",
+        );
+        let files = vec![("benches/scale.rs".to_string(), BENCH_FIXTURE.to_string())];
+        let f = lint_files_with_docs(&files, &bench_docs(&ledger, CI_GATE));
+        assert_eq!(rules_of(&f), vec![Rule::BenchLedgerDrift]);
+        assert!(f[0].msg.contains("orphan_key"));
+        // Anchored on the bench's ledger-name mention, so allows work.
+        assert_eq!(f[0].path, "benches/scale.rs");
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn bench_ledger_without_owner_or_gate_fails() {
+        // Ledger present but no bench references it.
+        let f = lint_files_with_docs(&[], &bench_docs(LEDGER_FIXTURE, CI_GATE));
+        assert_eq!(rules_of(&f), vec![Rule::BenchLedgerDrift]);
+        assert!(f[0].msg.contains("no bench"));
+        assert_eq!(f[0].path, "BENCH_scale.json");
+        // Owner exists but CI has no --check gate for the ledger.
+        let files = vec![("benches/scale.rs".to_string(), BENCH_FIXTURE.to_string())];
+        let f = lint_files_with_docs(&files, &bench_docs(LEDGER_FIXTURE, "steps: []\n"));
+        assert_eq!(rules_of(&f), vec![Rule::BenchLedgerDrift]);
+        assert!(f[0].msg.contains("regression gate"));
+    }
+
+    #[test]
+    fn bench_ledger_allow_with_reason_suppresses() {
+        let ledger = LEDGER_FIXTURE.replace(
+            "\"flood_s_1000\": 2.0\n",
+            "\"flood_s_1000\": 2.0,\n    \"orphan_key\": 3.0\n",
+        );
+        let bench = BENCH_FIXTURE.replace(
+            "    println!(\"wrote BENCH_scale.json\");\n",
+            "    // sflint: allow(bench-ledger-drift, reason = \"key kept for history\")\n    \
+             println!(\"wrote BENCH_scale.json\");\n",
+        );
+        let files = vec![("benches/scale.rs".to_string(), bench)];
+        assert!(lint_files_with_docs(&files, &bench_docs(&ledger, CI_GATE)).is_empty());
+    }
+
+    #[test]
+    fn bench_ledger_allow_without_reason_rejected() {
+        let ledger = LEDGER_FIXTURE.replace(
+            "\"flood_s_1000\": 2.0\n",
+            "\"flood_s_1000\": 2.0,\n    \"orphan_key\": 3.0\n",
+        );
+        let bench = BENCH_FIXTURE.replace(
+            "    println!(\"wrote BENCH_scale.json\");\n",
+            "    // sflint: allow(bench-ledger-drift)\n    \
+             println!(\"wrote BENCH_scale.json\");\n",
+        );
+        let files = vec![("benches/scale.rs".to_string(), bench)];
+        let f = lint_files_with_docs(&files, &bench_docs(&ledger, CI_GATE));
+        assert_eq!(rules_of(&f), vec![Rule::InvalidAllow, Rule::BenchLedgerDrift]);
+    }
+
+    // ------------------------------------------------------- rule registry
+
+    #[test]
+    fn new_rules_round_trip_through_names() {
+        for rule in [
+            Rule::WireConservation,
+            Rule::RngHygiene,
+            Rule::CliDocDrift,
+            Rule::JsonParity,
+            Rule::BenchLedgerDrift,
+        ] {
+            assert_eq!(Rule::from_name(rule.name()), Some(rule));
+        }
+        assert_eq!(Rule::from_name("invalid-allow"), None);
+    }
+
     // ------------------------------------------------------- repo self-run
 
     #[test]
     fn repo_tree_is_clean() {
         // cargo test runs with cwd = package root.
         let report = crate::lint::run_repo(std::path::Path::new(".")).expect("repo scan");
-        assert!(report.files_scanned >= 40, "scanned {}", report.files_scanned);
+        assert!(report.files_scanned >= 60, "scanned {}", report.files_scanned);
         let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
         assert!(rendered.is_empty(), "tree findings:\n{}", rendered.join("\n"));
     }

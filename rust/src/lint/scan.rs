@@ -17,6 +17,12 @@
 //! - char literals vs. lifetimes (`'a'` vs `'a`),
 //! - `#[cfg(test)] mod …` regions, tracked by brace depth on the code
 //!   channel so test-only code can be exempted from library rules.
+//!
+//! Besides blanking literal contents out of the code channel, the
+//! scanner also *collects* them: each line carries the string literals
+//! that start or continue on it (`lits`), which is what lets the
+//! cross-file index ([`super::index`]) see flag names, JSON keys, help
+//! text and `format!` templates without a second parse.
 
 /// One scanned source line, split into channels.
 #[derive(Clone, Debug)]
@@ -30,6 +36,11 @@ pub struct Line {
     pub code: String,
     /// Comment channel: comment text only, everything else blanked.
     pub comment: String,
+    /// String-literal contents on this line: `(start_col, text)` where
+    /// `start_col` is the char column of the first content char (0 for
+    /// the continuation of a literal opened on an earlier line). Escape
+    /// sequences are kept verbatim; char literals are not recorded.
+    pub lits: Vec<(usize, String)>,
     /// True when the line sits inside a `#[cfg(test)] mod` region.
     pub in_test: bool,
 }
@@ -76,6 +87,12 @@ pub fn scan(source: &str) -> Vec<Line> {
         let mut comment = String::with_capacity(chars.len());
         let in_test_at_start = !test_region_starts.is_empty();
 
+        // Literal collection for this line. A literal opened on an
+        // earlier line continues at column 0.
+        let mut lits: Vec<(usize, String)> = Vec::new();
+        let mut lit_start = 0usize;
+        let mut lit_buf = String::new();
+
         // LineComment never survives a newline.
         if mode == Mode::LineComment {
             mode = Mode::Code;
@@ -118,6 +135,7 @@ pub fn scan(source: &str) -> Vec<Line> {
                         code.push('"');
                         comment.push(' ');
                         i += 1;
+                        lit_start = i;
                     }
                     'r' | 'b' => {
                         // Possible raw / byte string start: r", r#", br", b".
@@ -150,6 +168,7 @@ pub fn scan(source: &str) -> Vec<Line> {
                                     comment.push(' ');
                                 }
                                 i = j + 1;
+                                lit_start = i;
                             } else {
                                 // b"..."
                                 mode = Mode::Str;
@@ -159,6 +178,7 @@ pub fn scan(source: &str) -> Vec<Line> {
                                 comment.push(' ');
                                 comment.push(' ');
                                 i += 2;
+                                lit_start = i;
                             }
                         } else {
                             code.push(c);
@@ -249,14 +269,18 @@ pub fn scan(source: &str) -> Vec<Line> {
                     if escaped {
                         escaped = false;
                         code.push(' ');
+                        lit_buf.push(c);
                     } else if c == '\\' {
                         escaped = true;
                         code.push(' ');
+                        lit_buf.push(c);
                     } else if c == '"' {
                         code.push('"');
                         mode = Mode::Code;
+                        lits.push((lit_start, std::mem::take(&mut lit_buf)));
                     } else {
                         code.push(' ');
+                        lit_buf.push(c);
                     }
                     i += 1;
                 }
@@ -279,12 +303,15 @@ pub fn scan(source: &str) -> Vec<Line> {
                             }
                             i += 1 + raw_hashes;
                             mode = Mode::Code;
+                            lits.push((lit_start, std::mem::take(&mut lit_buf)));
                         } else {
                             code.push(' ');
+                            lit_buf.push(c);
                             i += 1;
                         }
                     } else {
                         code.push(' ');
+                        lit_buf.push(c);
                         i += 1;
                     }
                 }
@@ -355,11 +382,19 @@ pub fn scan(source: &str) -> Vec<Line> {
             }
         }
 
+        // A literal still open at end of line (multi-line string):
+        // record this line's slice of it; the rest continues at column 0
+        // on the next line.
+        if mode == Mode::Str || mode == Mode::RawStr {
+            lits.push((lit_start, std::mem::take(&mut lit_buf)));
+        }
+
         lines.push(Line {
             number: idx + 1,
             raw: raw_line.to_string(),
             code,
             comment,
+            lits,
             in_test: in_test_at_start || !test_region_starts.is_empty(),
         });
     }
@@ -464,6 +499,41 @@ mod tests {
         assert!(!lines[0].in_test);
         assert!(lines[3].in_test, "body of test mod is in_test");
         assert!(!lines[5].in_test, "code after test mod is not in_test");
+    }
+
+    #[test]
+    fn literals_are_collected_with_columns() {
+        let src = "let a = args.get(\"alpha\"); let b = \"beta\";\n";
+        let lines = scan(src);
+        let texts: Vec<&str> = lines[0].lits.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(texts, vec!["alpha", "beta"]);
+        // start_col points at the first content char (after the quote)
+        let (col, _) = lines[0].lits[0];
+        assert_eq!(src.chars().nth(col).unwrap(), 'a');
+        assert_eq!(src.chars().nth(col - 1).unwrap(), '"');
+    }
+
+    #[test]
+    fn multiline_literal_split_across_lines() {
+        let src = "let s = \"first\nsecond\"; tail();\n";
+        let lines = scan(src);
+        assert_eq!(lines[0].lits, vec![(9, "first".to_string())]);
+        assert_eq!(lines[1].lits, vec![(0, "second".to_string())]);
+    }
+
+    #[test]
+    fn raw_and_byte_literals_collected_escapes_verbatim() {
+        let src = "let r = r#\"raw \"inner\" text\"#; let e = \"a\\\"b\"; let b = b\"bytes\";\n";
+        let lines = scan(src);
+        let texts: Vec<&str> = lines[0].lits.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(texts, vec!["raw \"inner\" text", "a\\\"b", "bytes"]);
+    }
+
+    #[test]
+    fn comments_and_chars_not_collected() {
+        let src = "let c = 'x'; // \"not a literal\"\n";
+        let lines = scan(src);
+        assert!(lines[0].lits.is_empty());
     }
 
     #[test]

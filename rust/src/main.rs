@@ -235,7 +235,15 @@ train        --method <dsgd|choco|dsgd-lora|choco-lora|dzsgd|dzsgd-lora|seedfloo
              --topology <ring|mesh|torus|complete|star|er|ws|scale-free|
              hierarchical|hub-spoke> (the last three are O(m)-construction
              massive-scale generators)
-             --steps N --lr F --eps F --rank N --refresh N --flood-steps N
+             --steps N --local-steps N --lr F --batch N --eps F --rank N
+             --refresh N --flood-steps N --seed N --eval-every N
+             --topk-ratio F (choco gossip sparsification)
+             --consensus-lr F (choco consensus step size)
+             --lora-rank N (rank of the LoRA adapters for *-lora methods)
+             --dirichlet-alpha F (non-IID label-skew partition strength)
+             --init-from PATH (warm-start from a pretrain checkpoint)
+             --artifacts DIR (tokenizer/dataset cache directory)
+             --quantize (4-bit quantized seed-flood messages)
              --threads N (local-step worker threads; 1 = sequential, 0 = all
              cores — results are identical for every value)
              --netcond SPEC (unreliable-network & churn injection: a preset
@@ -264,6 +272,7 @@ sweep        run a config grid in parallel and aggregate mean±std per
              --rates uniform/lognormal:0.5/... (slash-separated — rate
              specs contain commas; non-uniform cells use the event engine)
              --seeds 0,1,2
+             --out-dir DIR (where sweep_<ID>.json lands; default results/)
              --threads N (cells in flight; each cell runs single-threaded.
              aggregates are bit-identical for every thread count)
              --config sweep.toml (root table = experiment keys, [sweep]
@@ -272,16 +281,21 @@ sweep        run a config grid in parallel and aggregate mean±std per
 experiment   <fig1|fig3|table8|scaling|fig4|table2|table3|fig6|fig7|churn|
              hopgrid>
              [--tasks a,b] [--scenarios lossy-ring,flaky-torus,churn-er]
+             scaling: --clients-list 4,8,16   table2: --ks 1,2,4,8,16
+             table3: --ranks 8,16,32,64 --periods 50,500,2000
              hopgrid: flooding vs gossip message-rounds-to-consensus across
              topology families (--topologies a,b --hop-ns 64,256,...
              --gossip-eps F --gossip-cap N)
-pretrain     --model tiny [--steps N --lr F --target-acc F] -> checkpoints/
+pretrain     --model tiny [--steps N --lr F --target-acc F --mix-tasks N
+             --seed N --artifacts DIR --out PATH] -> checkpoints/
 report       [results/foo.json ...]   re-render tables from saved records
 topo         --topology K --clients N
 info         --model tiny [--artifacts DIR]
-lint         [--root DIR]   sflint static analysis: unordered-iter,
-             wall-clock, thread-escape, unsafe-audit,
-             accounting-conservation; exits non-zero on any finding
-             without an inline allow-with-reason annotation"
+lint         [--root DIR] [--format text|json] [--rule NAME]
+             sflint static analysis: unordered-iter, wall-clock,
+             thread-escape, unsafe-audit, accounting-conservation,
+             wire-conservation, rng-hygiene, cli-doc-drift, json-parity,
+             bench-ledger-drift; exit 0 = clean, 1 = findings without an
+             inline allow-with-reason annotation, 2 = usage error"
     );
 }

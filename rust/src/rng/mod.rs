@@ -373,6 +373,30 @@ mod tests {
     }
 
     #[test]
+    fn mix_decorrelates_the_fixed_call_site_labels() {
+        // regression for the rng-hygiene fixes: the dirichlet partition
+        // (0xD1B1), the pretrain sampler (0x9E7A) and the subcge dense
+        // tail (0x1D1D_1D1D) derive per-purpose seeds from a run seed.
+        // Raw `seed ^ label` leaves adjacent run seeds one bit apart;
+        // mix must flip about half the bits (same 5σ band as above).
+        for label in [0xD1B1u64, 0x9E7A, 0x1D1D_1D1D] {
+            for seed in 0..128u64 {
+                let dist = (mix(seed, label) ^ mix(seed + 1, label)).count_ones();
+                assert!(
+                    (12..=52).contains(&dist),
+                    "label {label:#x} seed {seed}: hamming {dist}"
+                );
+            }
+        }
+        // the hopgrid gossip init derives per-client draws at one seed:
+        // adjacent clients must also land in the band
+        for i in 0..128u64 {
+            let dist = (mix(7, i) ^ mix(7, i + 1)).count_ones();
+            assert!((12..=52).contains(&dist), "client {i}: hamming {dist}");
+        }
+    }
+
+    #[test]
     fn permutation_is_permutation() {
         let mut r = Rng::new(11);
         let p = r.permutation(257);

@@ -226,6 +226,7 @@ impl CoeffAccum {
         let mut rngs: Vec<Rng> = self
             .dense_queue
             .iter()
+            // sflint: allow(rng-hygiene, reason = "must reproduce the sender's zo::perturb_subcge dense-tail stream bit-for-bit; seed is an already-avalanched probe seed")
             .map(|&(seed, _)| Rng::new(seed ^ 0x1D1D_1D1D))
             .collect();
         let scales: Vec<f32> = self.dense_queue.iter().map(|&(_, coeff)| -coeff).collect();

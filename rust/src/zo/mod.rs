@@ -172,6 +172,7 @@ pub fn perturb_subcge(params: &mut ParamVec, sub: &SubspaceBasis, seed: u64, sca
         params.tensors[pi].rank1_update(scale, &u, &v);
     }
     // dense part for 1D tensors — fused fill+axpy, same stream, no scratch
+    // sflint: allow(rng-hygiene, reason = "protocol stream: subcge receivers rebuild Rng::new(seed ^ 0x1D1D_1D1D) verbatim, and the input is an already-avalanched probe seed")
     let mut rng = Rng::new(seed ^ 0x1D1D_1D1D);
     for (idx, t) in params.tensors.iter_mut().enumerate() {
         if sub.param_indices.contains(&idx) {
